@@ -1,0 +1,77 @@
+//! BENCH C3 — the §5.4 communication claim: "max of 2p·n during the
+//! iterations which is O(p) communications [per iteration], where 1
+//! communication is a send, receive pair", plus p sends for the initial
+//! distribution.
+//!
+//! Counts actual messages in the live system: per-rank sends per iteration
+//! must grow O(p) (the naive allgather dominates), and step-6a triple
+//! traffic must involve only the subset of ranks holding rows i or j.
+
+use lancew::prelude::*;
+use lancew::util::stats::linear_fit;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n = if quick { 256 } else { 768 };
+    let lp = GaussianSpec { n, d: 6, k: 8, ..Default::default() }.generate(13);
+    let m = euclidean_matrix(&lp.points);
+
+    println!("# C3: message counts vs p at n={n}");
+    println!(
+        "{:>4} {:>12} {:>16} {:>14} {:>14}",
+        "p", "total_msgs", "msgs/iter/rank", "bytes_total", "bytes/iter"
+    );
+    let ps = [1usize, 2, 4, 8, 12, 16, 24];
+    let mut xs = Vec::new();
+    let mut ys = Vec::new();
+    for &p in &ps {
+        let run = ClusterConfig::new(Scheme::Complete, p).run(&m)?;
+        let iters = (n - 1) as f64;
+        let per_iter_rank = run.stats.msgs_sent as f64 / iters / p as f64;
+        println!(
+            "{:>4} {:>12} {:>16.2} {:>14} {:>14.0}",
+            p,
+            run.stats.msgs_sent,
+            per_iter_rank,
+            run.stats.bytes_sent,
+            run.stats.bytes_sent as f64 / iters
+        );
+        xs.push(p as f64);
+        ys.push(per_iter_rank);
+    }
+    // per-rank sends/iter should be ~linear in p: allgather (p−1) +
+    // announce + O(1) amortized triple messages.
+    let (slope, intercept) = linear_fit(&xs, &ys);
+    println!("# per-rank msgs/iter ≈ {slope:.2}·p + {intercept:.2}  (claim: O(p))");
+    assert!(slope > 0.5 && slope < 2.5, "unexpected slope {slope}");
+    // Quadratic would show as superlinear growth; check the largest p is
+    // within 2.2× the linear prediction from small p.
+    let pred = slope * xs.last().unwrap() + intercept;
+    assert!(
+        ys.last().unwrap() / pred < 2.2,
+        "per-rank message growth is superlinear"
+    );
+
+    // Step-6a locality: triple messages only flow between owners of rows
+    // i and j — measured as the share of triple traffic in total messages.
+    println!("\n# C3b: protocol phase composition at p=8");
+    let p = 8;
+    let run = ClusterConfig::new(Scheme::Complete, p).run(&m)?;
+    let iters = (n - 1) as u64;
+    // Expected allgather+announce messages: p·(p−1) + (p−1) per iteration.
+    let coord_msgs = iters * (p as u64 * (p as u64 - 1) + (p as u64 - 1));
+    let dist_msgs = p as u64 - 1; // initial shard distribution
+    let triple_msgs = run.stats.msgs_sent - coord_msgs - dist_msgs;
+    println!(
+        "  total={} coordination={} triples={} distribution={}",
+        run.stats.msgs_sent, coord_msgs, triple_msgs, dist_msgs
+    );
+    println!(
+        "  triples/iteration = {:.2} (≤ p−1 = {}; paper: only ranks holding rows i,j participate)",
+        triple_msgs as f64 / iters as f64,
+        p - 1
+    );
+    assert!(triple_msgs as f64 / iters as f64 <= (p - 1) as f64 + 1e-9);
+    println!("# communication claim O(p)/iteration holds");
+    Ok(())
+}

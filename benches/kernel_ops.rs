@@ -1,0 +1,129 @@
+//! BENCH K1 (repro-added) — L1 kernel throughput: the per-iteration hot
+//! ops through the XLA/PJRT path vs the scalar rust path.
+//!
+//! interpret-mode Pallas on a CPU PJRT client measures *dispatch +
+//! structure*, not TPU speed (DESIGN.md §3: TPU perf is estimated from
+//! VMEM/MXU structure). The interesting numbers here are (a) correctness
+//! parity at every size, (b) the per-call dispatch floor that motivates
+//! Engine::Scalar as the default on CPU, and (c) scalar-path throughput
+//! in cells/s, which the cost model's per_cell constant is calibrated
+//! against. Skips gracefully if artifacts are missing.
+
+use std::time::Instant;
+
+use lancew::coordinator::scalar_shard_min;
+use lancew::prelude::*;
+use lancew::runtime::XlaEngine;
+
+fn time<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let t = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t.elapsed().as_secs_f64() / reps as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    let engine = match XlaEngine::load(&XlaEngine::default_dir()) {
+        Ok(e) => Some(e),
+        Err(e) => {
+            println!("# K1: artifacts unavailable ({e}); scalar-only run");
+            None
+        }
+    };
+    let mut rng = Rng::new(77);
+
+    println!("# K1a: shard_min (step-1 scan) — branchy (pre-perf-pass) vs two-pass vs XLA");
+    println!(
+        "{:>9} {:>14} {:>14} {:>16} {:>7} {:>14} {:>8}",
+        "cells", "branchy_s", "scalar_s", "scalar_cells/s", "gain", "xla_s", "match"
+    );
+    for size in [1024usize, 4096, 16384, 65536] {
+        let shard: Vec<f32> = (0..size).map(|_| rng.f32() * 100.0).collect();
+        let reps = (1 << 22) / size + 1;
+        let branchy_t = time(reps, || {
+            std::hint::black_box(lancew::coordinator::scalar_shard_min_branchy(
+                std::hint::black_box(&shard),
+            ));
+        });
+        let scalar_t = time(reps, || {
+            std::hint::black_box(scalar_shard_min(std::hint::black_box(&shard)));
+        });
+        let (xla_t, ok) = if let Some(ref e) = engine {
+            let (sv, si) = scalar_shard_min(&shard);
+            let (xv, xi) = e.shard_min(&shard)?;
+            let ok = sv == xv && si == xi;
+            let t = time(5, || {
+                let _ = e.shard_min(&shard).unwrap();
+            });
+            (format!("{t:.6}"), if ok { "✓" } else { "✗" })
+        } else {
+            ("n/a".into(), "-")
+        };
+        println!(
+            "{:>9} {:>14.9} {:>14.9} {:>16.3e} {:>6.2}x {:>14} {:>8}",
+            size,
+            branchy_t,
+            scalar_t,
+            size as f64 / scalar_t,
+            branchy_t / scalar_t,
+            xla_t,
+            ok
+        );
+    }
+
+    println!("\n# K1b: lw_update row (step-6 update) — scalar vs XLA, m=2048");
+    let m = 2048usize;
+    let d_ki: Vec<f32> = (0..m).map(|_| rng.f32() * 10.0).collect();
+    let d_kj: Vec<f32> = (0..m).map(|_| rng.f32() * 10.0).collect();
+    let half = vec![0.5f32; m];
+    let zero = vec![0.0f32; m];
+    let scalar_t = time(2000, || {
+        let c = Scheme::Complete.coeffs(1.0, 1.0, 1.0);
+        let out: Vec<f32> = d_ki
+            .iter()
+            .zip(&d_kj)
+            .map(|(&a, &b)| lancew::linkage::lw_update(c, a, b, 1.0))
+            .collect();
+        std::hint::black_box(out);
+    });
+    println!("  scalar: {scalar_t:.9} s/row  ({:.3e} cells/s)", m as f64 / scalar_t);
+    if let Some(ref e) = engine {
+        let xla_row = e.lw_update_row(&d_ki, &d_kj, &half, &half, &zero, 0.5, 1.0)?;
+        let c = Scheme::Complete.coeffs(1.0, 1.0, 1.0);
+        let max_err = xla_row
+            .iter()
+            .zip(d_ki.iter().zip(&d_kj))
+            .map(|(&x, (&a, &b))| (x - lancew::linkage::lw_update(c, a, b, 1.0)).abs())
+            .fold(0.0f32, f32::max);
+        let xla_t = time(5, || {
+            let _ = e
+                .lw_update_row(&d_ki, &d_kj, &half, &half, &zero, 0.5, 1.0)
+                .unwrap();
+        });
+        println!("  xla:    {xla_t:.6} s/row  max|Δ|={max_err:.2e}");
+    }
+
+    println!("\n# K1c: pairwise 256×32 — XLA kernel vs rust loop");
+    let pts = GaussianSpec { n: 256, d: 32, k: 4, ..Default::default() }.generate(3);
+    let rust_t = time(10, || {
+        std::hint::black_box(euclidean_matrix(std::hint::black_box(&pts.points)));
+    });
+    println!("  rust:   {rust_t:.6} s/matrix");
+    if let Some(ref e) = engine {
+        let flat: Vec<f32> = pts
+            .points
+            .iter()
+            .flat_map(|p| p.iter().map(|&v| v as f32))
+            .collect();
+        let _ = e.pairwise(&flat, 256, 32)?; // compile outside the timing
+        let xla_t = time(10, || {
+            let _ = e.pairwise(&flat, 256, 32).unwrap();
+        });
+        println!("  xla:    {xla_t:.6} s/matrix (interpret-mode pallas on CPU)");
+    }
+
+    println!("\n# cost-model calibration note: per_cell=1ns assumes ~1e9 cells/s;");
+    println!("# compare against the scalar cells/s column above (EXPERIMENTS.md §Perf).");
+    Ok(())
+}

@@ -1,0 +1,79 @@
+//! BENCH C2 — the §5.4 storage claim: each rank stores (n²−n)/2/p cells
+//! ("RAM is also distributed which makes (n²−n)/2 storage feasible since
+//! the table is divided up amongst the workstations").
+//!
+//! Measures the peak per-rank shard size over an (n, p) grid and checks it
+//! against the claim, for all three partition strategies (the paper's
+//! cell-balanced one is within +1 cell of ideal; whole-rows skews).
+
+use lancew::prelude::*;
+use lancew::util::stats::loglog_slope;
+
+fn main() -> anyhow::Result<()> {
+    let ns = [256usize, 512, 1024, 2048];
+    let ps = [1usize, 2, 4, 8, 16, 32];
+
+    println!("# C2: peak per-rank cells vs ideal (n²−n)/2/p  [partition=paper]");
+    println!(
+        "{:>6} {:>4} {:>14} {:>14} {:>9}",
+        "n", "p", "peak_cells", "ideal", "overhead"
+    );
+    for &n in &ns {
+        for &p in &ps {
+            let part = Partition::new(PartitionKind::BalancedCells, n, p);
+            let ideal = (lancew::matrix::condensed_len(n) as f64 / p as f64).ceil();
+            let peak = part.max_shard_len() as f64;
+            println!(
+                "{:>6} {:>4} {:>14} {:>14} {:>9.4}",
+                n,
+                p,
+                peak,
+                ideal,
+                peak / ideal
+            );
+            assert!(peak <= ideal + 1.0, "paper partition exceeds n²/2p + 1");
+        }
+    }
+
+    // n² growth at fixed p (log-log slope ≈ 2).
+    let xs: Vec<f64> = ns.iter().map(|&n| n as f64).collect();
+    let ys: Vec<f64> = ns
+        .iter()
+        .map(|&n| Partition::new(PartitionKind::BalancedCells, n, 8).max_shard_len() as f64)
+        .collect();
+    let slope = loglog_slope(&xs, &ys);
+    println!("# growth in n at p=8: log-log slope {slope:.3} (claim: 2.0 — O(n²/p))");
+    assert!((slope - 2.0).abs() < 0.05);
+
+    // Ablation: how unbalanced is the whole-rows alternative?
+    println!("\n# C2-ablation: partition strategies at n=1024");
+    println!("{:>14} {:>4} {:>12} {:>10}", "strategy", "p", "peak_cells", "vs ideal");
+    for kind in [PartitionKind::BalancedCells, PartitionKind::WholeRows, PartitionKind::Cyclic] {
+        for &p in &[4usize, 16] {
+            let part = Partition::new(kind, 1024, p);
+            let ideal = lancew::matrix::condensed_len(1024) as f64 / p as f64;
+            println!(
+                "{:>14} {:>4} {:>12} {:>10.3}",
+                format!("{kind:?}"),
+                p,
+                part.max_shard_len(),
+                part.max_shard_len() as f64 / ideal
+            );
+        }
+    }
+
+    // And the live-system measurement (stats.peak_shard_cells agrees).
+    let lp = GaussianSpec { n: 512, d: 4, k: 4, ..Default::default() }.generate(9);
+    let m = euclidean_matrix(&lp.points);
+    for p in [2usize, 8] {
+        let run = ClusterConfig::new(Scheme::Complete, p).run(&m)?;
+        let ideal = (m.len() + p - 1) / p;
+        println!(
+            "# live run n=512 p={p}: peak shard {} (ideal {ideal})",
+            run.stats.peak_shard_cells
+        );
+        assert!(run.stats.peak_shard_cells <= ideal + 1);
+    }
+    println!("# storage claim O(n²/p) holds");
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! BENCH T1 — Table 1 of the paper: the Lance-Williams scheme catalogue.
+//!
+//! For every scheme the paper tabulates, this bench (a) re-validates that
+//! the distributed protocol reproduces the serial recurrence exactly and,
+//! where a definitional form exists, first principles; (b) reports the
+//! per-scheme runtime rows (serial naive, NN-chain, distributed p=4
+//! simulated + wall). The paper's Table 1 is definitional, so the
+//! correctness column *is* the reproduction; timings add the cost context.
+
+use lancew::baselines::nn_chain::{nn_chain_cluster, reducible};
+use lancew::baselines::serial_lw::{serial_lw_cluster, verify_against_definition};
+use lancew::prelude::*;
+use lancew::validate::dendrograms_equal;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n = if quick { 150 } else { 400 };
+    let lp = GaussianSpec { n, d: 6, k: 6, ..Default::default() }.generate(11);
+    let m = euclidean_matrix(&lp.points);
+    println!("# Table 1: Lance-Williams schemes on n={n} (complete run each)");
+    println!(
+        "{:<10} {:>12} {:>12} {:>12} {:>12} {:>13} {:>12}",
+        "scheme", "serial_s", "nnchain_s", "dist_wall_s", "dist_sim_s", "def-check", "par≡serial"
+    );
+
+    for scheme in Scheme::all() {
+        let t = std::time::Instant::now();
+        let serial = serial_lw_cluster(*scheme, &m);
+        let serial_s = t.elapsed().as_secs_f64();
+
+        let (nn_s, _nn) = if reducible(*scheme) {
+            let t = std::time::Instant::now();
+            let d = nn_chain_cluster(*scheme, &m);
+            (format!("{:.4}", t.elapsed().as_secs_f64()), Some(d))
+        } else {
+            ("n/a".to_string(), None)
+        };
+
+        let run = ClusterConfig::new(*scheme, 4).run(&m)?;
+        let parallel_ok = dendrograms_equal(&serial, &run.dendrogram, 0.0).is_ok();
+
+        let def = match scheme {
+            Scheme::Single | Scheme::Complete | Scheme::Average => {
+                match verify_against_definition(*scheme, &m, &serial, 1e-3) {
+                    Ok(()) => "exact ✓",
+                    Err(_) => "FAIL ✗",
+                }
+            }
+            _ => "n/a",
+        };
+
+        println!(
+            "{:<10} {:>12.4} {:>12} {:>12.4} {:>12.6} {:>13} {:>12}",
+            scheme.to_string(),
+            serial_s,
+            nn_s,
+            run.stats.wall_s,
+            run.stats.virtual_s,
+            def,
+            if parallel_ok { "✓" } else { "✗" }
+        );
+        assert!(parallel_ok, "{scheme}: distributed diverged from serial");
+    }
+    println!("# every row: distributed protocol ≡ serial recurrence (bitwise)");
+    Ok(())
+}

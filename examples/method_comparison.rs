@@ -1,0 +1,98 @@
+//! All six Table-1 linkage schemes + the K-means comparator on one
+//! labelled workload — the paper's §2/§3 discussion made runnable:
+//! single linkage elongates, complete linkage rounds, K-means needs k
+//! fixed and misses hierarchy.
+//!
+//! ```sh
+//! cargo run --release --example method_comparison
+//! ```
+
+use lancew::baselines::kmeans::kmeans;
+use lancew::prelude::*;
+use lancew::validate::{ari, cophenetic_correlation, purity};
+
+fn main() -> anyhow::Result<()> {
+    // Mixture hard enough that schemes separate: moderately overlapping
+    // blobs plus a "bridge" of points between two of them (single
+    // linkage's classic failure mode — §2.1's elongated clusters).
+    let base = GaussianSpec {
+        n: 150,
+        d: 2,
+        k: 3,
+        center_spread: 14.0,
+        noise: 1.4,
+    }
+    .generate(7);
+    let mut points = base.points.clone();
+    let mut labels = base.labels.clone();
+    // Bridge between cluster 0's and cluster 1's centers.
+    let (c0, c1) = (centroid(&points, &labels, 0), centroid(&points, &labels, 1));
+    for t in 0..12 {
+        let f = (t as f64 + 0.5) / 12.0;
+        points.push(vec![
+            c0[0] + f * (c1[0] - c0[0]),
+            c0[1] + f * (c1[1] - c0[1]),
+        ]);
+        labels.push(if f < 0.5 { 0 } else { 1 });
+    }
+    let matrix = euclidean_matrix(&points);
+    let k = 3;
+    println!(
+        "workload: {} points, {} blobs + a 12-point bridge (single-linkage trap)",
+        points.len(),
+        k
+    );
+    println!(
+        "\n{:<10} {:>8} {:>8} {:>10} {:>10}",
+        "method", "ARI", "purity", "coph-corr", "monotone"
+    );
+
+    for scheme in Scheme::all() {
+        let run = ClusterConfig::new(*scheme, 4).run(&matrix)?;
+        let cut = run.dendrogram.cut(k);
+        println!(
+            "{:<10} {:>8.3} {:>8.3} {:>10.3} {:>10}",
+            scheme.to_string(),
+            ari(&cut, &labels),
+            purity(&cut, &labels),
+            cophenetic_correlation(&matrix, &run.dendrogram),
+            run.dendrogram.is_monotone(),
+        );
+    }
+
+    // K-means (needs k up front; no hierarchy, no coph-corr).
+    let km = kmeans(&points, k, 99, 200);
+    println!(
+        "{:<10} {:>8.3} {:>8.3} {:>10} {:>10}   (k preset, {} iters)",
+        "kmeans",
+        ari(&km.labels, &labels),
+        purity(&km.labels, &labels),
+        "n/a",
+        "n/a",
+        km.iterations
+    );
+
+    println!(
+        "\nexpected pattern (paper §2.1): complete/average/ward round clusters\n\
+         beat single linkage, which chains across the bridge; K-means is\n\
+         competitive here but required k in advance and returns no tree."
+    );
+    Ok(())
+}
+
+fn centroid(points: &[Vec<f64>], labels: &[usize], which: usize) -> Vec<f64> {
+    let members: Vec<&Vec<f64>> = points
+        .iter()
+        .zip(labels)
+        .filter(|(_, &l)| l == which)
+        .map(|(p, _)| p)
+        .collect();
+    let d = members[0].len();
+    let mut c = vec![0.0; d];
+    for m in &members {
+        for i in 0..d {
+            c[i] += m[i] / members.len() as f64;
+        }
+    }
+    c
+}

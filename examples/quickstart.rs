@@ -1,0 +1,63 @@
+//! Quickstart: points → distance matrix → distributed complete-linkage →
+//! dendrogram. The 60-second tour of the public API.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use lancew::prelude::*;
+use lancew::validate::{ari, cophenetic_correlation};
+
+fn main() -> anyhow::Result<()> {
+    // 1. A labelled synthetic workload: 90 points in 3 well-separated
+    //    Gaussian blobs (ground truth rides along for scoring).
+    let data = GaussianSpec {
+        n: 90,
+        d: 4,
+        k: 3,
+        center_spread: 30.0,
+        noise: 1.0,
+    }
+    .generate(42);
+
+    // 2. The paper's input: an n×n distance matrix (condensed upper
+    //    triangle — (n²−n)/2 cells).
+    let matrix = euclidean_matrix(&data.points);
+    println!("matrix: n={} ({} condensed cells)", matrix.n(), matrix.len());
+
+    // 3. Distributed Lance-Williams, complete linkage (the paper's
+    //    scheme), 4 ranks, the paper's cell-balanced partition.
+    let run = ClusterConfig::new(Scheme::Complete, 4).run(&matrix)?;
+    println!("run:    {}", run.stats.summary());
+
+    // 4. The dendrogram is the full tree; cut it anywhere.
+    let dend = &run.dendrogram;
+    println!(
+        "tree:   monotone={} top height={:.3}",
+        dend.is_monotone(),
+        dend.heights().last().unwrap()
+    );
+    for k in [2, 3, 5] {
+        let labels = dend.cut(k);
+        let mut sizes = vec![0usize; k];
+        for &l in &labels {
+            sizes[l] += 1;
+        }
+        println!("cut k={k}: sizes {sizes:?}");
+    }
+
+    // 5. Validate: does the k=3 level recover the generating mixture?
+    let labels = dend.cut(3);
+    println!("ARI vs ground truth at k=3: {:.4}", ari(&labels, &data.labels));
+    println!(
+        "cophenetic correlation:      {:.4}",
+        cophenetic_correlation(&matrix, dend)
+    );
+
+    // 6. Cross-check against the serial baseline — bit-identical.
+    let serial = serial_lw_cluster(Scheme::Complete, &matrix);
+    lancew::validate::dendrograms_equal(&serial, dend, 0.0)
+        .map_err(|e| anyhow::anyhow!("parallel != serial: {e}"))?;
+    println!("parallel ≡ serial: ✓");
+    Ok(())
+}

@@ -1,0 +1,125 @@
+//! END-TO-END DRIVER (DESIGN.md experiment F2): the paper's §6 evaluation,
+//! run on the full system.
+//!
+//! Reproduces Figure 2 — "Running time is shown as function of processor
+//! count. The algorithm was run many times and the average number of items
+//! is approximately 1968" — by running the complete distributed stack
+//! (data generation → RMSD-like matrix → shard distribution → the §5.3
+//! protocol) for several n around 1968 and averaging, at every processor
+//! count. Reports simulated makespan (Nehalem-cluster cost model — see
+//! DESIGN.md §2 for the substitution), real wall time, speedup, and the
+//! §5.4 communication/storage counters. Writes fig2.csv.
+//!
+//! ```sh
+//! cargo run --release --example scaling_study            # full (paper n)
+//! cargo run --release --example scaling_study -- --quick # CI-sized
+//! ```
+
+use std::path::Path;
+
+use lancew::data::io::CsvReport;
+use lancew::prelude::*;
+use lancew::util::cli::{parse_list, Args};
+use lancew::util::stats::Summary;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let quick = args.has("quick");
+    // Paper protocol: "run many times with varying numbers of items, the
+    // average of n was 1968". We use three n around 1968 (quick: ~1/4).
+    let ns: Vec<usize> = if quick {
+        vec![448, 492, 540]
+    } else {
+        parse_list(args.get("ns").unwrap_or("1772,1968,2164"))?
+    };
+    let ps: Vec<usize> = parse_list(
+        args.get("ps")
+            .unwrap_or("1,2,3,4,5,6,8,10,12,15,18,22,28"),
+    )?;
+    let scheme: Scheme = args.get("scheme").unwrap_or("complete").parse()?;
+    let seed: u64 = args.parse_or("seed", 1968u64)?;
+    let out = args.get("out").unwrap_or("fig2.csv").to_string();
+    args.reject_unknown()?;
+
+    let mean_n = ns.iter().sum::<usize>() / ns.len();
+    println!(
+        "# Figure 2 reproduction: scheme={scheme} cost-model=nehalem  n∈{ns:?} (mean {mean_n})"
+    );
+
+    // Pre-build the matrices once (the workload, not the system under test).
+    println!("# generating {} distance matrices...", ns.len());
+    let matrices: Vec<CondensedMatrix> = ns
+        .iter()
+        .enumerate()
+        .map(|(i, &n)| {
+            let lp = GaussianSpec { n, d: 8, k: 12, ..Default::default() }.generate(seed + i as u64);
+            euclidean_matrix(&lp.points)
+        })
+        .collect();
+
+    let mut report = CsvReport::create(
+        Path::new(&out),
+        "p,mean_sim_time_s,speedup,mean_wall_s,msgs_per_iter_per_rank,peak_shard_cells,scan_s,coord_s,update_s",
+    )?;
+    println!(
+        "{:>4} {:>14} {:>9} {:>10} {:>12} {:>12}",
+        "p", "sim_time_s", "speedup", "wall_s", "msg/it/rank", "peak_shard"
+    );
+
+    let mut t1 = None;
+    for &p in &ps {
+        let mut sims = Vec::new();
+        let mut walls = Vec::new();
+        let mut msgs_per_iter_rank = Vec::new();
+        let mut peak = 0usize;
+        let (mut scan, mut coord, mut update) = (0.0, 0.0, 0.0);
+        for m in &matrices {
+            let run = ClusterConfig::new(scheme, p).run(m)?;
+            sims.push(run.stats.virtual_s);
+            walls.push(run.stats.wall_s);
+            msgs_per_iter_rank.push(run.stats.msgs_per_iteration() / p as f64);
+            peak = peak.max(run.stats.peak_shard_cells);
+            // Critical-path phase breakdown: take the slowest rank's phases.
+            if let Some(ph) = run
+                .stats
+                .phases
+                .iter()
+                .max_by(|a, b| a.total().partial_cmp(&b.total()).unwrap())
+            {
+                scan += ph.scan;
+                coord += ph.coordinate;
+                update += ph.update;
+            }
+        }
+        let sim = Summary::of(&sims).mean;
+        let wall = Summary::of(&walls).mean;
+        let mpr = Summary::of(&msgs_per_iter_rank).mean;
+        let t1v = *t1.get_or_insert(sim);
+        println!(
+            "{:>4} {:>14.6} {:>9.2} {:>10.3} {:>12.1} {:>12}",
+            p,
+            sim,
+            t1v / sim,
+            wall,
+            mpr,
+            peak
+        );
+        report.row(&[
+            p.to_string(),
+            format!("{sim:.6}"),
+            format!("{:.3}", t1v / sim),
+            format!("{wall:.3}"),
+            format!("{mpr:.2}"),
+            peak.to_string(),
+            format!("{:.6}", scan / matrices.len() as f64),
+            format!("{:.6}", coord / matrices.len() as f64),
+            format!("{:.6}", update / matrices.len() as f64),
+        ])?;
+    }
+    println!("# wrote {out}");
+    println!(
+        "# paper shape check: near-linear speedup to ~p=5, gains to ~p=15, then\n\
+         # communication outweighs compute (§6). Compare the speedup column."
+    );
+    Ok(())
+}

@@ -1,0 +1,109 @@
+//! The three-layer path end to end: every compute stage runs through the
+//! AOT-compiled Pallas/JAX artifacts via PJRT — no Python anywhere.
+//!
+//! 1. L1 `pairwise` kernel builds the distance matrix on-device;
+//! 2. the distributed coordinator runs with `Engine::Xla`, so each rank's
+//!    step-1 min scan executes the L1 `shard_min` kernel;
+//! 3. the single-call L2 `full_lw` graph clusters the same matrix inside
+//!    one XLA program — cross-checked against serial rust.
+//!
+//! Requires `make artifacts` first.
+//!
+//! ```sh
+//! cargo run --release --example xla_pipeline
+//! ```
+
+use std::sync::Arc;
+
+use lancew::prelude::*;
+use lancew::runtime::XlaEngine;
+use lancew::validate::dendrograms_equal;
+
+fn main() -> anyhow::Result<()> {
+    let dir = XlaEngine::default_dir();
+    let engine = Arc::new(XlaEngine::load(&dir).map_err(|e| {
+        anyhow::anyhow!("{e}\nhint: run `make artifacts` to build the HLO artifacts first")
+    })?);
+    println!(
+        "loaded {} artifacts from {}",
+        engine.manifest().len(),
+        dir.display()
+    );
+
+    // Workload sized to the compiled pairwise variant (256 × 32).
+    let (n, d) = (256usize, 32usize);
+    let data = GaussianSpec {
+        n,
+        d,
+        k: 5,
+        center_spread: 20.0,
+        noise: 1.0,
+    }
+    .generate(3);
+
+    // ---- L1 pairwise kernel via PJRT ---------------------------------
+    let flat: Vec<f32> = data
+        .points
+        .iter()
+        .flat_map(|p| p.iter().map(|&v| v as f32))
+        .collect();
+    let t = std::time::Instant::now();
+    let full = engine.pairwise(&flat, n, d)?;
+    println!(
+        "L1 pairwise_{n}x{d}: {} cells in {:.3}s (compile+run, first call)",
+        n * n,
+        t.elapsed().as_secs_f64()
+    );
+    let matrix = CondensedMatrix::from_full(n, &full);
+    // Cross-check against the rust-side computation.
+    let rust_matrix = euclidean_matrix(&data.points);
+    let mut max_err = 0f32;
+    for idx in 0..matrix.len() {
+        max_err = max_err.max((matrix.cells()[idx] - rust_matrix.cells()[idx]).abs());
+    }
+    println!("  max |xla − rust| distance error: {max_err:.2e}");
+
+    // ---- Distributed run with the XLA shard_min engine ----------------
+    let t = std::time::Instant::now();
+    let run_xla = ClusterConfig::new(Scheme::Complete, 4)
+        .with_engine(lancew::coordinator::Engine::Xla(engine.clone()))
+        .run(&matrix)?;
+    println!(
+        "L3+L1 distributed (Engine::Xla, p=4): {} [{:.2}s wall]",
+        run_xla.stats.summary(),
+        t.elapsed().as_secs_f64()
+    );
+
+    let serial = serial_lw_cluster(Scheme::Complete, &matrix);
+    dendrograms_equal(&serial, &run_xla.dendrogram, 0.0)
+        .map_err(|e| anyhow::anyhow!("xla-engine run != serial: {e}"))?;
+    println!("  xla-engine dendrogram ≡ serial rust: ✓");
+
+    // ---- Whole clustering inside one XLA call (L2 full_lw graph) ------
+    // The compiled variant is 128-wide; cluster the first 100 items with
+    // 28 padding slots to show the padding path too.
+    let n_small = 100usize;
+    let n_pad = 128usize;
+    let mut dmat = vec![f32::INFINITY; n_pad * n_pad];
+    for i in 0..n_small {
+        for j in 0..n_small {
+            if i != j {
+                dmat[i * n_pad + j] = matrix.get(i, j);
+            }
+        }
+    }
+    let t = std::time::Instant::now();
+    let res = engine.full_lw("complete", &dmat, n_pad, n_small)?;
+    println!(
+        "L2 full_lw_complete_{n_pad}: clustered {n_small} items in one XLA call [{:.2}s]",
+        t.elapsed().as_secs_f64()
+    );
+    let sub = CondensedMatrix::from_fn(n_small, |i, j| matrix.get(i, j));
+    let serial_small = serial_lw_cluster(Scheme::Complete, &sub);
+    dendrograms_equal(&serial_small, &res.dendrogram, 1e-4)
+        .map_err(|e| anyhow::anyhow!("full_lw != serial: {e}"))?;
+    println!("  single-call dendrogram ≡ serial rust: ✓");
+
+    println!("\nthree-layer stack verified: Pallas kernels → JAX graphs → HLO → PJRT → rust coordinator");
+    Ok(())
+}

@@ -1,0 +1,127 @@
+"""AOT compile path: lower every L2 graph to HLO *text* + write a manifest.
+
+Run once by `make artifacts`:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Interchange format is HLO text, NOT `.serialize()`: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+The manifest (`artifacts/manifest.txt`) is a TSV the rust runtime parses —
+one line per artifact:
+
+    name<TAB>file<TAB>in:dtype[shape];...<TAB>out:dtype[shape];...
+
+Python never runs again after this: the rust binary is self-contained.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Shape variants the rust runtime may request. Shards are padded with +inf
+# to the next capacity; rows to the next row length.
+SHARD_CAPACITIES = (1024, 4096, 16384, 65536)
+ROW_LENGTHS = (256, 1024, 2048)
+PAIRWISE_VARIANTS = ((256, 32),)
+FULL_LW_VARIANTS = (
+    ("complete", 64),
+    ("complete", 128),
+    ("single", 64),
+    ("average", 64),
+)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo → XlaComputation → HLO text (return_tuple for rust's to_tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _fmt(shapes) -> str:
+    return ";".join(
+        f"{jnp.dtype(s.dtype).name}[{','.join(str(d) for d in s.shape)}]" for s in shapes
+    )
+
+
+def build_catalog():
+    """(name, lowered, in_specs, out_specs) for every artifact."""
+    entries = []
+
+    def lower(name, fn, in_specs):
+        # keep_unused: constant-coefficient schemes never read `sizes`, but
+        # the runtime passes the same buffer list to every variant.
+        lowered = jax.jit(fn, keep_unused=True).lower(*in_specs)
+        out = lowered.out_info
+        out_specs = [_spec(o.shape, o.dtype) for o in jax.tree_util.tree_leaves(out)]
+        entries.append((name, lowered, in_specs, out_specs))
+
+    for cap in SHARD_CAPACITIES:
+        lower(f"shard_min_{cap}", model.shard_min, [_spec((cap,))])
+
+    for m in ROW_LENGTHS:
+        lower(
+            f"lw_update_{m}",
+            model.lw_row_update,
+            [
+                _spec((m,)),  # d_ki
+                _spec((m,)),  # d_kj
+                _spec((m,)),  # alpha_i
+                _spec((m,)),  # alpha_j
+                _spec((m,)),  # beta
+                _spec(()),  # gamma
+                _spec(()),  # d_ij
+            ],
+        )
+
+    for n, d in PAIRWISE_VARIANTS:
+        lower(f"pairwise_{n}x{d}", model.pairwise_matrix, [_spec((n, d))])
+
+    for scheme, n in FULL_LW_VARIANTS:
+        lower(
+            f"full_lw_{scheme}_{n}",
+            model.full_lw_cluster(scheme, n),
+            [_spec((n, n)), _spec((n,))],
+        )
+
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest_lines = []
+    for name, lowered, in_specs, out_specs in build_catalog():
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        manifest_lines.append(f"{name}\t{fname}\t{_fmt(in_specs)}\t{_fmt(out_specs)}")
+        print(f"  {name:24s} -> {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {len(manifest_lines)} artifacts + manifest to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

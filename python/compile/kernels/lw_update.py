@@ -1,0 +1,82 @@
+"""L1 Pallas kernel: vectorised Lance-Williams row update (paper §5.3 step 6).
+
+    D_{k,i∪j} = αᵢ·D_{k,i} + αⱼ·D_{k,j} + β·D_{i,j} + γ·|D_{k,i} − D_{k,j}|
+
+Coefficients αᵢ, αⱼ, β arrive as per-k *vectors* so the size-dependent
+schemes of Table 1 (group-average, centroid, Ward — whose coefficients
+depend on n_k) share one artifact with the constant-coefficient schemes
+(single, complete, weighted); γ and D_{i,j} are scalars carried in SMEM-ish
+(1,1) blocks. Retired slots (either input +inf) propagate +inf so they stay
+out of future min scans.
+
+Pure VPU elementwise work; the grid tiles k into BLOCK-wide VMEM chunks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 1024
+INF = float("inf")  # python float: a jnp scalar would be a captured constant
+
+
+def _lw_kernel(dki_ref, dkj_ref, ai_ref, aj_ref, beta_ref, scal_ref, o_ref):
+    dki = dki_ref[...]
+    dkj = dkj_ref[...]
+    gamma = scal_ref[0, 0]
+    dij = scal_ref[0, 1]
+    out = (
+        ai_ref[...] * dki
+        + aj_ref[...] * dkj
+        + beta_ref[...] * dij
+        + gamma * jnp.abs(dki - dkj)
+    )
+    dead = jnp.isinf(dki) | jnp.isinf(dkj)
+    o_ref[...] = jnp.where(dead, INF, out)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def lw_update(
+    d_ki: jnp.ndarray,
+    d_kj: jnp.ndarray,
+    alpha_i: jnp.ndarray,
+    alpha_j: jnp.ndarray,
+    beta: jnp.ndarray,
+    gamma: jnp.ndarray,
+    d_ij: jnp.ndarray,
+    *,
+    block: int = BLOCK,
+) -> jnp.ndarray:
+    """Updated merged-cluster row, shape (m,); m % block == 0 (or m < block)."""
+    (m,) = d_ki.shape
+    blk = min(block, m)
+    assert m % blk == 0, (m, blk)
+    grid = (m // blk,)
+    vec = pl.BlockSpec((blk,), lambda i: (i,))
+    scalars = jnp.stack([gamma.astype(jnp.float32), d_ij.astype(jnp.float32)]).reshape(1, 2)
+    return pl.pallas_call(
+        _lw_kernel,
+        grid=grid,
+        in_specs=[
+            vec,
+            vec,
+            vec,
+            vec,
+            vec,
+            pl.BlockSpec((1, 2), lambda i: (0, 0)),
+        ],
+        out_specs=vec,
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,
+    )(
+        d_ki.astype(jnp.float32),
+        d_kj.astype(jnp.float32),
+        alpha_i.astype(jnp.float32),
+        alpha_j.astype(jnp.float32),
+        beta.astype(jnp.float32),
+        scalars,
+    )

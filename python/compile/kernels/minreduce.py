@@ -1,0 +1,81 @@
+"""L1 Pallas kernel: masked (min, argmin) over a condensed distance shard.
+
+This is step 1 of the paper's per-iteration protocol — each rank scans its
+`(n²−n)/2/p` condensed cells for the local minimum. Retired / padded cells
+hold +inf, so no separate mask array travels with the data.
+
+TPU mapping: the shard is viewed as (blocks, 1, BLOCK) and the grid walks
+the blocks sequentially (TPU grid is sequential per core), carrying the
+running (min, argmin) in the output refs — the Pallas idiom for a
+reduction with a grid-carried accumulator. Each step's block reduction is
+pure VPU work on an (1,BLOCK) vector; argmin-in-block is computed with a
+broadcasted-iota compare so it vectorises instead of serialising.
+
+Ties resolve to the lowest linear index, matching both jnp.argmin and the
+rust scalar path — bitwise-identical winner selection across all three
+implementations is load-bearing for the distributed protocol (every rank
+must agree on the global minimum without communication, paper §5.3 step 4).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# 8·128 lanes = one f32 VPU tile row; shards are padded to a multiple.
+BLOCK = 1024
+
+
+def _minreduce_kernel(v_ref, minv_ref, mini_ref):
+    step = pl.program_id(0)
+    v = v_ref[...]  # (1, BLOCK)
+    block = v.shape[-1]
+
+    # Vectorised in-block argmin: smallest index among positions equal to
+    # the block min (iota compare keeps it on the VPU).
+    bmin = jnp.min(v)
+    iota = jax.lax.broadcasted_iota(jnp.int32, v.shape, v.ndim - 1)
+    bidx = jnp.min(jnp.where(v == bmin, iota, block)) + step * block
+
+    @pl.when(step == 0)
+    def _init():
+        minv_ref[...] = jnp.full_like(minv_ref, jnp.inf)
+        mini_ref[...] = jnp.full_like(mini_ref, -1)
+
+    prev_v = minv_ref[0]
+    prev_i = mini_ref[0]
+    # Strictly-less keeps the earliest index on ties across blocks.
+    better = bmin < prev_v
+    minv_ref[0] = jnp.where(better, bmin, prev_v)
+    mini_ref[0] = jnp.where(better, bidx.astype(jnp.int32), prev_i)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def minreduce(vals: jnp.ndarray, *, block: int = BLOCK):
+    """(min value f32[1], argmin index i32[1]) over vals (L,), L % block == 0.
+
+    All-+inf input yields (inf, -1) — the coordinator treats that as "no
+    active cell in this shard".
+    """
+    (length,) = vals.shape
+    blk = min(block, length)
+    assert length % blk == 0, (length, blk)
+    grid = (length // blk,)
+    v2 = vals.astype(jnp.float32).reshape(length // blk, 1, blk)
+    return pl.pallas_call(
+        _minreduce_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, 1, blk), lambda i: (i, 0, 0))],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((1,), jnp.float32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=True,
+    )(v2)

@@ -1,0 +1,58 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every kernel in this package has a matching `ref_*` here. pytest asserts
+`assert_allclose(kernel(...), ref(...))` across shape/seed sweeps — this is
+the core correctness signal for layer 1.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Padding sentinel used by the condensed-shard kernels. Retired / padded
+# cells hold +INF so they never win a min scan.
+INF = jnp.float32(jnp.inf)
+
+
+def ref_pairwise_sq(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Squared Euclidean distances between rows of x (m,d) and y (n,d)."""
+    diff = x[:, None, :] - y[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def ref_pairwise(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Euclidean distances between rows of x (m,d) and y (n,d)."""
+    return jnp.sqrt(jnp.maximum(ref_pairwise_sq(x, y), 0.0))
+
+
+def ref_minreduce(vals: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """(min value, argmin index) over a 1-D shard.
+
+    Padded / retired entries are +inf; ties resolve to the lowest index
+    (jnp.argmin semantics) which the rust coordinator mirrors.
+    """
+    idx = jnp.argmin(vals)
+    return vals[idx], idx.astype(jnp.int32)
+
+
+def ref_lw_update(
+    d_ki: jnp.ndarray,
+    d_kj: jnp.ndarray,
+    alpha_i: jnp.ndarray,
+    alpha_j: jnp.ndarray,
+    beta: jnp.ndarray,
+    gamma: jnp.ndarray,
+    d_ij: jnp.ndarray,
+) -> jnp.ndarray:
+    """Lance-Williams update, vectorised over k.
+
+    D_{k,i∪j} = αᵢ·D_{k,i} + αⱼ·D_{k,j} + β·D_{i,j} + γ·|D_{k,i} − D_{k,j}|
+
+    `alpha_i/alpha_j/beta` are per-k vectors so size-dependent schemes
+    (group-average, centroid, Ward) fit the same artifact; `gamma`/`d_ij`
+    are scalars broadcast over k. Entries where either input is +inf
+    (retired slots) propagate +inf.
+    """
+    out = alpha_i * d_ki + alpha_j * d_kj + beta * d_ij + gamma * jnp.abs(d_ki - d_kj)
+    dead = jnp.isinf(d_ki) | jnp.isinf(d_kj)
+    return jnp.where(dead, INF, out)

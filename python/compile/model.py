@@ -1,0 +1,210 @@
+"""L2: the paper's compute graphs in JAX, composed from the L1 Pallas kernels.
+
+Three small graphs back the per-iteration hot path of the rust coordinator
+(shard min scan, LW row update, pairwise distance build), and one large
+graph — `full_lw_cluster` — runs the *entire* Lance-Williams loop (paper §4)
+as a `lax.fori_loop` over a padded matrix, so small-n clusterings execute in
+a single PJRT call from rust.
+
+Everything here is lowered once by `aot.py`; nothing in this package is
+imported at runtime.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lw_update as lw_update_k
+from .kernels import minreduce as minreduce_k
+from .kernels import pairwise as pairwise_k
+
+INF = jnp.float32(jnp.inf)
+
+# Scheme ids shared with rust (rust/src/linkage/scheme.rs must agree).
+# Table-1 six + the "median" (WPGMC) extension.
+SCHEMES = (
+    "single",
+    "complete",
+    "average",
+    "weighted",
+    "centroid",
+    "ward",
+    "median",
+)
+
+
+def scheme_coeffs(
+    scheme: str,
+    sizes: jnp.ndarray,
+    i: jnp.ndarray,
+    j: jnp.ndarray,
+):
+    """Table-1 Lance-Williams coefficients, vectorised over k.
+
+    Returns (alpha_i[k], alpha_j[k], beta[k], gamma scalar) for merging
+    slots i and j given per-slot cluster sizes. `scheme` is a *trace-time*
+    constant: each scheme lowers to its own HLO artifact.
+    """
+    ni = sizes[i]
+    nj = sizes[j]
+    nk = sizes
+    ones = jnp.ones_like(sizes)
+    zeros = jnp.zeros_like(sizes)
+    if scheme == "single":
+        return 0.5 * ones, 0.5 * ones, zeros, jnp.float32(-0.5)
+    if scheme == "complete":
+        return 0.5 * ones, 0.5 * ones, zeros, jnp.float32(0.5)
+    if scheme == "weighted":
+        return 0.5 * ones, 0.5 * ones, zeros, jnp.float32(0.0)
+    if scheme == "average":
+        denom = ni + nj
+        return (ni / denom) * ones, (nj / denom) * ones, zeros, jnp.float32(0.0)
+    if scheme == "centroid":
+        denom = ni + nj
+        beta = (-(ni * nj) / (denom * denom)) * ones
+        return (ni / denom) * ones, (nj / denom) * ones, beta, jnp.float32(0.0)
+    if scheme == "ward":
+        # nk-dependent: guard retired slots (nk == 0) against 0/0.
+        denom = jnp.maximum(ni + nj + nk, 1.0)
+        return (ni + nk) / denom, (nj + nk) / denom, -nk / denom, jnp.float32(0.0)
+    if scheme == "median":
+        return 0.5 * ones, 0.5 * ones, -0.25 * ones, jnp.float32(0.0)
+    raise ValueError(f"unknown scheme {scheme!r}")
+
+
+# ---------------------------------------------------------------------------
+# Small graphs: one rust-callable op each.
+# ---------------------------------------------------------------------------
+
+
+def shard_min(vals: jnp.ndarray):
+    """(min, argmin) over a rank's condensed shard — paper §5.3 step 1."""
+    minv, mini = minreduce_k.minreduce(vals)
+    return minv, mini
+
+
+def lw_row_update(d_ki, d_kj, alpha_i, alpha_j, beta, gamma, d_ij):
+    """Merged-cluster row — paper §5.3 step 6 (scheme-generic form)."""
+    return lw_update_k.lw_update(d_ki, d_kj, alpha_i, alpha_j, beta, gamma, d_ij)
+
+
+def pairwise_matrix(x: jnp.ndarray) -> jnp.ndarray:
+    """Full symmetric Euclidean distance matrix of a point set (n,d).
+
+    The diagonal is forced to +inf — the condensed/min-scan convention used
+    throughout (a cluster never merges with itself).
+    """
+    d = jnp.sqrt(pairwise_k.pairwise_sq(x, x))
+    n = x.shape[0]
+    eye = jnp.eye(n, dtype=bool)
+    return jnp.where(eye, INF, d)
+
+
+# ---------------------------------------------------------------------------
+# The full Lance-Williams loop as one XLA program.
+# ---------------------------------------------------------------------------
+
+
+def full_lw_cluster(scheme: str, n: int) -> Callable:
+    """Build the whole-clustering graph for `scheme` at matrix size n.
+
+    Input: D (n,n) f32, symmetric, +inf diagonal (+inf rows/cols = padding,
+    with matching 0 entries in `sizes`). Output: merges (n-1, 2) i32 slot
+    pairs (i<j, merged cluster lives on in slot i — the paper's row-reuse
+    convention) and heights (n-1,) f32. Padded slots never win a merge
+    because their distances are +inf; their merge records carry i=j=-1.
+
+    The in-loop global argmin reuses the L1 minreduce kernel over the
+    flattened matrix; the row update reuses the L1 lw_update kernel — so
+    this one HLO exercises every layer-1 kernel end to end.
+    """
+    assert n * n % 32 == 0 or n <= 1024  # minreduce block divisibility
+
+    def run(dmat: jnp.ndarray, sizes: jnp.ndarray):
+        iota = jnp.arange(n, dtype=jnp.int32)
+
+        def body(t, state):
+            dm, sz, merges, heights = state
+            flat = dm.reshape(n * n)
+            minv, mini = minreduce_k.minreduce(flat, block=min(1024, n * n))
+            minv = minv[0]
+            mini = mini[0]
+            # mini == -1 ⟺ everything retired (only for padded iterations).
+            valid = mini >= 0
+            safe = jnp.maximum(mini, 0)
+            a = safe // n
+            b = safe % n
+            i = jnp.minimum(a, b)
+            j = jnp.maximum(a, b)
+
+            ai, aj, beta, gamma = scheme_coeffs(scheme, sz, i, j)
+            newrow = lw_update_k.lw_update(
+                dm[i, :], dm[j, :], ai, aj, beta, gamma, minv, block=min(1024, n)
+            )
+            # Slot i hosts the merged cluster; slot j is retired. The merged
+            # cluster's self-distance stays +inf; retired row/col go +inf.
+            newrow = jnp.where((iota == i) | (iota == j), INF, newrow)
+            dm2 = dm.at[i, :].set(newrow).at[:, i].set(newrow)
+            dm2 = dm2.at[j, :].set(INF).at[:, j].set(INF)
+            sz2 = sz.at[i].set(sz[i] + sz[j]).at[j].set(0.0)
+
+            dm = jnp.where(valid, dm2, dm)
+            sz = jnp.where(valid, sz2, sz)
+            rec = jnp.where(
+                valid,
+                jnp.stack([i, j]).astype(jnp.int32),
+                jnp.array([-1, -1], dtype=jnp.int32),
+            )
+            merges = merges.at[t].set(rec)
+            heights = heights.at[t].set(jnp.where(valid, minv, INF))
+            return dm, sz, merges, heights
+
+        merges0 = jnp.full((n - 1, 2), -1, dtype=jnp.int32)
+        heights0 = jnp.full((n - 1,), INF, dtype=jnp.float32)
+        _, _, merges, heights = jax.lax.fori_loop(
+            0, n - 1, body, (dmat.astype(jnp.float32), sizes.astype(jnp.float32), merges0, heights0)
+        )
+        return merges, heights
+
+    return run
+
+
+# Reference (kernel-free) implementation of the same loop, used by pytest to
+# check the composed graph — deliberately written without pallas so the two
+# paths share no code.
+def ref_full_lw_cluster(scheme: str, dmat, sizes):
+    import numpy as np
+
+    dm = np.array(dmat, dtype=np.float64)
+    sz = np.array(sizes, dtype=np.float64)
+    n = dm.shape[0]
+    merges = np.full((n - 1, 2), -1, dtype=np.int32)
+    heights = np.full((n - 1,), np.inf, dtype=np.float64)
+    for t in range(n - 1):
+        flat = dm.reshape(-1)
+        mini = int(np.argmin(flat))
+        minv = flat[mini]
+        if not np.isfinite(minv):
+            continue
+        i, j = sorted((mini // n, mini % n))
+        ai, aj, beta, gamma = (
+            np.asarray(v, dtype=np.float64)
+            for v in scheme_coeffs(scheme, jnp.asarray(sz, jnp.float32), jnp.int32(i), jnp.int32(j))
+        )
+        with np.errstate(invalid="ignore"):
+            row = ai * dm[i, :] + aj * dm[j, :] + beta * minv + gamma * np.abs(dm[i, :] - dm[j, :])
+        row[~np.isfinite(dm[i, :]) | ~np.isfinite(dm[j, :])] = np.inf
+        row[i] = row[j] = np.inf
+        dm[i, :] = row
+        dm[:, i] = row
+        dm[j, :] = np.inf
+        dm[:, j] = np.inf
+        sz[i] += sz[j]
+        sz[j] = 0.0
+        merges[t] = (i, j)
+        heights[t] = minv
+    return merges, heights

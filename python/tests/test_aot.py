@@ -1,0 +1,56 @@
+"""AOT catalog: every artifact lowers to parseable HLO text + manifest shape."""
+
+import os
+
+import pytest
+
+from compile import aot, model
+
+
+def test_catalog_covers_runtime_contract():
+    names = [e[0] for e in aot.build_catalog()]
+    for cap in aot.SHARD_CAPACITIES:
+        assert f"shard_min_{cap}" in names
+    for m in aot.ROW_LENGTHS:
+        assert f"lw_update_{m}" in names
+    assert any(n.startswith("pairwise_") for n in names)
+    assert "full_lw_complete_64" in names
+
+
+def test_hlo_text_is_hlo():
+    entries = aot.build_catalog()
+    # Lower just the cheapest entries to keep the test fast.
+    small = [e for e in entries if e[0] in ("shard_min_1024", "lw_update_256")]
+    for name, lowered, _, _ in small:
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+
+
+def test_manifest_format_roundtrip(tmp_path):
+    import jax.numpy as jnp
+    import jax
+
+    spec = jax.ShapeDtypeStruct((4,), jnp.float32)
+    line = aot._fmt([spec, jax.ShapeDtypeStruct((2, 3), jnp.int32)])
+    assert line == "float32[4];int32[2,3]"
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.txt")),
+    reason="artifacts not built",
+)
+def test_built_manifest_parses():
+    path = os.path.join(os.path.dirname(__file__), "../../artifacts/manifest.txt")
+    adir = os.path.dirname(path)
+    with open(path) as f:
+        lines = [l.strip() for l in f if l.strip()]
+    assert len(lines) >= 10
+    for line in lines:
+        name, fname, ins, outs = line.split("\t")
+        assert os.path.exists(os.path.join(adir, fname)), fname
+        for field in (ins, outs):
+            for spec in field.split(";"):
+                dtype, rest = spec.split("[")
+                assert dtype in ("float32", "int32")
+                assert rest.endswith("]")

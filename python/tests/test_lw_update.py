@@ -1,0 +1,129 @@
+"""L1 Lance-Williams update kernel vs oracle, incl. Table-1 scheme algebra."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lw_update, ref
+from compile import model
+
+
+def _vecs(seed, m):
+    rng = np.random.default_rng(seed)
+    return (
+        np.abs(rng.normal(size=(m,))).astype(np.float32),
+        np.abs(rng.normal(size=(m,))).astype(np.float32),
+    )
+
+
+def _run(dki, dkj, ai, aj, beta, gamma, dij):
+    args = [
+        jnp.asarray(dki),
+        jnp.asarray(dkj),
+        jnp.asarray(ai),
+        jnp.asarray(aj),
+        jnp.asarray(beta),
+        jnp.float32(gamma),
+        jnp.float32(dij),
+    ]
+    got = np.asarray(lw_update.lw_update(*args))
+    want = np.asarray(ref.ref_lw_update(*args))
+    return got, want
+
+
+@pytest.mark.parametrize("m", [256, 1024, 2048, 4096])
+def test_lw_update_matches_ref(m):
+    dki, dkj = _vecs(1, m)
+    ai = np.full(m, 0.5, np.float32)
+    beta = np.zeros(m, np.float32)
+    got, want = _run(dki, dkj, ai, ai, beta, 0.5, 1.25)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_complete_linkage_is_max():
+    """With α=0.5, γ=+0.5 the update is exactly max(D_ki, D_kj) (Table 1)."""
+    dki, dkj = _vecs(2, 1024)
+    ai = np.full(1024, 0.5, np.float32)
+    beta = np.zeros(1024, np.float32)
+    got, _ = _run(dki, dkj, ai, ai, beta, 0.5, 3.0)
+    np.testing.assert_allclose(got, np.maximum(dki, dkj), rtol=1e-5, atol=1e-6)
+
+
+def test_single_linkage_is_min():
+    """With α=0.5, γ=−0.5 the update is exactly min(D_ki, D_kj) (Table 1)."""
+    dki, dkj = _vecs(3, 1024)
+    ai = np.full(1024, 0.5, np.float32)
+    beta = np.zeros(1024, np.float32)
+    got, _ = _run(dki, dkj, ai, ai, beta, -0.5, 3.0)
+    np.testing.assert_allclose(got, np.minimum(dki, dkj), rtol=1e-5, atol=1e-6)
+
+
+def test_inf_slots_propagate():
+    dki, dkj = _vecs(4, 1024)
+    dki[5] = np.inf
+    dkj[10] = np.inf
+    ai = np.full(1024, 0.5, np.float32)
+    beta = np.zeros(1024, np.float32)
+    got, want = _run(dki, dkj, ai, ai, beta, 0.5, 1.0)
+    assert np.isinf(got[5]) and np.isinf(got[10])
+    fin = np.isfinite(want)
+    np.testing.assert_allclose(got[fin], want[fin], rtol=1e-6)
+
+
+def test_size_dependent_coefficients():
+    """Group-average via per-k vectors equals the weighted mean identity."""
+    dki, dkj = _vecs(5, 1024)
+    ni, nj = 3.0, 5.0
+    ai = np.full(1024, ni / (ni + nj), np.float32)
+    aj = np.full(1024, nj / (ni + nj), np.float32)
+    beta = np.zeros(1024, np.float32)
+    got, _ = _run(dki, dkj, ai, aj, beta, 0.0, 9.9)
+    np.testing.assert_allclose(got, (ni * dki + nj * dkj) / (ni + nj), rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    nblk=st.integers(1, 4),
+    gamma=st.sampled_from([-0.5, 0.0, 0.5]),
+    dij=st.floats(0.0, 10.0),
+)
+def test_lw_update_hypothesis_sweep(seed, nblk, gamma, dij):
+    m = 1024 * nblk
+    dki, dkj = _vecs(seed, m)
+    rng = np.random.default_rng(seed + 1)
+    ai = rng.random(m).astype(np.float32)
+    aj = rng.random(m).astype(np.float32)
+    beta = (rng.random(m).astype(np.float32) - 0.5) * 0.5
+    got, want = _run(dki, dkj, ai, aj, beta, gamma, dij)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_scheme_coeffs_table1():
+    """model.scheme_coeffs reproduces Table 1 rows exactly."""
+    sizes = jnp.asarray(np.array([2.0, 3.0, 4.0, 1.0], np.float32))
+    i, j = jnp.int32(0), jnp.int32(1)
+    ni, nj = 2.0, 3.0
+
+    ai, aj, beta, gamma = model.scheme_coeffs("complete", sizes, i, j)
+    assert float(ai[0]) == 0.5 and float(gamma) == 0.5 and float(beta[0]) == 0.0
+
+    ai, aj, beta, gamma = model.scheme_coeffs("single", sizes, i, j)
+    assert float(gamma) == -0.5
+
+    ai, aj, beta, gamma = model.scheme_coeffs("average", sizes, i, j)
+    np.testing.assert_allclose(float(ai[0]), ni / (ni + nj), rtol=1e-6)
+    np.testing.assert_allclose(float(aj[0]), nj / (ni + nj), rtol=1e-6)
+
+    ai, aj, beta, gamma = model.scheme_coeffs("centroid", sizes, i, j)
+    np.testing.assert_allclose(float(beta[0]), -(ni * nj) / (ni + nj) ** 2, rtol=1e-6)
+
+    ai, aj, beta, gamma = model.scheme_coeffs("ward", sizes, i, j)
+    nk = 4.0
+    np.testing.assert_allclose(float(ai[2]), (ni + nk) / (ni + nj + nk), rtol=1e-6)
+    np.testing.assert_allclose(float(beta[2]), -nk / (ni + nj + nk), rtol=1e-6)
+
+    # Extension scheme (median / WPGMC): αᵢ=αⱼ=½, β=−¼.
+    ai, aj, beta, gamma = model.scheme_coeffs("median", sizes, i, j)
+    assert float(ai[0]) == 0.5 and float(beta[0]) == -0.25 and float(gamma) == 0.0

@@ -1,0 +1,88 @@
+"""L1 minreduce kernel: masked (min, argmin) vs jnp oracle + tie semantics."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import minreduce, ref
+
+
+def _shard(seed, length, inf_frac=0.0):
+    rng = np.random.default_rng(seed)
+    v = rng.normal(size=(length,)).astype(np.float32)
+    if inf_frac:
+        mask = rng.random(length) < inf_frac
+        v[mask] = np.inf
+    return v
+
+
+@pytest.mark.parametrize("length", [1024, 2048, 4096, 16384])
+def test_minreduce_matches_ref(length):
+    v = _shard(1, length)
+    mv, mi = minreduce.minreduce(jnp.asarray(v))
+    rv, ri = ref.ref_minreduce(jnp.asarray(v))
+    assert float(mv[0]) == float(rv)
+    assert int(mi[0]) == int(ri)
+
+
+def test_minreduce_min_in_each_block_position():
+    # Winner placed in first / middle / last block, first / last lane.
+    for pos in [0, 1023, 1024, 3000, 4095]:
+        v = _shard(2, 4096)
+        v[pos] = -1e9
+        mv, mi = minreduce.minreduce(jnp.asarray(v))
+        assert int(mi[0]) == pos
+        assert float(mv[0]) == np.float32(-1e9)
+
+
+def test_minreduce_tie_lowest_index():
+    v = np.full(2048, 5.0, np.float32)
+    v[300] = -1.0
+    v[1700] = -1.0
+    _, mi = minreduce.minreduce(jnp.asarray(v))
+    assert int(mi[0]) == 300
+
+
+def test_minreduce_tie_within_block():
+    v = np.full(1024, 5.0, np.float32)
+    v[10] = v[11] = 2.0
+    _, mi = minreduce.minreduce(jnp.asarray(v))
+    assert int(mi[0]) == 10
+
+
+def test_minreduce_all_inf_sentinel():
+    v = np.full(4096, np.inf, np.float32)
+    mv, mi = minreduce.minreduce(jnp.asarray(v))
+    assert np.isinf(float(mv[0]))
+    assert int(mi[0]) == -1
+
+
+def test_minreduce_partial_inf():
+    v = _shard(3, 4096, inf_frac=0.9)
+    mv, mi = minreduce.minreduce(jnp.asarray(v))
+    rv, ri = ref.ref_minreduce(jnp.asarray(v))
+    assert float(mv[0]) == float(rv)
+    assert int(mi[0]) == int(ri)
+
+
+def test_minreduce_single_block():
+    v = _shard(4, 512)
+    mv, mi = minreduce.minreduce(jnp.asarray(v), block=512)
+    assert int(mi[0]) == int(np.argmin(v))
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    nblk=st.integers(1, 6),
+    inf_frac=st.sampled_from([0.0, 0.5, 0.99]),
+)
+def test_minreduce_hypothesis_sweep(seed, nblk, inf_frac):
+    v = _shard(seed, 1024 * nblk, inf_frac)
+    mv, mi = minreduce.minreduce(jnp.asarray(v))
+    if np.isfinite(v).any():
+        assert int(mi[0]) == int(np.argmin(v))
+        assert float(mv[0]) == v[int(np.argmin(v))]
+    else:
+        assert int(mi[0]) == -1

@@ -1,0 +1,82 @@
+"""L2 full Lance-Williams graph vs kernel-free numpy reference."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def _dmat(seed, n, d=4):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    dm = np.array(ref.ref_pairwise(jnp.asarray(x), jnp.asarray(x)))  # copy: jax buffers are read-only
+    np.fill_diagonal(dm, np.inf)
+    return dm.astype(np.float32)
+
+
+def _check(scheme, n, seed, atol=1e-4):
+    dm = _dmat(seed, n)
+    sizes = np.ones(n, np.float32)
+    m, h = model.full_lw_cluster(scheme, n)(jnp.asarray(dm), jnp.asarray(sizes))
+    mr, hr = model.ref_full_lw_cluster(scheme, dm, sizes)
+    m, h = np.asarray(m), np.asarray(h)
+    assert np.array_equal(m, mr), f"{scheme} merges diverge"
+    fin = np.isfinite(hr)
+    np.testing.assert_allclose(h[fin], hr[fin], rtol=1e-4, atol=atol)
+
+
+@pytest.mark.parametrize("scheme", list(model.SCHEMES))
+def test_full_lw_all_schemes(scheme):
+    _check(scheme, 32, seed=7)
+
+
+@pytest.mark.parametrize("n", [8, 16, 64])
+def test_full_lw_sizes(n):
+    _check("complete", n, seed=11)
+
+
+def test_full_lw_with_padding():
+    """Padded (+inf row / size-0) slots never merge and record (-1,-1)."""
+    n, real = 32, 20
+    dm = _dmat(3, n)
+    dm[real:, :] = np.inf
+    dm[:, real:] = np.inf
+    sizes = np.ones(n, np.float32)
+    sizes[real:] = 0.0
+    m, h = model.full_lw_cluster("complete", n)(jnp.asarray(dm), jnp.asarray(sizes))
+    m, h = np.asarray(m), np.asarray(h)
+    # real-1 true merges, the rest sentinels
+    assert (m[: real - 1] >= 0).all()
+    assert (m[real - 1 :] == -1).all()
+    assert (m[: real - 1] < real).all()
+    assert np.isfinite(h[: real - 1]).all()
+
+
+def test_full_lw_merge_structure():
+    """Each slot is retired at most once; winner slot is always the smaller id."""
+    n = 64
+    dm = _dmat(5, n)
+    m, _ = model.full_lw_cluster("complete", n)(jnp.asarray(dm), jnp.ones(n, jnp.float32))
+    m = np.asarray(m)
+    retired = set()
+    for i, j in m:
+        assert i < j
+        assert j not in retired and i not in retired
+        retired.add(j)
+
+
+def test_full_lw_complete_heights_monotone():
+    """Complete linkage (γ=+0.5 ⇒ max) yields monotone dendrogram heights."""
+    dm = _dmat(9, 64)
+    _, h = model.full_lw_cluster("complete", 64)(jnp.asarray(dm), jnp.ones(64, jnp.float32))
+    h = np.asarray(h)
+    assert (np.diff(h[np.isfinite(h)]) >= -1e-5).all()
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), scheme=st.sampled_from(["complete", "single", "average"]))
+def test_full_lw_hypothesis(seed, scheme):
+    _check(scheme, 16, seed=seed)

@@ -1,0 +1,72 @@
+"""L1 pairwise kernel vs pure-jnp oracle (and the L2 matrix wrapper)."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import pairwise, ref
+from compile import model
+
+
+def _pts(seed, n, d, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return (scale * rng.normal(size=(n, d))).astype(np.float32)
+
+
+@pytest.mark.parametrize("n,d", [(128, 8), (256, 32), (128, 3), (384, 16)])
+def test_pairwise_sq_matches_ref(n, d):
+    x = _pts(1, n, d)
+    got = pairwise.pairwise_sq(jnp.asarray(x), jnp.asarray(x))
+    want = ref.ref_pairwise_sq(jnp.asarray(x), jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_pairwise_rectangular():
+    x, y = _pts(2, 256, 16), _pts(3, 128, 16)
+    got = pairwise.pairwise_sq(jnp.asarray(x), jnp.asarray(y))
+    want = ref.ref_pairwise_sq(jnp.asarray(x), jnp.asarray(y))
+    assert got.shape == (256, 128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_pairwise_euclidean_nonnegative_symmetric():
+    x = _pts(4, 128, 8)
+    d = np.asarray(pairwise.pairwise(jnp.asarray(x), jnp.asarray(x)))
+    assert (d >= 0).all()
+    np.testing.assert_allclose(d, d.T, atol=1e-5)
+    # The ‖x‖²+‖y‖²−2x·y decomposition leaves an O(√ε·‖x‖) residual on the
+    # diagonal; the clustering path overwrites the diagonal with +inf anyway.
+    np.testing.assert_allclose(np.diag(d), 0.0, atol=5e-3)
+
+
+def test_pairwise_identical_points_zero():
+    x = np.ones((128, 4), np.float32)
+    d = np.asarray(pairwise.pairwise_sq(jnp.asarray(x), jnp.asarray(x)))
+    np.testing.assert_allclose(d, 0.0, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    nblk=st.integers(1, 3),
+    d=st.sampled_from([1, 2, 8, 33, 64]),
+    scale=st.sampled_from([1e-2, 1.0, 1e2]),
+)
+def test_pairwise_hypothesis_sweep(seed, nblk, d, scale):
+    """Shapes/scales sweep: kernel ≡ oracle within f32 tolerance."""
+    n = 128 * nblk
+    x = _pts(seed, n, d, scale)
+    got = np.asarray(pairwise.pairwise_sq(jnp.asarray(x), jnp.asarray(x)))
+    want = np.asarray(ref.ref_pairwise_sq(jnp.asarray(x), jnp.asarray(x)))
+    tol = 1e-3 * max(scale * scale, 1.0) * d
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=tol)
+
+
+def test_model_pairwise_matrix_inf_diag():
+    x = _pts(5, 256, 32)
+    m = np.asarray(model.pairwise_matrix(jnp.asarray(x)))
+    assert np.isinf(np.diag(m)).all()
+    off = ~np.eye(256, dtype=bool)
+    want = np.asarray(ref.ref_pairwise(jnp.asarray(x), jnp.asarray(x)))
+    np.testing.assert_allclose(m[off], want[off], rtol=1e-3, atol=1e-3)

@@ -1,0 +1,162 @@
+//! Lloyd's K-means with k-means++ seeding — the paper's §3 comparator
+//! ("If and when clustering is used it is generally K-means") for the
+//! method-comparison example: efficient, but needs k fixed up front and
+//! misses hierarchical structure.
+
+use crate::util::rng::Rng;
+
+/// K-means result.
+#[derive(Clone, Debug)]
+pub struct KMeansResult {
+    pub labels: Vec<usize>,
+    pub centers: Vec<Vec<f64>>,
+    pub inertia: f64,
+    pub iterations: usize,
+}
+
+fn sq_dist(a: &[f64], b: &[f64]) -> f64 {
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+/// Run Lloyd's algorithm to convergence (or `max_iter`).
+pub fn kmeans(points: &[Vec<f64>], k: usize, seed: u64, max_iter: usize) -> KMeansResult {
+    assert!(k >= 1 && points.len() >= k);
+    let n = points.len();
+    let d = points[0].len();
+    let mut rng = Rng::new(seed);
+
+    // k-means++ seeding.
+    let mut centers: Vec<Vec<f64>> = Vec::with_capacity(k);
+    centers.push(points[rng.below(n)].clone());
+    let mut d2: Vec<f64> = points.iter().map(|p| sq_dist(p, &centers[0])).collect();
+    while centers.len() < k {
+        let total: f64 = d2.iter().sum();
+        let next = if total <= 0.0 {
+            rng.below(n)
+        } else {
+            let mut target = rng.f64() * total;
+            let mut pick = n - 1;
+            for (i, &w) in d2.iter().enumerate() {
+                if target < w {
+                    pick = i;
+                    break;
+                }
+                target -= w;
+            }
+            pick
+        };
+        centers.push(points[next].clone());
+        for (i, p) in points.iter().enumerate() {
+            d2[i] = d2[i].min(sq_dist(p, centers.last().unwrap()));
+        }
+    }
+
+    let mut labels = vec![0usize; n];
+    let mut iterations = 0;
+    for it in 0..max_iter {
+        iterations = it + 1;
+        // Assign.
+        let mut changed = false;
+        for (i, p) in points.iter().enumerate() {
+            let mut best = f64::INFINITY;
+            let mut who = 0;
+            for (c, center) in centers.iter().enumerate() {
+                let dd = sq_dist(p, center);
+                if dd < best {
+                    best = dd;
+                    who = c;
+                }
+            }
+            if labels[i] != who {
+                labels[i] = who;
+                changed = true;
+            }
+        }
+        if !changed && it > 0 {
+            break;
+        }
+        // Update.
+        let mut sums = vec![vec![0.0; d]; k];
+        let mut counts = vec![0usize; k];
+        for (i, p) in points.iter().enumerate() {
+            counts[labels[i]] += 1;
+            for (s, v) in sums[labels[i]].iter_mut().zip(p) {
+                *s += v;
+            }
+        }
+        for c in 0..k {
+            if counts[c] > 0 {
+                for s in sums[c].iter_mut() {
+                    *s /= counts[c] as f64;
+                }
+                centers[c] = sums[c].clone();
+            } else {
+                // Re-seed an empty cluster at the farthest point.
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        sq_dist(&points[a], &centers[labels[a]])
+                            .partial_cmp(&sq_dist(&points[b], &centers[labels[b]]))
+                            .unwrap()
+                    })
+                    .unwrap();
+                centers[c] = points[far].clone();
+            }
+        }
+    }
+    let inertia = points
+        .iter()
+        .enumerate()
+        .map(|(i, p)| sq_dist(p, &centers[labels[i]]))
+        .sum();
+    KMeansResult {
+        labels,
+        centers,
+        inertia,
+        iterations,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian::GaussianSpec;
+    use crate::validate::ari;
+
+    #[test]
+    fn recovers_separated_mixture() {
+        let lp = GaussianSpec { n: 120, d: 4, k: 4, center_spread: 60.0, noise: 1.0 }.generate(1);
+        let r = kmeans(&lp.points, 4, 7, 100);
+        assert!(ari(&r.labels, &lp.labels) > 0.99, "ari {}", ari(&r.labels, &lp.labels));
+    }
+
+    #[test]
+    fn inertia_decreases_with_k() {
+        let lp = GaussianSpec { n: 80, d: 3, k: 4, ..Default::default() }.generate(2);
+        let i2 = kmeans(&lp.points, 2, 3, 100).inertia;
+        let i8 = kmeans(&lp.points, 8, 3, 100).inertia;
+        assert!(i8 < i2);
+    }
+
+    #[test]
+    fn k_equals_n_zero_inertia() {
+        let lp = GaussianSpec { n: 12, d: 2, k: 3, ..Default::default() }.generate(3);
+        let r = kmeans(&lp.points, 12, 5, 50);
+        assert!(r.inertia < 1e-9);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let lp = GaussianSpec { n: 50, d: 3, k: 3, ..Default::default() }.generate(4);
+        let a = kmeans(&lp.points, 3, 9, 100);
+        let b = kmeans(&lp.points, 3, 9, 100);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn all_labels_in_range() {
+        let lp = GaussianSpec { n: 40, d: 2, k: 5, ..Default::default() }.generate(5);
+        let r = kmeans(&lp.points, 5, 1, 100);
+        assert!(r.labels.iter().all(|&l| l < 5));
+        assert_eq!(r.centers.len(), 5);
+    }
+}

@@ -1,0 +1,19 @@
+//! Serial comparators.
+//!
+//! * [`serial_lw`] — the naive O(n³) Lance-Williams loop (paper §4): the
+//!   exact sequential algorithm the paper parallelizes, and the p=1
+//!   ground truth the distributed path must match bit-for-bit.
+//! * [`nn_chain`] — nearest-neighbour-chain agglomeration, O(n²): the
+//!   modern serial algorithm; context for the perf pass (the paper
+//!   parallelizes the naive loop, so the honest speedup baseline matters).
+//! * [`slink`] — Sibson's SLINK, O(n²) single linkage.
+//! * [`mst_single`] — Prim-based single linkage (the paper's §2.1 remark
+//!   that single-linkage "mimics Prim's MST algorithm").
+//! * [`kmeans`] — Lloyd's K-means with k-means++ seeding (the paper's §3
+//!   non-hierarchical comparator).
+
+pub mod kmeans;
+pub mod mst_single;
+pub mod nn_chain;
+pub mod serial_lw;
+pub mod slink;

@@ -1,0 +1,145 @@
+//! Single-linkage clustering via Prim's MST — the paper's §2.1 remark:
+//! "Single-Linkage hierarchal clustering ... can be solved by an algorithm
+//! that mimics the Prim's Minimum Spanning Tree Algorithm."
+//!
+//! Prim grows the MST in O(n²) over the dense matrix; sorting the n−1 MST
+//! edges by weight and union-finding them in order *is* single-linkage
+//! agglomeration (Gower & Ross 1969).
+
+use crate::dendrogram::{Dendrogram, Merge, UnionFind};
+use crate::matrix::CondensedMatrix;
+
+/// An MST edge.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Edge {
+    pub a: usize,
+    pub b: usize,
+    pub w: f32,
+}
+
+/// Dense-graph Prim: O(n²), no heap needed.
+pub fn prim_mst(matrix: &CondensedMatrix) -> Vec<Edge> {
+    let n = matrix.n();
+    let mut in_tree = vec![false; n];
+    let mut best_w = vec![f32::INFINITY; n];
+    let mut best_from = vec![0usize; n];
+    let mut edges = Vec::with_capacity(n - 1);
+    in_tree[0] = true;
+    for k in 1..n {
+        best_w[k] = matrix.get(0, k);
+        best_from[k] = 0;
+    }
+    for _ in 1..n {
+        // Cheapest crossing edge (ties → lowest vertex id).
+        let mut pick = usize::MAX;
+        let mut w = f32::INFINITY;
+        for k in 0..n {
+            if !in_tree[k] && best_w[k] < w {
+                w = best_w[k];
+                pick = k;
+            }
+        }
+        debug_assert!(pick != usize::MAX);
+        in_tree[pick] = true;
+        edges.push(Edge { a: best_from[pick], b: pick, w });
+        for k in 0..n {
+            if !in_tree[k] {
+                let d = matrix.get(pick, k);
+                if d < best_w[k] {
+                    best_w[k] = d;
+                    best_from[k] = pick;
+                }
+            }
+        }
+    }
+    edges
+}
+
+/// Single-linkage dendrogram from the MST (edges ascending, union-find,
+/// lower-root slot convention).
+pub fn mst_single_linkage(matrix: &CondensedMatrix) -> Dendrogram {
+    let n = matrix.n();
+    let mut edges = prim_mst(matrix);
+    edges.sort_by(|x, y| x.w.partial_cmp(&y.w).unwrap().then(x.a.cmp(&y.a)));
+    let mut uf = UnionFind::new(n);
+    let merges = edges
+        .into_iter()
+        .map(|e| {
+            let ra = uf.find(e.a);
+            let rb = uf.find(e.b);
+            debug_assert_ne!(ra, rb, "MST edge within a component");
+            let (i, j) = (ra.min(rb), ra.max(rb));
+            uf.union(i, j);
+            Merge { i, j, height: e.w }
+        })
+        .collect();
+    Dendrogram::new(n, merges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::serial_lw::serial_lw_cluster;
+    use crate::data::{euclidean_matrix, GaussianSpec};
+    use crate::linkage::Scheme;
+    use crate::util::proptest::{gen, run, Config};
+
+    #[test]
+    fn mst_total_weight_matches_bruteforce_small() {
+        // n=5 exhaustive check against all spanning trees is overkill;
+        // verify against Kruskal implemented inline instead.
+        let mut rng = crate::util::rng::Rng::new(1);
+        let cells = gen::distance_matrix(&mut rng, 7);
+        let m = CondensedMatrix::from_fn(7, |i, j| cells[i * 7 + j] as f32);
+        let prim_w: f32 = prim_mst(&m).iter().map(|e| e.w).sum();
+        // Kruskal:
+        let mut all: Vec<Edge> = Vec::new();
+        for i in 0..7 {
+            for j in (i + 1)..7 {
+                all.push(Edge { a: i, b: j, w: m.get(i, j) });
+            }
+        }
+        all.sort_by(|x, y| x.w.partial_cmp(&y.w).unwrap());
+        let mut uf = UnionFind::new(7);
+        let mut kruskal_w = 0.0f32;
+        for e in all {
+            if uf.find(e.a) != uf.find(e.b) {
+                uf.union(e.a, e.b);
+                kruskal_w += e.w;
+            }
+        }
+        assert!((prim_w - kruskal_w).abs() < 1e-5, "{prim_w} vs {kruskal_w}");
+    }
+
+    #[test]
+    fn mst_edge_count_and_connectivity() {
+        let lp = GaussianSpec { n: 40, ..Default::default() }.generate(2);
+        let m = euclidean_matrix(&lp.points);
+        let edges = prim_mst(&m);
+        assert_eq!(edges.len(), 39);
+        let mut uf = UnionFind::new(40);
+        for e in &edges {
+            uf.union(e.a, e.b);
+        }
+        let root = uf.find(0);
+        for v in 1..40 {
+            assert_eq!(uf.find(v), root);
+        }
+    }
+
+    #[test]
+    fn single_linkage_same_tree_as_lw() {
+        run(Config::cases(10), |rng| {
+            let n = rng.range(4, 28);
+            let cells = gen::distance_matrix(rng, n);
+            let m = CondensedMatrix::from_fn(n, |i, j| cells[i * n + j] as f32);
+            let lw = serial_lw_cluster(Scheme::Single, &m);
+            let mst = mst_single_linkage(&m);
+            let (ca, cb) = (lw.cophenetic(), mst.cophenetic());
+            for idx in 0..ca.len() {
+                let (x, y) = (ca.cells()[idx], cb.cells()[idx]);
+                assert!((x - y).abs() < 1e-4 * x.abs().max(1.0), "cell {idx}: {x} vs {y}");
+            }
+        });
+    }
+}

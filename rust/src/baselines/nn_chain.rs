@@ -1,0 +1,175 @@
+//! Nearest-neighbour-chain agglomerative clustering — O(n²).
+//!
+//! The modern serial algorithm (Murtagh 1983, which the paper cites in its
+//! survey). Valid for *reducible* schemes (single, complete, average,
+//! weighted, Ward): following chains a→nn(a)→nn(nn(a))… until a reciprocal
+//! pair, then merging, yields the same hierarchy as the naive global-min
+//! loop, in O(n²) time. Kept as the honest serial comparator for the perf
+//! pass: the paper's O(n³/p) parallel algorithm should also be judged
+//! against the O(n²) serial alternative.
+
+use crate::dendrogram::{Dendrogram, Merge};
+use crate::linkage::{lw_update, Scheme};
+use crate::matrix::CondensedMatrix;
+
+/// Schemes for which NN-chain is exact (the geometric centroid/median
+/// schemes are non-reducible).
+pub fn reducible(scheme: Scheme) -> bool {
+    !matches!(scheme, Scheme::Centroid | Scheme::Median)
+}
+
+/// Cluster via the nearest-neighbour chain. Panics on non-reducible
+/// schemes (centroid) — use `serial_lw_cluster` for those.
+pub fn nn_chain_cluster(scheme: Scheme, matrix: &CondensedMatrix) -> Dendrogram {
+    assert!(
+        reducible(scheme),
+        "NN-chain requires a reducible scheme, got {scheme}"
+    );
+    let n = matrix.n();
+    let mut m = matrix.clone();
+    let mut sizes = vec![1.0f32; n];
+    let mut active: Vec<bool> = vec![true; n];
+    let mut raw_merges: Vec<Merge> = Vec::with_capacity(n - 1);
+    let mut chain: Vec<usize> = Vec::with_capacity(n);
+
+    while raw_merges.len() < n - 1 {
+        if chain.is_empty() {
+            chain.push(active.iter().position(|&a| a).expect("no active cluster"));
+        }
+        loop {
+            let a = *chain.last().unwrap();
+            // Nearest active neighbour of a (ties → lowest index, and prefer
+            // the chain's previous element to guarantee reciprocal stops).
+            let prev = if chain.len() >= 2 {
+                Some(chain[chain.len() - 2])
+            } else {
+                None
+            };
+            let mut best = f32::INFINITY;
+            let mut who = usize::MAX;
+            for k in 0..n {
+                if k == a || !active[k] {
+                    continue;
+                }
+                let d = m.get(a, k);
+                if d < best || (d == best && Some(k) == prev) {
+                    best = d;
+                    who = k;
+                }
+            }
+            debug_assert!(who != usize::MAX);
+            if Some(who) == prev {
+                // Reciprocal pair (a, who): merge.
+                let (i, j) = (a.min(who), a.max(who));
+                let d_ij = m.get(i, j);
+                let (n_i, n_j) = (sizes[i], sizes[j]);
+                for k in 0..n {
+                    if !active[k] || k == i || k == j {
+                        continue;
+                    }
+                    let c = scheme.coeffs(n_i, n_j, sizes[k]);
+                    let v = lw_update(c, m.get(k, i), m.get(k, j), d_ij);
+                    m.set(k, i, v);
+                }
+                active[j] = false;
+                sizes[i] += sizes[j];
+                sizes[j] = 0.0;
+                raw_merges.push(Merge { i, j, height: d_ij });
+                chain.pop();
+                chain.pop();
+                break;
+            }
+            chain.push(who);
+        }
+    }
+    // NN-chain discovers merges out of height order; the dendrogram is the
+    // same tree once merges are replayed in ascending height. Stable-sort
+    // by height, then remap slots through a union-find so the slot-reuse
+    // convention stays valid.
+    sort_and_canonicalize(n, raw_merges)
+}
+
+/// Sort merges by height (stable) and rewrite cluster slots so that each
+/// merge references current representatives (lower-index-wins), producing
+/// a valid slot-reuse dendrogram.
+fn sort_and_canonicalize(n: usize, mut merges: Vec<Merge>) -> Dendrogram {
+    merges.sort_by(|a, b| a.height.partial_cmp(&b.height).unwrap());
+    let mut uf = crate::dendrogram::UnionFind::new(n);
+    let fixed = merges
+        .into_iter()
+        .map(|m| {
+            let ri = uf.find(m.i);
+            let rj = uf.find(m.j);
+            debug_assert_ne!(ri, rj, "merge joins an already-joined pair");
+            let (i, j) = (ri.min(rj), ri.max(rj));
+            uf.union(i, j);
+            Merge { i, j, height: m.height }
+        })
+        .collect();
+    Dendrogram::new(n, fixed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::serial_lw::serial_lw_cluster;
+    use crate::data::{euclidean_matrix, GaussianSpec};
+    use crate::util::proptest::{gen, run, Config};
+
+    fn sample(n: usize, seed: u64) -> CondensedMatrix {
+        let lp = GaussianSpec { n, d: 4, k: 4, ..Default::default() }.generate(seed);
+        euclidean_matrix(&lp.points)
+    }
+
+    /// NN-chain must produce the same *tree* as the naive loop. Merge
+    /// order can differ on plateaus, so compare cophenetic matrices.
+    fn assert_same_tree(scheme: Scheme, m: &CondensedMatrix, tol: f32) {
+        let a = serial_lw_cluster(scheme, m);
+        let b = nn_chain_cluster(scheme, m);
+        let ca = a.cophenetic();
+        let cb = b.cophenetic();
+        for idx in 0..ca.len() {
+            let (x, y) = (ca.cells()[idx], cb.cells()[idx]);
+            assert!(
+                (x - y).abs() <= tol * x.abs().max(1.0),
+                "{scheme}: cophenetic cell {idx}: {x} vs {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn matches_naive_all_reducible_schemes() {
+        let m = sample(30, 1);
+        for scheme in [Scheme::Single, Scheme::Complete, Scheme::Average, Scheme::Weighted, Scheme::Ward] {
+            assert_same_tree(scheme, &m, 1e-3);
+        }
+    }
+
+    #[test]
+    fn matches_naive_property() {
+        run(Config::cases(10), |rng| {
+            let n = rng.range(4, 25);
+            let cells = gen::distance_matrix(rng, n);
+            let m = CondensedMatrix::from_fn(n, |i, j| cells[i * n + j] as f32);
+            assert_same_tree(Scheme::Complete, &m, 1e-3);
+            assert_same_tree(Scheme::Single, &m, 1e-3);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "reducible")]
+    fn centroid_rejected() {
+        let m = sample(10, 2);
+        nn_chain_cluster(Scheme::Centroid, &m);
+    }
+
+    #[test]
+    fn quadratic_vs_cubic_work_sanity() {
+        // Not a timing assert (CI noise) — just a correctness run at a size
+        // where the naive loop is visibly slower in the benches.
+        let m = sample(100, 3);
+        let d = nn_chain_cluster(Scheme::Complete, &m);
+        assert_eq!(d.merges().len(), 99);
+        assert!(d.is_monotone());
+    }
+}

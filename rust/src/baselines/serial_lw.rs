@@ -1,0 +1,211 @@
+//! Naive serial Lance-Williams (paper §4) — the algorithm the paper
+//! parallelizes, kept as the bit-exact p=1 reference.
+//!
+//! Per iteration: scan all active condensed cells for the minimum (O(n²)),
+//! merge the winning pair into the lower slot, apply the LW update to the
+//! surviving row (O(n)), retire the other slot (+inf). n−1 iterations ⇒
+//! O(n³) total. Tie-breaking (lowest condensed index) and f32 operation
+//! order match the distributed workers and the L1 kernel exactly.
+
+use crate::dendrogram::{Dendrogram, Merge};
+use crate::linkage::{lw_update, Scheme};
+use crate::matrix::{condensed_index, CondensedMatrix};
+
+/// Cluster `matrix` under `scheme`; returns the dendrogram.
+pub fn serial_lw_cluster(scheme: Scheme, matrix: &CondensedMatrix) -> Dendrogram {
+    let n = matrix.n();
+    let mut m = matrix.clone();
+    let mut sizes = vec![1.0f32; n];
+    let mut merges = Vec::with_capacity(n - 1);
+
+    for _step in 0..(n - 1) {
+        // Step 1: global min over the condensed cells (ties → lowest index).
+        let (i, j, d_ij) = m
+            .argmin()
+            .expect("matrix exhausted before n-1 merges (inf input cells?)");
+
+        // Step 3: LW-update the surviving slot i against every live k.
+        let (n_i, n_j) = (sizes[i], sizes[j]);
+        for k in 0..n {
+            if k == i || k == j || sizes[k] == 0.0 {
+                continue;
+            }
+            let c = scheme.coeffs(n_i, n_j, sizes[k]);
+            let d_ki = m.get(k, i);
+            let d_kj = m.get(k, j);
+            m.set(k, i, lw_update(c, d_ki, d_kj, d_ij));
+        }
+        // Retire slot j.
+        for k in 0..n {
+            if k != j {
+                m.set(k, j, f32::INFINITY);
+            }
+        }
+        sizes[i] += sizes[j];
+        sizes[j] = 0.0;
+        merges.push(Merge { i, j, height: d_ij });
+    }
+    Dendrogram::new(n, merges)
+}
+
+/// Instrumented variant: also returns the number of cells scanned (the
+/// §5.4 computation-count benches use this).
+pub fn serial_lw_cluster_counted(scheme: Scheme, matrix: &CondensedMatrix) -> (Dendrogram, u64) {
+    let n = matrix.n();
+    // The scan in argmin touches every condensed cell each iteration.
+    let scanned: u64 = (0..(n as u64 - 1)).map(|_| (n as u64 * (n as u64 - 1)) / 2).sum();
+    (serial_lw_cluster(scheme, matrix), scanned)
+}
+
+/// Verification helper: check that every merge height in `dend` equals the
+/// definitional cluster distance on the ORIGINAL matrix (complete/single/
+/// average only — see `linkage::definitional_distance`). This certifies
+/// the LW recurrence against first principles, Table-1 row by row.
+pub fn verify_against_definition(
+    scheme: Scheme,
+    matrix: &CondensedMatrix,
+    dend: &Dendrogram,
+    tol: f32,
+) -> Result<(), String> {
+    let n = matrix.n();
+    let mut members: Vec<Vec<usize>> = (0..n).map(|i| vec![i]).collect();
+    for (step, m) in dend.merges().iter().enumerate() {
+        let (a, b) = (&members[m.i], &members[m.j]);
+        if let Some(d) = crate::linkage::definitional_distance(scheme, matrix, a, b) {
+            // Relative tolerance: the LW recurrence accumulates f32 error
+            // over merges; definitional is a fresh computation.
+            let scale = d.abs().max(1.0);
+            if (d - m.height).abs() > tol * scale {
+                return Err(format!(
+                    "step {step}: merge ({},{}) height {} but definitional {d}",
+                    m.i, m.j, m.height
+                ));
+            }
+        }
+        let b_list = std::mem::take(&mut members[m.j]);
+        members[m.i].extend(b_list);
+    }
+    Ok(())
+}
+
+/// The tie-break order key for cell (i,j): its condensed linear index.
+/// Exposed so tests can assert the protocol-wide convention in one place.
+pub fn tie_key(n: usize, i: usize, j: usize) -> u64 {
+    condensed_index(n, i.min(j), i.max(j)) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{euclidean_matrix, GaussianSpec};
+    use crate::linkage::Scheme;
+    use crate::util::proptest::{gen, run, Config};
+
+    fn sample_matrix(n: usize, seed: u64) -> CondensedMatrix {
+        let lp = GaussianSpec { n, d: 4, k: 3, ..Default::default() }.generate(seed);
+        euclidean_matrix(&lp.points)
+    }
+
+    #[test]
+    fn textbook_example_complete() {
+        // Classic 5-point worked example.
+        // items 0..4, distances crafted so merges are predictable.
+        let mut m = CondensedMatrix::zeros(5);
+        let d = [
+            ((0, 1), 2.0f32),
+            ((0, 2), 6.0),
+            ((0, 3), 10.0),
+            ((0, 4), 9.0),
+            ((1, 2), 5.0),
+            ((1, 3), 9.0),
+            ((1, 4), 8.0),
+            ((2, 3), 4.0),
+            ((2, 4), 5.0),
+            ((3, 4), 3.0),
+        ];
+        for ((i, j), v) in d {
+            m.set(i, j, v);
+        }
+        let dend = serial_lw_cluster(Scheme::Complete, &m);
+        // First merge: (0,1)@2, then (3,4)@3, then complete-linkage joins
+        // 2 with {3,4} at max(4,5)=5, then {0,1} with {2,3,4} at max=10.
+        let ms = dend.merges();
+        assert_eq!((ms[0].i, ms[0].j, ms[0].height), (0, 1, 2.0));
+        assert_eq!((ms[1].i, ms[1].j, ms[1].height), (3, 4, 3.0));
+        assert_eq!((ms[2].i, ms[2].j, ms[2].height), (2, 3, 5.0));
+        assert_eq!((ms[3].i, ms[3].j, ms[3].height), (0, 2, 10.0));
+    }
+
+    #[test]
+    fn heights_match_definition_complete_single_average() {
+        let m = sample_matrix(40, 1);
+        for scheme in [Scheme::Complete, Scheme::Single, Scheme::Average] {
+            let d = serial_lw_cluster(scheme, &m);
+            verify_against_definition(scheme, &m, &d, 1e-3)
+                .unwrap_or_else(|e| panic!("{scheme}: {e}"));
+        }
+    }
+
+    #[test]
+    fn definitional_property_random_matrices() {
+        run(Config::cases(15), |rng| {
+            let n = rng.range(4, 30);
+            let cells = gen::distance_matrix(rng, n);
+            let m = CondensedMatrix::from_fn(n, |i, j| cells[i * n + j] as f32);
+            for scheme in [Scheme::Complete, Scheme::Single] {
+                let d = serial_lw_cluster(scheme, &m);
+                verify_against_definition(scheme, &m, &d, 1e-3)
+                    .unwrap_or_else(|e| panic!("{scheme} n={n}: {e}"));
+            }
+        });
+    }
+
+    #[test]
+    fn monotone_for_guaranteeing_schemes() {
+        let m = sample_matrix(50, 2);
+        for scheme in [Scheme::Single, Scheme::Complete, Scheme::Average, Scheme::Weighted, Scheme::Ward] {
+            let d = serial_lw_cluster(scheme, &m);
+            assert!(d.is_monotone(), "{scheme} produced an inversion");
+        }
+    }
+
+    #[test]
+    fn all_schemes_produce_valid_dendrograms() {
+        let m = sample_matrix(25, 3);
+        for scheme in Scheme::all() {
+            let d = serial_lw_cluster(*scheme, &m);
+            assert_eq!(d.merges().len(), 24);
+            // cut(k) has exactly k clusters for every k
+            for k in [1, 2, 5, 25] {
+                let labels = d.cut(k);
+                let distinct = labels.iter().collect::<std::collections::HashSet<_>>().len();
+                assert_eq!(distinct, k, "{scheme} cut({k})");
+            }
+        }
+    }
+
+    #[test]
+    fn recovers_well_separated_clusters() {
+        let lp = GaussianSpec { n: 60, d: 4, k: 3, center_spread: 100.0, noise: 0.5 }.generate(4);
+        let m = euclidean_matrix(&lp.points);
+        let d = serial_lw_cluster(Scheme::Complete, &m);
+        let labels = d.cut(3);
+        let ari = crate::validate::ari(&labels, &lp.labels);
+        assert!(ari > 0.99, "ARI {ari}");
+    }
+
+    #[test]
+    fn two_items() {
+        let mut m = CondensedMatrix::zeros(2);
+        m.set(0, 1, 1.5);
+        let d = serial_lw_cluster(Scheme::Complete, &m);
+        assert_eq!(d.merges(), &[Merge { i: 0, j: 1, height: 1.5 }]);
+    }
+
+    #[test]
+    fn counted_variant_counts() {
+        let m = sample_matrix(10, 5);
+        let (_, scanned) = serial_lw_cluster_counted(Scheme::Complete, &m);
+        assert_eq!(scanned, 9 * 45);
+    }
+}

@@ -1,0 +1,105 @@
+//! SLINK (Sibson 1973): optimal O(n²) single-linkage in the
+//! pointer-representation form — the "specialized algorithm for
+//! single-linkage" class the paper points to (Hendrix et al. 2013 descends
+//! from it).
+//!
+//! Pointer representation: for each item i, `pi[i]` is the lowest-indexed
+//! item of the cluster i next joins, `lambda[i]` the height of that join.
+
+use crate::dendrogram::{Dendrogram, Merge, UnionFind};
+use crate::matrix::CondensedMatrix;
+
+/// Run SLINK; returns (pi, lambda).
+pub fn slink(matrix: &CondensedMatrix) -> (Vec<usize>, Vec<f32>) {
+    let n = matrix.n();
+    let mut pi = vec![0usize; n];
+    let mut lambda = vec![f32::INFINITY; n];
+    let mut m_row = vec![0f32; n];
+
+    for i in 0..n {
+        pi[i] = i;
+        lambda[i] = f32::INFINITY;
+        for j in 0..i {
+            m_row[j] = matrix.get(i, j);
+        }
+        for j in 0..i {
+            if lambda[j] >= m_row[j] {
+                m_row[pi[j]] = m_row[pi[j]].min(lambda[j]);
+                lambda[j] = m_row[j];
+                pi[j] = i;
+            } else {
+                m_row[pi[j]] = m_row[pi[j]].min(m_row[j]);
+            }
+        }
+        for j in 0..i {
+            if lambda[j] >= lambda[pi[j]] {
+                pi[j] = i;
+            }
+        }
+    }
+    (pi, lambda)
+}
+
+/// Convert the pointer representation into a slot-reuse dendrogram:
+/// process items in ascending lambda, merging item's component with
+/// pi's component at height lambda.
+pub fn slink_dendrogram(matrix: &CondensedMatrix) -> Dendrogram {
+    let n = matrix.n();
+    let (pi, lambda) = slink(matrix);
+    let mut order: Vec<usize> = (0..n - 1).collect(); // item n-1 has lambda=inf
+    order.sort_by(|&a, &b| lambda[a].partial_cmp(&lambda[b]).unwrap().then(a.cmp(&b)));
+    let mut uf = UnionFind::new(n);
+    let merges = order
+        .into_iter()
+        .map(|item| {
+            let ra = uf.find(item);
+            let rb = uf.find(pi[item]);
+            debug_assert_ne!(ra, rb);
+            let (i, j) = (ra.min(rb), ra.max(rb));
+            uf.union(i, j);
+            Merge { i, j, height: lambda[item] }
+        })
+        .collect();
+    Dendrogram::new(n, merges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::mst_single::mst_single_linkage;
+    use crate::baselines::serial_lw::serial_lw_cluster;
+    use crate::linkage::Scheme;
+    use crate::util::proptest::{gen, run, Config};
+
+    #[test]
+    fn pointer_rep_invariants() {
+        let mut rng = crate::util::rng::Rng::new(4);
+        let n = 20;
+        let cells = gen::distance_matrix(&mut rng, n);
+        let m = CondensedMatrix::from_fn(n, |i, j| cells[i * n + j] as f32);
+        let (pi, lambda) = slink(&m);
+        // pi[i] > i for all but the last; lambda finite except the last.
+        for i in 0..n - 1 {
+            assert!(pi[i] > i, "pi[{i}]={}", pi[i]);
+            assert!(lambda[i].is_finite());
+        }
+        assert_eq!(pi[n - 1], n - 1);
+        assert!(lambda[n - 1].is_infinite());
+    }
+
+    #[test]
+    fn slink_equals_lw_single_and_mst() {
+        run(Config::cases(10), |rng| {
+            let n = rng.range(4, 26);
+            let cells = gen::distance_matrix(rng, n);
+            let m = CondensedMatrix::from_fn(n, |i, j| cells[i * n + j] as f32);
+            let a = serial_lw_cluster(Scheme::Single, &m).cophenetic();
+            let b = slink_dendrogram(&m).cophenetic();
+            let c = mst_single_linkage(&m).cophenetic();
+            for idx in 0..a.len() {
+                assert!((a.cells()[idx] - b.cells()[idx]).abs() < 1e-4);
+                assert!((b.cells()[idx] - c.cells()[idx]).abs() < 1e-4);
+            }
+        });
+    }
+}

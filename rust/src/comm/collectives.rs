@@ -1,0 +1,280 @@
+//! Collectives over the point-to-point transport.
+//!
+//! The paper's protocol needs exactly these (§5.3): an allgather of local
+//! minima (step 2-3), a broadcast of the winning merge (step 5), and the
+//! targeted sends of step 6a are plain p2p. Implementations are the naive
+//! O(p) fan-out the paper assumes ("At most p broadcasts per iteration"),
+//! not trees — matching its communication model, and measured as such by
+//! the comm-volume bench.
+
+use super::transport::{Endpoint, Wire};
+
+/// Collective algorithm choice — the paper uses naive O(p) fan-outs
+/// ("at most p broadcasts per iteration"); binomial trees are the classic
+/// O(log p) improvement and an extension ablation here (they move the
+/// Figure-2 optimum right). Results are identical either way.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Collectives {
+    /// Paper-faithful: every rank sends p−1 point-to-point messages.
+    #[default]
+    Naive,
+    /// Binomial-tree gather + broadcast: 2·⌈log₂p⌉ latency terms.
+    Tree,
+}
+
+impl std::str::FromStr for Collectives {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "naive" | "paper" => Ok(Self::Naive),
+            "tree" | "binomial" => Ok(Self::Tree),
+            other => anyhow::bail!("unknown collectives {other:?} (naive|tree)"),
+        }
+    }
+}
+
+impl<T: Wire> Endpoint<T> {
+    /// Gather every rank's contribution on every rank (including self).
+    /// Result is indexed by rank. Naive fan-out: each rank sends p−1
+    /// messages — the paper's "each p_m broadcasts their local minimum".
+    pub fn allgather(&mut self, tag: u64, mine: T) -> Vec<T> {
+        let p = self.p();
+        let me = self.rank();
+        for dst in 0..p {
+            if dst != me {
+                self.send(dst, tag, mine.clone());
+            }
+        }
+        let mut out: Vec<Option<T>> = (0..p).map(|_| None).collect();
+        out[me] = Some(mine);
+        for src in 0..p {
+            if src != me {
+                out[src] = Some(self.recv(src, tag));
+            }
+        }
+        out.into_iter().map(|o| o.unwrap()).collect()
+    }
+
+    /// One-to-all broadcast; returns the payload on every rank.
+    /// `payload` is Some on the root, ignored elsewhere.
+    pub fn broadcast(&mut self, tag: u64, root: usize, payload: Option<T>) -> T {
+        let me = self.rank();
+        if me == root {
+            let v = payload.expect("root must supply a broadcast payload");
+            for dst in 0..self.p() {
+                if dst != me {
+                    self.send(dst, tag, v.clone());
+                }
+            }
+            v
+        } else {
+            self.recv(root, tag)
+        }
+    }
+
+    /// Barrier: allgather of unit payloads (cheap, keeps semantics obvious).
+    pub fn barrier(&mut self, tag: u64)
+    where
+        T: From<()>,
+    {
+        let _ = self.allgather(tag, T::from(()));
+    }
+
+    /// Binomial-tree broadcast from `root`: ⌈log₂p⌉ rounds instead of p−1
+    /// sequential sends at the root. (Tree *allgather* lives at the
+    /// protocol layer — it needs a list-shaped payload to aggregate; see
+    /// `coordinator::protocol::exchange_minima`.)
+    pub fn broadcast_tree(&mut self, tag: u64, root: usize, payload: Option<T>) -> T {
+        let p = self.p();
+        let me = self.rank();
+        let rel = (me + p - root) % p;
+        // Receive phase: my parent round is the lowest set bit of rel.
+        let mut mask = 1usize;
+        let value = if rel == 0 {
+            payload.expect("root must supply a broadcast payload")
+        } else {
+            loop {
+                if rel & mask != 0 {
+                    let parent = (rel - mask + root) % p;
+                    break self.recv(parent, tag);
+                }
+                mask <<= 1;
+            }
+        };
+        if rel == 0 {
+            while mask < p {
+                mask <<= 1;
+            }
+        }
+        // Forward phase: serve the sub-trees hanging below my receive bit.
+        mask >>= 1;
+        while mask > 0 {
+            if rel & mask == 0 && rel + mask < p {
+                let child = (rel + mask + root) % p;
+                self.send(child, tag, value.clone());
+            }
+            mask >>= 1;
+        }
+        value
+    }
+
+    /// Dispatch on the configured algorithm.
+    pub fn broadcast_via(
+        &mut self,
+        strategy: Collectives,
+        tag: u64,
+        root: usize,
+        payload: Option<T>,
+    ) -> T {
+        match strategy {
+            Collectives::Naive => self.broadcast(tag, root, payload),
+            Collectives::Tree => self.broadcast_tree(tag, root, payload),
+        }
+    }
+}
+
+/// Reduce a gathered `(value, rank_payload)` list to the global minimum
+/// with deterministic tie-breaking — every rank runs this identically, so
+/// "communication is unnecessary at this step" (paper §5.3 step 4).
+/// Ties break toward the lower cell index, then lower rank.
+pub fn global_min(gathered: &[(f32, u64)]) -> Option<(usize, f32, u64)> {
+    let mut best: Option<(usize, f32, u64)> = None;
+    for (rank, &(v, idx)) in gathered.iter().enumerate() {
+        if !v.is_finite() {
+            continue;
+        }
+        let better = match best {
+            None => true,
+            Some((_, bv, bidx)) => v < bv || (v == bv && idx < bidx),
+        };
+        if better {
+            best = Some((rank, v, idx));
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::{CostModel, Network};
+
+    fn spawn_ranks<T, F, R>(p: usize, model: CostModel, f: F) -> Vec<R>
+    where
+        T: Wire,
+        F: Fn(Endpoint<T>) -> R + Clone + Send + 'static,
+        R: Send + 'static,
+    {
+        let eps = Network::with_ranks::<T>(p, model);
+        let handles: Vec<_> = eps
+            .into_iter()
+            .map(|ep| {
+                let f = f.clone();
+                std::thread::spawn(move || f(ep))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn allgather_collects_all() {
+        let results = spawn_ranks::<u32, _, _>(4, CostModel::zero_comm(), |mut ep| {
+            ep.allgather(0, ep.rank() as u32 * 10)
+        });
+        for r in results {
+            assert_eq!(r, vec![0, 10, 20, 30]);
+        }
+    }
+
+    #[test]
+    fn broadcast_from_nonzero_root() {
+        let results = spawn_ranks::<f32, _, _>(3, CostModel::zero_comm(), |mut ep| {
+            let mine = if ep.rank() == 2 { Some(7.5) } else { None };
+            ep.broadcast(1, 2, mine)
+        });
+        assert_eq!(results, vec![7.5, 7.5, 7.5]);
+    }
+
+    #[test]
+    fn allgather_virtual_time_grows_with_p() {
+        // Same payloads, more ranks ⇒ more per-iteration comm time (the
+        // mechanism behind the right half of Figure 2).
+        let t_of = |p: usize| {
+            let clocks = spawn_ranks::<f32, _, _>(p, CostModel::gbe_now(), |mut ep| {
+                for round in 0..10 {
+                    let _ = ep.allgather(round, 1.0f32);
+                }
+                ep.clock.now()
+            });
+            clocks.into_iter().fold(0.0f64, f64::max)
+        };
+        // Latency is paid in parallel across peers, so growth is sub-linear
+        // in p — but strictly monotone (overheads serialize on each rank).
+        let t2 = t_of(2);
+        let t8 = t_of(8);
+        assert!(t8 > t2 * 1.3, "t2={t2} t8={t8}");
+    }
+
+    #[test]
+    fn global_min_deterministic_ties() {
+        // Two ranks hold the same value; lower cell index wins.
+        let g = vec![(3.0f32, 50u64), (1.0, 90), (1.0, 20), (2.0, 5)];
+        assert_eq!(global_min(&g), Some((2, 1.0, 20)));
+        // All inf ⇒ None.
+        let g = vec![(f32::INFINITY, 0u64), (f32::INFINITY, 1)];
+        assert_eq!(global_min(&g), None);
+    }
+
+    #[test]
+    fn global_min_single_rank() {
+        assert_eq!(global_min(&[(0.5f32, 7u64)]), Some((0, 0.5, 7)));
+    }
+
+    #[test]
+    fn broadcast_tree_all_roots_all_p() {
+        for p in [1usize, 2, 3, 5, 8, 13] {
+            for root in 0..p {
+                let results = spawn_ranks::<f32, _, _>(p, CostModel::zero_comm(), move |mut ep| {
+                    let mine = if ep.rank() == root { Some(root as f32 + 0.5) } else { None };
+                    ep.broadcast_tree(9, root, mine)
+                });
+                assert_eq!(results, vec![root as f32 + 0.5; p], "p={p} root={root}");
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_tree_fewer_root_sends() {
+        // The point of the tree: the root sends ⌈log₂p⌉ messages, not p−1.
+        let p = 16;
+        let sent = spawn_ranks::<u32, _, _>(p, CostModel::nehalem_cluster(), |mut ep| {
+            let mine = if ep.rank() == 0 { Some(7) } else { None };
+            let _ = ep.broadcast_tree(3, 0, mine);
+            (ep.rank(), ep.traffic.msgs_sent)
+        });
+        let root_sends = sent.iter().find(|(r, _)| *r == 0).unwrap().1;
+        assert_eq!(root_sends, 4, "root of a 16-rank binomial tree sends log2(16)");
+        let total: u64 = sent.iter().map(|(_, s)| s).sum();
+        assert_eq!(total, 15, "every non-root receives exactly once");
+    }
+
+    #[test]
+    fn broadcast_tree_latency_beats_naive_at_scale() {
+        let p = 24;
+        let t = |tree: bool| {
+            let clocks = spawn_ranks::<f32, _, _>(p, CostModel::gbe_now(), move |mut ep| {
+                for round in 0..8 {
+                    let mine = if ep.rank() == 0 { Some(1.0) } else { None };
+                    if tree {
+                        let _ = ep.broadcast_tree(round, 0, mine);
+                    } else {
+                        let _ = ep.broadcast(round, 0, mine);
+                    }
+                }
+                ep.clock.now()
+            });
+            clocks.into_iter().fold(0.0f64, f64::max)
+        };
+        assert!(t(true) < t(false), "tree {} vs naive {}", t(true), t(false));
+    }
+}

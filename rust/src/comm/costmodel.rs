@@ -1,0 +1,133 @@
+//! Hockney-style communication + compute cost model.
+//!
+//! Message cost: sender busy `send_overhead + bytes·per_byte`, message
+//! arrives `latency` after the send completes; receiver pays
+//! `recv_overhead` on matching. Compute cost: `cells · per_cell` for a
+//! scan/update of that many matrix cells.
+//!
+//! `nehalem_cluster()` is calibrated to the paper's testbed era (CUNY
+//! "Andy": Nehalem 2.93 GHz, InfiniBand-class MPI): ~2 µs wire latency,
+//! ~2.5 GB/s effective bandwidth, ~1 ns per scanned cell (one f32 compare
+//! sustained incl. loop overhead), and ~1.4 µs per-message CPU overhead
+//! (send + matching on a 2009-era MPI stack). The overhead constant is
+//! fitted to the paper's single absolute anchor — Figure 2's optimum at
+//! p≈15 for n̄=1968: the crossover solves p* = √(n²c/12o), so o ≈ 1.4 µs
+//! places p* ≈ 15 (see EXPERIMENTS.md §F2 for the calibration note).
+
+use super::topology::Topology;
+
+/// All times in seconds, sizes in bytes, work in condensed cells.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostModel {
+    /// One-way network latency per hop (α).
+    pub latency: f64,
+    /// Per-byte serialization/wire cost (β = 1/bandwidth).
+    pub per_byte: f64,
+    /// Sender CPU overhead per message (o_s).
+    pub send_overhead: f64,
+    /// Receiver CPU overhead per message (o_r).
+    pub recv_overhead: f64,
+    /// Compute cost per condensed cell scanned / updated.
+    pub per_cell: f64,
+    /// Interconnect shape: per-message latency is `latency · hops(src,dst)`.
+    pub topology: Topology,
+}
+
+impl CostModel {
+    /// The paper's testbed (see module docs).
+    pub fn nehalem_cluster() -> Self {
+        Self {
+            latency: 2.0e-6,
+            per_byte: 0.4e-9, // ≈2.5 GB/s
+            send_overhead: 1.4e-6,
+            recv_overhead: 1.4e-6,
+            per_cell: 1.0e-9,
+            topology: Topology::Flat,
+        }
+    }
+
+    /// Same constants on a different interconnect shape (ablation).
+    pub fn with_topology(mut self, t: Topology) -> Self {
+        self.topology = t;
+        self
+    }
+
+    /// Commodity gigabit-Ethernet NOW (the paper's closing remark about
+    /// "any distributed network of workstations") — ~50 µs MPI latency.
+    pub fn gbe_now() -> Self {
+        Self {
+            latency: 50.0e-6,
+            per_byte: 8.0e-9, // ≈125 MB/s
+            send_overhead: 5.0e-6,
+            recv_overhead: 5.0e-6,
+            per_cell: 1.0e-9,
+            topology: Topology::Flat,
+        }
+    }
+
+    /// Free communication — isolates algorithmic load balance.
+    pub fn zero_comm() -> Self {
+        Self {
+            latency: 0.0,
+            per_byte: 0.0,
+            send_overhead: 0.0,
+            recv_overhead: 0.0,
+            per_cell: 1.0e-9,
+            topology: Topology::Flat,
+        }
+    }
+
+    /// Sender-side busy time for a message of `bytes`.
+    #[inline]
+    pub fn send_cost(&self, bytes: usize) -> f64 {
+        self.send_overhead + bytes as f64 * self.per_byte
+    }
+
+    /// Compute time for scanning/updating `cells` condensed cells.
+    #[inline]
+    pub fn compute_cost(&self, cells: usize) -> f64 {
+        cells as f64 * self.per_cell
+    }
+}
+
+impl std::str::FromStr for CostModel {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "nehalem" | "paper" => Ok(Self::nehalem_cluster()),
+            "gbe" | "now" => Ok(Self::gbe_now()),
+            "zero" => Ok(Self::zero_comm()),
+            other => anyhow::bail!("unknown cost model {other:?} (nehalem|gbe|zero)"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn send_cost_monotone_in_bytes() {
+        let m = CostModel::nehalem_cluster();
+        assert!(m.send_cost(10) < m.send_cost(10_000));
+        assert!(m.send_cost(0) > 0.0);
+    }
+
+    #[test]
+    fn zero_comm_is_free() {
+        let m = CostModel::zero_comm();
+        assert_eq!(m.send_cost(1 << 20), 0.0);
+        assert!(m.compute_cost(100) > 0.0);
+    }
+
+    #[test]
+    fn presets_parse() {
+        assert_eq!("paper".parse::<CostModel>().unwrap(), CostModel::nehalem_cluster());
+        assert!("bogus".parse::<CostModel>().is_err());
+    }
+
+    #[test]
+    fn gbe_slower_than_ib() {
+        assert!(CostModel::gbe_now().latency > CostModel::nehalem_cluster().latency);
+    }
+}

@@ -1,0 +1,27 @@
+//! Message-passing substrate: the "MPI on a network of workstations" the
+//! paper runs on (§5.1), rebuilt in-process.
+//!
+//! Ranks are OS threads connected by unbounded channels with MPI-style
+//! `(source, tag)` receive matching. On top of point-to-point we build the
+//! collectives the algorithm needs (broadcast, allgather, allreduce-min,
+//! barrier).
+//!
+//! **Why a cost model:** this container has one core, so real wall-clock
+//! cannot exhibit the paper's Figure-2 shape (speedup → optimum →
+//! communication-dominated). Every endpoint therefore carries a *virtual
+//! clock* advanced by a Hockney-style α + β·m network model and a per-cell
+//! compute rate. Virtual time depends only on message causality — never on
+//! host scheduling — so simulated runtimes are deterministic and the
+//! Figure-2 bench replays exactly. Both wall and virtual time are reported.
+
+mod clock;
+mod collectives;
+mod costmodel;
+mod topology;
+mod transport;
+
+pub use clock::VirtualClock;
+pub use collectives::{global_min, Collectives};
+pub use costmodel::CostModel;
+pub use topology::Topology;
+pub use transport::{Endpoint, Network, TrafficStats, Wire};

@@ -1,0 +1,137 @@
+//! Interconnect topologies.
+//!
+//! The paper's related work fits clustering to specific networks —
+//! hypercubes (Ranka & Sahni 1991, Olson 1995) and shuffle-exchange
+//! networks — while the paper itself targets a flat switched cluster.
+//! This module models per-message latency as `α · hops(src, dst)` so the
+//! ablation benches can ask: how much does the Figure-2 optimum move on a
+//! ring, a hypercube, or a 2-D torus instead of a flat switch?
+
+/// Interconnect shape; determines the hop count between ranks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum Topology {
+    /// Full crossbar / non-blocking switch (the paper's cluster): 1 hop.
+    #[default]
+    Flat,
+    /// Bidirectional ring: min cyclic distance.
+    Ring,
+    /// Binary hypercube over the next power of two: Hamming distance.
+    Hypercube,
+    /// Near-square 2-D torus: Manhattan distance with wraparound.
+    Torus2d,
+}
+
+impl Topology {
+    /// Hop count from `src` to `dst` among `p` ranks (≥1 for src≠dst).
+    pub fn hops(self, src: usize, dst: usize, p: usize) -> usize {
+        if src == dst {
+            return 0;
+        }
+        match self {
+            Topology::Flat => 1,
+            Topology::Ring => {
+                let d = src.abs_diff(dst);
+                d.min(p - d)
+            }
+            Topology::Hypercube => (src ^ dst).count_ones() as usize,
+            Topology::Torus2d => {
+                // Rows of width ⌈√p⌉ (last row may be ragged; wraparound
+                // uses the full grid dimensions — a standard simplification).
+                let w = (p as f64).sqrt().ceil() as usize;
+                let h = p.div_ceil(w);
+                let (sx, sy) = (src % w, src / w);
+                let (dx, dy) = (dst % w, dst / w);
+                let ddx = sx.abs_diff(dx);
+                let ddy = sy.abs_diff(dy);
+                ddx.min(w - ddx) + ddy.min(h - ddy)
+            }
+        }
+    }
+
+    /// Mean hop count over all ordered pairs — the effective latency
+    /// multiplier for the naive all-to-all exchanges.
+    pub fn mean_hops(self, p: usize) -> f64 {
+        if p <= 1 {
+            return 0.0;
+        }
+        let mut total = 0usize;
+        for s in 0..p {
+            for d in 0..p {
+                if s != d {
+                    total += self.hops(s, d, p);
+                }
+            }
+        }
+        total as f64 / (p * (p - 1)) as f64
+    }
+}
+
+impl std::str::FromStr for Topology {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "flat" | "switch" => Ok(Topology::Flat),
+            "ring" => Ok(Topology::Ring),
+            "hypercube" | "cube" => Ok(Topology::Hypercube),
+            "torus" | "torus2d" => Ok(Topology::Torus2d),
+            other => anyhow::bail!("unknown topology {other:?} (flat|ring|hypercube|torus)"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_is_always_one_hop() {
+        for (s, d) in [(0, 1), (3, 7), (9, 2)] {
+            assert_eq!(Topology::Flat.hops(s, d, 10), 1);
+        }
+        assert_eq!(Topology::Flat.hops(4, 4, 10), 0);
+    }
+
+    #[test]
+    fn ring_wraps() {
+        assert_eq!(Topology::Ring.hops(0, 1, 8), 1);
+        assert_eq!(Topology::Ring.hops(0, 7, 8), 1); // wraparound
+        assert_eq!(Topology::Ring.hops(0, 4, 8), 4); // antipodal
+        assert_eq!(Topology::Ring.hops(2, 6, 8), 4);
+    }
+
+    #[test]
+    fn hypercube_is_hamming() {
+        assert_eq!(Topology::Hypercube.hops(0b000, 0b111, 8), 3);
+        assert_eq!(Topology::Hypercube.hops(0b010, 0b011, 8), 1);
+        assert_eq!(Topology::Hypercube.hops(5, 5, 8), 0);
+    }
+
+    #[test]
+    fn torus_wraps_both_axes() {
+        // p=9 → 3×3 grid.
+        assert_eq!(Topology::Torus2d.hops(0, 1, 9), 1);
+        assert_eq!(Topology::Torus2d.hops(0, 2, 9), 1); // row wraparound
+        assert_eq!(Topology::Torus2d.hops(0, 6, 9), 1); // col wraparound
+        assert_eq!(Topology::Torus2d.hops(0, 4, 9), 2); // diagonal
+    }
+
+    #[test]
+    fn mean_hops_ordering() {
+        // Richer topologies have shorter average paths.
+        let p = 16;
+        let flat = Topology::Flat.mean_hops(p);
+        let cube = Topology::Hypercube.mean_hops(p);
+        let torus = Topology::Torus2d.mean_hops(p);
+        let ring = Topology::Ring.mean_hops(p);
+        assert!(flat <= cube && cube <= torus && torus <= ring, "{flat} {cube} {torus} {ring}");
+        assert_eq!(flat, 1.0);
+        assert!((cube - 512.0 / 240.0).abs() < 1e-12); // Σ Hamming / ordered pairs
+        assert!((ring - 64.0 / 15.0).abs() < 1e-12); // Σ min(d,16−d) / 15
+    }
+
+    #[test]
+    fn parses() {
+        assert_eq!("hypercube".parse::<Topology>().unwrap(), Topology::Hypercube);
+        assert!("mesh9".parse::<Topology>().is_err());
+    }
+}

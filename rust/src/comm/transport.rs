@@ -1,0 +1,285 @@
+//! Point-to-point transport with MPI-style (source, tag) matching.
+//!
+//! A [`Network`] wires up `p` [`Endpoint`]s over unbounded channels. Each
+//! endpoint owns its virtual clock and traffic counters; `send` stamps the
+//! message with its simulated arrival time, `recv` blocks (really blocks,
+//! on the host channel) until a matching message exists and then merges
+//! the arrival into the local clock.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use super::clock::VirtualClock;
+use super::costmodel::CostModel;
+
+/// Payloads must report their wire size for the cost model.
+pub trait Wire: Clone + Send + 'static {
+    /// Serialized size in bytes (approximate is fine; used only for β·m).
+    fn nbytes(&self) -> usize;
+}
+
+impl Wire for () {
+    fn nbytes(&self) -> usize {
+        0
+    }
+}
+
+impl Wire for f32 {
+    fn nbytes(&self) -> usize {
+        4
+    }
+}
+
+impl Wire for f64 {
+    fn nbytes(&self) -> usize {
+        8
+    }
+}
+
+impl Wire for u32 {
+    fn nbytes(&self) -> usize {
+        4
+    }
+}
+
+impl Wire for usize {
+    fn nbytes(&self) -> usize {
+        8
+    }
+}
+
+impl<A: Wire, B: Wire> Wire for (A, B) {
+    fn nbytes(&self) -> usize {
+        self.0.nbytes() + self.1.nbytes()
+    }
+}
+
+impl<T: Wire> Wire for Vec<T> {
+    fn nbytes(&self) -> usize {
+        self.iter().map(Wire::nbytes).sum::<usize>() + 8
+    }
+}
+
+impl<T: Wire> Wire for Option<T> {
+    fn nbytes(&self) -> usize {
+        1 + self.as_ref().map(Wire::nbytes).unwrap_or(0)
+    }
+}
+
+struct Envelope<T> {
+    src: usize,
+    tag: u64,
+    arrival: f64,
+    payload: T,
+}
+
+/// Cumulative traffic counters for one endpoint.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct TrafficStats {
+    pub msgs_sent: u64,
+    pub bytes_sent: u64,
+    pub msgs_recv: u64,
+}
+
+/// One rank's communication endpoint.
+pub struct Endpoint<T> {
+    rank: usize,
+    p: usize,
+    senders: Vec<Sender<Envelope<T>>>,
+    receiver: Receiver<Envelope<T>>,
+    /// Messages that arrived but did not match a pending recv.
+    stash: Vec<Envelope<T>>,
+    pub clock: VirtualClock,
+    pub model: CostModel,
+    pub traffic: TrafficStats,
+}
+
+/// Builder: create p wired endpoints.
+pub struct Network;
+
+impl Network {
+    pub fn with_ranks<T: Wire>(p: usize, model: CostModel) -> Vec<Endpoint<T>> {
+        assert!(p >= 1);
+        let mut senders = Vec::with_capacity(p);
+        let mut receivers = Vec::with_capacity(p);
+        for _ in 0..p {
+            let (tx, rx) = channel();
+            senders.push(tx);
+            receivers.push(rx);
+        }
+        receivers
+            .into_iter()
+            .enumerate()
+            .map(|(rank, receiver)| Endpoint {
+                rank,
+                p,
+                senders: senders.clone(),
+                receiver,
+                stash: Vec::new(),
+                clock: VirtualClock::new(),
+                model,
+                traffic: TrafficStats::default(),
+            })
+            .collect()
+    }
+}
+
+impl<T: Wire> Endpoint<T> {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Send `payload` to `dst` under `tag`. Sender pays overhead + β·m of
+    /// virtual time; the message is stamped to arrive `latency` later.
+    /// Self-sends are allowed (loopback, no network cost).
+    pub fn send(&mut self, dst: usize, tag: u64, payload: T) {
+        let bytes = payload.nbytes();
+        let arrival = if dst == self.rank {
+            self.clock.now()
+        } else {
+            self.clock.advance(self.model.send_cost(bytes));
+            let hops = self.model.topology.hops(self.rank, dst, self.p) as f64;
+            self.clock.now() + self.model.latency * hops
+        };
+        self.traffic.msgs_sent += 1;
+        self.traffic.bytes_sent += bytes as u64;
+        let env = Envelope {
+            src: self.rank,
+            tag,
+            arrival,
+            payload,
+        };
+        if dst == self.rank {
+            self.stash.push(env);
+        } else {
+            // Receiver thread may have exited after its protocol finished;
+            // a dropped receiver is then expected, not an error.
+            let _ = self.senders[dst].send(env);
+        }
+    }
+
+    /// Blocking receive matching (src, tag). Returns the payload after
+    /// merging the simulated arrival time into the local clock.
+    pub fn recv(&mut self, src: usize, tag: u64) -> T {
+        let env = self.take_matching(|e| e.src == src && e.tag == tag);
+        self.finish_recv(env)
+    }
+
+    /// Blocking receive matching tag from *any* source; returns (src, payload).
+    pub fn recv_any(&mut self, tag: u64) -> (usize, T) {
+        let env = self.take_matching(|e| e.tag == tag);
+        let src = env.src;
+        (src, self.finish_recv(env))
+    }
+
+    fn finish_recv(&mut self, env: Envelope<T>) -> T {
+        self.clock.observe(env.arrival);
+        self.clock.advance(self.model.recv_overhead);
+        self.traffic.msgs_recv += 1;
+        env.payload
+    }
+
+    fn take_matching(&mut self, pred: impl Fn(&Envelope<T>) -> bool) -> Envelope<T> {
+        if let Some(pos) = self.stash.iter().position(&pred) {
+            return self.stash.remove(pos);
+        }
+        loop {
+            let env = self
+                .receiver
+                .recv()
+                .expect("peer endpoints dropped while a recv was pending");
+            if pred(&env) {
+                return env;
+            }
+            self.stash.push(env);
+        }
+    }
+
+    /// Account local compute over `cells` condensed cells.
+    pub fn compute(&mut self, cells: usize) {
+        self.clock.advance(self.model.compute_cost(cells));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn p2p_roundtrip() {
+        let mut eps = Network::with_ranks::<f32>(2, CostModel::zero_comm());
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        let t = std::thread::spawn(move || {
+            a.send(1, 7, 42.0);
+            a
+        });
+        assert_eq!(b.recv(0, 7), 42.0);
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn tag_matching_reorders() {
+        let mut eps = Network::with_ranks::<u32>(2, CostModel::zero_comm());
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(1, 1, 100);
+        a.send(1, 2, 200);
+        // Receive tag 2 first even though tag 1 arrived first.
+        assert_eq!(b.recv(0, 2), 200);
+        assert_eq!(b.recv(0, 1), 100);
+    }
+
+    #[test]
+    fn self_send_loopback() {
+        let mut eps = Network::with_ranks::<u32>(1, CostModel::nehalem_cluster());
+        let mut a = eps.pop().unwrap();
+        a.send(0, 3, 9);
+        assert_eq!(a.recv(0, 3), 9);
+    }
+
+    #[test]
+    fn virtual_time_causality() {
+        // Receiver's clock must be >= sender's send-completion + latency.
+        let model = CostModel::nehalem_cluster();
+        let mut eps = Network::with_ranks::<Vec<f32>>(2, model);
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.compute(1_000_000); // sender does 1 ms of work first
+        let sender_time_before = a.clock.now();
+        a.send(1, 0, vec![1.0; 256]);
+        assert_eq!(b.clock.now(), 0.0);
+        let _ = b.recv(0, 0);
+        assert!(
+            b.clock.now() >= sender_time_before + model.latency,
+            "recv clock {} vs send {}",
+            b.clock.now(),
+            sender_time_before
+        );
+    }
+
+    #[test]
+    fn traffic_counters() {
+        let mut eps = Network::with_ranks::<Vec<f32>>(2, CostModel::zero_comm());
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.send(1, 0, vec![0.0; 10]);
+        assert_eq!(a.traffic.msgs_sent, 1);
+        assert_eq!(a.traffic.bytes_sent, 48); // 10*4 + 8 header
+        let _ = b.recv(0, 0);
+        assert_eq!(b.traffic.msgs_recv, 1);
+    }
+
+    #[test]
+    fn wire_sizes() {
+        assert_eq!(().nbytes(), 0);
+        assert_eq!(1.0f32.nbytes(), 4);
+        assert_eq!((1u32, 2.0f32).nbytes(), 8);
+        assert_eq!(vec![1.0f32; 3].nbytes(), 20);
+        assert_eq!(Some(7u32).nbytes(), 5);
+        assert_eq!(None::<u32>.nbytes(), 1);
+    }
+}

@@ -1,0 +1,193 @@
+//! Wire protocol of the distributed Lance-Williams iteration (paper §5.3).
+//!
+//! One message enum covers the whole protocol; tags encode
+//! `(iteration, phase)` so receives match deterministically even though
+//! each endpoint has a single mailbox.
+
+use crate::comm::{Collectives, Endpoint, Wire};
+
+/// Protocol phases within one iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Step 2: allgather of local minima.
+    MinExchange = 0,
+    /// Step 5: winning rank announces the merge.
+    MergeAnnounce = 1,
+    /// Step 6a: (k, D_kj) triple lists toward the owners of row i.
+    Triples = 2,
+}
+
+/// Tag for `phase` of `iteration` (initial distribution uses [`DIST_TAG`]).
+#[inline]
+pub fn tag(iteration: usize, phase: Phase) -> u64 {
+    (iteration as u64) * 4 + phase as u64
+}
+
+/// Tag for the initial shard distribution (outside any iteration).
+pub const DIST_TAG: u64 = u64::MAX;
+
+/// All coordinator messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ProtoMsg {
+    /// Initial distribution: this rank's condensed cells, in partition
+    /// order ("As the data files were read in from disk they were sent to
+    /// the processors").
+    Shard(Vec<f32>),
+    /// Step 2 payload: (local minimum value, global condensed index).
+    /// Index `u64::MAX` means "no active cell on this rank".
+    LocalMin(f32, u64),
+    /// Step 5 payload: the merging slot pair (i, j), i < j.
+    MergeAnnounce(u32, u32),
+    /// Step 6a payload: `(k, D_kj)` pairs this sender owns, destined for
+    /// the owner of the corresponding (k,i) cell.
+    Triples(Vec<(u32, f32)>),
+    /// Tree-collective aggregate of step-2 minima: (rank, value, index)
+    /// triples accumulated up (and broadcast down) a binomial tree.
+    MinList(Vec<(u32, f32, u64)>),
+    /// Distributed-build replication (paper §5.1 "parallelized RMSD"):
+    /// the raw dataset — (kind, rows, row-width, flattened f32 payload) —
+    /// so each rank computes its own shard cells instead of receiving them.
+    Dataset(u8, u32, u32, Vec<f32>),
+}
+
+impl Wire for ProtoMsg {
+    fn nbytes(&self) -> usize {
+        match self {
+            // 4 bytes/cell + small header, as C+MPI would send.
+            ProtoMsg::Shard(cells) => 8 + 4 * cells.len(),
+            ProtoMsg::LocalMin(_, _) => 12,
+            ProtoMsg::MergeAnnounce(_, _) => 8,
+            ProtoMsg::Triples(ts) => 8 + 8 * ts.len(),
+            ProtoMsg::MinList(ms) => 8 + 16 * ms.len(),
+            ProtoMsg::Dataset(_, _, _, flat) => 16 + 4 * flat.len(),
+        }
+    }
+}
+
+/// Step 2-3 under either collective algorithm: every rank ends up with all
+/// p `(value, index)` local minima, rank-ordered.
+///
+/// * `Naive` — the paper's "each p_m broadcasts their local minimum":
+///   p·(p−1) messages, one latency.
+/// * `Tree` — binomial gather of a [`ProtoMsg::MinList`] to rank 0 plus a
+///   binomial broadcast back: 2·(p−1) messages, 2·⌈log₂p⌉ latencies.
+pub fn exchange_minima(
+    ep: &mut Endpoint<ProtoMsg>,
+    strategy: Collectives,
+    iter: usize,
+    mine: (f32, u64),
+) -> Vec<(f32, u64)> {
+    let t = tag(iter, Phase::MinExchange);
+    match strategy {
+        Collectives::Naive => ep
+            .allgather(t, ProtoMsg::LocalMin(mine.0, mine.1))
+            .into_iter()
+            .map(|m| m.expect_local_min())
+            .collect(),
+        Collectives::Tree => {
+            let p = ep.p();
+            let me = ep.rank();
+            let mut acc: Vec<(u32, f32, u64)> = vec![(me as u32, mine.0, mine.1)];
+            // Gather (reverse binomial, root 0).
+            let mut mask = 1usize;
+            let mut sent = false;
+            while mask < p && !sent {
+                if me & mask != 0 {
+                    ep.send(me - mask, t, ProtoMsg::MinList(acc));
+                    acc = Vec::new();
+                    sent = true;
+                } else {
+                    if me + mask < p {
+                        let part = match ep.recv(me + mask, t) {
+                            ProtoMsg::MinList(l) => l,
+                            other => panic!("protocol error: expected MinList, got {other:?}"),
+                        };
+                        acc.extend(part);
+                    }
+                    mask <<= 1;
+                }
+            }
+            // Broadcast the assembled list back down.
+            let bt = t ^ (1 << 62);
+            let payload = if me == 0 {
+                acc.sort_by_key(|&(r, _, _)| r);
+                Some(ProtoMsg::MinList(acc))
+            } else {
+                None
+            };
+            let full = match ep.broadcast_tree(bt, 0, payload) {
+                ProtoMsg::MinList(l) => l,
+                other => panic!("protocol error: expected MinList, got {other:?}"),
+            };
+            debug_assert_eq!(full.len(), p);
+            full.into_iter().map(|(_, v, i)| (v, i)).collect()
+        }
+    }
+}
+
+impl ProtoMsg {
+    pub fn expect_shard(self) -> Vec<f32> {
+        match self {
+            ProtoMsg::Shard(v) => v,
+            other => panic!("protocol error: expected Shard, got {other:?}"),
+        }
+    }
+
+    pub fn expect_local_min(self) -> (f32, u64) {
+        match self {
+            ProtoMsg::LocalMin(v, i) => (v, i),
+            other => panic!("protocol error: expected LocalMin, got {other:?}"),
+        }
+    }
+
+    pub fn expect_merge(self) -> (usize, usize) {
+        match self {
+            ProtoMsg::MergeAnnounce(i, j) => (i as usize, j as usize),
+            other => panic!("protocol error: expected MergeAnnounce, got {other:?}"),
+        }
+    }
+
+    pub fn expect_triples(self) -> Vec<(u32, f32)> {
+        match self {
+            ProtoMsg::Triples(t) => t,
+            other => panic!("protocol error: expected Triples, got {other:?}"),
+        }
+    }
+
+    pub fn expect_dataset(self) -> (u8, u32, u32, Vec<f32>) {
+        match self {
+            ProtoMsg::Dataset(k, r, c, flat) => (k, r, c, flat),
+            other => panic!("protocol error: expected Dataset, got {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tags_unique_across_iterations_and_phases() {
+        let mut seen = std::collections::HashSet::new();
+        for it in 0..100 {
+            for ph in [Phase::MinExchange, Phase::MergeAnnounce, Phase::Triples] {
+                assert!(seen.insert(tag(it, ph)));
+                assert_ne!(tag(it, ph), DIST_TAG);
+            }
+        }
+    }
+
+    #[test]
+    fn wire_sizes_scale() {
+        assert_eq!(ProtoMsg::LocalMin(1.0, 2).nbytes(), 12);
+        assert_eq!(ProtoMsg::MergeAnnounce(1, 2).nbytes(), 8);
+        assert_eq!(ProtoMsg::Shard(vec![0.0; 100]).nbytes(), 408);
+        assert_eq!(ProtoMsg::Triples(vec![(1, 2.0); 10]).nbytes(), 88);
+    }
+
+    #[test]
+    #[should_panic(expected = "protocol error")]
+    fn wrong_variant_panics() {
+        ProtoMsg::LocalMin(0.0, 0).expect_shard();
+    }
+}

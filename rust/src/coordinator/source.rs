@@ -1,0 +1,219 @@
+//! Distributed distance-matrix construction — the first half of the
+//! paper's pipeline (§5.1: "Parallelized RMSD and distributed hierarchical
+//! clustering algorithms were implemented using C and MPI").
+//!
+//! Instead of rank 0 computing the full matrix and shipping shards
+//! (`DistSource::Matrix`), the raw dataset is replicated to every rank and
+//! each rank computes exactly the condensed cells it owns:
+//!
+//! * `Points` — Euclidean distances from an (n,d) point set;
+//! * `Ensemble` — Kabsch-RMSD from an (n, residues, 3) conformation set
+//!   (the paper's protein workload).
+//!
+//! Communication drops from O(n²/p)·p matrix cells to O(n·d)·p dataset
+//! bytes, and the O(n²·d)/p distance computation parallelizes — both
+//! measured by the `build` phase counters and asserted in tests.
+
+use crate::data::rmsd::{rmsd, Structure};
+use crate::matrix::CondensedMatrix;
+
+/// What the cluster run starts from.
+#[derive(Clone, Debug)]
+pub enum DistSource {
+    /// Precomputed matrix: rank 0 distributes shards (paper §5.3 preamble).
+    Matrix(CondensedMatrix),
+    /// Raw points: replicate, build Euclidean cells in place.
+    Points(Vec<Vec<f64>>),
+    /// Raw conformations: replicate, build Kabsch-RMSD cells in place.
+    Ensemble(Vec<Structure>),
+}
+
+impl DistSource {
+    /// Number of items to cluster.
+    pub fn n(&self) -> usize {
+        match self {
+            DistSource::Matrix(m) => m.n(),
+            DistSource::Points(p) => p.len(),
+            DistSource::Ensemble(e) => e.len(),
+        }
+    }
+
+    /// Distance between items i and j — the single definition every path
+    /// (serial builder, distributed builder, tests) routes through, so
+    /// results are bit-identical regardless of where the cell is computed.
+    pub fn distance(&self, i: usize, j: usize) -> f32 {
+        match self {
+            DistSource::Matrix(m) => m.get(i, j),
+            DistSource::Points(pts) => euclidean_f32(&pts[i], &pts[j]),
+            DistSource::Ensemble(e) => rmsd(&e[i], &e[j]) as f32,
+        }
+    }
+
+    /// Simulated compute cost of one distance evaluation, in condensed-cell
+    /// scan units (CostModel::per_cell). Euclidean ≈ 3 flops/dim ≈ 3·d
+    /// cell-units; Kabsch-RMSD ≈ centering + 3×3 covariance + 4×4 Jacobi
+    /// ≈ ~40 flops/atom.
+    pub fn cell_cost_units(&self) -> usize {
+        match self {
+            DistSource::Matrix(_) => 0, // already built
+            DistSource::Points(pts) => 3 * pts.first().map_or(1, |p| p.len()),
+            DistSource::Ensemble(e) => 40 * e.first().map_or(1, |s| s.len()),
+        }
+    }
+
+    /// Wire payload for replication: dataset flattened to f32 (what C+MPI
+    /// would ship), plus row geometry. `Matrix` sources return None — they
+    /// distribute shards instead.
+    pub fn to_wire(&self) -> Option<(Vec<f32>, u32, u32)> {
+        match self {
+            DistSource::Matrix(_) => None,
+            DistSource::Points(pts) => {
+                let d = pts.first().map_or(0, |p| p.len());
+                let flat = pts.iter().flat_map(|p| p.iter().map(|&v| v as f32)).collect();
+                Some((flat, pts.len() as u32, d as u32))
+            }
+            DistSource::Ensemble(e) => {
+                let r = e.first().map_or(0, |s| s.len());
+                let flat = e
+                    .iter()
+                    .flat_map(|s| s.iter().flat_map(|a| a.iter().map(|&v| v as f32)))
+                    .collect();
+                Some((flat, e.len() as u32, (r * 3) as u32))
+            }
+        }
+    }
+
+    /// Rebuild a source from its wire form (receiver side). Coordinates
+    /// round-trip through f32 on BOTH sides before the distance math, so
+    /// sender-local and receiver-remote cells agree bitwise — see
+    /// `from_wire_roundtrip` below.
+    pub fn from_wire(kind: SourceKind, flat: &[f32], rows: u32, cols: u32) -> DistSource {
+        let (rows, cols) = (rows as usize, cols as usize);
+        assert_eq!(flat.len(), rows * cols, "wire shape mismatch");
+        match kind {
+            SourceKind::Points => DistSource::Points(
+                (0..rows)
+                    .map(|r| flat[r * cols..(r + 1) * cols].iter().map(|&v| v as f64).collect())
+                    .collect(),
+            ),
+            SourceKind::Ensemble => {
+                let atoms = cols / 3;
+                DistSource::Ensemble(
+                    (0..rows)
+                        .map(|r| {
+                            (0..atoms)
+                                .map(|a| {
+                                    let o = r * cols + a * 3;
+                                    [flat[o] as f64, flat[o + 1] as f64, flat[o + 2] as f64]
+                                })
+                                .collect()
+                        })
+                        .collect(),
+                )
+            }
+        }
+    }
+
+    /// Round-trip self through the wire encoding so rank-0-local cells use
+    /// the same f32-quantized coordinates as every other rank.
+    pub fn quantized(&self) -> DistSource {
+        match self.to_wire() {
+            None => self.clone(),
+            Some((flat, rows, cols)) => DistSource::from_wire(self.kind(), &flat, rows, cols),
+        }
+    }
+
+    pub fn kind(&self) -> SourceKind {
+        match self {
+            DistSource::Matrix(_) => SourceKind::Points, // unused
+            DistSource::Points(_) => SourceKind::Points,
+            DistSource::Ensemble(_) => SourceKind::Ensemble,
+        }
+    }
+
+    /// Serial reference build (tests + the serial baselines).
+    pub fn build_matrix(&self) -> CondensedMatrix {
+        let n = self.n();
+        let q = self.quantized();
+        CondensedMatrix::from_fn(n, |i, j| q.distance(i, j))
+    }
+}
+
+/// Wire tag for [`DistSource::from_wire`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SourceKind {
+    Points,
+    Ensemble,
+}
+
+/// f32 Euclidean distance with the same op order as
+/// `data::distance::euclidean_matrix` (f64 accumulate, then cast).
+#[inline]
+fn euclidean_f32(a: &[f64], b: &[f64]) -> f32 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .sqrt() as f32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{EnsembleSpec, GaussianSpec};
+
+    #[test]
+    fn points_build_matches_distance_builder() {
+        let lp = GaussianSpec { n: 20, d: 4, k: 3, ..Default::default() }.generate(1);
+        let src = DistSource::Points(lp.points.clone());
+        let built = src.build_matrix();
+        let reference = crate::data::euclidean_matrix(&lp.points);
+        for idx in 0..built.len() {
+            // Same up to the f32 wire quantization of the coordinates.
+            assert!(
+                (built.cells()[idx] - reference.cells()[idx]).abs()
+                    < 1e-4 * reference.cells()[idx].max(1.0),
+                "cell {idx}"
+            );
+        }
+    }
+
+    #[test]
+    fn from_wire_roundtrip() {
+        let lp = GaussianSpec { n: 12, d: 3, k: 2, ..Default::default() }.generate(2);
+        let src = DistSource::Points(lp.points);
+        let (flat, rows, cols) = src.to_wire().unwrap();
+        let back = DistSource::from_wire(SourceKind::Points, &flat, rows, cols);
+        // Quantized local and remote cells agree bitwise.
+        let q = src.quantized();
+        for i in 0..12 {
+            for j in (i + 1)..12 {
+                assert_eq!(q.distance(i, j), back.distance(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn ensemble_wire_roundtrip() {
+        let e = EnsembleSpec { n: 6, residues: 10, ..Default::default() }.generate(3);
+        let src = DistSource::Ensemble(e.structures);
+        let (flat, rows, cols) = src.to_wire().unwrap();
+        assert_eq!((rows, cols), (6, 30));
+        let back = DistSource::from_wire(SourceKind::Ensemble, &flat, rows, cols);
+        let q = src.quantized();
+        for i in 0..6 {
+            for j in (i + 1)..6 {
+                let (a, b) = (q.distance(i, j), back.distance(i, j));
+                assert_eq!(a, b, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn cost_units_scale_with_payload() {
+        let pts = DistSource::Points(vec![vec![0.0; 16]; 4]);
+        assert_eq!(pts.cell_cost_units(), 48);
+        let ens = DistSource::Ensemble(vec![vec![[0.0; 3]; 20]; 4]);
+        assert_eq!(ens.cell_cost_units(), 800);
+    }
+}

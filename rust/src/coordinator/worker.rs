@@ -1,0 +1,281 @@
+//! Worker rank: the SPMD body of the distributed Lance-Williams protocol
+//! (paper §5.3, steps 1–6).
+//!
+//! Every rank holds only its shard of the condensed matrix (`(n²−n)/2 / p`
+//! cells) plus O(n) replicated metadata (cluster sizes, liveness) — the
+//! storage claim of §5.4. Merge decisions are replicated deterministically
+//! on every rank (step 4 "communication is unnecessary at this step"), so
+//! any rank can reconstruct the dendrogram; rank 0's copy is returned.
+
+use std::sync::Arc;
+
+use crate::comm::{Collectives, Endpoint};
+use crate::coordinator::protocol::{exchange_minima, tag, Phase, ProtoMsg, DIST_TAG};
+use crate::coordinator::source::{DistSource, SourceKind};
+use crate::coordinator::Engine;
+use crate::dendrogram::Merge;
+use crate::linkage::{lw_update, Scheme};
+use crate::matrix::{condensed_index, condensed_pair, Partition};
+use crate::metrics::PhaseBreakdown;
+
+/// Per-worker results returned to the driver.
+pub struct WorkerOutput {
+    pub rank: usize,
+    pub merges: Vec<Merge>,
+    pub virtual_s: f64,
+    pub phases: PhaseBreakdown,
+    pub msgs_sent: u64,
+    pub bytes_sent: u64,
+    pub cells_scanned: u64,
+    pub cells_updated: u64,
+    pub shard_cells: usize,
+}
+
+/// Worker configuration (shared, cheap to clone).
+#[derive(Clone)]
+pub struct WorkerCtx {
+    pub scheme: Scheme,
+    pub partition: Partition,
+    pub engine: Engine,
+    pub collectives: Collectives,
+}
+
+/// Run one rank of the protocol to completion.
+///
+/// Rank 0 doubles as the data distributor (paper: files are read and
+/// "sent to the processors"): for a prebuilt matrix it ships each rank
+/// its shard; for raw points/conformations it replicates the dataset and
+/// every rank *builds* its own shard cells — the paper's §5.1
+/// "parallelized RMSD" stage.
+pub fn worker_main(
+    mut ep: Endpoint<ProtoMsg>,
+    ctx: WorkerCtx,
+    source: Option<Arc<DistSource>>,
+) -> WorkerOutput {
+    let me = ep.rank();
+    let p = ep.p();
+    let n = ctx.partition.n();
+    let part = &ctx.partition;
+    let mut phases = PhaseBreakdown::default();
+
+    // ---- Initial distribution / distributed build ----------------------
+    let t_build = ep.clock.now();
+    let mut shard: Vec<f32> = if me == 0 {
+        let src = source.expect("rank 0 needs the data source");
+        match src.to_wire() {
+            None => {
+                // Prebuilt matrix: ship shards (paper §5.3 preamble).
+                let DistSource::Matrix(ref m) = *src else { unreachable!() };
+                let full = m.cells();
+                for dst in 1..p {
+                    let cells: Vec<f32> = part.cells_of(dst).map(|idx| full[idx]).collect();
+                    ep.send(dst, DIST_TAG, ProtoMsg::Shard(cells));
+                }
+                part.cells_of(0).map(|idx| full[idx]).collect()
+            }
+            Some((flat, rows, cols)) => {
+                // Raw dataset: replicate, then build my own cells. The
+                // local copy goes through the same f32 wire quantization.
+                let kind = match src.kind() {
+                    SourceKind::Points => 0u8,
+                    SourceKind::Ensemble => 1u8,
+                };
+                for dst in 1..p {
+                    ep.send(dst, DIST_TAG, ProtoMsg::Dataset(kind, rows, cols, flat.clone()));
+                }
+                build_shard(&mut ep, part, me, &src.quantized())
+            }
+        }
+    } else {
+        match ep.recv(0, DIST_TAG) {
+            ProtoMsg::Shard(cells) => cells,
+            ProtoMsg::Dataset(kind, rows, cols, flat) => {
+                let kind = if kind == 0 { SourceKind::Points } else { SourceKind::Ensemble };
+                let src = DistSource::from_wire(kind, &flat, rows, cols);
+                build_shard(&mut ep, part, me, &src)
+            }
+            other => panic!("protocol error: expected Shard|Dataset, got {other:?}"),
+        }
+    };
+    let shard_cells = shard.len();
+    phases.build = ep.clock.now() - t_build;
+    // Global index of each local cell (the paper sends "the (i,j) global
+    // matrix indices for their data portion"); for our partition kinds
+    // this is a pure function, precomputed once.
+    let my_cell0: Vec<usize> = part.cells_of(me).collect();
+
+    // Replicated O(n) metadata. `alive_list` is maintained ascending so
+    // every rank walks identical k-order (deterministic triple batching).
+    let mut sizes = vec![1.0f32; n];
+    let mut alive_list: Vec<usize> = (0..n).collect();
+    let mut active_cells = shard.len() as u64;
+
+    let mut merges: Vec<Merge> = Vec::with_capacity(n - 1);
+    let mut cells_scanned = 0u64;
+    let mut cells_updated = 0u64;
+
+    // Hot-loop buffers hoisted out of the iteration (perf pass,
+    // EXPERIMENTS.md §Perf: no allocation on the per-merge path).
+    let mut outbound: Vec<Vec<(u32, f32)>> = vec![Vec::new(); p];
+    let mut expect_from = vec![false; p];
+    let mut local_dkj: Vec<(u32, f32)> = Vec::new();
+
+    for iter in 0..(n - 1) {
+        // ---- Step 1: local minimum over my shard ----------------------
+        let t0 = ep.clock.now();
+        let (lmin, lidx) = ctx.engine.shard_min(&shard);
+        // Cost: the scan touches the live cells (retired ones are inf and
+        // shrink the effective matrix, §5.4's decreasing m).
+        ep.compute(active_cells as usize);
+        cells_scanned += active_cells;
+        let global_idx = if lidx == usize::MAX {
+            u64::MAX
+        } else {
+            my_cell0[lidx] as u64
+        };
+        phases.scan += ep.clock.now() - t0;
+
+        // ---- Steps 2–4: exchange minima, pick global winner ------------
+        let t1 = ep.clock.now();
+        let pairs = exchange_minima(&mut ep, ctx.collectives, iter, (lmin, global_idx));
+        let (win_rank, d_ij, win_idx) = crate::comm::global_min(&pairs)
+            .expect("all cells retired before n-1 merges — non-finite input distance?");
+        let (i, j) = condensed_pair(n, win_idx as usize);
+
+        // ---- Step 5: winner announces the merge ------------------------
+        // Redundant information-wise (every rank just computed it), but the
+        // paper's protocol includes the broadcast, so the cost model does too.
+        let announce = ProtoMsg::MergeAnnounce(i as u32, j as u32);
+        let payload = if me == win_rank { Some(announce) } else { None };
+        let (ai, aj) = ep
+            .broadcast_via(ctx.collectives, tag(iter, Phase::MergeAnnounce), win_rank, payload)
+            .expect_merge();
+        debug_assert_eq!((ai, aj), (i, j));
+        phases.coordinate += ep.clock.now() - t1;
+
+        // ---- Step 6: update row i, retire row j ------------------------
+        let t2 = ep.clock.now();
+        // 6a outbound: for every live k, if I own (k,j) I must ship
+        // (k, D_kj) to the owner of (k,i) — batched per destination.
+        // Receivers know exactly who will message them (ownership is a
+        // pure function): collect the distinct source set for my cells.
+        for b in outbound.iter_mut() {
+            b.clear();
+        }
+        expect_from.fill(false);
+        local_dkj.clear();
+
+        for &k in &alive_list {
+            if k == i || k == j {
+                continue;
+            }
+            let cell_kj = condensed_index(n, k.min(j), k.max(j));
+            let cell_ki = condensed_index(n, k.min(i), k.max(i));
+            let owner_kj = part.owner(cell_kj);
+            let owner_ki = part.owner(cell_ki);
+            if owner_kj == me {
+                let off = part.local_offset(cell_kj);
+                let v = shard[off];
+                if owner_ki == me {
+                    local_dkj.push((k as u32, v));
+                } else {
+                    outbound[owner_ki].push((k as u32, v));
+                }
+                // "The sending processors mark the sent matrix elements as
+                // erased not to be used again."
+                shard[off] = f32::INFINITY;
+                active_cells -= 1;
+            } else if owner_ki == me {
+                expect_from[owner_kj] = true;
+            }
+        }
+        // Retire the (i,j) cell itself.
+        {
+            let cell_ij = condensed_index(n, i, j);
+            if part.owner(cell_ij) == me {
+                shard[part.local_offset(cell_ij)] = f32::INFINITY;
+                active_cells -= 1;
+            }
+        }
+        let ttag = tag(iter, Phase::Triples);
+        for dst in 0..p {
+            if !outbound[dst].is_empty() {
+                let list = std::mem::take(&mut outbound[dst]);
+                ep.send(dst, ttag, ProtoMsg::Triples(list));
+            }
+        }
+
+        // 6b: apply the LW formula for every (k, D_kj) that reaches me.
+        let (n_i, n_j) = (sizes[i], sizes[j]);
+        let apply = |shard: &mut [f32], k: u32, d_kj: f32, updated: &mut u64| {
+            let k = k as usize;
+            let cell_ki = condensed_index(n, k.min(i), k.max(i));
+            debug_assert_eq!(part.owner(cell_ki), me);
+            let off = part.local_offset(cell_ki);
+            let c = ctx.scheme.coeffs(n_i, n_j, sizes[k]);
+            shard[off] = lw_update(c, shard[off], d_kj, d_ij);
+            *updated += 1;
+        };
+        for &(k, v) in &local_dkj {
+            apply(&mut shard, k, v, &mut cells_updated);
+        }
+        for src in 0..p {
+            if expect_from[src] {
+                let triples = ep.recv(src, ttag).expect_triples();
+                ep.compute(triples.len());
+                for (k, v) in triples {
+                    apply(&mut shard, k, v, &mut cells_updated);
+                }
+            }
+        }
+
+        // Replicated metadata update (identical on every rank).
+        sizes[i] += sizes[j];
+        sizes[j] = 0.0;
+        let pos = alive_list.binary_search(&j).expect("j was alive");
+        alive_list.remove(pos);
+        merges.push(Merge { i, j, height: d_ij });
+        phases.update += ep.clock.now() - t2;
+    }
+
+    WorkerOutput {
+        rank: me,
+        merges,
+        virtual_s: ep.clock.now(),
+        phases,
+        msgs_sent: ep.traffic.msgs_sent,
+        bytes_sent: ep.traffic.bytes_sent,
+        cells_scanned,
+        cells_updated,
+        shard_cells,
+    }
+}
+
+/// Compute the cells this rank owns directly from the replicated dataset
+/// (the distributed-build path). Deterministic: cell (i,j) is the same
+/// f32 everywhere because all ranks hold the same quantized coordinates.
+fn build_shard(
+    ep: &mut Endpoint<ProtoMsg>,
+    part: &Partition,
+    me: usize,
+    src: &DistSource,
+) -> Vec<f32> {
+    let n = part.n();
+    let unit = src.cell_cost_units();
+    let shard: Vec<f32> = part
+        .cells_of(me)
+        .map(|idx| {
+            let (i, j) = condensed_pair(n, idx);
+            src.distance(i, j)
+        })
+        .collect();
+    ep.compute(shard.len() * unit);
+    shard
+}
+
+#[cfg(test)]
+mod tests {
+    // The worker is exercised end-to-end through `coordinator::run` —
+    // see coordinator/mod.rs tests and rust/tests/parallel_vs_serial.rs;
+    // the build path additionally via coordinator::tests::distributed_build_*.
+}

@@ -1,0 +1,263 @@
+//! Synthetic protein-conformation ensembles.
+//!
+//! Stand-in for the proprietary conformation sets the paper clusters
+//! (candidate folding structures of the *same* sequence — Zheng et al.
+//! 2011): we grow a self-avoiding-ish random-walk backbone, derive `k`
+//! template conformations by bending it at random hinge residues, then
+//! sample each ensemble member as a template plus per-atom thermal noise
+//! and a random rigid motion (which Kabsch-RMSD must factor out).
+//! Ground-truth template labels ride along for ARI validation.
+
+use super::rmsd::{rot_z, transform, Structure};
+use crate::util::rng::Rng;
+
+/// Ensemble generation parameters.
+#[derive(Clone, Debug)]
+pub struct EnsembleSpec {
+    /// Number of conformations (the paper's n; its runs average 1968).
+    pub n: usize,
+    /// Residues per conformation.
+    pub residues: usize,
+    /// Number of distinct fold templates (ground-truth clusters).
+    pub templates: usize,
+    /// Thermal noise (Å-ish units) around the template.
+    pub noise: f64,
+    /// Hinge-bend magnitude distinguishing templates (radians).
+    pub bend: f64,
+}
+
+impl Default for EnsembleSpec {
+    fn default() -> Self {
+        Self {
+            n: 64,
+            residues: 40,
+            templates: 4,
+            noise: 0.3,
+            bend: 0.9,
+        }
+    }
+}
+
+/// Generated ensemble: conformations + ground-truth template labels.
+#[derive(Clone, Debug)]
+pub struct ConformationEnsemble {
+    pub structures: Vec<Structure>,
+    pub labels: Vec<usize>,
+    pub residues: usize,
+}
+
+impl EnsembleSpec {
+    pub fn generate(&self, seed: u64) -> ConformationEnsemble {
+        assert!(self.templates >= 1 && self.n >= self.templates && self.residues >= 4);
+        let mut rng = Rng::new(seed);
+        let backbone = random_walk_backbone(&mut rng, self.residues);
+        // Templates: bend the shared backbone at a random hinge.
+        let templates: Vec<Structure> = (0..self.templates)
+            .map(|t| {
+                if t == 0 {
+                    backbone.clone()
+                } else {
+                    bend_at_hinge(
+                        &backbone,
+                        rng.range(self.residues / 4, 3 * self.residues / 4),
+                        self.bend * (1.0 + 0.25 * rng.normal()),
+                        &mut rng,
+                    )
+                }
+            })
+            .collect();
+
+        let mut labels: Vec<usize> = (0..self.n).map(|i| i % self.templates).collect();
+        rng.shuffle(&mut labels);
+        let structures = labels
+            .iter()
+            .map(|&l| {
+                // Thermal noise + random rigid motion.
+                let noisy: Structure = templates[l]
+                    .iter()
+                    .map(|a| {
+                        [
+                            a[0] + rng.normal() * self.noise,
+                            a[1] + rng.normal() * self.noise,
+                            a[2] + rng.normal() * self.noise,
+                        ]
+                    })
+                    .collect();
+                let angle = rng.f64() * std::f64::consts::TAU;
+                let t = [rng.normal() * 20.0, rng.normal() * 20.0, rng.normal() * 20.0];
+                transform(&noisy, &rot_z(angle), &t)
+            })
+            .collect();
+        ConformationEnsemble {
+            structures,
+            labels,
+            residues: self.residues,
+        }
+    }
+}
+
+/// Random-walk backbone with ~3.8 Å virtual Cα–Cα bond lengths and mild
+/// directional persistence (so it looks chain-like, not a gas).
+fn random_walk_backbone(rng: &mut Rng, residues: usize) -> Structure {
+    let mut s = Vec::with_capacity(residues);
+    let mut pos = [0.0f64; 3];
+    let mut dir = [1.0f64, 0.0, 0.0];
+    s.push(pos);
+    for _ in 1..residues {
+        // Perturb direction, renormalize, step 3.8.
+        for d in dir.iter_mut() {
+            *d += 0.6 * rng.normal();
+        }
+        let norm = (dir[0] * dir[0] + dir[1] * dir[1] + dir[2] * dir[2]).sqrt();
+        for d in dir.iter_mut() {
+            *d /= norm;
+        }
+        for k in 0..3 {
+            pos[k] += 3.8 * dir[k];
+        }
+        s.push(pos);
+    }
+    s
+}
+
+/// Rotate the chain tail (residues ≥ hinge) around a random axis through
+/// the hinge residue — a crude but effective "domain motion".
+fn bend_at_hinge(s: &Structure, hinge: usize, angle: f64, rng: &mut Rng) -> Structure {
+    let pivot = s[hinge];
+    // Random rotation built from z-rotation conjugated by a random frame:
+    // R = F · Rz(angle) · Fᵀ with F from two normals (Gram-Schmidt-ish).
+    let f = random_frame(rng);
+    let rz = rot_z(angle);
+    let r = mat_mul(&f, &mat_mul(&rz, &mat_transpose(&f)));
+    s.iter()
+        .enumerate()
+        .map(|(i, a)| {
+            if i < hinge {
+                *a
+            } else {
+                let local = [a[0] - pivot[0], a[1] - pivot[1], a[2] - pivot[2]];
+                let rot = [
+                    r[0] * local[0] + r[1] * local[1] + r[2] * local[2],
+                    r[3] * local[0] + r[4] * local[1] + r[5] * local[2],
+                    r[6] * local[0] + r[7] * local[1] + r[8] * local[2],
+                ];
+                [rot[0] + pivot[0], rot[1] + pivot[1], rot[2] + pivot[2]]
+            }
+        })
+        .collect()
+}
+
+fn random_frame(rng: &mut Rng) -> [f64; 9] {
+    let mut u = [rng.normal(), rng.normal(), rng.normal()];
+    normalize(&mut u);
+    let mut v = [rng.normal(), rng.normal(), rng.normal()];
+    let dot = u[0] * v[0] + u[1] * v[1] + u[2] * v[2];
+    for k in 0..3 {
+        v[k] -= dot * u[k];
+    }
+    normalize(&mut v);
+    let w = [
+        u[1] * v[2] - u[2] * v[1],
+        u[2] * v[0] - u[0] * v[2],
+        u[0] * v[1] - u[1] * v[0],
+    ];
+    [u[0], v[0], w[0], u[1], v[1], w[1], u[2], v[2], w[2]]
+}
+
+fn normalize(v: &mut [f64; 3]) {
+    let n = (v[0] * v[0] + v[1] * v[1] + v[2] * v[2]).sqrt().max(1e-12);
+    for k in 0..3 {
+        v[k] /= n;
+    }
+}
+
+fn mat_mul(a: &[f64; 9], b: &[f64; 9]) -> [f64; 9] {
+    let mut c = [0.0; 9];
+    for i in 0..3 {
+        for j in 0..3 {
+            for k in 0..3 {
+                c[i * 3 + j] += a[i * 3 + k] * b[k * 3 + j];
+            }
+        }
+    }
+    c
+}
+
+fn mat_transpose(a: &[f64; 9]) -> [f64; 9] {
+    let mut t = [0.0; 9];
+    for i in 0..3 {
+        for j in 0..3 {
+            t[j * 3 + i] = a[i * 3 + j];
+        }
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rmsd::rmsd;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let spec = EnsembleSpec::default();
+        let a = spec.generate(11);
+        let b = spec.generate(11);
+        assert_eq!(a.structures.len(), spec.n);
+        assert_eq!(a.structures[0].len(), spec.residues);
+        assert_eq!(a.labels, b.labels);
+        assert_eq!(a.structures[0], b.structures[0]);
+    }
+
+    #[test]
+    fn backbone_bond_lengths() {
+        let mut rng = Rng::new(3);
+        let s = random_walk_backbone(&mut rng, 30);
+        for w in s.windows(2) {
+            let d = ((w[1][0] - w[0][0]).powi(2)
+                + (w[1][1] - w[0][1]).powi(2)
+                + (w[1][2] - w[0][2]).powi(2))
+            .sqrt();
+            assert!((d - 3.8).abs() < 1e-9, "bond {d}");
+        }
+    }
+
+    #[test]
+    fn same_template_closer_than_cross_template() {
+        let spec = EnsembleSpec {
+            n: 24,
+            residues: 50,
+            templates: 3,
+            noise: 0.2,
+            bend: 1.2,
+        };
+        let e = spec.generate(5);
+        // Average within- vs across-template RMSD.
+        let (mut win, mut wn, mut acr, mut an) = (0.0, 0, 0.0, 0);
+        for i in 0..e.structures.len() {
+            for j in (i + 1)..e.structures.len() {
+                let r = rmsd(&e.structures[i], &e.structures[j]);
+                if e.labels[i] == e.labels[j] {
+                    win += r;
+                    wn += 1;
+                } else {
+                    acr += r;
+                    an += 1;
+                }
+            }
+        }
+        let (win, acr) = (win / wn as f64, acr / an as f64);
+        assert!(win < acr, "within {win} should be < across {acr}");
+    }
+
+    #[test]
+    fn hinge_preserves_head() {
+        let mut rng = Rng::new(9);
+        let s = random_walk_backbone(&mut rng, 20);
+        let bent = bend_at_hinge(&s, 10, 1.0, &mut rng);
+        for i in 0..10 {
+            assert_eq!(s[i], bent[i]);
+        }
+        assert_ne!(s[15], bent[15]);
+    }
+}

@@ -1,0 +1,93 @@
+//! Distance-matrix builders: the paper's input is always "an n by n
+//! distance matrix" (§1); these construct it from either workload.
+
+use super::rmsd::{rmsd, Structure};
+use crate::matrix::CondensedMatrix;
+
+/// Euclidean distances between points (any dimension).
+pub fn euclidean_matrix(points: &[Vec<f64>]) -> CondensedMatrix {
+    let n = points.len();
+    CondensedMatrix::from_fn(n, |i, j| {
+        points[i]
+            .iter()
+            .zip(&points[j])
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f64>()
+            .sqrt() as f32
+    })
+}
+
+/// Kabsch-RMSD distances between conformations (the paper's §5.1 pipeline).
+pub fn rmsd_matrix(structures: &[Structure]) -> CondensedMatrix {
+    let n = structures.len();
+    CondensedMatrix::from_fn(n, |i, j| rmsd(&structures[i], &structures[j]) as f32)
+}
+
+/// Manhattan (L1) distances — extra metric for the method-comparison example.
+pub fn manhattan_matrix(points: &[Vec<f64>]) -> CondensedMatrix {
+    let n = points.len();
+    CondensedMatrix::from_fn(n, |i, j| {
+        points[i]
+            .iter()
+            .zip(&points[j])
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f64>() as f32
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian::GaussianSpec;
+
+    #[test]
+    fn euclidean_known_values() {
+        let pts = vec![vec![0.0, 0.0], vec![3.0, 4.0], vec![0.0, 1.0]];
+        let m = euclidean_matrix(&pts);
+        assert_eq!(m.get(0, 1), 5.0);
+        assert_eq!(m.get(0, 2), 1.0);
+        assert!((m.get(1, 2) - (9.0f32 + 9.0).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn matrices_satisfy_metric_axioms() {
+        let lp = GaussianSpec { n: 30, ..Default::default() }.generate(2);
+        let m = euclidean_matrix(&lp.points);
+        for i in 0..30 {
+            for j in (i + 1)..30 {
+                let d = m.get(i, j);
+                assert!(d > 0.0);
+                // triangle inequality spot check through item 0
+                if i != 0 && j != 0 {
+                    assert!(d <= m.get(i, 0) + m.get(0, j) + 1e-4);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn manhattan_dominates_euclidean() {
+        let lp = GaussianSpec { n: 20, ..Default::default() }.generate(3);
+        let e = euclidean_matrix(&lp.points);
+        let m = manhattan_matrix(&lp.points);
+        for i in 0..20 {
+            for j in (i + 1)..20 {
+                assert!(m.get(i, j) >= e.get(i, j) - 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn rmsd_matrix_symmetric_zero_free_diag() {
+        use crate::data::conformations::EnsembleSpec;
+        let e = EnsembleSpec { n: 8, residues: 20, ..Default::default() }.generate(4);
+        let m = rmsd_matrix(&e.structures);
+        assert_eq!(m.n(), 8);
+        for i in 0..8 {
+            for j in (i + 1)..8 {
+                assert!(m.get(i, j) > 0.0);
+                assert_eq!(m.get(i, j), m.get(j, i));
+            }
+        }
+    }
+}

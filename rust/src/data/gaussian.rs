@@ -1,0 +1,150 @@
+//! Labelled Gaussian-mixture point clouds — the generic clustering
+//! workload used by the examples, tests and benches (ground-truth labels
+//! let `validate::ari` score every method, paper §2.1's K-means
+//! comparison included).
+
+use crate::util::rng::Rng;
+
+/// Specification of a mixture.
+#[derive(Clone, Debug)]
+pub struct GaussianSpec {
+    /// Total points.
+    pub n: usize,
+    /// Dimensionality.
+    pub d: usize,
+    /// Number of mixture components.
+    pub k: usize,
+    /// Component center spread (centers ~ N(0, center_spread²)).
+    pub center_spread: f64,
+    /// Within-component standard deviation.
+    pub noise: f64,
+}
+
+impl Default for GaussianSpec {
+    fn default() -> Self {
+        Self {
+            n: 200,
+            d: 8,
+            k: 5,
+            center_spread: 10.0,
+            noise: 1.0,
+        }
+    }
+}
+
+/// Points plus their ground-truth component labels.
+#[derive(Clone, Debug)]
+pub struct LabelledPoints {
+    pub points: Vec<Vec<f64>>,
+    pub labels: Vec<usize>,
+    pub d: usize,
+}
+
+impl LabelledPoints {
+    pub fn n(&self) -> usize {
+        self.points.len()
+    }
+}
+
+impl GaussianSpec {
+    /// Generate a deterministic labelled sample.
+    pub fn generate(&self, seed: u64) -> LabelledPoints {
+        assert!(self.k >= 1 && self.n >= self.k && self.d >= 1);
+        let mut rng = Rng::new(seed);
+        let centers: Vec<Vec<f64>> = (0..self.k)
+            .map(|_| {
+                (0..self.d)
+                    .map(|_| rng.normal_ms(0.0, self.center_spread))
+                    .collect()
+            })
+            .collect();
+        // Component sizes: as even as possible so small n still covers all k.
+        let mut labels: Vec<usize> = (0..self.n).map(|i| i % self.k).collect();
+        rng.shuffle(&mut labels);
+        let points = labels
+            .iter()
+            .map(|&l| {
+                centers[l]
+                    .iter()
+                    .map(|&c| rng.normal_ms(c, self.noise))
+                    .collect()
+            })
+            .collect();
+        LabelledPoints {
+            points,
+            labels,
+            d: self.d,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_label_coverage() {
+        let lp = GaussianSpec {
+            n: 100,
+            d: 3,
+            k: 4,
+            ..Default::default()
+        }
+        .generate(1);
+        assert_eq!(lp.n(), 100);
+        assert_eq!(lp.points[0].len(), 3);
+        let mut seen = [false; 4];
+        for &l in &lp.labels {
+            seen[l] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn deterministic() {
+        let s = GaussianSpec::default();
+        let a = s.generate(7);
+        let b = s.generate(7);
+        assert_eq!(a.points, b.points);
+        assert_eq!(a.labels, b.labels);
+        let c = s.generate(8);
+        assert_ne!(a.points, c.points);
+    }
+
+    #[test]
+    fn well_separated_clusters_are_tight() {
+        // With spread >> noise, within-cluster distances should be far
+        // smaller than between-cluster distances.
+        let lp = GaussianSpec {
+            n: 60,
+            d: 4,
+            k: 3,
+            center_spread: 50.0,
+            noise: 0.5,
+        }
+        .generate(3);
+        let dist = |a: &[f64], b: &[f64]| -> f64 {
+            a.iter()
+                .zip(b)
+                .map(|(x, y)| (x - y) * (x - y))
+                .sum::<f64>()
+                .sqrt()
+        };
+        let mut max_within: f64 = 0.0;
+        let mut min_between = f64::INFINITY;
+        for i in 0..lp.n() {
+            for j in (i + 1)..lp.n() {
+                let d = dist(&lp.points[i], &lp.points[j]);
+                if lp.labels[i] == lp.labels[j] {
+                    max_within = max_within.max(d);
+                } else {
+                    min_between = min_between.min(d);
+                }
+            }
+        }
+        assert!(
+            max_within < min_between,
+            "within {max_within} vs between {min_between}"
+        );
+    }
+}

@@ -1,0 +1,176 @@
+//! Dataset / matrix IO: CSV for interchange with the Python side and
+//! plotting, raw little-endian binary for large matrices (the paper's
+//! driver "read data files from disk and sent them to the processors").
+
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::matrix::CondensedMatrix;
+
+/// Write a condensed matrix as CSV: header `n`, then one `i,j,distance`
+/// row per cell (sparse-friendly, human-greppable).
+pub fn write_matrix_csv(path: &Path, m: &CondensedMatrix) -> anyhow::Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    writeln!(w, "# lancew condensed matrix n={}", m.n())?;
+    writeln!(w, "i,j,distance")?;
+    for i in 0..m.n() {
+        for j in (i + 1)..m.n() {
+            writeln!(w, "{i},{j},{}", m.get(i, j))?;
+        }
+    }
+    Ok(())
+}
+
+/// Read the CSV written by [`write_matrix_csv`].
+pub fn read_matrix_csv(path: &Path) -> anyhow::Result<CondensedMatrix> {
+    let r = BufReader::new(std::fs::File::open(path)?);
+    let mut n = None;
+    let mut cells: Vec<(usize, usize, f32)> = Vec::new();
+    for line in r.lines() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() || line == "i,j,distance" {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            if let Some(eq) = rest.find("n=") {
+                n = Some(rest[eq + 2..].trim().parse()?);
+            }
+            continue;
+        }
+        let mut parts = line.split(',');
+        let i: usize = parts.next().ok_or_else(|| anyhow::anyhow!("bad row"))?.trim().parse()?;
+        let j: usize = parts.next().ok_or_else(|| anyhow::anyhow!("bad row"))?.trim().parse()?;
+        let d: f32 = parts.next().ok_or_else(|| anyhow::anyhow!("bad row"))?.trim().parse()?;
+        cells.push((i, j, d));
+    }
+    let n = n.ok_or_else(|| anyhow::anyhow!("missing n= header"))?;
+    let mut m = CondensedMatrix::zeros(n);
+    for (i, j, d) in cells {
+        anyhow::ensure!(i < n && j < n && i != j, "cell ({i},{j}) out of range n={n}");
+        m.set(i, j, d);
+    }
+    Ok(m)
+}
+
+/// Binary format: `u64 n` then the condensed f32 cells little-endian —
+/// for the big generated workloads (n≈2000 → ~8 MB, vs ~50 MB as CSV).
+pub fn write_matrix_bin(path: &Path, m: &CondensedMatrix) -> anyhow::Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    w.write_all(&(m.n() as u64).to_le_bytes())?;
+    for &c in m.cells() {
+        w.write_all(&c.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read the binary format of [`write_matrix_bin`].
+pub fn read_matrix_bin(path: &Path) -> anyhow::Result<CondensedMatrix> {
+    let mut r = BufReader::new(std::fs::File::open(path)?);
+    let mut nbuf = [0u8; 8];
+    r.read_exact(&mut nbuf)?;
+    let n = u64::from_le_bytes(nbuf) as usize;
+    anyhow::ensure!(n >= 2 && n < 1 << 24, "implausible n={n}");
+    let len = crate::matrix::condensed_len(n);
+    let mut cells = vec![0f32; len];
+    let mut buf = [0u8; 4];
+    for c in cells.iter_mut() {
+        r.read_exact(&mut buf)?;
+        *c = f32::from_le_bytes(buf);
+    }
+    Ok(CondensedMatrix::from_cells(n, cells))
+}
+
+/// Write labelled points as CSV (`x0,x1,...,label`).
+pub fn write_points_csv(path: &Path, points: &[Vec<f64>], labels: Option<&[usize]>) -> anyhow::Result<()> {
+    let mut w = BufWriter::new(std::fs::File::create(path)?);
+    for (idx, p) in points.iter().enumerate() {
+        let coords: Vec<String> = p.iter().map(|v| format!("{v}")).collect();
+        match labels {
+            Some(ls) => writeln!(w, "{},{}", coords.join(","), ls[idx])?,
+            None => writeln!(w, "{}", coords.join(","))?,
+        }
+    }
+    Ok(())
+}
+
+/// Simple CSV report writer for bench outputs (EXPERIMENTS.md artefacts).
+pub struct CsvReport {
+    w: BufWriter<std::fs::File>,
+}
+
+impl CsvReport {
+    pub fn create(path: &Path, header: &str) -> anyhow::Result<Self> {
+        let mut w = BufWriter::new(std::fs::File::create(path)?);
+        writeln!(w, "{header}")?;
+        Ok(Self { w })
+    }
+
+    pub fn row(&mut self, fields: &[String]) -> anyhow::Result<()> {
+        writeln!(self.w, "{}", fields.join(","))?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("lancew_io_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn random_matrix(n: usize, seed: u64) -> CondensedMatrix {
+        let mut rng = Rng::new(seed);
+        CondensedMatrix::from_fn(n, |_, _| rng.f32() * 100.0)
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let m = random_matrix(12, 1);
+        let p = tmp("m.csv");
+        write_matrix_csv(&p, &m).unwrap();
+        let m2 = read_matrix_csv(&p).unwrap();
+        assert_eq!(m.n(), m2.n());
+        for i in 0..12 {
+            for j in (i + 1)..12 {
+                assert!((m.get(i, j) - m2.get(i, j)).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn bin_roundtrip_exact() {
+        let m = random_matrix(37, 2);
+        let p = tmp("m.bin");
+        write_matrix_bin(&p, &m).unwrap();
+        let m2 = read_matrix_bin(&p).unwrap();
+        assert_eq!(m.cells(), m2.cells());
+    }
+
+    #[test]
+    fn csv_missing_header_rejected() {
+        let p = tmp("bad.csv");
+        std::fs::write(&p, "i,j,distance\n0,1,2.0\n").unwrap();
+        assert!(read_matrix_csv(&p).is_err());
+    }
+
+    #[test]
+    fn bin_rejects_garbage() {
+        let p = tmp("garbage.bin");
+        std::fs::write(&p, b"\xff\xff\xff\xff\xff\xff\xff\xff").unwrap();
+        assert!(read_matrix_bin(&p).is_err());
+    }
+
+    #[test]
+    fn points_csv_writes() {
+        let p = tmp("pts.csv");
+        write_points_csv(&p, &[vec![1.0, 2.0], vec![3.0, 4.0]], Some(&[0, 1])).unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        assert!(text.lines().next().unwrap().ends_with(",0"));
+    }
+}

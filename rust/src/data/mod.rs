@@ -1,0 +1,25 @@
+//! Workload generation + IO substrate.
+//!
+//! The paper's motivating workload is clustering candidate protein
+//! structures by RMSD (§1, §3.2 — Zheng et al. 2011); its benchmark runs
+//! average n≈1968 items. We have no proprietary conformation data, so this
+//! module builds the closest synthetic equivalents (DESIGN.md §2):
+//!
+//! * [`gaussian`] — labelled Gaussian-mixture point clouds (ground truth
+//!   for ARI validation),
+//! * [`conformations`] — synthetic protein conformation ensembles,
+//! * [`rmsd`] — Kabsch-superposed RMSD between conformations (own
+//!   small-matrix Jacobi eigensolver; no LAPACK in the vendor set),
+//! * [`distance`] — distance-matrix builders over either workload,
+//! * [`io`] — CSV / binary matrix + point-set round-trip.
+
+pub mod conformations;
+pub mod distance;
+pub mod gaussian;
+pub mod io;
+pub mod rmsd;
+pub mod shapes;
+
+pub use conformations::{ConformationEnsemble, EnsembleSpec};
+pub use distance::{euclidean_matrix, rmsd_matrix};
+pub use gaussian::{GaussianSpec, LabelledPoints};

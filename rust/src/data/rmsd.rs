@@ -1,0 +1,259 @@
+//! Kabsch-superposed RMSD between 3-D structures.
+//!
+//! The paper's pipeline (§5.1: "Parallelized RMSD and distributed
+//! hierarchical clustering...") computes an RMSD distance matrix over
+//! protein conformations before clustering. RMSD must be minimized over
+//! rigid-body motion: we center both structures and find the optimal
+//! rotation with Horn's quaternion method — build the 4×4 key matrix K
+//! from the covariance of the paired coordinates; its largest eigenvalue
+//! λ_max gives  RMSD² = (‖P‖² + ‖Q‖² − 2λ_max)/N.
+//!
+//! The eigenvalue comes from a cyclic Jacobi eigensolver written here
+//! (no LAPACK in the offline vendor set) — also reused by tests.
+
+/// A rigid 3-D structure: N atoms × xyz.
+pub type Structure = Vec<[f64; 3]>;
+
+/// Center a structure at its centroid (returns the centered copy).
+pub fn centered(s: &Structure) -> Structure {
+    let n = s.len() as f64;
+    let mut c = [0.0f64; 3];
+    for a in s {
+        for k in 0..3 {
+            c[k] += a[k] / n;
+        }
+    }
+    s.iter()
+        .map(|a| [a[0] - c[0], a[1] - c[1], a[2] - c[2]])
+        .collect()
+}
+
+/// Cyclic Jacobi eigensolver for a small symmetric matrix (row-major n×n).
+/// Returns (eigenvalues, eigenvectors-as-columns). Good to ~1e-12 for the
+/// 4×4 / 3×3 matrices used here.
+pub fn jacobi_eigen(a: &[f64], n: usize) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(a.len(), n * n);
+    let mut m = a.to_vec();
+    let mut v = vec![0.0; n * n];
+    for i in 0..n {
+        v[i * n + i] = 1.0;
+    }
+    for _sweep in 0..100 {
+        // Off-diagonal norm.
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                off += m[i * n + j] * m[i * n + j];
+            }
+        }
+        if off < 1e-24 {
+            break;
+        }
+        for p in 0..n {
+            for q in (p + 1)..n {
+                let apq = m[p * n + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[p * n + p];
+                let aqq = m[q * n + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Rotate rows/cols p,q of m.
+                for k in 0..n {
+                    let mkp = m[k * n + p];
+                    let mkq = m[k * n + q];
+                    m[k * n + p] = c * mkp - s * mkq;
+                    m[k * n + q] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[p * n + k];
+                    let mqk = m[q * n + k];
+                    m[p * n + k] = c * mpk - s * mqk;
+                    m[q * n + k] = s * mpk + c * mqk;
+                }
+                // Accumulate eigenvectors.
+                for k in 0..n {
+                    let vkp = v[k * n + p];
+                    let vkq = v[k * n + q];
+                    v[k * n + p] = c * vkp - s * vkq;
+                    v[k * n + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let eig = (0..n).map(|i| m[i * n + i]).collect();
+    (eig, v)
+}
+
+/// Horn's 4×4 quaternion key matrix from centered structures p, q.
+fn horn_key_matrix(p: &Structure, q: &Structure) -> [f64; 16] {
+    // Covariance S = Σ p_a q_aᵀ
+    let mut s = [[0.0f64; 3]; 3];
+    for (a, b) in p.iter().zip(q) {
+        for i in 0..3 {
+            for j in 0..3 {
+                s[i][j] += a[i] * b[j];
+            }
+        }
+    }
+    let (sxx, sxy, sxz) = (s[0][0], s[0][1], s[0][2]);
+    let (syx, syy, syz) = (s[1][0], s[1][1], s[1][2]);
+    let (szx, szy, szz) = (s[2][0], s[2][1], s[2][2]);
+    [
+        sxx + syy + szz, syz - szy,       szx - sxz,       sxy - syx,
+        syz - szy,       sxx - syy - szz, sxy + syx,       szx + sxz,
+        szx - sxz,       sxy + syx,       -sxx + syy - szz, syz + szy,
+        sxy - syx,       szx + sxz,       syz + szy,       -sxx - syy + szz,
+    ]
+}
+
+/// Minimum RMSD between two equal-length structures over rigid motions.
+pub fn rmsd(p: &Structure, q: &Structure) -> f64 {
+    assert_eq!(p.len(), q.len(), "structures must pair atoms 1:1");
+    assert!(!p.is_empty());
+    let pc = centered(p);
+    let qc = centered(q);
+    let key = horn_key_matrix(&pc, &qc);
+    let (eig, _) = jacobi_eigen(&key, 4);
+    let lambda_max = eig.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let gp: f64 = pc.iter().flat_map(|a| a.iter()).map(|x| x * x).sum();
+    let gq: f64 = qc.iter().flat_map(|a| a.iter()).map(|x| x * x).sum();
+    let msd = ((gp + gq - 2.0 * lambda_max) / p.len() as f64).max(0.0);
+    msd.sqrt()
+}
+
+/// Plain (no superposition) coordinate RMSD — the upper bound used by
+/// tests; also what you get if structures are pre-aligned.
+pub fn rmsd_no_fit(p: &Structure, q: &Structure) -> f64 {
+    assert_eq!(p.len(), q.len());
+    let ss: f64 = p
+        .iter()
+        .zip(q)
+        .map(|(a, b)| {
+            (a[0] - b[0]).powi(2) + (a[1] - b[1]).powi(2) + (a[2] - b[2]).powi(2)
+        })
+        .sum();
+    (ss / p.len() as f64).sqrt()
+}
+
+/// Apply a rotation matrix (row-major 3×3) + translation to a structure.
+pub fn transform(s: &Structure, rot: &[f64; 9], t: &[f64; 3]) -> Structure {
+    s.iter()
+        .map(|a| {
+            [
+                rot[0] * a[0] + rot[1] * a[1] + rot[2] * a[2] + t[0],
+                rot[3] * a[0] + rot[4] * a[1] + rot[5] * a[2] + t[1],
+                rot[6] * a[0] + rot[7] * a[1] + rot[8] * a[2] + t[2],
+            ]
+        })
+        .collect()
+}
+
+/// Rotation matrix about z by angle (radians) — test helper.
+pub fn rot_z(angle: f64) -> [f64; 9] {
+    let (s, c) = angle.sin_cos();
+    [c, -s, 0.0, s, c, 0.0, 0.0, 0.0, 1.0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_structure(rng: &mut Rng, n: usize) -> Structure {
+        (0..n)
+            .map(|_| [rng.normal() * 5.0, rng.normal() * 5.0, rng.normal() * 5.0])
+            .collect()
+    }
+
+    #[test]
+    fn jacobi_diagonal_matrix() {
+        let a = [3.0, 0.0, 0.0, 0.0, -1.0, 0.0, 0.0, 0.0, 7.0];
+        let (mut eig, _) = jacobi_eigen(&a, 3);
+        eig.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((eig[0] + 1.0).abs() < 1e-10);
+        assert!((eig[1] - 3.0).abs() < 1e-10);
+        assert!((eig[2] - 7.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn jacobi_known_2x2() {
+        // [[2,1],[1,2]] → eigenvalues 1, 3
+        let (mut eig, _) = jacobi_eigen(&[2.0, 1.0, 1.0, 2.0], 2);
+        eig.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert!((eig[0] - 1.0).abs() < 1e-12 && (eig[1] - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn jacobi_eigenvector_residual() {
+        let mut rng = Rng::new(5);
+        // random symmetric 4x4
+        let mut a = [0.0; 16];
+        for i in 0..4 {
+            for j in i..4 {
+                let v = rng.normal();
+                a[i * 4 + j] = v;
+                a[j * 4 + i] = v;
+            }
+        }
+        let (eig, vecs) = jacobi_eigen(&a, 4);
+        // ‖A v_k − λ_k v_k‖ ≈ 0 for every k
+        for k in 0..4 {
+            for i in 0..4 {
+                let av: f64 = (0..4).map(|j| a[i * 4 + j] * vecs[j * 4 + k]).sum();
+                assert!((av - eig[k] * vecs[i * 4 + k]).abs() < 1e-8);
+            }
+        }
+    }
+
+    #[test]
+    fn rmsd_identity_zero() {
+        let mut rng = Rng::new(1);
+        let s = random_structure(&mut rng, 30);
+        assert!(rmsd(&s, &s) < 1e-9);
+    }
+
+    #[test]
+    fn rmsd_invariant_to_rigid_motion() {
+        let mut rng = Rng::new(2);
+        let s = random_structure(&mut rng, 50);
+        let moved = transform(&s, &rot_z(1.1), &[4.0, -2.0, 9.0]);
+        assert!(rmsd(&s, &moved) < 1e-9, "rmsd {}", rmsd(&s, &moved));
+        // Without superposition it is NOT ~0.
+        assert!(rmsd_no_fit(&s, &moved) > 1.0);
+    }
+
+    #[test]
+    fn rmsd_detects_real_deformation() {
+        let mut rng = Rng::new(3);
+        let s = random_structure(&mut rng, 40);
+        let mut bent = s.clone();
+        for a in bent.iter_mut().take(20) {
+            a[0] += 3.0;
+        }
+        let r = rmsd(&s, &bent);
+        assert!(r > 0.5, "rmsd {r}");
+        assert!(r <= rmsd_no_fit(&s, &bent) + 1e-9);
+    }
+
+    #[test]
+    fn rmsd_symmetric() {
+        let mut rng = Rng::new(4);
+        let a = random_structure(&mut rng, 25);
+        let b = random_structure(&mut rng, 25);
+        assert!((rmsd(&a, &b) - rmsd(&b, &a)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rmsd_never_exceeds_no_fit() {
+        let mut rng = Rng::new(6);
+        for _ in 0..10 {
+            let a = random_structure(&mut rng, 15);
+            let b = random_structure(&mut rng, 15);
+            assert!(rmsd(&a, &b) <= rmsd_no_fit(&a, &b) + 1e-9);
+        }
+    }
+}

@@ -1,0 +1,99 @@
+//! Non-convex shape workloads: two moons and concentric rings.
+//!
+//! The paper's §2.1 frames single linkage's "long" clusters as a drawback
+//! for round, compact data. These classic benchmarks are the converse
+//! regime: the true clusters ARE elongated/connected, so single linkage
+//! (chaining) wins and complete linkage (which bisects by diameter)
+//! loses — exercised by `method_comparison` and the scheme tests to show
+//! both directions of the trade-off.
+
+use super::gaussian::LabelledPoints;
+use crate::util::rng::Rng;
+
+/// Two interleaved half-moons in 2-D with Gaussian jitter.
+pub fn two_moons(n: usize, noise: f64, seed: u64) -> LabelledPoints {
+    assert!(n >= 2);
+    let mut rng = Rng::new(seed);
+    let mut points = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let label = i % 2;
+        let t = rng.f64() * std::f64::consts::PI;
+        let (x, y) = if label == 0 {
+            (t.cos(), t.sin())
+        } else {
+            (1.0 - t.cos(), 0.5 - t.sin())
+        };
+        points.push(vec![
+            x + rng.normal() * noise,
+            y + rng.normal() * noise,
+        ]);
+        labels.push(label);
+    }
+    LabelledPoints { points, labels, d: 2 }
+}
+
+/// Two concentric rings (radius 1 and `outer`).
+pub fn concentric_rings(n: usize, outer: f64, noise: f64, seed: u64) -> LabelledPoints {
+    assert!(n >= 2 && outer > 1.0);
+    let mut rng = Rng::new(seed);
+    let mut points = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        let label = i % 2;
+        let r = if label == 0 { 1.0 } else { outer };
+        let theta = rng.f64() * std::f64::consts::TAU;
+        points.push(vec![
+            r * theta.cos() + rng.normal() * noise,
+            r * theta.sin() + rng.normal() * noise,
+        ]);
+        labels.push(label);
+    }
+    LabelledPoints { points, labels, d: 2 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::serial_lw::serial_lw_cluster;
+    use crate::data::euclidean_matrix;
+    use crate::linkage::Scheme;
+    use crate::validate::ari;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let a = two_moons(100, 0.05, 1);
+        assert_eq!(a.n(), 100);
+        assert_eq!(a.d, 2);
+        let b = two_moons(100, 0.05, 1);
+        assert_eq!(a.points, b.points);
+        let r = concentric_rings(80, 3.0, 0.05, 2);
+        assert_eq!(r.n(), 80);
+    }
+
+    #[test]
+    fn rings_radii_are_separated() {
+        let lp = concentric_rings(200, 3.0, 0.02, 3);
+        for (p, &l) in lp.points.iter().zip(&lp.labels) {
+            let r = (p[0] * p[0] + p[1] * p[1]).sqrt();
+            if l == 0 {
+                assert!((r - 1.0).abs() < 0.3, "inner ring r={r}");
+            } else {
+                assert!((r - 3.0).abs() < 0.3, "outer ring r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_linkage_wins_on_rings_complete_loses() {
+        // The converse of the paper's §2.1 bridge example: on connected
+        // elongated structures, chaining is the RIGHT bias.
+        let lp = concentric_rings(160, 3.0, 0.03, 4);
+        let m = euclidean_matrix(&lp.points);
+        let single = serial_lw_cluster(Scheme::Single, &m).cut(2);
+        let complete = serial_lw_cluster(Scheme::Complete, &m).cut(2);
+        let (ari_s, ari_c) = (ari(&single, &lp.labels), ari(&complete, &lp.labels));
+        assert!(ari_s > 0.99, "single on rings: {ari_s}");
+        assert!(ari_c < 0.5, "complete should fail on rings: {ari_c}");
+    }
+}

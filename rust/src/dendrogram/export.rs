@@ -1,0 +1,215 @@
+//! Dendrogram interchange & display: SciPy linkage-matrix export (for
+//! cross-checking against the Python ecosystem) and an ASCII rendering of
+//! the paper's "upside-down tree" for terminal inspection.
+
+use super::{Dendrogram, UnionFind};
+
+/// SciPy-style linkage matrix: one row `[a, b, height, size]` per merge,
+/// where leaves are 0..n-1 and the cluster created by merge t gets id
+/// n + t. (`scipy.cluster.hierarchy.linkage` convention — directly
+/// loadable for dendrogram plotting.)
+pub fn to_linkage_matrix(d: &Dendrogram) -> Vec<[f64; 4]> {
+    let n = d.n();
+    // Track, for each live slot, the scipy id and member count of the
+    // cluster currently occupying it.
+    let mut slot_id: Vec<usize> = (0..n).collect();
+    let mut slot_size: Vec<usize> = vec![1; n];
+    d.merges()
+        .iter()
+        .enumerate()
+        .map(|(t, m)| {
+            let row = [
+                slot_id[m.i] as f64,
+                slot_id[m.j] as f64,
+                m.height as f64,
+                (slot_size[m.i] + slot_size[m.j]) as f64,
+            ];
+            slot_id[m.i] = n + t;
+            slot_size[m.i] += slot_size[m.j];
+            row
+        })
+        .collect()
+}
+
+/// Compact ASCII dendrogram (leaves reordered for crossing-free drawing).
+///
+/// ```text
+/// x0 ─┬───────┐
+/// x1 ─┘       ├──
+/// x2 ───┬─────┘
+/// x3 ───┘
+/// ```
+///
+/// Height resolution is `width` characters across [0, max_height]; shows
+/// at most `max_leaves` leaves (summarizing otherwise) so huge trees stay
+/// printable.
+pub fn ascii_dendrogram(d: &Dendrogram, width: usize, max_leaves: usize) -> String {
+    let n = d.n();
+    if n > max_leaves {
+        return format!(
+            "(dendrogram with {n} leaves — over the {max_leaves}-leaf display limit; \
+             top heights: {:?})",
+            &d.heights()[n.saturating_sub(6)..]
+        );
+    }
+    let max_h = d.heights().iter().cloned().fold(0.0f32, f32::max).max(1e-9);
+    let col = |h: f32| ((h / max_h) * (width as f32 - 1.0)).round() as usize + 1;
+
+    // Leaf order: depth-first through the merge tree so subtrees are
+    // contiguous. Build children lists per merge.
+    let order = leaf_order(d);
+    let mut row_of = vec![0usize; n];
+    for (row, &leaf) in order.iter().enumerate() {
+        row_of[leaf] = row;
+    }
+
+    // Canvas: one row per leaf.
+    let label_w = order.iter().map(|l| format!("x{l}").len()).max().unwrap_or(2);
+    let mut canvas: Vec<Vec<char>> = (0..n)
+        .map(|r| {
+            let mut line: Vec<char> = format!("{:>label_w$} ", format!("x{}", order[r])).chars().collect();
+            line.resize(label_w + width + 4, ' ');
+            line
+        })
+        .collect();
+
+    // Each live slot has a "current" (row, column) where its line ends.
+    let mut at: Vec<Option<(usize, usize)>> = (0..n).map(|i| Some((row_of[i], label_w + 1))).collect();
+    for m in d.merges() {
+        let (ri, ci) = at[m.i].take().unwrap();
+        let (rj, cj) = at[m.j].take().unwrap();
+        let c = (label_w + 1 + col(m.height)).max(ci.max(cj) + 1);
+        // Horizontal runs.
+        for x in ci..c {
+            canvas[ri][x] = '─';
+        }
+        for x in cj..c {
+            canvas[rj][x] = '─';
+        }
+        // Vertical join.
+        let (top, bot) = (ri.min(rj), ri.max(rj));
+        canvas[top][c] = '┐';
+        canvas[bot][c] = '┘';
+        for r in (top + 1)..bot {
+            canvas[r][c] = if canvas[r][c] == ' ' { '│' } else { canvas[r][c] };
+        }
+        // Continuation leaves from the midpoint of the join.
+        let mid = ri; // keep the surviving slot's row — matches slot reuse
+        canvas[mid][c] = if ri < rj { '┬' } else { '┴' };
+        at[m.i] = Some((mid, c + 1));
+    }
+    canvas
+        .into_iter()
+        .map(|l| l.into_iter().collect::<String>().trim_end().to_string())
+        .collect::<Vec<_>>()
+        .join("\n")
+}
+
+/// Depth-first leaf order that keeps each merge's subtrees contiguous.
+fn leaf_order(d: &Dendrogram) -> Vec<usize> {
+    let n = d.n();
+    // children[slot] = list of subtrees merged into this slot, in order.
+    #[derive(Clone)]
+    enum Node {
+        Leaf(usize),
+        Join(Box<Node>, Box<Node>),
+    }
+    let mut trees: Vec<Option<Node>> = (0..n).map(|i| Some(Node::Leaf(i))).collect();
+    for m in d.merges() {
+        let a = trees[m.i].take().unwrap();
+        let b = trees[m.j].take().unwrap();
+        trees[m.i] = Some(Node::Join(Box::new(a), Box::new(b)));
+    }
+    let root = trees.into_iter().flatten().next().unwrap();
+    let mut out = Vec::with_capacity(n);
+    let mut stack = vec![root];
+    while let Some(node) = stack.pop() {
+        match node {
+            Node::Leaf(i) => out.push(i),
+            Node::Join(a, b) => {
+                stack.push(*b);
+                stack.push(*a);
+            }
+        }
+    }
+    out
+}
+
+/// Validate a linkage matrix round-trips to the same partition structure
+/// (used in tests; exported because the CLI `cluster --linkage out.csv`
+/// writes through it).
+pub fn linkage_matrix_cut(z: &[[f64; 4]], n: usize, k: usize) -> Vec<usize> {
+    let mut uf = UnionFind::new(n + z.len());
+    // Map scipy ids through union-find: cluster n+t unions its two children.
+    for (t, row) in z.iter().take(n - k).enumerate() {
+        uf.union(row[0] as usize, n + t);
+        uf.union(row[1] as usize, n + t);
+    }
+    let raw: Vec<usize> = (0..n).map(|i| uf.find(i)).collect();
+    super::normalize_labels(&raw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dendrogram::Merge;
+
+    fn sample() -> Dendrogram {
+        Dendrogram::new(
+            4,
+            vec![
+                Merge { i: 0, j: 1, height: 1.0 },
+                Merge { i: 2, j: 3, height: 2.0 },
+                Merge { i: 0, j: 2, height: 5.0 },
+            ],
+        )
+    }
+
+    #[test]
+    fn linkage_matrix_scipy_convention() {
+        let z = to_linkage_matrix(&sample());
+        assert_eq!(z.len(), 3);
+        assert_eq!(z[0], [0.0, 1.0, 1.0, 2.0]);
+        assert_eq!(z[1], [2.0, 3.0, 2.0, 2.0]);
+        // Merge 3 joins cluster ids 4 (from t=0) and 5 (from t=1), size 4.
+        assert_eq!(z[2], [4.0, 5.0, 5.0, 4.0]);
+    }
+
+    #[test]
+    fn linkage_matrix_cut_matches_dendrogram_cut() {
+        let d = sample();
+        let z = to_linkage_matrix(&d);
+        for k in 1..=4 {
+            assert_eq!(linkage_matrix_cut(&z, 4, k), d.cut(k), "k={k}");
+        }
+    }
+
+    #[test]
+    fn ascii_contains_all_leaves_and_joins() {
+        let s = ascii_dendrogram(&sample(), 30, 64);
+        for leaf in ["x0", "x1", "x2", "x3"] {
+            assert!(s.contains(leaf), "{s}");
+        }
+        // Joins render as ┬/┴ on the surviving row and ┘/┐ on the other.
+        assert!((s.contains('┬') || s.contains('┴')) && (s.contains('┘') || s.contains('┐')), "{s}");
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    fn ascii_big_tree_summarizes() {
+        let n = 100;
+        let merges = (1..n).map(|t| Merge { i: 0, j: t, height: t as f32 }).collect();
+        let d = Dendrogram::new(n, merges);
+        let s = ascii_dendrogram(&d, 40, 32);
+        assert!(s.contains("100 leaves"));
+    }
+
+    #[test]
+    fn leaf_order_contiguous_subtrees() {
+        let order = leaf_order(&sample());
+        // {0,1} and {2,3} must each be adjacent.
+        let pos = |x: usize| order.iter().position(|&l| l == x).unwrap();
+        assert_eq!(pos(0).abs_diff(pos(1)), 1);
+        assert_eq!(pos(2).abs_diff(pos(3)), 1);
+    }
+}

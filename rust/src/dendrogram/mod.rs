@@ -1,0 +1,276 @@
+//! Dendrogram: the "upside-down tree" the paper's §2.1 describes — one
+//! snapshot per iteration, n levels from n singletons to one cluster.
+//!
+//! Merges use the paper's *slot-reuse* convention (§5.3 step 6): merging
+//! slots (i, j) with i < j leaves the combined cluster in slot `i` and
+//! retires slot `j`. A merge list in this convention, plus the merge
+//! heights, fully determines the tree.
+
+pub mod export;
+
+use crate::matrix::CondensedMatrix;
+
+/// One agglomeration step.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Merge {
+    /// Surviving slot (i < j).
+    pub i: usize,
+    /// Retired slot.
+    pub j: usize,
+    /// Linkage distance at which the merge happened.
+    pub height: f32,
+}
+
+/// Full clustering result for n items: exactly n−1 merges.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dendrogram {
+    n: usize,
+    merges: Vec<Merge>,
+}
+
+impl Dendrogram {
+    pub fn new(n: usize, merges: Vec<Merge>) -> Self {
+        assert_eq!(merges.len(), n - 1, "need exactly n-1 merges");
+        let mut retired = vec![false; n];
+        for m in &merges {
+            assert!(m.i < m.j && m.j < n, "bad slot pair ({}, {})", m.i, m.j);
+            assert!(!retired[m.i] && !retired[m.j], "slot reused after retire");
+            retired[m.j] = true;
+        }
+        Self { n, merges }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn merges(&self) -> &[Merge] {
+        &self.merges
+    }
+
+    pub fn heights(&self) -> Vec<f32> {
+        self.merges.iter().map(|m| m.height).collect()
+    }
+
+    /// Whether heights are non-decreasing (no inversions). Single, complete,
+    /// average and Ward guarantee this; centroid may invert.
+    pub fn is_monotone(&self) -> bool {
+        self.merges.windows(2).all(|w| w[0].height <= w[1].height + 1e-6)
+    }
+
+    /// Labels after cutting the tree at `k` clusters (the paper's "look k
+    /// levels down the tree"). Labels are normalized to 0..k-1 in order of
+    /// first appearance by item index.
+    pub fn cut(&self, k: usize) -> Vec<usize> {
+        assert!(k >= 1 && k <= self.n);
+        let mut uf = UnionFind::new(self.n);
+        for m in &self.merges[..self.n - k] {
+            uf.union(m.i, m.j);
+        }
+        normalize_labels(&(0..self.n).map(|i| uf.find(i)).collect::<Vec<_>>())
+    }
+
+    /// Labels after cutting at linkage height `h` (clusters joined at
+    /// height ≤ h stay together).
+    pub fn cut_at_height(&self, h: f32) -> Vec<usize> {
+        let mut uf = UnionFind::new(self.n);
+        for m in &self.merges {
+            if m.height <= h {
+                uf.union(m.i, m.j);
+            }
+        }
+        normalize_labels(&(0..self.n).map(|i| uf.find(i)).collect::<Vec<_>>())
+    }
+
+    /// Cophenetic distance matrix: coph(a,b) = height of the merge that
+    /// first put a and b in the same cluster. O(n²) total via member-list
+    /// replay.
+    pub fn cophenetic(&self) -> CondensedMatrix {
+        let n = self.n;
+        let mut coph = CondensedMatrix::zeros(n);
+        let mut members: Vec<Vec<usize>> = (0..n).map(|i| vec![i]).collect();
+        for m in &self.merges {
+            let (a_list, b_list) = (std::mem::take(&mut members[m.j]), &members[m.i]);
+            for &a in &a_list {
+                for &b in b_list.iter() {
+                    coph.set(a, b, m.height);
+                }
+            }
+            members[m.i].extend(a_list);
+        }
+        coph
+    }
+
+    /// Newick serialization (heights as branch lengths from merge heights).
+    pub fn to_newick(&self, labels: Option<&[String]>) -> String {
+        // node text per live slot; heights track each subtree's merge height.
+        let mut text: Vec<String> = (0..self.n)
+            .map(|i| match labels {
+                Some(ls) => ls[i].clone(),
+                None => format!("x{i}"),
+            })
+            .collect();
+        let mut height: Vec<f32> = vec![0.0; self.n];
+        for m in &self.merges {
+            let bl_i = (m.height - height[m.i]).max(0.0);
+            let bl_j = (m.height - height[m.j]).max(0.0);
+            text[m.i] = format!("({}:{:.6},{}:{:.6})", text[m.i], bl_i, text[m.j], bl_j);
+            height[m.i] = m.height;
+        }
+        format!("{};", text[self.merges.last().map(|m| m.i).unwrap_or(0)])
+    }
+
+    /// Member lists of every cluster at the k-cluster level.
+    pub fn clusters_at(&self, k: usize) -> Vec<Vec<usize>> {
+        let labels = self.cut(k);
+        let nclusters = labels.iter().copied().max().unwrap_or(0) + 1;
+        let mut out = vec![Vec::new(); nclusters];
+        for (item, &l) in labels.iter().enumerate() {
+            out[l].push(item);
+        }
+        out
+    }
+}
+
+pub(crate) fn normalize_labels(raw: &[usize]) -> Vec<usize> {
+    let mut map = std::collections::HashMap::new();
+    let mut next = 0usize;
+    raw.iter()
+        .map(|&r| {
+            *map.entry(r).or_insert_with(|| {
+                let v = next;
+                next += 1;
+                v
+            })
+        })
+        .collect()
+}
+
+/// Path-compressed union-find.
+pub struct UnionFind {
+    parent: Vec<usize>,
+}
+
+impl UnionFind {
+    pub fn new(n: usize) -> Self {
+        Self {
+            parent: (0..n).collect(),
+        }
+    }
+
+    pub fn find(&mut self, mut x: usize) -> usize {
+        while self.parent[x] != x {
+            self.parent[x] = self.parent[self.parent[x]];
+            x = self.parent[x];
+        }
+        x
+    }
+
+    /// Union keeping the *lower* root (mirrors slot-reuse: i survives).
+    pub fn union(&mut self, a: usize, b: usize) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra != rb {
+            let (lo, hi) = if ra < rb { (ra, rb) } else { (rb, ra) };
+            self.parent[hi] = lo;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 4 items: (0,1)@1.0 → (2,3)@2.0 → (0,2)@5.0
+    fn sample() -> Dendrogram {
+        Dendrogram::new(
+            4,
+            vec![
+                Merge { i: 0, j: 1, height: 1.0 },
+                Merge { i: 2, j: 3, height: 2.0 },
+                Merge { i: 0, j: 2, height: 5.0 },
+            ],
+        )
+    }
+
+    #[test]
+    fn cut_levels() {
+        let d = sample();
+        assert_eq!(d.cut(4), vec![0, 1, 2, 3]);
+        assert_eq!(d.cut(3), vec![0, 0, 1, 2]);
+        assert_eq!(d.cut(2), vec![0, 0, 1, 1]);
+        assert_eq!(d.cut(1), vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn cut_at_height_matches_levels() {
+        let d = sample();
+        assert_eq!(d.cut_at_height(0.5), d.cut(4));
+        assert_eq!(d.cut_at_height(1.5), d.cut(3));
+        assert_eq!(d.cut_at_height(2.5), d.cut(2));
+        assert_eq!(d.cut_at_height(10.0), d.cut(1));
+    }
+
+    #[test]
+    fn cophenetic_heights() {
+        let d = sample();
+        let c = d.cophenetic();
+        assert_eq!(c.get(0, 1), 1.0);
+        assert_eq!(c.get(2, 3), 2.0);
+        assert_eq!(c.get(0, 2), 5.0);
+        assert_eq!(c.get(1, 3), 5.0);
+    }
+
+    #[test]
+    fn monotone_detection() {
+        assert!(sample().is_monotone());
+        let inv = Dendrogram::new(
+            3,
+            vec![
+                Merge { i: 0, j: 1, height: 2.0 },
+                Merge { i: 0, j: 2, height: 1.0 },
+            ],
+        );
+        assert!(!inv.is_monotone());
+    }
+
+    #[test]
+    fn newick_shape() {
+        let d = sample();
+        let s = d.to_newick(None);
+        assert!(s.starts_with('(') && s.ends_with(';'));
+        for l in ["x0", "x1", "x2", "x3"] {
+            assert!(s.contains(l), "{s}");
+        }
+    }
+
+    #[test]
+    fn clusters_at_partitions_items() {
+        let d = sample();
+        let cs = d.clusters_at(2);
+        assert_eq!(cs.len(), 2);
+        let mut all: Vec<usize> = cs.concat();
+        all.sort_unstable();
+        assert_eq!(all, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "slot reused")]
+    fn retired_slot_rejected() {
+        Dendrogram::new(
+            3,
+            vec![
+                Merge { i: 1, j: 2, height: 1.0 },
+                Merge { i: 0, j: 2, height: 2.0 }, // 2 already retired
+            ],
+        );
+    }
+
+    #[test]
+    fn unionfind_basics() {
+        let mut uf = UnionFind::new(5);
+        uf.union(0, 4);
+        uf.union(4, 2);
+        assert_eq!(uf.find(2), 0);
+        assert_eq!(uf.find(3), 3);
+    }
+}

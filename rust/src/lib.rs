@@ -1,0 +1,55 @@
+//! # lancew — Distributed Lance-Williams Hierarchical Clustering
+//!
+//! Production-quality reproduction of *"Distributed Lance-William
+//! Clustering Algorithm"* (Yarmish, Listowsky & Dexter, CS.DC 2017) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: a distributed
+//!   Lance-Williams coordinator over a message-passing substrate
+//!   ([`coordinator`], [`comm`]), plus every substrate it needs (condensed
+//!   matrix storage & partitioning, workload generators, serial baselines,
+//!   validation metrics).
+//! * **Layer 2/1 (build-time Python)** — the per-iteration hot-spot
+//!   kernels (shard min-scan, LW row update, pairwise distances) written
+//!   in JAX/Pallas, AOT-lowered to HLO text and executed from rust through
+//!   the PJRT CPU client ([`runtime`]).
+//!
+//! Python never runs on the clustering path: after `make artifacts` the
+//! rust binary is self-contained.
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use lancew::prelude::*;
+//!
+//! let pts = GaussianSpec { n: 64, d: 4, k: 3, ..Default::default() }.generate(42);
+//! let matrix = euclidean_matrix(&pts.points);
+//! let run = ClusterConfig::new(Scheme::Complete, 4).run(&matrix).unwrap();
+//! let labels = run.dendrogram.cut(3);
+//! ```
+//!
+//! See `examples/` for the full tour and DESIGN.md for the experiment map.
+
+pub mod baselines;
+pub mod comm;
+pub mod coordinator;
+pub mod data;
+pub mod dendrogram;
+pub mod linkage;
+pub mod matrix;
+pub mod metrics;
+pub mod runtime;
+pub mod util;
+pub mod validate;
+
+/// Most-used types in one import.
+pub mod prelude {
+    pub use crate::baselines::serial_lw::serial_lw_cluster;
+    pub use crate::comm::CostModel;
+    pub use crate::coordinator::{ClusterConfig, ClusterRun, DistSource, Engine};
+    pub use crate::data::{euclidean_matrix, rmsd_matrix, EnsembleSpec, GaussianSpec};
+    pub use crate::dendrogram::{Dendrogram, Merge};
+    pub use crate::linkage::Scheme;
+    pub use crate::matrix::{CondensedMatrix, Partition, PartitionKind};
+    pub use crate::util::rng::Rng;
+}

@@ -1,0 +1,102 @@
+//! Definitional (non-recursive) cluster distances.
+//!
+//! The LW recurrence is an O(1) *update*; these are the O(|A|·|B|)
+//! definitions it must agree with. Used by tests and the validation CLI to
+//! certify that the distributed implementation computes real linkage
+//! distances, not merely something self-consistent:
+//!
+//! * single:   min_{a∈A, b∈B} d(a,b)
+//! * complete: max_{a∈A, b∈B} d(a,b)
+//! * average:  mean_{a∈A, b∈B} d(a,b)
+
+use crate::linkage::Scheme;
+use crate::matrix::CondensedMatrix;
+
+/// Distance between item sets `a` and `b` under `scheme`, from first
+/// principles on the original matrix. Only the schemes with a closed-form
+/// set definition on an arbitrary dissimilarity are supported (the
+/// geometric schemes — centroid, Ward — are defined via embeddings;
+/// weighted depends on merge history).
+pub fn definitional_distance(
+    scheme: Scheme,
+    m: &CondensedMatrix,
+    a: &[usize],
+    b: &[usize],
+) -> Option<f32> {
+    if a.is_empty() || b.is_empty() {
+        return None;
+    }
+    match scheme {
+        Scheme::Single => {
+            let mut best = f32::INFINITY;
+            for &x in a {
+                for &y in b {
+                    best = best.min(m.get(x, y));
+                }
+            }
+            Some(best)
+        }
+        Scheme::Complete => {
+            let mut worst = f32::NEG_INFINITY;
+            for &x in a {
+                for &y in b {
+                    worst = worst.max(m.get(x, y));
+                }
+            }
+            Some(worst)
+        }
+        Scheme::Average => {
+            let mut sum = 0.0f64;
+            for &x in a {
+                for &y in b {
+                    sum += m.get(x, y) as f64;
+                }
+            }
+            Some((sum / (a.len() * b.len()) as f64) as f32)
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn m4() -> CondensedMatrix {
+        // 4 items, d(i,j) = |i-j| * 10 + min(i,j)
+        CondensedMatrix::from_fn(4, |i, j| ((j - i) * 10 + i) as f32)
+    }
+
+    #[test]
+    fn single_complete_average() {
+        let m = m4();
+        let a = [0usize, 1];
+        let b = [2usize, 3];
+        // pairs: (0,2)=20 (0,3)=30 (1,2)=11 (1,3)=21
+        assert_eq!(definitional_distance(Scheme::Single, &m, &a, &b), Some(11.0));
+        assert_eq!(definitional_distance(Scheme::Complete, &m, &a, &b), Some(30.0));
+        let avg = definitional_distance(Scheme::Average, &m, &a, &b).unwrap();
+        assert!((avg - 20.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn unsupported_schemes_none() {
+        let m = m4();
+        assert_eq!(definitional_distance(Scheme::Ward, &m, &[0], &[1]), None);
+        assert_eq!(definitional_distance(Scheme::Centroid, &m, &[0], &[1]), None);
+    }
+
+    #[test]
+    fn singleton_sets_equal_matrix() {
+        let m = m4();
+        for s in [Scheme::Single, Scheme::Complete, Scheme::Average] {
+            assert_eq!(definitional_distance(s, &m, &[1], &[3]), Some(m.get(1, 3)));
+        }
+    }
+
+    #[test]
+    fn empty_set_none() {
+        let m = m4();
+        assert_eq!(definitional_distance(Scheme::Single, &m, &[], &[1]), None);
+    }
+}

@@ -1,0 +1,45 @@
+//! Lance-Williams linkage schemes (paper §4, Table 1).
+
+mod definitional;
+mod scheme;
+
+pub use definitional::definitional_distance;
+pub use scheme::{Coeffs, Scheme};
+
+/// The Lance-Williams update (paper §4 step 3 / §5.3 step 6):
+///
+/// `D_{k,i∪j} = αᵢ·D_ki + αⱼ·D_kj + β·D_ij + γ·|D_ki − D_kj|`
+///
+/// Kept in one place — and in *exactly this operation order* — so the rust
+/// scalar path, the distributed workers, and the serial baselines produce
+/// bit-identical f32 results (and match the L1 Pallas kernel, which uses
+/// the same order).
+#[inline]
+pub fn lw_update(c: Coeffs, d_ki: f32, d_kj: f32, d_ij: f32) -> f32 {
+    if d_ki.is_infinite() || d_kj.is_infinite() {
+        // Retired slot: stays retired.
+        return f32::INFINITY;
+    }
+    c.alpha_i * d_ki + c.alpha_j * d_kj + c.beta * d_ij + c.gamma * (d_ki - d_kj).abs()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complete_is_max_single_is_min() {
+        let (a, b, dij) = (3.0f32, 7.0f32, 1.0f32);
+        let cc = Scheme::Complete.coeffs(1.0, 1.0, 1.0);
+        assert_eq!(lw_update(cc, a, b, dij), 7.0);
+        let cs = Scheme::Single.coeffs(1.0, 1.0, 1.0);
+        assert_eq!(lw_update(cs, a, b, dij), 3.0);
+    }
+
+    #[test]
+    fn inf_propagates() {
+        let c = Scheme::Complete.coeffs(1.0, 1.0, 1.0);
+        assert!(lw_update(c, f32::INFINITY, 1.0, 1.0).is_infinite());
+        assert!(lw_update(c, 1.0, f32::INFINITY, 1.0).is_infinite());
+    }
+}

@@ -1,0 +1,210 @@
+//! Table 1 of the paper: the Lance-Williams coefficient catalogue.
+
+/// Coefficients for one update D_{k,i∪j}; αᵢ/αⱼ/β may depend on the
+/// cluster sizes (n_i, n_j, n_k), γ never does.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Coeffs {
+    pub alpha_i: f32,
+    pub alpha_j: f32,
+    pub beta: f32,
+    pub gamma: f32,
+}
+
+/// The six agglomerative schemes of Table 1. Ids and semantics are shared
+/// with `python/compile/model.py::SCHEMES` (same order).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Scheme {
+    /// Nearest-member distance; tends to "long" clusters (paper §2.1).
+    Single,
+    /// Furthest-member distance; "round" clusters — the paper's choice.
+    Complete,
+    /// UPGMA — unweighted group average.
+    Average,
+    /// WPGMA — weighted average (McQuitty).
+    Weighted,
+    /// UPGMC — centroid distance.
+    Centroid,
+    /// Ward's minimum-variance method.
+    Ward,
+    /// WPGMC — median / Gower (EXTENSION: not in the paper's Table 1, but
+    /// standard in the Lance-Williams family; αᵢ=αⱼ=½, β=−¼).
+    Median,
+}
+
+pub const ALL_SCHEMES: [Scheme; 7] = [
+    Scheme::Single,
+    Scheme::Complete,
+    Scheme::Average,
+    Scheme::Weighted,
+    Scheme::Centroid,
+    Scheme::Ward,
+    Scheme::Median,
+];
+
+impl Scheme {
+    /// All schemes: the paper's Table-1 six plus the Median extension.
+    pub fn all() -> &'static [Scheme; 7] {
+        &ALL_SCHEMES
+    }
+
+    /// Table-1 coefficients for merging clusters of size (n_i, n_j) as seen
+    /// from a cluster of size n_k.
+    #[inline]
+    pub fn coeffs(self, n_i: f32, n_j: f32, n_k: f32) -> Coeffs {
+        match self {
+            Scheme::Single => Coeffs {
+                alpha_i: 0.5,
+                alpha_j: 0.5,
+                beta: 0.0,
+                gamma: -0.5,
+            },
+            Scheme::Complete => Coeffs {
+                alpha_i: 0.5,
+                alpha_j: 0.5,
+                beta: 0.0,
+                gamma: 0.5,
+            },
+            Scheme::Average => {
+                let s = n_i + n_j;
+                Coeffs {
+                    alpha_i: n_i / s,
+                    alpha_j: n_j / s,
+                    beta: 0.0,
+                    gamma: 0.0,
+                }
+            }
+            Scheme::Weighted => Coeffs {
+                alpha_i: 0.5,
+                alpha_j: 0.5,
+                beta: 0.0,
+                gamma: 0.0,
+            },
+            Scheme::Centroid => {
+                let s = n_i + n_j;
+                Coeffs {
+                    alpha_i: n_i / s,
+                    alpha_j: n_j / s,
+                    beta: -(n_i * n_j) / (s * s),
+                    gamma: 0.0,
+                }
+            }
+            Scheme::Ward => {
+                let s = n_i + n_j + n_k;
+                Coeffs {
+                    alpha_i: (n_i + n_k) / s,
+                    alpha_j: (n_j + n_k) / s,
+                    beta: -n_k / s,
+                    gamma: 0.0,
+                }
+            }
+            Scheme::Median => Coeffs {
+                alpha_i: 0.5,
+                alpha_j: 0.5,
+                beta: -0.25,
+                gamma: 0.0,
+            },
+        }
+    }
+
+    /// Whether the coefficients depend on cluster sizes (needs the size
+    /// vector replicated on every rank).
+    pub fn size_dependent(self) -> bool {
+        matches!(self, Scheme::Average | Scheme::Centroid | Scheme::Ward)
+    }
+
+    /// Whether the scheme guarantees monotone dendrogram heights
+    /// (centroid/median famously invert; Ward/single/complete/average do not).
+    pub fn monotone(self) -> bool {
+        !matches!(self, Scheme::Centroid | Scheme::Median)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scheme::Single => "single",
+            Scheme::Complete => "complete",
+            Scheme::Average => "average",
+            Scheme::Weighted => "weighted",
+            Scheme::Centroid => "centroid",
+            Scheme::Ward => "ward",
+            Scheme::Median => "median",
+        }
+    }
+}
+
+impl std::fmt::Display for Scheme {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for Scheme {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "single" => Ok(Scheme::Single),
+            "complete" => Ok(Scheme::Complete),
+            "average" | "upgma" => Ok(Scheme::Average),
+            "weighted" | "wpgma" | "mcquitty" => Ok(Scheme::Weighted),
+            "centroid" | "upgmc" => Ok(Scheme::Centroid),
+            "ward" => Ok(Scheme::Ward),
+            "median" | "wpgmc" | "gower" => Ok(Scheme::Median),
+            other => anyhow::bail!("unknown scheme {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_rows_exact() {
+        // Constant-coefficient rows.
+        assert_eq!(
+            Scheme::Single.coeffs(9.0, 9.0, 9.0),
+            Coeffs { alpha_i: 0.5, alpha_j: 0.5, beta: 0.0, gamma: -0.5 }
+        );
+        assert_eq!(
+            Scheme::Complete.coeffs(9.0, 9.0, 9.0),
+            Coeffs { alpha_i: 0.5, alpha_j: 0.5, beta: 0.0, gamma: 0.5 }
+        );
+        assert_eq!(
+            Scheme::Weighted.coeffs(9.0, 9.0, 9.0),
+            Coeffs { alpha_i: 0.5, alpha_j: 0.5, beta: 0.0, gamma: 0.0 }
+        );
+        // Size-dependent rows at (n_i, n_j, n_k) = (2, 3, 4).
+        let c = Scheme::Average.coeffs(2.0, 3.0, 4.0);
+        assert!((c.alpha_i - 0.4).abs() < 1e-7 && (c.alpha_j - 0.6).abs() < 1e-7);
+        assert_eq!((c.beta, c.gamma), (0.0, 0.0));
+        let c = Scheme::Centroid.coeffs(2.0, 3.0, 4.0);
+        assert!((c.beta - (-6.0 / 25.0)).abs() < 1e-7);
+        let c = Scheme::Ward.coeffs(2.0, 3.0, 4.0);
+        assert!((c.alpha_i - 6.0 / 9.0).abs() < 1e-7);
+        assert!((c.alpha_j - 7.0 / 9.0).abs() < 1e-7);
+        assert!((c.beta - (-4.0 / 9.0)).abs() < 1e-7);
+    }
+
+    #[test]
+    fn alpha_sums() {
+        // For all schemes except Ward, αᵢ + αⱼ = 1.
+        for s in [Scheme::Single, Scheme::Complete, Scheme::Average, Scheme::Weighted, Scheme::Centroid] {
+            let c = s.coeffs(5.0, 2.0, 3.0);
+            assert!((c.alpha_i + c.alpha_j - 1.0).abs() < 1e-6, "{s}");
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for s in Scheme::all() {
+            assert_eq!(s.name().parse::<Scheme>().unwrap(), *s);
+        }
+        assert!("nope".parse::<Scheme>().is_err());
+    }
+
+    #[test]
+    fn size_dependence_flags() {
+        assert!(!Scheme::Complete.size_dependent());
+        assert!(Scheme::Ward.size_dependent());
+        assert!(Scheme::Average.size_dependent());
+    }
+}

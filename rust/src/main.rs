@@ -1,0 +1,262 @@
+//! `lancew` — CLI for the distributed Lance-Williams clustering system.
+//!
+//! Subcommands:
+//!   cluster   cluster a dataset (synthetic or from file) and report
+//!   validate  certify parallel ≡ serial ≡ definitional on random inputs
+//!   fig2      quick runtime-vs-p sweep (full version: `cargo bench`)
+//!   gen       generate synthetic workloads to disk
+//!   info      list compiled XLA artifacts
+//!
+//! Run `lancew <cmd> --help` conceptually via this header; flags are
+//! documented inline below.
+
+use std::path::PathBuf;
+
+use lancew::baselines::serial_lw::{serial_lw_cluster, verify_against_definition};
+use lancew::comm::CostModel;
+use lancew::coordinator::{ClusterConfig, DistSource, Engine};
+use lancew::data::{euclidean_matrix, io, rmsd_matrix, EnsembleSpec, GaussianSpec};
+use lancew::linkage::Scheme;
+use lancew::matrix::PartitionKind;
+use lancew::runtime::XlaEngine;
+use lancew::util::cli::{parse_list, Args};
+use lancew::validate::{ari, cophenetic_correlation, dendrograms_equal};
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional().first().map(String::as_str).unwrap_or("help");
+    let result = match cmd {
+        "cluster" => cmd_cluster(&args),
+        "validate" => cmd_validate(&args),
+        "fig2" => cmd_fig2(&args),
+        "gen" => cmd_gen(&args),
+        "info" => cmd_info(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn print_help() {
+    println!(
+        "lancew — distributed Lance-Williams hierarchical clustering\n\
+         \n\
+         USAGE: lancew <cluster|validate|fig2|gen|info> [flags]\n\
+         \n\
+         cluster  --n 200 | --matrix file.bin | --conformations\n\
+         \x20        --scheme complete --p 8 --partition paper --cost-model nehalem\n\
+         \x20        --cut 5 --engine scalar|xla --seed 42 --newick out.nwk\n\
+         \x20        --ascii --linkage z.csv (scipy linkage matrix)\n\
+         validate --n 60 --trials 5 --seed 1\n\
+         fig2     --n 512 --ps 1,2,4,8,16,24 --scheme complete\n\
+         gen      --kind gaussian|conformations --n 200 --out data.bin --seed 7\n\
+         info     [--artifacts dir]"
+    );
+}
+
+/// Build the run input: a prebuilt matrix from file, or a raw synthetic
+/// dataset (points / conformations). Raw datasets go down the paper's
+/// §5.1 distributed-build path — each rank computes its own shard cells.
+fn load_source(args: &Args) -> anyhow::Result<(DistSource, Option<Vec<usize>>)> {
+    let seed: u64 = args.parse_or("seed", 42u64)?;
+    if let Some(path) = args.get("matrix") {
+        let p = PathBuf::from(path);
+        let m = if path.ends_with(".csv") {
+            io::read_matrix_csv(&p)?
+        } else {
+            io::read_matrix_bin(&p)?
+        };
+        return Ok((DistSource::Matrix(m), None));
+    }
+    let n: usize = args.parse_or("n", 200usize)?;
+    if args.has("conformations") {
+        let e = EnsembleSpec { n, ..Default::default() }.generate(seed);
+        Ok((DistSource::Ensemble(e.structures), Some(e.labels)))
+    } else {
+        let k: usize = args.parse_or("k", 5usize)?;
+        let lp = GaussianSpec { n, k, ..Default::default() }.generate(seed);
+        Ok((DistSource::Points(lp.points), Some(lp.labels)))
+    }
+}
+
+fn make_engine(args: &Args) -> anyhow::Result<Engine> {
+    match args.get("engine").unwrap_or("scalar") {
+        "scalar" => Ok(Engine::Scalar),
+        "xla" => {
+            let dir = args
+                .get("artifacts")
+                .map(PathBuf::from)
+                .unwrap_or_else(XlaEngine::default_dir);
+            Ok(Engine::Xla(std::sync::Arc::new(XlaEngine::load(&dir)?)))
+        }
+        other => anyhow::bail!("unknown engine {other:?} (scalar|xla)"),
+    }
+}
+
+fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
+    let (source, truth) = load_source(args)?;
+    let scheme: Scheme = args.get("scheme").unwrap_or("complete").parse()?;
+    let p: usize = args.parse_or("p", 4usize)?;
+    let partition: PartitionKind = args.get("partition").unwrap_or("paper").parse()?;
+    let cost_model: CostModel = args.get("cost-model").unwrap_or("nehalem").parse()?;
+    let engine = make_engine(args)?;
+    let cut: usize = args.parse_or("cut", 0usize)?;
+    let newick = args.get("newick").map(PathBuf::from);
+    let linkage_out = args.get("linkage").map(PathBuf::from);
+    let ascii = args.has("ascii");
+    args.reject_unknown()?;
+
+    let run = ClusterConfig::new(scheme, p)
+        .with_partition(partition)
+        .with_cost_model(cost_model)
+        .with_engine(engine)
+        .run_source(source.clone())?;
+
+    println!("{}", run.stats.summary());
+    println!(
+        "cophenetic correlation: {:.4}",
+        cophenetic_correlation(&source.build_matrix(), &run.dendrogram)
+    );
+    if cut > 0 {
+        let labels = run.dendrogram.cut(cut);
+        let sizes = {
+            let mut s = vec![0usize; cut];
+            for &l in &labels {
+                s[l] += 1;
+            }
+            s
+        };
+        println!("cut at k={cut}: cluster sizes {sizes:?}");
+        if let Some(t) = truth {
+            println!("ARI vs ground truth: {:.4}", ari(&labels, &t));
+        }
+    }
+    if let Some(path) = newick {
+        std::fs::write(&path, run.dendrogram.to_newick(None))?;
+        println!("wrote {}", path.display());
+    }
+    if let Some(path) = linkage_out {
+        // SciPy linkage-matrix CSV (a, b, height, size).
+        let z = lancew::dendrogram::export::to_linkage_matrix(&run.dendrogram);
+        let mut text = String::from("a,b,height,size\n");
+        for row in z {
+            text.push_str(&format!("{},{},{},{}\n", row[0], row[1], row[2], row[3]));
+        }
+        std::fs::write(&path, text)?;
+        println!("wrote {}", path.display());
+    }
+    if ascii {
+        println!(
+            "{}",
+            lancew::dendrogram::export::ascii_dendrogram(&run.dendrogram, 60, 48)
+        );
+    }
+    Ok(())
+}
+
+fn cmd_validate(args: &Args) -> anyhow::Result<()> {
+    let n: usize = args.parse_or("n", 60usize)?;
+    let trials: usize = args.parse_or("trials", 5usize)?;
+    let seed: u64 = args.parse_or("seed", 1u64)?;
+    args.reject_unknown()?;
+
+    for t in 0..trials {
+        let lp = GaussianSpec { n, k: 4, ..Default::default() }.generate(seed + t as u64);
+        let m = euclidean_matrix(&lp.points);
+        for scheme in Scheme::all() {
+            let serial = serial_lw_cluster(*scheme, &m);
+            for p in [1, 3, 7] {
+                let run = ClusterConfig::new(*scheme, p).run(&m)?;
+                dendrograms_equal(&serial, &run.dendrogram, 0.0)
+                    .map_err(|e| anyhow::anyhow!("trial {t} {scheme} p={p}: {e}"))?;
+            }
+            if matches!(scheme, Scheme::Single | Scheme::Complete | Scheme::Average) {
+                verify_against_definition(*scheme, &m, &serial, 1e-3)
+                    .map_err(|e| anyhow::anyhow!("trial {t} {scheme} definitional: {e}"))?;
+            }
+        }
+        println!("trial {t}: all schemes, all p — parallel ≡ serial ≡ definitional ✓");
+    }
+    Ok(())
+}
+
+fn cmd_fig2(args: &Args) -> anyhow::Result<()> {
+    let n: usize = args.parse_or("n", 512usize)?;
+    let ps: Vec<usize> = parse_list(args.get("ps").unwrap_or("1,2,4,8,12,16,20,24,28"))?;
+    let scheme: Scheme = args.get("scheme").unwrap_or("complete").parse()?;
+    let seed: u64 = args.parse_or("seed", 42u64)?;
+    args.reject_unknown()?;
+
+    let lp = GaussianSpec { n, k: 8, ..Default::default() }.generate(seed);
+    let m = euclidean_matrix(&lp.points);
+    println!("# Figure 2 (quick): n={n} scheme={scheme} model=nehalem");
+    println!("{:>4} {:>14} {:>10} {:>12}", "p", "sim_time_s", "speedup", "msgs/iter");
+    let mut t1 = None;
+    for &p in &ps {
+        let run = ClusterConfig::new(scheme, p).run(&m)?;
+        let t = run.stats.virtual_s;
+        let t1v = *t1.get_or_insert(t);
+        println!(
+            "{:>4} {:>14.6} {:>10.2} {:>12.1}",
+            p,
+            t,
+            t1v / t,
+            run.stats.msgs_per_iteration()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_gen(args: &Args) -> anyhow::Result<()> {
+    let kind = args.get("kind").unwrap_or("gaussian").to_string();
+    let n: usize = args.parse_or("n", 200usize)?;
+    let seed: u64 = args.parse_or("seed", 7u64)?;
+    let out = PathBuf::from(args.req("out")?);
+    args.reject_unknown()?;
+
+    let m = match kind.as_str() {
+        "gaussian" => {
+            let lp = GaussianSpec { n, ..Default::default() }.generate(seed);
+            euclidean_matrix(&lp.points)
+        }
+        "conformations" => {
+            let e = EnsembleSpec { n, ..Default::default() }.generate(seed);
+            rmsd_matrix(&e.structures)
+        }
+        other => anyhow::bail!("unknown kind {other:?}"),
+    };
+    if out.extension().map(|e| e == "csv").unwrap_or(false) {
+        io::write_matrix_csv(&out, &m)?;
+    } else {
+        io::write_matrix_bin(&out, &m)?;
+    }
+    println!("wrote {} ({} items, {} cells)", out.display(), m.n(), m.len());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let dir = args
+        .get("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(XlaEngine::default_dir);
+    args.reject_unknown()?;
+    let engine = XlaEngine::load(&dir)?;
+    println!("artifact directory: {}", dir.display());
+    for name in engine.manifest().names() {
+        let spec = engine.manifest().get(name).unwrap();
+        println!(
+            "  {name:24} in={:?} out={:?}",
+            spec.inputs.iter().map(|t| t.shape.clone()).collect::<Vec<_>>(),
+            spec.outputs.iter().map(|t| t.shape.clone()).collect::<Vec<_>>(),
+        );
+    }
+    println!("compiling all...");
+    let names = engine.warmup()?;
+    println!("compiled {} executables OK", names.len());
+    Ok(())
+}

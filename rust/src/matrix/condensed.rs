@@ -1,0 +1,264 @@
+//! Condensed upper-triangle distance matrix.
+//!
+//! A symmetric n×n distance matrix only needs its strict upper triangle —
+//! `(n²−n)/2` cells (paper §5.1: "RAM is also distributed which makes
+//! (n²−n)/2 storage feasible"). Cells are stored row-major:
+//!
+//! ```text
+//!   (0,1) (0,2) ... (0,n-1) (1,2) ... (1,n-1) (2,3) ...
+//! ```
+//!
+//! matching SciPy's `pdist` condensed convention, so results compare
+//! directly against the Python oracle. Retired cells (their cluster was
+//! merged away) hold `+inf` — the same sentinel the L1 kernels use.
+
+/// Number of condensed cells for n items.
+#[inline]
+pub fn condensed_len(n: usize) -> usize {
+    n * (n - 1) / 2
+}
+
+/// Linear index of cell (i,j), i < j, in the condensed layout.
+#[inline]
+pub fn condensed_index(n: usize, i: usize, j: usize) -> usize {
+    debug_assert!(i < j && j < n, "need i<j<n, got ({i},{j}) n={n}");
+    // Cells before row i: sum_{r<i} (n-1-r) = i*n - i*(i+1)/2 - i ... derived:
+    // offset(i) = i*(2n - i - 1)/2
+    i * (2 * n - i - 1) / 2 + (j - i - 1)
+}
+
+/// Inverse of [`condensed_index`]: linear index → (i,j) with i < j.
+#[inline]
+pub fn condensed_pair(n: usize, idx: usize) -> (usize, usize) {
+    debug_assert!(idx < condensed_len(n));
+    // Solve offset(i) <= idx < offset(i+1) via the quadratic formula, then
+    // fix up any off-by-one from float rounding.
+    let nf = n as f64;
+    let idxf = idx as f64;
+    let mut i = ((2.0 * nf - 1.0 - ((2.0 * nf - 1.0) * (2.0 * nf - 1.0) - 8.0 * idxf).sqrt()) / 2.0)
+        .floor() as usize;
+    loop {
+        let lo = i * (2 * n - i - 1) / 2;
+        let hi = (i + 1) * (2 * n - i - 2) / 2;
+        if idx < lo {
+            i -= 1;
+        } else if idx >= hi {
+            i += 1;
+        } else {
+            return (i, i + 1 + (idx - lo));
+        }
+    }
+}
+
+/// Dense condensed matrix (the serial baselines + the leader use this;
+/// distributed ranks hold only their shard — see `coordinator::worker`).
+#[derive(Clone, Debug)]
+pub struct CondensedMatrix {
+    n: usize,
+    cells: Vec<f32>,
+}
+
+impl CondensedMatrix {
+    /// All-zero matrix for n items.
+    pub fn zeros(n: usize) -> Self {
+        assert!(n >= 2, "need at least 2 items");
+        Self {
+            n,
+            cells: vec![0.0; condensed_len(n)],
+        }
+    }
+
+    /// Build from a row-major full symmetric matrix (diagonal ignored).
+    pub fn from_full(n: usize, full: &[f32]) -> Self {
+        assert_eq!(full.len(), n * n);
+        let mut m = Self::zeros(n);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                m.set(i, j, full[i * n + j]);
+            }
+        }
+        m
+    }
+
+    /// Build from an explicit condensed cell vector.
+    pub fn from_cells(n: usize, cells: Vec<f32>) -> Self {
+        assert_eq!(cells.len(), condensed_len(n));
+        Self { n, cells }
+    }
+
+    /// Build by applying `dist` to every (i,j) pair.
+    pub fn from_fn(n: usize, mut dist: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut m = Self::zeros(n);
+        for i in 0..n {
+            for j in (i + 1)..n {
+                m.set(i, j, dist(i, j));
+            }
+        }
+        m
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    pub fn cells(&self) -> &[f32] {
+        &self.cells
+    }
+
+    pub fn cells_mut(&mut self) -> &mut [f32] {
+        &mut self.cells
+    }
+
+    /// Distance between items i and j (either order).
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        if i == j {
+            return 0.0;
+        }
+        let (a, b) = if i < j { (i, j) } else { (j, i) };
+        self.cells[condensed_index(self.n, a, b)]
+    }
+
+    /// Set distance between items i and j (either order).
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        let (a, b) = if i < j { (i, j) } else { (j, i) };
+        let idx = condensed_index(self.n, a, b);
+        self.cells[idx] = v;
+    }
+
+    /// Expand to a full row-major matrix with `diag` on the diagonal.
+    pub fn to_full(&self, diag: f32) -> Vec<f32> {
+        let n = self.n;
+        let mut full = vec![diag; n * n];
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let v = self.get(i, j);
+                full[i * n + j] = v;
+                full[j * n + i] = v;
+            }
+        }
+        full
+    }
+
+    /// Minimum cell and its (i,j); ties take the lowest linear index
+    /// (matching the L1 kernel and the distributed protocol). Returns
+    /// `None` if every cell is `+inf` (all retired).
+    pub fn argmin(&self) -> Option<(usize, usize, f32)> {
+        let mut best = f32::INFINITY;
+        let mut best_idx = usize::MAX;
+        for (idx, &v) in self.cells.iter().enumerate() {
+            if v < best {
+                best = v;
+                best_idx = idx;
+            }
+        }
+        if best_idx == usize::MAX {
+            return None;
+        }
+        let (i, j) = condensed_pair(self.n, best_idx);
+        Some((i, j, best))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{run, Config};
+
+    #[test]
+    fn index_layout_small() {
+        // n=4: (0,1)(0,2)(0,3)(1,2)(1,3)(2,3)
+        let n = 4;
+        let pairs = [(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)];
+        for (k, &(i, j)) in pairs.iter().enumerate() {
+            assert_eq!(condensed_index(n, i, j), k);
+            assert_eq!(condensed_pair(n, k), (i, j));
+        }
+    }
+
+    #[test]
+    fn index_bijection_property() {
+        run(Config::cases(50), |rng| {
+            let n = rng.range(2, 200);
+            let len = condensed_len(n);
+            let idx = rng.below(len);
+            let (i, j) = condensed_pair(n, idx);
+            assert!(i < j && j < n);
+            assert_eq!(condensed_index(n, i, j), idx, "n={n} idx={idx}");
+        });
+    }
+
+    #[test]
+    fn index_bijection_exhaustive_small() {
+        for n in 2..=40 {
+            for idx in 0..condensed_len(n) {
+                let (i, j) = condensed_pair(n, idx);
+                assert_eq!(condensed_index(n, i, j), idx);
+            }
+        }
+    }
+
+    #[test]
+    fn get_set_symmetric() {
+        let mut m = CondensedMatrix::zeros(5);
+        m.set(1, 3, 2.5);
+        m.set(4, 2, 7.0); // reversed order
+        assert_eq!(m.get(1, 3), 2.5);
+        assert_eq!(m.get(3, 1), 2.5);
+        assert_eq!(m.get(2, 4), 7.0);
+        assert_eq!(m.get(0, 0), 0.0);
+    }
+
+    #[test]
+    fn full_roundtrip() {
+        let mut m = CondensedMatrix::zeros(6);
+        for i in 0..6 {
+            for j in (i + 1)..6 {
+                m.set(i, j, (i * 10 + j) as f32);
+            }
+        }
+        let full = m.to_full(f32::INFINITY);
+        let m2 = CondensedMatrix::from_full(6, &full);
+        assert_eq!(m.cells(), m2.cells());
+        assert!(full[0].is_infinite());
+    }
+
+    #[test]
+    fn argmin_finds_global_and_ties_low() {
+        let mut m = CondensedMatrix::zeros(5);
+        for i in 0..5 {
+            for j in (i + 1)..5 {
+                m.set(i, j, 10.0);
+            }
+        }
+        m.set(1, 4, 3.0);
+        m.set(2, 3, 3.0); // tie: (1,4) has the lower linear index
+        assert_eq!(condensed_index(5, 1, 4) < condensed_index(5, 2, 3), true);
+        assert_eq!(m.argmin(), Some((1, 4, 3.0)));
+    }
+
+    #[test]
+    fn argmin_all_inf_none() {
+        let mut m = CondensedMatrix::zeros(4);
+        for c in m.cells_mut() {
+            *c = f32::INFINITY;
+        }
+        assert_eq!(m.argmin(), None);
+    }
+
+    #[test]
+    fn from_fn_matches_manual() {
+        let m = CondensedMatrix::from_fn(5, |i, j| (i + j) as f32);
+        assert_eq!(m.get(2, 4), 6.0);
+        assert_eq!(m.get(0, 1), 1.0);
+    }
+}

@@ -1,0 +1,8 @@
+//! Distance-matrix storage: condensed upper-triangle layout + the
+//! partitioning schemes that distribute it over ranks (paper §5.2, Fig. 2).
+
+mod condensed;
+mod partition;
+
+pub use condensed::{CondensedMatrix, condensed_index, condensed_len, condensed_pair};
+pub use partition::{Partition, PartitionKind};

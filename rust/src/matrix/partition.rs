@@ -1,0 +1,298 @@
+//! Partitioning of the condensed matrix over p ranks.
+//!
+//! The paper (§5.2, Fig. 2) assigns the `(n²−n)/2` condensed cells to
+//! processors "on a row by row basis", dividing the *cell count* evenly —
+//! i.e. contiguous equal-size chunks of the condensed (row-major) layout.
+//! That is [`PartitionKind::BalancedCells`], the default. Two alternatives
+//! are kept for the ablation benches:
+//!
+//! * [`PartitionKind::WholeRows`] — each rank owns whole matrix rows
+//!   (simpler update routing, but row r has `n−1−r` cells so load skews);
+//! * [`PartitionKind::Cyclic`] — cell k goes to rank `k mod p` (perfect
+//!   static balance, worst-case update routing).
+
+use super::condensed::condensed_len;
+
+/// Which distribution strategy to use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartitionKind {
+    /// Paper default: contiguous, cell-balanced chunks of the condensed layout.
+    BalancedCells,
+    /// Whole rows of the (upper-triangle) matrix per rank.
+    WholeRows,
+    /// Round-robin over cells.
+    Cyclic,
+}
+
+impl std::str::FromStr for PartitionKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "balanced" | "balanced-cells" | "paper" => Ok(Self::BalancedCells),
+            "rows" | "whole-rows" => Ok(Self::WholeRows),
+            "cyclic" => Ok(Self::Cyclic),
+            other => anyhow::bail!("unknown partition kind {other:?} (balanced|rows|cyclic)"),
+        }
+    }
+}
+
+/// A concrete partition of `condensed_len(n)` cells over `p` ranks.
+///
+/// Provides the owner map and local offsets that the workers use to route
+/// update triples (paper §5.3 step 6a) without any directory service —
+/// ownership is a pure function of the cell index, so every rank can
+/// compute every other rank's holdings.
+#[derive(Clone, Debug)]
+pub struct Partition {
+    kind: PartitionKind,
+    n: usize,
+    p: usize,
+    /// BalancedCells / WholeRows: rank r owns [starts[r], starts[r+1]).
+    starts: Vec<usize>,
+}
+
+impl Partition {
+    pub fn new(kind: PartitionKind, n: usize, p: usize) -> Self {
+        assert!(p >= 1 && n >= 2);
+        let len = condensed_len(n);
+        let starts = match kind {
+            PartitionKind::BalancedCells => {
+                // Equal chunks, remainder spread over the first ranks.
+                let base = len / p;
+                let rem = len % p;
+                let mut starts = Vec::with_capacity(p + 1);
+                let mut at = 0;
+                starts.push(0);
+                for r in 0..p {
+                    at += base + usize::from(r < rem);
+                    starts.push(at);
+                }
+                starts
+            }
+            PartitionKind::WholeRows => {
+                // Greedy: walk rows, cut to the next rank whenever the
+                // running cell count passes the ideal boundary.
+                let mut starts = vec![0];
+                let ideal = len as f64 / p as f64;
+                let mut cells = 0usize;
+                for row in 0..n.saturating_sub(1) {
+                    cells += n - 1 - row;
+                    let boundary = starts.len() as f64 * ideal;
+                    if cells as f64 >= boundary && starts.len() < p {
+                        starts.push(cells);
+                    }
+                }
+                while starts.len() < p {
+                    starts.push(len);
+                }
+                starts.push(len);
+                starts
+            }
+            PartitionKind::Cyclic => Vec::new(),
+        };
+        Self { kind, n, p, starts }
+    }
+
+    pub fn kind(&self) -> PartitionKind {
+        self.kind
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn p(&self) -> usize {
+        self.p
+    }
+
+    /// Total condensed cells.
+    pub fn len(&self) -> usize {
+        condensed_len(self.n)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Rank owning condensed cell `idx`.
+    #[inline]
+    pub fn owner(&self, idx: usize) -> usize {
+        debug_assert!(idx < self.len());
+        match self.kind {
+            PartitionKind::Cyclic => idx % self.p,
+            _ => {
+                // starts is sorted; binary search for the containing chunk.
+                match self.starts.binary_search(&idx) {
+                    Ok(r) => {
+                        // idx is exactly a boundary: it belongs to chunk r
+                        // unless chunk r is empty — skip empty chunks.
+                        let mut rank = r;
+                        while rank + 1 < self.starts.len() - 1 && self.starts[rank + 1] == idx {
+                            rank += 1;
+                        }
+                        rank.min(self.p - 1)
+                    }
+                    Err(r) => r - 1,
+                }
+            }
+        }
+    }
+
+    /// Offset of cell `idx` within its owner's local shard.
+    #[inline]
+    pub fn local_offset(&self, idx: usize) -> usize {
+        match self.kind {
+            PartitionKind::Cyclic => idx / self.p,
+            _ => idx - self.starts[self.owner(idx)],
+        }
+    }
+
+    /// Number of cells rank `r` owns.
+    pub fn shard_len(&self, r: usize) -> usize {
+        match self.kind {
+            PartitionKind::Cyclic => {
+                let len = self.len();
+                len / self.p + usize::from(r < len % self.p)
+            }
+            _ => self.starts[r + 1] - self.starts[r],
+        }
+    }
+
+    /// Global condensed index of local cell `off` on rank `r`.
+    #[inline]
+    pub fn global_index(&self, r: usize, off: usize) -> usize {
+        match self.kind {
+            PartitionKind::Cyclic => off * self.p + r,
+            _ => self.starts[r] + off,
+        }
+    }
+
+    /// Iterate the global cell indices owned by rank `r`.
+    pub fn cells_of(&self, r: usize) -> Box<dyn Iterator<Item = usize> + '_> {
+        match self.kind {
+            PartitionKind::Cyclic => {
+                let p = self.p;
+                let len = self.len();
+                Box::new((r..len).step_by(p))
+            }
+            _ => Box::new(self.starts[r]..self.starts[r + 1]),
+        }
+    }
+
+    /// Max shard size over ranks — the per-rank storage requirement the
+    /// paper's §5.4 bounds as O(n²/p).
+    pub fn max_shard_len(&self) -> usize {
+        (0..self.p).map(|r| self.shard_len(r)).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{run, Config};
+
+    fn check_partition_invariants(kind: PartitionKind, n: usize, p: usize) {
+        let part = Partition::new(kind, n, p);
+        let len = part.len();
+        // Completeness + uniqueness: every cell owned exactly once, and the
+        // owner/local_offset/global_index functions are mutually consistent.
+        let mut seen = vec![false; len];
+        for r in 0..p {
+            let mut count = 0;
+            for idx in part.cells_of(r) {
+                assert!(!seen[idx], "cell {idx} owned twice");
+                seen[idx] = true;
+                assert_eq!(part.owner(idx), r, "owner mismatch at {idx}");
+                let off = part.local_offset(idx);
+                assert_eq!(part.global_index(r, off), idx);
+                count += 1;
+            }
+            assert_eq!(count, part.shard_len(r));
+        }
+        assert!(seen.iter().all(|&s| s), "some cell unowned");
+    }
+
+    #[test]
+    fn paper_example_n8_p7() {
+        // Fig. 2 of the paper: n=8, p=7 → 28 cells, 4 per processor.
+        let part = Partition::new(PartitionKind::BalancedCells, 8, 7);
+        assert_eq!(part.len(), 28);
+        for r in 0..7 {
+            assert_eq!(part.shard_len(r), 4, "rank {r}");
+        }
+        // First rank gets cells 0..4 = (0,1) (0,2) (0,3) (0,4).
+        assert_eq!(part.cells_of(0).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn invariants_all_kinds_property() {
+        run(Config::cases(40), |rng| {
+            let n = rng.range(2, 60);
+            let p = rng.range(1, 12);
+            for kind in [
+                PartitionKind::BalancedCells,
+                PartitionKind::WholeRows,
+                PartitionKind::Cyclic,
+            ] {
+                check_partition_invariants(kind, n, p);
+            }
+        });
+    }
+
+    #[test]
+    fn balanced_is_balanced() {
+        let part = Partition::new(PartitionKind::BalancedCells, 100, 7);
+        let lens: Vec<usize> = (0..7).map(|r| part.shard_len(r)).collect();
+        let min = *lens.iter().min().unwrap();
+        let max = *lens.iter().max().unwrap();
+        assert!(max - min <= 1, "{lens:?}");
+    }
+
+    #[test]
+    fn cyclic_is_balanced() {
+        let part = Partition::new(PartitionKind::Cyclic, 57, 5);
+        let lens: Vec<usize> = (0..5).map(|r| part.shard_len(r)).collect();
+        assert!(lens.iter().max().unwrap() - lens.iter().min().unwrap() <= 1);
+    }
+
+    #[test]
+    fn more_ranks_than_cells() {
+        // Degenerate but must not crash: n=2 has a single cell.
+        check_partition_invariants(PartitionKind::BalancedCells, 2, 4);
+        check_partition_invariants(PartitionKind::Cyclic, 2, 4);
+    }
+
+    #[test]
+    fn storage_scales_inverse_p() {
+        // §5.4: per-rank storage O(n²/p).
+        let n = 512;
+        let s1 = Partition::new(PartitionKind::BalancedCells, n, 1).max_shard_len();
+        let s8 = Partition::new(PartitionKind::BalancedCells, n, 8).max_shard_len();
+        let ratio = s1 as f64 / s8 as f64;
+        assert!((ratio - 8.0).abs() < 0.1, "ratio {ratio}");
+    }
+
+    #[test]
+    fn whole_rows_respects_row_boundaries() {
+        let n = 16;
+        let part = Partition::new(PartitionKind::WholeRows, n, 4);
+        // Every rank's first cell must start a row: cell (i, i+1).
+        for r in 0..4 {
+            if part.shard_len(r) == 0 {
+                continue;
+            }
+            let first = part.global_index(r, 0);
+            let (i, j) = crate::matrix::condensed_pair(n, first);
+            assert_eq!(j, i + 1, "rank {r} starts mid-row at ({i},{j})");
+        }
+    }
+
+    #[test]
+    fn kind_parses() {
+        assert_eq!(
+            "paper".parse::<PartitionKind>().unwrap(),
+            PartitionKind::BalancedCells
+        );
+        assert!("bogus".parse::<PartitionKind>().is_err());
+    }
+}

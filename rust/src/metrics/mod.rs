@@ -1,0 +1,117 @@
+//! Run instrumentation: wall timers, per-phase virtual-time accounting,
+//! and the aggregate [`RunStats`] every clustering run returns (the raw
+//! material for EXPERIMENTS.md).
+
+use std::time::Instant;
+
+/// Wall-clock stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Per-phase virtual-time breakdown of one rank (seconds).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseBreakdown {
+    /// Initial distribution / distributed matrix build (§5.1 + preamble).
+    pub build: f64,
+    /// Step 1: local min scans.
+    pub scan: f64,
+    /// Steps 2–5: min exchange + merge broadcast.
+    pub coordinate: f64,
+    /// Step 6: triple exchange + LW row update.
+    pub update: f64,
+}
+
+impl PhaseBreakdown {
+    pub fn total(&self) -> f64 {
+        self.build + self.scan + self.coordinate + self.update
+    }
+}
+
+/// Aggregate statistics of one distributed clustering run.
+#[derive(Clone, Debug, Default)]
+pub struct RunStats {
+    /// Real host time for the whole run.
+    pub wall_s: f64,
+    /// Simulated makespan: max final virtual clock over ranks.
+    pub virtual_s: f64,
+    /// Simulated time per rank.
+    pub rank_virtual_s: Vec<f64>,
+    /// Phase breakdown per rank (virtual seconds).
+    pub phases: Vec<PhaseBreakdown>,
+    /// Total messages sent (all ranks).
+    pub msgs_sent: u64,
+    /// Total bytes sent (all ranks).
+    pub bytes_sent: u64,
+    /// Condensed cells scanned (all ranks).
+    pub cells_scanned: u64,
+    /// LW cell updates applied (all ranks).
+    pub cells_updated: u64,
+    /// Max cells resident on any single rank (§5.4 storage claim).
+    pub peak_shard_cells: usize,
+    /// Ranks used.
+    pub p: usize,
+    /// Items clustered.
+    pub n: usize,
+}
+
+impl RunStats {
+    /// Messages per iteration (the §5.4 O(p) communication claim).
+    pub fn msgs_per_iteration(&self) -> f64 {
+        if self.n <= 1 {
+            return 0.0;
+        }
+        self.msgs_sent as f64 / (self.n - 1) as f64
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} p={} wall={:.3}s virt={:.6}s msgs={} ({:.1}/iter) bytes={} peak_shard={} cells scanned={}",
+            self.n,
+            self.p,
+            self.wall_s,
+            self.virtual_s,
+            self.msgs_sent,
+            self.msgs_per_iteration(),
+            self.bytes_sent,
+            self.peak_shard_cells,
+            self.cells_scanned,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.elapsed_s() > 0.0);
+    }
+
+    #[test]
+    fn phase_total() {
+        let p = PhaseBreakdown { build: 0.5, scan: 1.0, coordinate: 2.0, update: 3.0 };
+        assert_eq!(p.total(), 6.5);
+    }
+
+    #[test]
+    fn msgs_per_iteration() {
+        let s = RunStats { n: 11, msgs_sent: 100, ..Default::default() };
+        assert!((s.msgs_per_iteration() - 10.0).abs() < 1e-12);
+        assert!(!s.summary().is_empty());
+    }
+}

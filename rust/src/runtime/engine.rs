@@ -1,0 +1,240 @@
+//! The XLA execution engine: PJRT CPU client + compiled-executable cache.
+//!
+//! Each artifact is compiled once on first use (`HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile`) and cached. The
+//! high-level ops pad their inputs to the nearest compiled shape variant
+//! with `+inf` — the same retired-cell sentinel the kernels use, so
+//! padding can never win a min scan.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use super::manifest::Manifest;
+use crate::dendrogram::{Dendrogram, Merge};
+
+/// Output of the whole-clustering (`full_lw_*`) artifact.
+#[derive(Clone, Debug)]
+pub struct FullLwResult {
+    pub dendrogram: Dendrogram,
+}
+
+/// PJRT-backed engine. `Send + Sync`: executions serialize on an internal
+/// mutex (single CPU device anyway).
+pub struct XlaEngine {
+    manifest: Manifest,
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    client: xla::PjRtClient,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+// The PJRT CPU client is used behind the mutex only.
+unsafe impl Send for XlaEngine {}
+unsafe impl Sync for XlaEngine {}
+
+impl XlaEngine {
+    /// Create from an artifact directory (default `artifacts/`).
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self {
+            manifest,
+            inner: Mutex::new(Inner {
+                client,
+                compiled: HashMap::new(),
+            }),
+        })
+    }
+
+    /// Default artifact location relative to the repo root, overridable
+    /// with `LANCEW_ARTIFACTS`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("LANCEW_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute artifact `name` on `inputs`; returns the flattened output
+    /// tuple. Compiles and caches on first use.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> anyhow::Result<Vec<xla::Literal>> {
+        let spec = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown artifact {name:?}"))?;
+        let mut inner = self.inner.lock().unwrap();
+        if !inner.compiled.contains_key(name) {
+            let proto = xla::HloModuleProto::from_text_file(&spec.path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = inner.client.compile(&comp)?;
+            inner.compiled.insert(name.to_string(), exe);
+        }
+        let exe = inner.compiled.get(name).unwrap();
+        let result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        Ok(result.to_tuple()?)
+    }
+
+    /// Pre-compile every artifact (used by `lancew info` and the benches
+    /// to keep compile time out of measurements).
+    pub fn warmup(&self) -> anyhow::Result<Vec<String>> {
+        let names: Vec<String> = self.manifest.names().map(String::from).collect();
+        for n in &names {
+            let spec = self.manifest.get(n).unwrap();
+            let mut inner = self.inner.lock().unwrap();
+            if !inner.compiled.contains_key(n) {
+                let proto = xla::HloModuleProto::from_text_file(&spec.path)?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = inner.client.compile(&comp)?;
+                inner.compiled.insert(n.clone(), exe);
+            }
+        }
+        Ok(names)
+    }
+
+    // ---- High-level ops ------------------------------------------------
+
+    /// L1 `shard_min` kernel: (min, argmin-local-index) over a shard,
+    /// `usize::MAX` when all cells are retired. Pads to the smallest
+    /// compiled capacity; errors if the shard exceeds every variant.
+    pub fn shard_min(&self, shard: &[f32]) -> anyhow::Result<(f32, usize)> {
+        let variants = self.manifest.sized_variants("shard_min_");
+        let (cap, spec) = variants
+            .iter()
+            .find(|(sz, _)| *sz >= shard.len())
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "shard of {} cells exceeds largest shard_min variant",
+                    shard.len()
+                )
+            })?;
+        let name = spec.name.clone();
+        let mut padded = Vec::with_capacity(*cap);
+        padded.extend_from_slice(shard);
+        padded.resize(*cap, f32::INFINITY);
+        let lit = xla::Literal::vec1(&padded);
+        let out = self.execute(&name, &[lit])?;
+        let minv = out[0].to_vec::<f32>()?[0];
+        let mini = out[1].to_vec::<i32>()?[0];
+        if mini < 0 {
+            Ok((f32::INFINITY, usize::MAX))
+        } else {
+            Ok((minv, mini as usize))
+        }
+    }
+
+    /// L1 `lw_update` kernel over a full row (vectors padded with +inf).
+    #[allow(clippy::too_many_arguments)]
+    pub fn lw_update_row(
+        &self,
+        d_ki: &[f32],
+        d_kj: &[f32],
+        alpha_i: &[f32],
+        alpha_j: &[f32],
+        beta: &[f32],
+        gamma: f32,
+        d_ij: f32,
+    ) -> anyhow::Result<Vec<f32>> {
+        let m = d_ki.len();
+        anyhow::ensure!(
+            d_kj.len() == m && alpha_i.len() == m && alpha_j.len() == m && beta.len() == m,
+            "length mismatch"
+        );
+        let variants = self.manifest.sized_variants("lw_update_");
+        let (cap, spec) = variants
+            .iter()
+            .find(|(sz, _)| *sz >= m)
+            .ok_or_else(|| anyhow::anyhow!("row of {m} exceeds largest lw_update variant"))?;
+        let name = spec.name.clone();
+        let pad = |v: &[f32], fill: f32| {
+            let mut out = Vec::with_capacity(*cap);
+            out.extend_from_slice(v);
+            out.resize(*cap, fill);
+            xla::Literal::vec1(&out)
+        };
+        let inputs = [
+            pad(d_ki, f32::INFINITY),
+            pad(d_kj, f32::INFINITY),
+            pad(alpha_i, 0.0),
+            pad(alpha_j, 0.0),
+            pad(beta, 0.0),
+            xla::Literal::from(gamma),
+            xla::Literal::from(d_ij),
+        ];
+        let out = self.execute(&name, &inputs)?;
+        let mut row = out[0].to_vec::<f32>()?;
+        row.truncate(m);
+        Ok(row)
+    }
+
+    /// L2 pairwise-distance graph: points (n,d) → full n×n matrix with
+    /// +inf diagonal. Requires an exact `pairwise_{n}x{d}` variant.
+    pub fn pairwise(&self, points: &[f32], n: usize, d: usize) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(points.len() == n * d, "points shape mismatch");
+        let name = format!("pairwise_{n}x{d}");
+        anyhow::ensure!(
+            self.manifest.get(&name).is_some(),
+            "no artifact {name} (available: {:?})",
+            self.manifest.names().collect::<Vec<_>>()
+        );
+        let lit = xla::Literal::vec1(points).reshape(&[n as i64, d as i64])?;
+        let out = self.execute(&name, &[lit])?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// The whole-clustering L2 graph (`full_lw_<scheme>_<n>`): runs every
+    /// Lance-Williams iteration inside one XLA call. `dmat` is the full
+    /// n×n matrix with +inf diagonal; `n_real ≤ n` items are live, the
+    /// rest padding (+inf rows, zero sizes).
+    pub fn full_lw(
+        &self,
+        scheme: &str,
+        dmat: &[f32],
+        n: usize,
+        n_real: usize,
+    ) -> anyhow::Result<FullLwResult> {
+        anyhow::ensure!(dmat.len() == n * n, "matrix shape mismatch");
+        anyhow::ensure!(n_real >= 2 && n_real <= n);
+        let name = format!("full_lw_{scheme}_{n}");
+        anyhow::ensure!(self.manifest.get(&name).is_some(), "no artifact {name}");
+        let mut sizes = vec![1.0f32; n_real];
+        sizes.resize(n, 0.0);
+        let dm = xla::Literal::vec1(dmat).reshape(&[n as i64, n as i64])?;
+        let sz = xla::Literal::vec1(&sizes);
+        let out = self.execute(&name, &[dm, sz])?;
+        let merges_raw = out[0].to_vec::<i32>()?;
+        let heights = out[1].to_vec::<f32>()?;
+        let mut merges = Vec::with_capacity(n_real - 1);
+        for t in 0..(n - 1) {
+            let (i, j) = (merges_raw[2 * t], merges_raw[2 * t + 1]);
+            if i < 0 {
+                continue; // padded iteration
+            }
+            merges.push(Merge {
+                i: i as usize,
+                j: j as usize,
+                height: heights[t],
+            });
+        }
+        anyhow::ensure!(
+            merges.len() == n_real - 1,
+            "expected {} merges, artifact produced {}",
+            n_real - 1,
+            merges.len()
+        );
+        Ok(FullLwResult {
+            dendrogram: Dendrogram::new(n_real, merges),
+        })
+    }
+}
+
+// NOTE on tests: everything touching the PJRT client needs the artifacts
+// built, so those tests live in rust/tests/xla_runtime.rs (integration
+// tier, skipped gracefully when artifacts/ is absent). Manifest parsing is
+// unit-tested in manifest.rs.

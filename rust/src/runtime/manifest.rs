@@ -1,0 +1,181 @@
+//! Artifact manifest parsing.
+//!
+//! `artifacts/manifest.txt` is a TSV written by `python/compile/aot.py`:
+//!
+//! ```text
+//! name<TAB>file<TAB>float32[4096]<TAB>float32[1];int32[1]
+//! ```
+//!
+//! (inputs and outputs are `;`-separated `dtype[shape]` specs).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Element type of a tensor spec.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+/// One input/output tensor: dtype + shape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product::<usize>().max(1)
+    }
+
+    fn parse(s: &str) -> anyhow::Result<Self> {
+        let (dt, rest) = s
+            .split_once('[')
+            .ok_or_else(|| anyhow::anyhow!("bad tensor spec {s:?}"))?;
+        let dtype = match dt {
+            "float32" => DType::F32,
+            "int32" => DType::I32,
+            other => anyhow::bail!("unsupported dtype {other:?}"),
+        };
+        let dims = rest
+            .strip_suffix(']')
+            .ok_or_else(|| anyhow::anyhow!("bad tensor spec {s:?}"))?;
+        let shape = if dims.is_empty() {
+            Vec::new()
+        } else {
+            dims.split(',')
+                .map(|d| d.trim().parse::<usize>().map_err(Into::into))
+                .collect::<anyhow::Result<_>>()?
+        };
+        Ok(Self { dtype, shape })
+    }
+}
+
+/// One artifact entry.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The whole artifact catalogue.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    entries: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.txt"))
+            .map_err(|e| anyhow::anyhow!("no artifact manifest in {dir:?} (run `make artifacts`): {e}"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text; `dir` is the artifact directory for paths.
+    pub fn parse(text: &str, dir: &Path) -> anyhow::Result<Self> {
+        let mut entries = BTreeMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let fields: Vec<&str> = line.split('\t').collect();
+            anyhow::ensure!(fields.len() == 4, "manifest line {} malformed", lineno + 1);
+            let parse_list = |s: &str| -> anyhow::Result<Vec<TensorSpec>> {
+                s.split(';').filter(|t| !t.is_empty()).map(TensorSpec::parse).collect()
+            };
+            let spec = ArtifactSpec {
+                name: fields[0].to_string(),
+                path: dir.join(fields[1]),
+                inputs: parse_list(fields[2])?,
+                outputs: parse_list(fields[3])?,
+            };
+            entries.insert(spec.name.clone(), spec);
+        }
+        anyhow::ensure!(!entries.is_empty(), "manifest is empty");
+        Ok(Self { entries })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.entries.get(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Names starting with `prefix`, with their trailing integer suffix,
+    /// ascending — used to pick the smallest shard_min/lw_update variant
+    /// that fits.
+    pub fn sized_variants(&self, prefix: &str) -> Vec<(usize, &ArtifactSpec)> {
+        let mut v: Vec<(usize, &ArtifactSpec)> = self
+            .entries
+            .values()
+            .filter_map(|e| {
+                let rest = e.name.strip_prefix(prefix)?;
+                rest.parse::<usize>().ok().map(|sz| (sz, e))
+            })
+            .collect();
+        v.sort_by_key(|(sz, _)| *sz);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "shard_min_1024\tshard_min_1024.hlo.txt\tfloat32[1024]\tfloat32[1];int32[1]\n\
+                          lw_update_256\tlw_update_256.hlo.txt\tfloat32[256];float32[256];float32[256];float32[256];float32[256];float32[];float32[]\tfloat32[256]\n\
+                          full_lw_complete_64\tfull_lw_complete_64.hlo.txt\tfloat32[64,64];float32[64]\tint32[63,2];float32[63]\n";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.len(), 3);
+        let s = m.get("shard_min_1024").unwrap();
+        assert_eq!(s.inputs.len(), 1);
+        assert_eq!(s.inputs[0].shape, vec![1024]);
+        assert_eq!(s.outputs[1].dtype, DType::I32);
+        let f = m.get("full_lw_complete_64").unwrap();
+        assert_eq!(f.inputs[0].shape, vec![64, 64]);
+        assert_eq!(f.outputs[0].shape, vec![63, 2]);
+    }
+
+    #[test]
+    fn scalar_shapes() {
+        let t = TensorSpec::parse("float32[]").unwrap();
+        assert!(t.shape.is_empty());
+        assert_eq!(t.elems(), 1);
+    }
+
+    #[test]
+    fn sized_variants_sorted() {
+        let text = "shard_min_4096\ta\tfloat32[4096]\tfloat32[1];int32[1]\n\
+                    shard_min_1024\tb\tfloat32[1024]\tfloat32[1];int32[1]\n";
+        let m = Manifest::parse(text, Path::new("/x")).unwrap();
+        let v = m.sized_variants("shard_min_");
+        assert_eq!(v.iter().map(|(s, _)| *s).collect::<Vec<_>>(), vec![1024, 4096]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("just one field", Path::new("/x")).is_err());
+        assert!(Manifest::parse("", Path::new("/x")).is_err());
+        assert!(TensorSpec::parse("float64[2]").is_err());
+        assert!(TensorSpec::parse("float32 2").is_err());
+    }
+}

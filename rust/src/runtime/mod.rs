@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` produced
+//! once by `python -m compile.aot`) and executes them on the request path.
+//!
+//! This is the rust half of the three-layer bridge. Interchange is HLO
+//! *text* — the image's xla_extension 0.5.1 rejects jax ≥ 0.5 serialized
+//! protos (64-bit instruction ids); the text parser reassigns ids. See
+//! /opt/xla-example/README.md.
+
+mod engine;
+mod manifest;
+
+pub use engine::{FullLwResult, XlaEngine};
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};

@@ -1,0 +1,194 @@
+//! Minimal command-line parser (substitute for the un-vendored `clap`).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments. Each binary declares its options by querying an
+//! [`Args`] instance; unknown flags are an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    flags: BTreeMap<String, Vec<String>>,
+    positional: Vec<String>,
+    /// Flags actually queried by the program (for unknown-flag detection).
+    known: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) — `argv` excludes argv[0].
+    pub fn from_vec(argv: Vec<String>) -> Self {
+        let mut flags: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    flags.entry(k.to_string()).or_default().push(v.to_string());
+                } else {
+                    // `--flag value` unless the next token is itself a flag.
+                    let takes_value = it
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false);
+                    if takes_value {
+                        let v = it.next().unwrap();
+                        flags.entry(body.to_string()).or_default().push(v);
+                    } else {
+                        flags.entry(body.to_string()).or_default().push(String::new());
+                    }
+                }
+            } else {
+                positional.push(a);
+            }
+        }
+        Self {
+            flags,
+            positional,
+            known: std::cell::RefCell::new(Vec::new()),
+        }
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Self {
+        Self::from_vec(std::env::args().skip(1).collect())
+    }
+
+    fn note(&self, key: &str) {
+        self.known.borrow_mut().push(key.to_string());
+    }
+
+    /// Last value of `--key`, if present.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.note(key);
+        self.flags.get(key).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// Required string flag.
+    pub fn req(&self, key: &str) -> anyhow::Result<&str> {
+        self.get(key)
+            .ok_or_else(|| anyhow::anyhow!("missing required flag --{key}"))
+    }
+
+    /// Typed flag with default.
+    pub fn parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some("") => anyhow::bail!("flag --{key} needs a value"),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad value for --{key}: {e}")),
+        }
+    }
+
+    /// Boolean presence flag.
+    pub fn has(&self, key: &str) -> bool {
+        self.note(key);
+        self.flags.contains_key(key)
+    }
+
+    /// All values of a repeatable flag.
+    pub fn all(&self, key: &str) -> Vec<&str> {
+        self.note(key);
+        self.flags
+            .get(key)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    /// Positional arguments.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// Error if any provided flag was never queried (catches typos).
+    pub fn reject_unknown(&self) -> anyhow::Result<()> {
+        let known = self.known.borrow();
+        for k in self.flags.keys() {
+            if !known.iter().any(|q| q == k) {
+                anyhow::bail!("unknown flag --{k}");
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Parse a comma-separated list of T (`--ps 1,2,4,8`).
+pub fn parse_list<T: std::str::FromStr>(s: &str) -> anyhow::Result<Vec<T>>
+where
+    T::Err: std::fmt::Display,
+{
+    s.split(',')
+        .filter(|t| !t.is_empty())
+        .map(|t| {
+            t.trim()
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad list element {t:?}: {e}"))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &str) -> Args {
+        Args::from_vec(s.split_whitespace().map(String::from).collect())
+    }
+
+    #[test]
+    fn flag_value_styles() {
+        // Positionals (the subcommand) come first by convention: a bare
+        // `--flag token` always binds token as the flag's value.
+        let a = args("pos1 --n 100 --scheme=complete --verbose");
+        assert_eq!(a.get("n"), Some("100"));
+        assert_eq!(a.get("scheme"), Some("complete"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = args("--n 100");
+        assert_eq!(a.parse_or("n", 5usize).unwrap(), 100);
+        assert_eq!(a.parse_or("p", 7usize).unwrap(), 7);
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        let a = args("--n abc");
+        assert!(a.parse_or("n", 0usize).is_err());
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        let a = args("");
+        assert!(a.req("out").is_err());
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let a = args("--typo 3");
+        let _ = a.get("n");
+        assert!(a.reject_unknown().is_err());
+        let b = args("--n 3");
+        let _ = b.get("n");
+        assert!(b.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn list_parsing() {
+        let v: Vec<usize> = parse_list("1,2, 4,8").unwrap();
+        assert_eq!(v, vec![1, 2, 4, 8]);
+        assert!(parse_list::<usize>("1,x").is_err());
+    }
+
+    #[test]
+    fn repeatable_flags() {
+        let a = args("--ps 1 --ps 2");
+        assert_eq!(a.all("ps"), vec!["1", "2"]);
+    }
+}

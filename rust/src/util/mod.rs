@@ -1,0 +1,15 @@
+//! Cross-cutting utilities.
+//!
+//! This crate builds fully offline — only the `xla` closure is vendored —
+//! so the pieces a crates.io project would pull in (`rand`, `clap`,
+//! `proptest`, `criterion`) are implemented here from scratch:
+//!
+//! * [`rng`] — splitmix64 / xoshiro256++ deterministic PRNG,
+//! * [`cli`] — a small `--flag value` argument parser,
+//! * [`proptest`] — a seeded property-testing harness with shrinking,
+//! * [`stats`] — summary statistics + simple regression for the benches.
+
+pub mod cli;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,236 @@
+//! Clustering-quality validation: ARI against ground truth, cophenetic
+//! correlation between dendrogram and original distances, and exact
+//! dendrogram equivalence (used to certify parallel ≡ serial).
+
+use crate::dendrogram::Dendrogram;
+use crate::matrix::CondensedMatrix;
+use crate::util::stats::pearson;
+
+/// Adjusted Rand Index between two labelings (1.0 = identical partitions,
+/// ~0.0 = chance agreement).
+pub fn ari(a: &[usize], b: &[usize]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let ka = a.iter().copied().max().map_or(0, |m| m + 1);
+    let kb = b.iter().copied().max().map_or(0, |m| m + 1);
+    // Contingency table.
+    let mut table = vec![0u64; ka * kb];
+    let mut rows = vec![0u64; ka];
+    let mut cols = vec![0u64; kb];
+    for i in 0..n {
+        table[a[i] * kb + b[i]] += 1;
+        rows[a[i]] += 1;
+        cols[b[i]] += 1;
+    }
+    let c2 = |x: u64| (x * x.saturating_sub(1) / 2) as f64;
+    let sum_ij: f64 = table.iter().map(|&x| c2(x)).sum();
+    let sum_a: f64 = rows.iter().map(|&x| c2(x)).sum();
+    let sum_b: f64 = cols.iter().map(|&x| c2(x)).sum();
+    let total = c2(n as u64);
+    let expected = sum_a * sum_b / total;
+    let max_index = 0.5 * (sum_a + sum_b);
+    if (max_index - expected).abs() < 1e-12 {
+        return 1.0; // degenerate: both partitions trivial
+    }
+    (sum_ij - expected) / (max_index - expected)
+}
+
+/// Cophenetic correlation coefficient: Pearson correlation between the
+/// original distances and the dendrogram's cophenetic distances. The
+/// standard figure of merit for how faithfully a hierarchy represents
+/// its input.
+pub fn cophenetic_correlation(matrix: &CondensedMatrix, dend: &Dendrogram) -> f64 {
+    let coph = dend.cophenetic();
+    let x: Vec<f64> = matrix.cells().iter().map(|&v| v as f64).collect();
+    let y: Vec<f64> = coph.cells().iter().map(|&v| v as f64).collect();
+    pearson(&x, &y)
+}
+
+/// Exact structural equality of two dendrograms (same merges in the same
+/// order with heights within `tol`). Used by parallel-vs-serial tests —
+/// the protocol is deterministic, so exact order equality is expected.
+pub fn dendrograms_equal(a: &Dendrogram, b: &Dendrogram, tol: f32) -> Result<(), String> {
+    if a.n() != b.n() {
+        return Err(format!("n mismatch {} vs {}", a.n(), b.n()));
+    }
+    for (step, (ma, mb)) in a.merges().iter().zip(b.merges()).enumerate() {
+        if ma.i != mb.i || ma.j != mb.j {
+            return Err(format!(
+                "step {step}: merge ({},{}) vs ({},{})",
+                ma.i, ma.j, mb.i, mb.j
+            ));
+        }
+        if (ma.height - mb.height).abs() > tol * ma.height.abs().max(1.0) {
+            return Err(format!(
+                "step {step}: height {} vs {}",
+                ma.height, mb.height
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Fowlkes–Mallows index: geometric mean of pairwise precision and recall
+/// between two labelings (1.0 = identical).
+pub fn fowlkes_mallows(a: &[usize], b: &[usize]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let (mut tp, mut fp, mut fn_) = (0u64, 0u64, 0u64);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let sa = a[i] == a[j];
+            let sb = b[i] == b[j];
+            match (sa, sb) {
+                (true, true) => tp += 1,
+                (true, false) => fn_ += 1,
+                (false, true) => fp += 1,
+                (false, false) => {}
+            }
+        }
+    }
+    if tp == 0 {
+        return 0.0;
+    }
+    let prec = tp as f64 / (tp + fp) as f64;
+    let rec = tp as f64 / (tp + fn_) as f64;
+    (prec * rec).sqrt()
+}
+
+/// Mean silhouette coefficient of a labeling over a distance matrix:
+/// (b−a)/max(a,b) per point, a = mean intra-cluster distance, b = nearest
+/// other-cluster mean distance. Singleton clusters score 0.
+pub fn silhouette(matrix: &CondensedMatrix, labels: &[usize]) -> f64 {
+    let n = matrix.n();
+    assert_eq!(labels.len(), n);
+    let k = labels.iter().copied().max().map_or(0, |m| m + 1);
+    let mut total = 0.0;
+    for i in 0..n {
+        // Mean distance to every cluster.
+        let mut sum = vec![0.0f64; k];
+        let mut cnt = vec![0usize; k];
+        for j in 0..n {
+            if j != i {
+                sum[labels[j]] += matrix.get(i, j) as f64;
+                cnt[labels[j]] += 1;
+            }
+        }
+        let own = labels[i];
+        if cnt[own] == 0 {
+            continue; // singleton: silhouette 0 contribution
+        }
+        let a = sum[own] / cnt[own] as f64;
+        let b = (0..k)
+            .filter(|&c| c != own && cnt[c] > 0)
+            .map(|c| sum[c] / cnt[c] as f64)
+            .fold(f64::INFINITY, f64::min);
+        if b.is_finite() {
+            total += (b - a) / a.max(b);
+        }
+    }
+    total / n as f64
+}
+
+/// Purity of predicted clusters w.r.t. ground truth (simple, asymmetric).
+pub fn purity(pred: &[usize], truth: &[usize]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let kp = pred.iter().copied().max().map_or(0, |m| m + 1);
+    let kt = truth.iter().copied().max().map_or(0, |m| m + 1);
+    let mut table = vec![0u64; kp * kt];
+    for i in 0..pred.len() {
+        table[pred[i] * kt + truth[i]] += 1;
+    }
+    let correct: u64 = (0..kp)
+        .map(|c| (0..kt).map(|t| table[c * kt + t]).max().unwrap_or(0))
+        .sum();
+    correct as f64 / pred.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dendrogram::Merge;
+
+    #[test]
+    fn ari_identical_is_one() {
+        let l = vec![0, 0, 1, 1, 2, 2];
+        assert!((ari(&l, &l) - 1.0).abs() < 1e-12);
+        // Label permutation is still a perfect match.
+        let p = vec![2, 2, 0, 0, 1, 1];
+        assert!((ari(&l, &p) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ari_random_near_zero() {
+        let mut rng = crate::util::rng::Rng::new(1);
+        let a: Vec<usize> = (0..2000).map(|_| rng.below(4)).collect();
+        let b: Vec<usize> = (0..2000).map(|_| rng.below(4)).collect();
+        assert!(ari(&a, &b).abs() < 0.05);
+    }
+
+    #[test]
+    fn ari_partial_agreement_between() {
+        let a = vec![0, 0, 0, 1, 1, 1];
+        let b = vec![0, 0, 1, 1, 1, 1];
+        let v = ari(&a, &b);
+        assert!(v > 0.0 && v < 1.0, "{v}");
+    }
+
+    #[test]
+    fn fowlkes_mallows_bounds() {
+        let l = vec![0, 0, 1, 1, 2, 2];
+        assert!((fowlkes_mallows(&l, &l) - 1.0).abs() < 1e-12);
+        let perm = vec![1, 1, 2, 2, 0, 0];
+        assert!((fowlkes_mallows(&l, &perm) - 1.0).abs() < 1e-12);
+        let other = vec![0, 1, 0, 1, 0, 1];
+        let v = fowlkes_mallows(&l, &other);
+        assert!(v >= 0.0 && v < 1.0, "{v}");
+    }
+
+    #[test]
+    fn silhouette_separated_vs_random() {
+        use crate::data::{euclidean_matrix, GaussianSpec};
+        let lp = GaussianSpec { n: 60, d: 3, k: 3, center_spread: 50.0, noise: 0.5 }.generate(2);
+        let m = euclidean_matrix(&lp.points);
+        let good = silhouette(&m, &lp.labels);
+        assert!(good > 0.8, "separated mixture silhouette {good}");
+        let mut rng = crate::util::rng::Rng::new(3);
+        let random: Vec<usize> = (0..60).map(|_| rng.below(3)).collect();
+        assert!(silhouette(&m, &random) < good - 0.5);
+    }
+
+    #[test]
+    fn purity_perfect_and_partial() {
+        let t = vec![0, 0, 1, 1];
+        assert_eq!(purity(&[1, 1, 0, 0], &t), 1.0);
+        assert_eq!(purity(&[0, 0, 0, 0], &t), 0.5);
+    }
+
+    #[test]
+    fn cophenetic_correlation_on_ultrametric_input_is_one() {
+        // If the input IS a cophenetic matrix, correlation must be 1.
+        let d = Dendrogram::new(
+            4,
+            vec![
+                Merge { i: 0, j: 1, height: 1.0 },
+                Merge { i: 2, j: 3, height: 2.0 },
+                Merge { i: 0, j: 2, height: 5.0 },
+            ],
+        );
+        let m = d.cophenetic();
+        assert!((cophenetic_correlation(&m, &d) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dendrograms_equal_detects_divergence() {
+        let a = Dendrogram::new(3, vec![
+            Merge { i: 0, j: 1, height: 1.0 },
+            Merge { i: 0, j: 2, height: 2.0 },
+        ]);
+        let b = Dendrogram::new(3, vec![
+            Merge { i: 1, j: 2, height: 1.0 },
+            Merge { i: 0, j: 1, height: 2.0 },
+        ]);
+        assert!(dendrograms_equal(&a, &a, 1e-6).is_ok());
+        assert!(dendrograms_equal(&a, &b, 1e-6).is_err());
+    }
+}

@@ -1,0 +1,112 @@
+//! Integration: the `lancew` binary end to end (argument parsing, file
+//! round-trips, exit codes) — what a user's shell actually sees.
+
+use std::process::Command;
+
+fn lancew(args: &[&str]) -> (bool, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_lancew"))
+        .args(args)
+        .output()
+        .expect("binary runs");
+    let text = format!(
+        "{}{}",
+        String::from_utf8_lossy(&out.stdout),
+        String::from_utf8_lossy(&out.stderr)
+    );
+    (out.status.success(), text)
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("lancew_cli_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let (ok, text) = lancew(&[]);
+    assert!(ok);
+    for cmd in ["cluster", "validate", "fig2", "gen", "info"] {
+        assert!(text.contains(cmd), "missing {cmd} in help:\n{text}");
+    }
+}
+
+#[test]
+fn cluster_reports_and_cuts() {
+    let (ok, text) = lancew(&[
+        "cluster", "--n", "60", "--scheme", "complete", "--p", "3", "--cut", "4", "--seed", "7",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("n=60 p=3"));
+    assert!(text.contains("cut at k=4"));
+    assert!(text.contains("ARI vs ground truth"));
+}
+
+#[test]
+fn cluster_ascii_renders() {
+    let (ok, text) = lancew(&["cluster", "--n", "12", "--p", "2", "--ascii", "--k", "3"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("x0") && (text.contains('┬') || text.contains('┴')), "{text}");
+}
+
+#[test]
+fn gen_then_cluster_from_file_roundtrip() {
+    let path = tmp("gen.bin");
+    let (ok, text) = lancew(&[
+        "gen", "--kind", "gaussian", "--n", "40", "--seed", "3",
+        "--out", path.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("40 items"));
+    let (ok, text) = lancew(&[
+        "cluster", "--matrix", path.to_str().unwrap(), "--p", "2", "--cut", "3",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("n=40 p=2"));
+}
+
+#[test]
+fn cluster_writes_newick_and_linkage() {
+    let nwk = tmp("t.nwk");
+    let z = tmp("z.csv");
+    let (ok, text) = lancew(&[
+        "cluster", "--n", "16", "--p", "2",
+        "--newick", nwk.to_str().unwrap(),
+        "--linkage", z.to_str().unwrap(),
+    ]);
+    assert!(ok, "{text}");
+    let nwk_text = std::fs::read_to_string(&nwk).unwrap();
+    assert!(nwk_text.ends_with(';') && nwk_text.contains("x0"));
+    let z_text = std::fs::read_to_string(&z).unwrap();
+    assert_eq!(z_text.lines().count(), 16); // header + 15 merges
+    assert!(z_text.starts_with("a,b,height,size"));
+}
+
+#[test]
+fn validate_subcommand_passes() {
+    let (ok, text) = lancew(&["validate", "--n", "24", "--trials", "1"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("parallel ≡ serial ≡ definitional"));
+}
+
+#[test]
+fn fig2_prints_series() {
+    let (ok, text) = lancew(&["fig2", "--n", "96", "--ps", "1,2,4"]);
+    assert!(ok, "{text}");
+    assert!(text.contains("speedup"));
+    assert!(text.lines().filter(|l| l.trim().starts_with(['1', '2', '4'])).count() >= 3);
+}
+
+#[test]
+fn unknown_flag_fails_loudly() {
+    let (ok, text) = lancew(&["cluster", "--n", "10", "--bogus-flag", "3"]);
+    assert!(!ok);
+    assert!(text.contains("bogus-flag"), "{text}");
+}
+
+#[test]
+fn bad_scheme_fails_loudly() {
+    let (ok, text) = lancew(&["cluster", "--n", "10", "--scheme", "mystery"]);
+    assert!(!ok);
+    assert!(text.contains("unknown scheme"), "{text}");
+}

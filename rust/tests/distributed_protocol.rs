@@ -1,0 +1,184 @@
+//! Integration: protocol-level invariants of the distributed run — the
+//! §5.4 complexity claims measured on the live system, determinism, and
+//! failure-mode behaviour.
+
+use lancew::comm::CostModel;
+use lancew::prelude::*;
+
+fn matrix(n: usize, seed: u64) -> CondensedMatrix {
+    let lp = GaussianSpec { n, d: 4, k: 4, ..Default::default() }.generate(seed);
+    euclidean_matrix(&lp.points)
+}
+
+#[test]
+fn storage_claim_o_n2_over_p() {
+    let m = matrix(128, 1);
+    let total = m.len();
+    for p in [1usize, 2, 4, 8] {
+        let run = ClusterConfig::new(Scheme::Complete, p).run(&m).unwrap();
+        let ideal = total.div_ceil(p);
+        assert!(
+            run.stats.peak_shard_cells <= ideal + 1,
+            "p={p}: peak {} > ideal {ideal}",
+            run.stats.peak_shard_cells
+        );
+    }
+}
+
+#[test]
+fn communication_claim_o_p_per_iteration() {
+    let m = matrix(96, 2);
+    let mut last_per_rank = 0.0;
+    for p in [2usize, 4, 8] {
+        let run = ClusterConfig::new(Scheme::Complete, p).run(&m).unwrap();
+        let per_iter_rank = run.stats.msgs_per_iteration() / p as f64;
+        // Grows with p (allgather) but stays ≤ ~(p+1) + triple constant.
+        assert!(
+            per_iter_rank <= (p + 2) as f64 + 1.0,
+            "p={p}: {per_iter_rank} msgs/iter/rank"
+        );
+        assert!(per_iter_rank >= last_per_rank, "should grow with p");
+        last_per_rank = per_iter_rank;
+    }
+}
+
+#[test]
+fn computation_scales_inverse_p_zero_comm() {
+    // §5.4 "all work is divided evenly": true for the *static* cell
+    // assignment, but the paper's contiguous partition develops dynamic
+    // imbalance as retired cells concentrate in low rows (surviving
+    // clusters keep the lower slot). The cyclic ablation interleaves
+    // cells and stays near-perfect — a reproduction finding (EXPERIMENTS.md).
+    let m = matrix(160, 3);
+    let eff = |kind: PartitionKind| {
+        let t = |p: usize| {
+            ClusterConfig::new(Scheme::Complete, p)
+                .with_cost_model(CostModel::zero_comm())
+                .with_partition(kind)
+                .run(&m)
+                .unwrap()
+                .stats
+                .virtual_s
+        };
+        t(1) / (t(8) * 8.0)
+    };
+    let balanced = eff(PartitionKind::BalancedCells);
+    let cyclic = eff(PartitionKind::Cyclic);
+    assert!(balanced > 0.55, "paper partition efficiency {balanced}");
+    assert!(cyclic > 0.9, "cyclic partition efficiency {cyclic}");
+    assert!(cyclic > balanced, "cyclic should balance better late-run");
+}
+
+#[test]
+fn fig2_shape_speedup_then_saturation() {
+    // The qualitative §6 result at reduced scale: simulated time improves
+    // from p=1 to a mid-range p, then degrades for large p. (n must be
+    // big enough that per-iteration compute ≳ per-iteration latency —
+    // below ~n=300 the curve is communication-bound from the start, which
+    // is itself the paper's "optimum grows with n" observation.)
+    let m = matrix(448, 4);
+    let t = |p: usize| {
+        ClusterConfig::new(Scheme::Complete, p)
+            .run(&m)
+            .unwrap()
+            .stats
+            .virtual_s
+    };
+    let t1 = t(1);
+    let t4 = t(4);
+    let t24 = t(24);
+    assert!(t4 < t1, "no speedup: t1={t1} t4={t4}");
+    assert!(t24 > t4, "no communication penalty: t4={t4} t24={t24}");
+}
+
+#[test]
+fn virtual_time_replays_exactly() {
+    let m = matrix(64, 5);
+    let runs: Vec<_> = (0..3)
+        .map(|_| ClusterConfig::new(Scheme::Ward, 6).run(&m).unwrap().stats)
+        .collect();
+    assert_eq!(runs[0].virtual_s, runs[1].virtual_s);
+    assert_eq!(runs[1].virtual_s, runs[2].virtual_s);
+    assert_eq!(runs[0].msgs_sent, runs[1].msgs_sent);
+    assert_eq!(runs[0].bytes_sent, runs[2].bytes_sent);
+}
+
+#[test]
+fn cells_scanned_decreases_as_clusters_retire() {
+    // Active cells shrink every iteration: total scanned must be well
+    // under (n-1) · full-matrix (it's the §5.4 decreasing-m sum).
+    let n = 100;
+    let m = matrix(n, 6);
+    let run = ClusterConfig::new(Scheme::Complete, 4).run(&m).unwrap();
+    let full_every_iter = (n as u64 - 1) * m.len() as u64;
+    // Exact expected: sum over iterations of active cells. Loosely: the
+    // sum of m(m-1)/2 for m=n..2 ≈ n³/6 vs n³/2 for the naive bound.
+    assert!(run.stats.cells_scanned < full_every_iter / 2);
+    assert!(run.stats.cells_scanned > full_every_iter / 6);
+}
+
+#[test]
+fn phase_breakdown_sums_to_total() {
+    let m = matrix(80, 7);
+    let run = ClusterConfig::new(Scheme::Complete, 5).run(&m).unwrap();
+    for (r, ph) in run.stats.phases.iter().enumerate() {
+        let total = ph.total();
+        let clock = run.stats.rank_virtual_s[r];
+        // Distribution time is outside the phases; everything else inside.
+        assert!(
+            total <= clock + 1e-12,
+            "rank {r}: phases {total} > clock {clock}"
+        );
+        assert!(total > 0.0);
+    }
+}
+
+#[test]
+fn single_item_pair_and_tiny_inputs() {
+    // n=2: one merge, any p.
+    let mut m2 = CondensedMatrix::zeros(2);
+    m2.set(0, 1, 3.0);
+    let run = ClusterConfig::new(Scheme::Complete, 4).run(&m2).unwrap();
+    assert_eq!(run.dendrogram.merges().len(), 1);
+    assert_eq!(run.dendrogram.merges()[0].height, 3.0);
+
+    // n=3 with p > cells.
+    let m3 = CondensedMatrix::from_fn(3, |i, j| (i + j) as f32 + 0.5);
+    let run = ClusterConfig::new(Scheme::Single, 64).run(&m3).unwrap();
+    assert_eq!(run.dendrogram.merges().len(), 2);
+    assert!(run.stats.p <= 3);
+}
+
+#[test]
+fn zero_distance_duplicates_cluster_first() {
+    // Duplicate points (distance 0) must merge first and not break ties.
+    let mut pts = GaussianSpec { n: 20, d: 3, k: 2, ..Default::default() }
+        .generate(9)
+        .points;
+    pts.push(pts[0].clone());
+    pts.push(pts[5].clone());
+    let m = euclidean_matrix(&pts);
+    let run = ClusterConfig::new(Scheme::Complete, 4).run(&m).unwrap();
+    let first = run.dendrogram.merges()[0];
+    assert_eq!(first.height, 0.0);
+    let serial = lancew::baselines::serial_lw::serial_lw_cluster(Scheme::Complete, &m);
+    lancew::validate::dendrograms_equal(&serial, &run.dendrogram, 0.0).unwrap();
+}
+
+#[test]
+fn gbe_model_penalizes_scale_more_than_ib() {
+    // On slow networks the optimum p shifts left (the paper's closing
+    // "any distributed network of workstations" caveat, quantified).
+    let m = matrix(160, 10);
+    let sim = |model: CostModel, p: usize| {
+        ClusterConfig::new(Scheme::Complete, p)
+            .with_cost_model(model)
+            .run(&m)
+            .unwrap()
+            .stats
+            .virtual_s
+    };
+    let ib16 = sim(CostModel::nehalem_cluster(), 16) / sim(CostModel::nehalem_cluster(), 1);
+    let gbe16 = sim(CostModel::gbe_now(), 16) / sim(CostModel::gbe_now(), 1);
+    assert!(gbe16 > ib16, "GbE should saturate earlier: ib {ib16} gbe {gbe16}");
+}

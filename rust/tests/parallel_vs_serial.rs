@@ -1,0 +1,126 @@
+//! Integration: the distributed protocol must reproduce the serial
+//! Lance-Williams recurrence EXACTLY (same f32 ops in the same order), for
+//! every scheme × rank count × partition strategy, on every workload type.
+
+use lancew::baselines::serial_lw::{serial_lw_cluster, verify_against_definition};
+use lancew::comm::CostModel;
+use lancew::prelude::*;
+use lancew::util::proptest::{gen, run as prop_run, Config};
+use lancew::validate::{ari, dendrograms_equal};
+
+fn gaussian_matrix(n: usize, seed: u64) -> CondensedMatrix {
+    let lp = GaussianSpec { n, d: 5, k: 4, ..Default::default() }.generate(seed);
+    euclidean_matrix(&lp.points)
+}
+
+#[test]
+fn exact_equality_schemes_by_ranks() {
+    let m = gaussian_matrix(48, 10);
+    for scheme in Scheme::all() {
+        let serial = serial_lw_cluster(*scheme, &m);
+        for p in [1usize, 2, 4, 7, 11] {
+            let run = ClusterConfig::new(*scheme, p).run(&m).unwrap();
+            dendrograms_equal(&serial, &run.dendrogram, 0.0)
+                .unwrap_or_else(|e| panic!("{scheme} p={p}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn exact_equality_all_partitions() {
+    let m = gaussian_matrix(36, 11);
+    for kind in [PartitionKind::BalancedCells, PartitionKind::WholeRows, PartitionKind::Cyclic] {
+        for scheme in [Scheme::Complete, Scheme::Ward] {
+            let serial = serial_lw_cluster(scheme, &m);
+            let run = ClusterConfig::new(scheme, 6)
+                .with_partition(kind)
+                .run(&m)
+                .unwrap();
+            dendrograms_equal(&serial, &run.dendrogram, 0.0)
+                .unwrap_or_else(|e| panic!("{kind:?} {scheme}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn equality_independent_of_cost_model() {
+    // The cost model shapes virtual time, never results.
+    let m = gaussian_matrix(30, 12);
+    let serial = serial_lw_cluster(Scheme::Average, &m);
+    for model in [CostModel::nehalem_cluster(), CostModel::gbe_now(), CostModel::zero_comm()] {
+        let run = ClusterConfig::new(Scheme::Average, 5)
+            .with_cost_model(model)
+            .run(&m)
+            .unwrap();
+        dendrograms_equal(&serial, &run.dendrogram, 0.0).unwrap();
+    }
+}
+
+#[test]
+fn property_random_matrices_all_schemes() {
+    prop_run(Config::cases(12), |rng| {
+        let n = rng.range(4, 40);
+        let p = rng.range(1, 9);
+        let cells = gen::distance_matrix(rng, n);
+        let m = CondensedMatrix::from_fn(n, |i, j| cells[i * n + j] as f32);
+        let scheme = Scheme::all()[rng.below(Scheme::all().len())];
+        let serial = serial_lw_cluster(scheme, &m);
+        let run = ClusterConfig::new(scheme, p).run(&m).unwrap();
+        dendrograms_equal(&serial, &run.dendrogram, 0.0)
+            .unwrap_or_else(|e| panic!("n={n} p={p} {scheme}: {e}"));
+    });
+}
+
+#[test]
+fn property_with_duplicate_distances() {
+    // Heavy ties stress the deterministic tie-break path.
+    prop_run(Config::cases(10), |rng| {
+        let n = rng.range(4, 24);
+        let p = rng.range(2, 7);
+        // Distances drawn from only 3 distinct values ⇒ many ties.
+        let vals = [1.0f32, 2.0, 3.0];
+        let m = CondensedMatrix::from_fn(n, |_, _| vals[rng.below(3)]);
+        let serial = serial_lw_cluster(Scheme::Complete, &m);
+        let run = ClusterConfig::new(Scheme::Complete, p).run(&m).unwrap();
+        dendrograms_equal(&serial, &run.dendrogram, 0.0)
+            .unwrap_or_else(|e| panic!("ties n={n} p={p}: {e}"));
+    });
+}
+
+#[test]
+fn rmsd_workload_end_to_end() {
+    let e = EnsembleSpec { n: 32, residues: 30, templates: 3, noise: 0.2, bend: 1.2 }.generate(13);
+    let m = rmsd_matrix(&e.structures);
+    let serial = serial_lw_cluster(Scheme::Complete, &m);
+    let run = ClusterConfig::new(Scheme::Complete, 5).run(&m).unwrap();
+    dendrograms_equal(&serial, &run.dendrogram, 0.0).unwrap();
+    // And the clustering is meaningful: recovers the fold templates.
+    let labels = run.dendrogram.cut(3);
+    assert!(ari(&labels, &e.labels) > 0.9, "ARI {}", ari(&labels, &e.labels));
+}
+
+#[test]
+fn distributed_heights_match_definition() {
+    // Transitively: distributed ≡ serial ≡ first-principles cluster
+    // distances (Table-1 semantics, not just self-consistency).
+    let m = gaussian_matrix(32, 14);
+    for scheme in [Scheme::Single, Scheme::Complete, Scheme::Average] {
+        let run = ClusterConfig::new(scheme, 4).run(&m).unwrap();
+        verify_against_definition(scheme, &m, &run.dendrogram, 1e-3)
+            .unwrap_or_else(|e| panic!("{scheme}: {e}"));
+    }
+}
+
+#[test]
+fn single_linkage_agrees_with_specialized_algorithms() {
+    // Distributed single-linkage ≡ SLINK ≡ Prim-MST (cophenetic).
+    let m = gaussian_matrix(40, 15);
+    let dist = ClusterConfig::new(Scheme::Single, 4).run(&m).unwrap().dendrogram;
+    let slink = lancew::baselines::slink::slink_dendrogram(&m);
+    let mst = lancew::baselines::mst_single::mst_single_linkage(&m);
+    let (a, b, c) = (dist.cophenetic(), slink.cophenetic(), mst.cophenetic());
+    for idx in 0..a.len() {
+        assert!((a.cells()[idx] - b.cells()[idx]).abs() < 1e-4);
+        assert!((b.cells()[idx] - c.cells()[idx]).abs() < 1e-4);
+    }
+}

@@ -1,0 +1,180 @@
+//! Integration: the PJRT runtime against the AOT artifacts — the rust
+//! side of the three-layer contract. Every test skips gracefully (with a
+//! loud marker) when `artifacts/` hasn't been built yet.
+
+use std::sync::Arc;
+
+use lancew::baselines::serial_lw::serial_lw_cluster;
+use lancew::coordinator::scalar_shard_min;
+use lancew::prelude::*;
+use lancew::runtime::XlaEngine;
+use lancew::validate::dendrograms_equal;
+
+fn engine() -> Option<Arc<XlaEngine>> {
+    match XlaEngine::load(&XlaEngine::default_dir()) {
+        Ok(e) => Some(Arc::new(e)),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_lists_required_artifacts() {
+    let Some(e) = engine() else { return };
+    let names: Vec<&str> = e.manifest().names().collect();
+    for required in ["shard_min_1024", "shard_min_65536", "lw_update_2048", "pairwise_256x32", "full_lw_complete_128"] {
+        assert!(names.contains(&required), "missing {required} in {names:?}");
+    }
+}
+
+#[test]
+fn shard_min_matches_scalar_across_sizes() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(1);
+    for len in [10usize, 1000, 1024, 5000, 16384] {
+        let mut shard: Vec<f32> = (0..len).map(|_| rng.f32() * 50.0).collect();
+        // Sprinkle retired cells.
+        for _ in 0..len / 5 {
+            let i = rng.below(len);
+            shard[i] = f32::INFINITY;
+        }
+        let (sv, si) = scalar_shard_min(&shard);
+        let (xv, xi) = e.shard_min(&shard).unwrap();
+        assert_eq!(si, xi, "len={len}");
+        assert_eq!(sv, xv, "len={len}");
+    }
+}
+
+#[test]
+fn shard_min_all_inf_sentinel() {
+    let Some(e) = engine() else { return };
+    let shard = vec![f32::INFINITY; 2048];
+    let (v, i) = e.shard_min(&shard).unwrap();
+    assert!(v.is_infinite());
+    assert_eq!(i, usize::MAX);
+}
+
+#[test]
+fn shard_min_tie_breaks_to_low_index() {
+    let Some(e) = engine() else { return };
+    let mut shard = vec![9.0f32; 4096];
+    shard[100] = 1.0;
+    shard[3000] = 1.0;
+    let (_, i) = e.shard_min(&shard).unwrap();
+    assert_eq!(i, 100);
+}
+
+#[test]
+fn lw_update_row_matches_rust_formula() {
+    let Some(e) = engine() else { return };
+    let mut rng = Rng::new(2);
+    let m = 777usize; // deliberately not a variant size (pads to 1024)
+    let d_ki: Vec<f32> = (0..m).map(|_| rng.f32() * 10.0).collect();
+    let d_kj: Vec<f32> = (0..m).map(|_| rng.f32() * 10.0).collect();
+    for scheme in [Scheme::Complete, Scheme::Single, Scheme::Average] {
+        // Per-k coefficient vectors as the distributed update would build.
+        let sizes: Vec<f32> = (0..m).map(|_| 1.0 + rng.below(5) as f32).collect();
+        let (n_i, n_j) = (2.0f32, 3.0f32);
+        let mut ai = Vec::with_capacity(m);
+        let mut aj = Vec::with_capacity(m);
+        let mut beta = Vec::with_capacity(m);
+        let mut gamma = 0.0f32;
+        for k in 0..m {
+            let c = scheme.coeffs(n_i, n_j, sizes[k]);
+            ai.push(c.alpha_i);
+            aj.push(c.alpha_j);
+            beta.push(c.beta);
+            gamma = c.gamma;
+        }
+        let d_ij = 1.75f32;
+        let xla = e.lw_update_row(&d_ki, &d_kj, &ai, &aj, &beta, gamma, d_ij).unwrap();
+        for k in 0..m {
+            let c = scheme.coeffs(n_i, n_j, sizes[k]);
+            let want = lancew::linkage::lw_update(c, d_ki[k], d_kj[k], d_ij);
+            assert!(
+                (xla[k] - want).abs() < 1e-5 * want.abs().max(1.0),
+                "{scheme} k={k}: {} vs {want}",
+                xla[k]
+            );
+        }
+    }
+}
+
+#[test]
+fn pairwise_matches_rust() {
+    let Some(e) = engine() else { return };
+    let pts = GaussianSpec { n: 256, d: 32, k: 4, ..Default::default() }.generate(4);
+    let flat: Vec<f32> = pts.points.iter().flat_map(|p| p.iter().map(|&v| v as f32)).collect();
+    let full = e.pairwise(&flat, 256, 32).unwrap();
+    let want = euclidean_matrix(&pts.points);
+    for i in 0..256 {
+        assert!(full[i * 256 + i].is_infinite(), "diagonal must be +inf");
+        for j in (i + 1)..256 {
+            let d = full[i * 256 + j];
+            assert!(
+                (d - want.get(i, j)).abs() < 2e-3 * want.get(i, j).max(1.0),
+                "({i},{j}): {d} vs {}",
+                want.get(i, j)
+            );
+        }
+    }
+}
+
+#[test]
+fn full_lw_single_call_matches_serial() {
+    let Some(e) = engine() else { return };
+    for (scheme, scheme_name) in [(Scheme::Complete, "complete"), (Scheme::Single, "single"), (Scheme::Average, "average")] {
+        let n = 64usize;
+        let lp = GaussianSpec { n, d: 4, k: 4, ..Default::default() }.generate(5);
+        let m = euclidean_matrix(&lp.points);
+        let mut dmat = m.to_full(f32::INFINITY);
+        for i in 0..n {
+            dmat[i * n + i] = f32::INFINITY;
+        }
+        let res = e.full_lw(scheme_name, &dmat, n, n).unwrap();
+        let serial = serial_lw_cluster(scheme, &m);
+        dendrograms_equal(&serial, &res.dendrogram, 1e-4)
+            .unwrap_or_else(|err| panic!("{scheme_name}: {err}"));
+    }
+}
+
+#[test]
+fn full_lw_with_padding_slots() {
+    let Some(e) = engine() else { return };
+    let (n_pad, n_real) = (64usize, 41usize);
+    let lp = GaussianSpec { n: n_real, d: 4, k: 3, ..Default::default() }.generate(6);
+    let m = euclidean_matrix(&lp.points);
+    let mut dmat = vec![f32::INFINITY; n_pad * n_pad];
+    for i in 0..n_real {
+        for j in 0..n_real {
+            if i != j {
+                dmat[i * n_pad + j] = m.get(i, j);
+            }
+        }
+    }
+    let res = e.full_lw("complete", &dmat, n_pad, n_real).unwrap();
+    let serial = serial_lw_cluster(Scheme::Complete, &m);
+    dendrograms_equal(&serial, &res.dendrogram, 1e-4).unwrap();
+}
+
+#[test]
+fn xla_engine_inside_coordinator() {
+    let Some(e) = engine() else { return };
+    let lp = GaussianSpec { n: 96, d: 4, k: 4, ..Default::default() }.generate(7);
+    let m = euclidean_matrix(&lp.points);
+    let serial = serial_lw_cluster(Scheme::Complete, &m);
+    let run = ClusterConfig::new(Scheme::Complete, 3)
+        .with_engine(lancew::coordinator::Engine::Xla(e))
+        .run(&m)
+        .unwrap();
+    dendrograms_equal(&serial, &run.dendrogram, 0.0).unwrap();
+}
+
+#[test]
+fn oversize_shard_errors_cleanly() {
+    let Some(e) = engine() else { return };
+    let shard = vec![1.0f32; 100_000]; // > largest variant (65536)
+    assert!(e.shard_min(&shard).is_err());
+}
