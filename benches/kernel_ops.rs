@@ -123,6 +123,59 @@ fn main() -> anyhow::Result<()> {
         println!("  xla:    {xla_t:.6} s/matrix (interpret-mode pallas on CPU)");
     }
 
+    println!("\n# K1d: step-1 strategy A/B — full rescan vs ShardStore tournament tree");
+    println!("# Protocol-shaped loop: find min, retire it, LW-touch one random cell.");
+    println!(
+        "{:>9} {:>8} {:>14} {:>14} {:>7} {:>14} {:>14}",
+        "cells", "iters", "full_s", "indexed_s", "gain", "full_touch", "idx_touch"
+    );
+    for size in [4096usize, 16384, 65536] {
+        let base: Vec<f32> = (0..size).map(|_| rng.f32() * 100.0).collect();
+        let iters = size / 16; // enough retires to expose the decreasing-m sum
+        let touch: Vec<usize> = (0..iters).map(|_| rng.below(size)).collect();
+
+        // A: rescan the whole vector every iteration (the seed's step 1).
+        let mut cells = base.clone();
+        let mut full_touched = 0u64;
+        let t = Instant::now();
+        for &u in &touch {
+            let (_, idx) = scalar_shard_min(&cells);
+            full_touched += size as u64;
+            cells[idx] = f32::INFINITY; // retire the winner
+            if cells[u].is_finite() {
+                cells[u] += 0.25; // stand-in LW update
+            }
+        }
+        let full_t = t.elapsed().as_secs_f64() / iters as f64;
+        std::hint::black_box(&cells);
+
+        // B: tournament tree — O(1) query, O(log m) per write.
+        let mut store = ShardStore::new(base.clone(), true);
+        let t = Instant::now();
+        for &u in &touch {
+            let (_, idx) = store.indexed_min();
+            store.retire(idx);
+            if store.get(u).is_finite() {
+                let v = store.get(u) + 0.25;
+                store.set(u, v);
+            }
+        }
+        let idx_t = t.elapsed().as_secs_f64() / iters as f64;
+        let idx_touched = iters as u64 + store.take_index_ops();
+        std::hint::black_box(&store);
+
+        println!(
+            "{:>9} {:>8} {:>14.9} {:>14.9} {:>6.1}x {:>14} {:>14}",
+            size,
+            iters,
+            full_t,
+            idx_t,
+            full_t / idx_t,
+            full_touched,
+            idx_touched
+        );
+    }
+
     println!("\n# cost-model calibration note: per_cell=1ns assumes ~1e9 cells/s;");
     println!("# compare against the scalar cells/s column above (EXPERIMENTS.md §Perf).");
     Ok(())

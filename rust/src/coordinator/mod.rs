@@ -23,7 +23,7 @@ use crate::runtime::XlaEngine;
 use protocol::ProtoMsg;
 use worker::{worker_main, WorkerCtx};
 
-/// How each rank executes its per-iteration compute (step 1 min-scan).
+/// How a `Full` rescan executes (step 1 min-scan over the whole shard).
 #[derive(Clone, Default)]
 pub enum Engine {
     /// Pure-rust scalar scan (default; fastest on CPU).
@@ -45,6 +45,37 @@ impl Engine {
                 .shard_min(shard)
                 .unwrap_or_else(|_| scalar_shard_min(shard)),
         }
+    }
+}
+
+/// How each rank answers the per-iteration step-1 question "minimum live
+/// cell + lowest global index".
+///
+/// * `Full` — the paper-faithful O(m/p) rescan of the whole shard each
+///   iteration, executed by an [`Engine`] (scalar or XLA). Default.
+/// * `Indexed` — the [`crate::matrix::ShardStore`] tournament tree: O(1)
+///   root read per iteration, O(log m) maintenance per retire/LW-update.
+///   Kills the O(n³/p) aggregate scan term (EXPERIMENTS.md §Scan-strategy
+///   A/B) while producing bitwise-identical dendrograms — ties still
+///   resolve to the lowest condensed index.
+#[derive(Clone)]
+pub enum ScanStrategy {
+    /// Rescan every cell, every iteration (§5.3 step 1 as written).
+    Full(Engine),
+    /// Read the tournament-tree root; pay O(log m) on each write instead.
+    Indexed,
+}
+
+impl Default for ScanStrategy {
+    fn default() -> Self {
+        ScanStrategy::Full(Engine::Scalar)
+    }
+}
+
+impl ScanStrategy {
+    /// Whether the worker should build the min-tracking index.
+    pub fn wants_index(&self) -> bool {
+        matches!(self, ScanStrategy::Indexed)
     }
 }
 
@@ -107,7 +138,7 @@ pub struct ClusterConfig {
     pub p: usize,
     pub partition: PartitionKind,
     pub cost_model: CostModel,
-    pub engine: Engine,
+    pub scan: ScanStrategy,
     /// Paper-faithful naive fan-outs, or binomial trees (extension).
     pub collectives: Collectives,
 }
@@ -119,7 +150,7 @@ impl ClusterConfig {
             p,
             partition: PartitionKind::BalancedCells,
             cost_model: CostModel::nehalem_cluster(),
-            engine: Engine::Scalar,
+            scan: ScanStrategy::default(),
             collectives: Collectives::Naive,
         }
     }
@@ -139,8 +170,14 @@ impl ClusterConfig {
         self
     }
 
-    pub fn with_engine(mut self, e: Engine) -> Self {
-        self.engine = e;
+    /// Select the `Full`-rescan executor (kept for API continuity; sugar
+    /// for `with_scan(ScanStrategy::Full(e))`).
+    pub fn with_engine(self, e: Engine) -> Self {
+        self.with_scan(ScanStrategy::Full(e))
+    }
+
+    pub fn with_scan(mut self, s: ScanStrategy) -> Self {
+        self.scan = s;
         self
     }
 
@@ -172,7 +209,7 @@ impl ClusterConfig {
             let ctx = WorkerCtx {
                 scheme: self.scheme,
                 partition: partition.clone(),
-                engine: self.engine.clone(),
+                scan: self.scan.clone(),
                 collectives: self.collectives,
             };
             let src = (ep.rank() == 0).then(|| source.clone());
@@ -185,16 +222,21 @@ impl ClusterConfig {
         outputs.sort_by_key(|o| o.rank);
         let wall_s = timer.elapsed_s();
 
-        // Every rank derived the same merge list; take rank 0's and verify
-        // agreement (cheap, and a strong protocol invariant).
-        let merges = outputs[0].merges.clone();
+        // Every rank derived the same merge sequence; each folded it into
+        // an FNV-1a digest as it went, so agreement is a p-way u64 compare
+        // — no per-rank merge lists are materialized or cloned. Only rank
+        // 0 carries the actual list, moved (not copied) into the result.
+        let digest0 = outputs[0].merge_digest;
         for o in &outputs[1..] {
             anyhow::ensure!(
-                o.merges == merges,
-                "rank {} diverged from rank 0 merge sequence",
-                o.rank
+                o.merge_digest == digest0,
+                "rank {} diverged from rank 0 merge sequence \
+                 (digest {:#018x} != {digest0:#018x})",
+                o.rank,
+                o.merge_digest,
             );
         }
+        let merges = std::mem::take(&mut outputs[0].merges);
         let dendrogram = Dendrogram::new(n, merges);
 
         let stats = RunStats {
@@ -206,6 +248,7 @@ impl ClusterConfig {
             bytes_sent: outputs.iter().map(|o| o.bytes_sent).sum(),
             cells_scanned: outputs.iter().map(|o| o.cells_scanned).sum(),
             cells_updated: outputs.iter().map(|o| o.cells_updated).sum(),
+            index_ops: outputs.iter().map(|o| o.index_ops).sum(),
             peak_shard_cells: outputs.iter().map(|o| o.shard_cells).max().unwrap_or(0),
             p,
             n,
@@ -277,6 +320,41 @@ mod tests {
             dendrograms_equal(&serial, &run.dendrogram, 0.0)
                 .unwrap_or_else(|e| panic!("{kind:?}: {e}"));
         }
+    }
+
+    #[test]
+    fn indexed_scan_matches_serial_exactly() {
+        let m = sample(30, 1);
+        for scheme in Scheme::all() {
+            let serial = serial_lw_cluster(*scheme, &m);
+            let run = ClusterConfig::new(*scheme, 4)
+                .with_scan(ScanStrategy::Indexed)
+                .run(&m)
+                .unwrap();
+            dendrograms_equal(&serial, &run.dendrogram, 0.0)
+                .unwrap_or_else(|e| panic!("indexed {scheme}: {e}"));
+        }
+    }
+
+    #[test]
+    fn indexed_scan_touches_fewer_cells() {
+        let m = sample(80, 4);
+        let full = ClusterConfig::new(Scheme::Complete, 4).run(&m).unwrap();
+        let idx = ClusterConfig::new(Scheme::Complete, 4)
+            .with_scan(ScanStrategy::Indexed)
+            .run(&m)
+            .unwrap();
+        crate::validate::dendrograms_equal(&full.dendrogram, &idx.dendrogram, 0.0).unwrap();
+        // One root read per rank per iteration vs a live-cell rescan.
+        assert!(
+            idx.stats.cells_scanned < full.stats.cells_scanned / 5,
+            "indexed {} vs full {}",
+            idx.stats.cells_scanned,
+            full.stats.cells_scanned
+        );
+        // And the maintenance price is visible, not hidden.
+        assert!(idx.stats.index_ops > 0);
+        assert_eq!(full.stats.index_ops, 0);
     }
 
     #[test]

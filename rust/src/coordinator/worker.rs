@@ -3,31 +3,44 @@
 //!
 //! Every rank holds only its shard of the condensed matrix (`(n²−n)/2 / p`
 //! cells) plus O(n) replicated metadata (cluster sizes, liveness) — the
-//! storage claim of §5.4. Merge decisions are replicated deterministically
+//! storage claim of §5.4. The shard lives in a [`ShardStore`]: under
+//! [`ScanStrategy::Full`] it is the paper's raw cell vector with `+inf`
+//! retire sentinels, rescanned whole each iteration; under
+//! [`ScanStrategy::Indexed`] the store also maintains a tournament tree so
+//! step 1 reads the root instead of rescanning (EXPERIMENTS.md
+//! §Scan-strategy A/B). Merge decisions are replicated deterministically
 //! on every rank (step 4 "communication is unnecessary at this step"), so
-//! any rank can reconstruct the dendrogram; rank 0's copy is returned.
+//! any rank can reconstruct the dendrogram; rank 0's copy is returned and
+//! the other ranks contribute only an FNV digest for the agreement check.
 
 use std::sync::Arc;
 
 use crate::comm::{Collectives, Endpoint};
 use crate::coordinator::protocol::{exchange_minima, tag, Phase, ProtoMsg, DIST_TAG};
 use crate::coordinator::source::{DistSource, SourceKind};
-use crate::coordinator::Engine;
+use crate::coordinator::ScanStrategy;
 use crate::dendrogram::Merge;
 use crate::linkage::{lw_update, Scheme};
-use crate::matrix::{condensed_index, condensed_pair, Partition};
+use crate::matrix::{condensed_index, condensed_pair, Partition, ShardStore};
 use crate::metrics::PhaseBreakdown;
+use crate::util::fnv::Fnv64;
 
 /// Per-worker results returned to the driver.
 pub struct WorkerOutput {
     pub rank: usize,
+    /// The merge list — materialized on rank 0 only; other ranks return
+    /// an empty vec plus `merge_digest` for the agreement check.
     pub merges: Vec<Merge>,
+    /// FNV-1a digest of the full (i, j, height) merge sequence.
+    pub merge_digest: u64,
     pub virtual_s: f64,
     pub phases: PhaseBreakdown,
     pub msgs_sent: u64,
     pub bytes_sent: u64,
     pub cells_scanned: u64,
     pub cells_updated: u64,
+    /// Tournament-tree maintenance writes (0 under `ScanStrategy::Full`).
+    pub index_ops: u64,
     pub shard_cells: usize,
 }
 
@@ -36,7 +49,7 @@ pub struct WorkerOutput {
 pub struct WorkerCtx {
     pub scheme: Scheme,
     pub partition: Partition,
-    pub engine: Engine,
+    pub scan: ScanStrategy,
     pub collectives: Collectives,
 }
 
@@ -60,7 +73,7 @@ pub fn worker_main(
 
     // ---- Initial distribution / distributed build ----------------------
     let t_build = ep.clock.now();
-    let mut shard: Vec<f32> = if me == 0 {
+    let cells: Vec<f32> = if me == 0 {
         let src = source.expect("rank 0 needs the data source");
         match src.to_wire() {
             None => {
@@ -97,7 +110,14 @@ pub fn worker_main(
             other => panic!("protocol error: expected Shard|Dataset, got {other:?}"),
         }
     };
+    // The store owns the cells from here on; every read and write — the
+    // step-1 scan, the 6a retires, the 6b LW updates — goes through it.
+    // Building the index costs O(m/p) once, charged like a shard pass.
+    let mut shard = ShardStore::new(cells, ctx.scan.wants_index());
     let shard_cells = shard.len();
+    if shard.is_indexed() {
+        ep.compute(shard_cells);
+    }
     phases.build = ep.clock.now() - t_build;
     // Global index of each local cell (the paper sends "the (i,j) global
     // matrix indices for their data portion"); for our partition kinds
@@ -108,11 +128,12 @@ pub fn worker_main(
     // every rank walks identical k-order (deterministic triple batching).
     let mut sizes = vec![1.0f32; n];
     let mut alive_list: Vec<usize> = (0..n).collect();
-    let mut active_cells = shard.len() as u64;
 
-    let mut merges: Vec<Merge> = Vec::with_capacity(n - 1);
+    let mut merges: Vec<Merge> = if me == 0 { Vec::with_capacity(n - 1) } else { Vec::new() };
+    let mut merge_digest = Fnv64::new();
     let mut cells_scanned = 0u64;
     let mut cells_updated = 0u64;
+    let mut index_ops = 0u64;
 
     // Hot-loop buffers hoisted out of the iteration (perf pass,
     // EXPERIMENTS.md §Perf: no allocation on the per-merge path).
@@ -123,11 +144,23 @@ pub fn worker_main(
     for iter in 0..(n - 1) {
         // ---- Step 1: local minimum over my shard ----------------------
         let t0 = ep.clock.now();
-        let (lmin, lidx) = ctx.engine.shard_min(&shard);
-        // Cost: the scan touches the live cells (retired ones are inf and
-        // shrink the effective matrix, §5.4's decreasing m).
-        ep.compute(active_cells as usize);
-        cells_scanned += active_cells;
+        let (lmin, lidx) = match &ctx.scan {
+            ScanStrategy::Full(engine) => {
+                // Cost: the scan touches the live cells (retired ones are
+                // inf and shrink the effective matrix, §5.4's decreasing m).
+                ep.compute(shard.live() as usize);
+                cells_scanned += shard.live();
+                engine.shard_min(shard.cells())
+            }
+            ScanStrategy::Indexed => {
+                // O(1): the tree root already holds (min, lowest offset).
+                // The scan's cost moved to the O(log m) write maintenance,
+                // charged in the update phase below.
+                ep.compute(1);
+                cells_scanned += 1;
+                shard.indexed_min()
+            }
+        };
         let global_idx = if lidx == usize::MAX {
             u64::MAX
         } else {
@@ -159,23 +192,27 @@ pub fn worker_main(
         // (k, D_kj) to the owner of (k,i) — batched per destination.
         // Receivers know exactly who will message them (ownership is a
         // pure function): collect the distinct source set for my cells.
+        // Both cell sequences ascend with k (fixed other endpoint), so
+        // owner lookups ride two monotone cursors instead of a binary
+        // search per cell.
         for b in outbound.iter_mut() {
             b.clear();
         }
         expect_from.fill(false);
         local_dkj.clear();
 
+        let mut cur_kj = part.owner_cursor();
+        let mut cur_ki = part.owner_cursor();
         for &k in &alive_list {
             if k == i || k == j {
                 continue;
             }
             let cell_kj = condensed_index(n, k.min(j), k.max(j));
             let cell_ki = condensed_index(n, k.min(i), k.max(i));
-            let owner_kj = part.owner(cell_kj);
-            let owner_ki = part.owner(cell_ki);
+            let (owner_kj, off_kj) = cur_kj.locate(cell_kj);
+            let owner_ki = cur_ki.owner(cell_ki);
             if owner_kj == me {
-                let off = part.local_offset(cell_kj);
-                let v = shard[off];
+                let v = shard.get(off_kj);
                 if owner_ki == me {
                     local_dkj.push((k as u32, v));
                 } else {
@@ -183,8 +220,7 @@ pub fn worker_main(
                 }
                 // "The sending processors mark the sent matrix elements as
                 // erased not to be used again."
-                shard[off] = f32::INFINITY;
-                active_cells -= 1;
+                shard.retire(off_kj);
             } else if owner_ki == me {
                 expect_from[owner_kj] = true;
             }
@@ -193,8 +229,7 @@ pub fn worker_main(
         {
             let cell_ij = condensed_index(n, i, j);
             if part.owner(cell_ij) == me {
-                shard[part.local_offset(cell_ij)] = f32::INFINITY;
-                active_cells -= 1;
+                shard.retire(part.local_offset(cell_ij));
             }
         }
         let ttag = tag(iter, Phase::Triples);
@@ -206,27 +241,47 @@ pub fn worker_main(
         }
 
         // 6b: apply the LW formula for every (k, D_kj) that reaches me.
+        // Each triple list (local and per-source) ascends in k, so cell
+        // (k,i) ascends too — a fresh cursor per list resolves offsets
+        // without per-triple binary searches. Body duplicated rather than
+        // closured: the hot loop borrows shard, sizes, and a cursor at
+        // once, and plain loops keep those borrows trivially disjoint.
         let (n_i, n_j) = (sizes[i], sizes[j]);
-        let apply = |shard: &mut [f32], k: u32, d_kj: f32, updated: &mut u64| {
+        let mut cur = part.owner_cursor();
+        for &(k, d_kj) in &local_dkj {
             let k = k as usize;
             let cell_ki = condensed_index(n, k.min(i), k.max(i));
-            debug_assert_eq!(part.owner(cell_ki), me);
-            let off = part.local_offset(cell_ki);
+            let (owner, off) = cur.locate(cell_ki);
+            debug_assert_eq!(owner, me);
             let c = ctx.scheme.coeffs(n_i, n_j, sizes[k]);
-            shard[off] = lw_update(c, shard[off], d_kj, d_ij);
-            *updated += 1;
-        };
-        for &(k, v) in &local_dkj {
-            apply(&mut shard, k, v, &mut cells_updated);
+            let v = lw_update(c, shard.get(off), d_kj, d_ij);
+            shard.set(off, v);
+            cells_updated += 1;
         }
         for src in 0..p {
             if expect_from[src] {
                 let triples = ep.recv(src, ttag).expect_triples();
                 ep.compute(triples.len());
-                for (k, v) in triples {
-                    apply(&mut shard, k, v, &mut cells_updated);
+                let mut cur = part.owner_cursor();
+                for (k, d_kj) in triples {
+                    let k = k as usize;
+                    let cell_ki = condensed_index(n, k.min(i), k.max(i));
+                    let (owner, off) = cur.locate(cell_ki);
+                    debug_assert_eq!(owner, me);
+                    let c = ctx.scheme.coeffs(n_i, n_j, sizes[k]);
+                    let v = lw_update(c, shard.get(off), d_kj, d_ij);
+                    shard.set(off, v);
+                    cells_updated += 1;
                 }
             }
+        }
+        // Charge this iteration's index maintenance (retires + updates) to
+        // the virtual clock — the Indexed strategy is not free, it trades
+        // the O(m/p) rescan for O(log m) per write.
+        let maint = shard.take_index_ops();
+        if maint > 0 {
+            ep.compute(maint as usize);
+            index_ops += maint;
         }
 
         // Replicated metadata update (identical on every rank).
@@ -234,19 +289,25 @@ pub fn worker_main(
         sizes[j] = 0.0;
         let pos = alive_list.binary_search(&j).expect("j was alive");
         alive_list.remove(pos);
-        merges.push(Merge { i, j, height: d_ij });
+        merge_digest.write_u64(((i as u64) << 32) | j as u64);
+        merge_digest.write_u64(d_ij.to_bits() as u64);
+        if me == 0 {
+            merges.push(Merge { i, j, height: d_ij });
+        }
         phases.update += ep.clock.now() - t2;
     }
 
     WorkerOutput {
         rank: me,
         merges,
+        merge_digest: merge_digest.finish(),
         virtual_s: ep.clock.now(),
         phases,
         msgs_sent: ep.traffic.msgs_sent,
         bytes_sent: ep.traffic.bytes_sent,
         cells_scanned,
         cells_updated,
+        index_ops,
         shard_cells,
     }
 }
@@ -276,6 +337,7 @@ fn build_shard(
 #[cfg(test)]
 mod tests {
     // The worker is exercised end-to-end through `coordinator::run` —
-    // see coordinator/mod.rs tests and rust/tests/parallel_vs_serial.rs;
+    // see coordinator/mod.rs tests and rust/tests/parallel_vs_serial.rs
+    // (including the ScanStrategy::Indexed ≡ Full equivalence suite);
     // the build path additionally via coordinator::tests::distributed_build_*.
 }

@@ -46,10 +46,10 @@ pub mod validate;
 pub mod prelude {
     pub use crate::baselines::serial_lw::serial_lw_cluster;
     pub use crate::comm::CostModel;
-    pub use crate::coordinator::{ClusterConfig, ClusterRun, DistSource, Engine};
+    pub use crate::coordinator::{ClusterConfig, ClusterRun, DistSource, Engine, ScanStrategy};
     pub use crate::data::{euclidean_matrix, rmsd_matrix, EnsembleSpec, GaussianSpec};
     pub use crate::dendrogram::{Dendrogram, Merge};
     pub use crate::linkage::Scheme;
-    pub use crate::matrix::{CondensedMatrix, Partition, PartitionKind};
+    pub use crate::matrix::{CondensedMatrix, Partition, PartitionKind, ShardStore};
     pub use crate::util::rng::Rng;
 }

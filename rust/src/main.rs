@@ -14,7 +14,7 @@ use std::path::PathBuf;
 
 use lancew::baselines::serial_lw::{serial_lw_cluster, verify_against_definition};
 use lancew::comm::CostModel;
-use lancew::coordinator::{ClusterConfig, DistSource, Engine};
+use lancew::coordinator::{ClusterConfig, DistSource, Engine, ScanStrategy};
 use lancew::data::{euclidean_matrix, io, rmsd_matrix, EnsembleSpec, GaussianSpec};
 use lancew::linkage::Scheme;
 use lancew::matrix::PartitionKind;
@@ -50,8 +50,8 @@ fn print_help() {
          \n\
          cluster  --n 200 | --matrix file.bin | --conformations\n\
          \x20        --scheme complete --p 8 --partition paper --cost-model nehalem\n\
-         \x20        --cut 5 --engine scalar|xla --seed 42 --newick out.nwk\n\
-         \x20        --ascii --linkage z.csv (scipy linkage matrix)\n\
+         \x20        --cut 5 --scan full|indexed --engine scalar|xla --seed 42\n\
+         \x20        --newick out.nwk --ascii --linkage z.csv (scipy linkage matrix)\n\
          validate --n 60 --trials 5 --seed 1\n\
          fig2     --n 512 --ps 1,2,4,8,16,24 --scheme complete\n\
          gen      --kind gaussian|conformations --n 200 --out data.bin --seed 7\n\
@@ -98,13 +98,30 @@ fn make_engine(args: &Args) -> anyhow::Result<Engine> {
     }
 }
 
+/// `--scan full` (default, paper-faithful rescan via `--engine`) or
+/// `--scan indexed` (the ShardStore tournament tree; no engine applies —
+/// there is nothing left to rescan).
+fn make_scan(args: &Args) -> anyhow::Result<ScanStrategy> {
+    match args.get("scan").unwrap_or("full") {
+        "full" => Ok(ScanStrategy::Full(make_engine(args)?)),
+        "indexed" => {
+            anyhow::ensure!(
+                args.get("engine").is_none(),
+                "--scan indexed does not take --engine (the tree index replaces the scan kernel)"
+            );
+            Ok(ScanStrategy::Indexed)
+        }
+        other => anyhow::bail!("unknown scan strategy {other:?} (full|indexed)"),
+    }
+}
+
 fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     let (source, truth) = load_source(args)?;
     let scheme: Scheme = args.get("scheme").unwrap_or("complete").parse()?;
     let p: usize = args.parse_or("p", 4usize)?;
     let partition: PartitionKind = args.get("partition").unwrap_or("paper").parse()?;
     let cost_model: CostModel = args.get("cost-model").unwrap_or("nehalem").parse()?;
-    let engine = make_engine(args)?;
+    let scan = make_scan(args)?;
     let cut: usize = args.parse_or("cut", 0usize)?;
     let newick = args.get("newick").map(PathBuf::from);
     let linkage_out = args.get("linkage").map(PathBuf::from);
@@ -114,7 +131,7 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     let run = ClusterConfig::new(scheme, p)
         .with_partition(partition)
         .with_cost_model(cost_model)
-        .with_engine(engine)
+        .with_scan(scan)
         .run_source(source.clone())?;
 
     println!("{}", run.stats.summary());

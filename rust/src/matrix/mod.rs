@@ -3,6 +3,8 @@
 
 mod condensed;
 mod partition;
+mod shard;
 
 pub use condensed::{CondensedMatrix, condensed_index, condensed_len, condensed_pair};
-pub use partition::{Partition, PartitionKind};
+pub use partition::{OwnerCursor, Partition, PartitionKind};
+pub use shard::ShardStore;

@@ -159,6 +159,10 @@ impl Partition {
     }
 
     /// Global condensed index of local cell `off` on rank `r`.
+    ///
+    /// Strictly increasing in `off` for every [`PartitionKind`] —
+    /// [`crate::matrix::ShardStore`]'s tie-break (lowest local offset)
+    /// relies on this to mean "lowest global index" within a rank.
     #[inline]
     pub fn global_index(&self, r: usize, off: usize) -> usize {
         match self.kind {
@@ -183,6 +187,62 @@ impl Partition {
     /// paper's §5.4 bounds as O(n²/p).
     pub fn max_shard_len(&self) -> usize {
         (0..self.p).map(|r| self.shard_len(r)).max().unwrap_or(0)
+    }
+
+    /// Start a monotone ownership walk (see [`OwnerCursor`]).
+    #[inline]
+    pub fn owner_cursor(&self) -> OwnerCursor<'_> {
+        OwnerCursor { part: self, rank: 0 }
+    }
+}
+
+/// Amortized-O(1) owner lookup for a *non-decreasing* sequence of cell
+/// indices, precomputed from the partition's chunk boundaries.
+///
+/// The step-6a hot path visits the cells `(k,j)` and `(k,i)` for every
+/// live `k` in ascending order; `condensed_index` is strictly increasing
+/// in `k` for a fixed other endpoint, so the owning rank only ever moves
+/// forward. A cursor replaces the per-cell `Partition::owner` binary
+/// search (O(log p) each, O(n·log p) per iteration) with a single forward
+/// sweep of the `starts` table per iteration.
+#[derive(Clone, Debug)]
+pub struct OwnerCursor<'a> {
+    part: &'a Partition,
+    rank: usize,
+}
+
+impl OwnerCursor<'_> {
+    /// Owner of `idx`. `idx` must be ≥ every index previously passed to
+    /// this cursor (checked in debug builds against the rank going stale).
+    #[inline]
+    pub fn owner(&mut self, idx: usize) -> usize {
+        match self.part.kind {
+            PartitionKind::Cyclic => idx % self.part.p,
+            _ => {
+                debug_assert!(idx < self.part.len());
+                debug_assert!(
+                    self.part.starts[self.rank] <= idx,
+                    "OwnerCursor queried out of order: idx {idx} before chunk start {}",
+                    self.part.starts[self.rank]
+                );
+                while self.part.starts[self.rank + 1] <= idx {
+                    self.rank += 1;
+                }
+                self.rank
+            }
+        }
+    }
+
+    /// Owner and local shard offset of `idx` in one step.
+    #[inline]
+    pub fn locate(&mut self, idx: usize) -> (usize, usize) {
+        match self.part.kind {
+            PartitionKind::Cyclic => (idx % self.part.p, idx / self.part.p),
+            _ => {
+                let r = self.owner(idx);
+                (r, idx - self.part.starts[r])
+            }
+        }
     }
 }
 
@@ -284,6 +344,58 @@ mod tests {
             let first = part.global_index(r, 0);
             let (i, j) = crate::matrix::condensed_pair(n, first);
             assert_eq!(j, i + 1, "rank {r} starts mid-row at ({i},{j})");
+        }
+    }
+
+    #[test]
+    fn owner_cursor_matches_owner_property() {
+        // The cursor must agree with the binary-search owner() on every
+        // ascending index sequence, for every kind — including the step-6a
+        // access pattern (cells (k,j) for ascending live k).
+        run(Config::cases(40), |rng| {
+            let n = rng.range(2, 60);
+            let p = rng.range(1, 12);
+            for kind in [
+                PartitionKind::BalancedCells,
+                PartitionKind::WholeRows,
+                PartitionKind::Cyclic,
+            ] {
+                let part = Partition::new(kind, n, p);
+                let mut cur = part.owner_cursor();
+                for idx in 0..part.len() {
+                    let r = part.owner(idx);
+                    assert_eq!(cur.owner(idx), r, "{kind:?} n={n} p={p} idx={idx}");
+                }
+                // locate() = (owner, local_offset), on a sparse walk.
+                let mut cur = part.owner_cursor();
+                let mut idx = 0;
+                while idx < part.len() {
+                    assert_eq!(
+                        cur.locate(idx),
+                        (part.owner(idx), part.local_offset(idx)),
+                        "{kind:?} n={n} p={p} idx={idx}"
+                    );
+                    idx += 1 + rng.below(5);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn condensed_cells_ascend_for_fixed_endpoint() {
+        // The monotonicity the worker's cursors rely on: for fixed j, the
+        // condensed index of (min(k,j), max(k,j)) strictly increases as k
+        // ascends over 0..n \ {j}.
+        let n = 17;
+        for j in 0..n {
+            let mut last = None;
+            for k in (0..n).filter(|&k| k != j) {
+                let idx = crate::matrix::condensed_index(n, k.min(j), k.max(j));
+                if let Some(prev) = last {
+                    assert!(idx > prev, "j={j} k={k}: {idx} !> {prev}");
+                }
+                last = Some(idx);
+            }
         }
     }
 

@@ -1,0 +1,320 @@
+//! Per-rank shard storage with an optional min-tracking index.
+//!
+//! The seed implementation kept each rank's shard as a bare `Vec<f32>`
+//! with `+inf` marking retired cells, and step 1 of the §5.3 protocol
+//! rescanned the whole vector every iteration — O(m/p) per iteration,
+//! O(n³/p) aggregate, the dominant cost in the paper's own runtime
+//! figures. [`ShardStore`] owns the cells plus their live count and,
+//! when built indexed, maintains a *tournament tree* (segment-min tree)
+//! over them so the per-iteration question "minimum value + lowest
+//! index" is answered in O(1) from the root, with O(log m) maintenance
+//! per retire/update (see EXPERIMENTS.md §Scan-strategy A/B).
+//!
+//! ## Tie-breaking
+//!
+//! The distributed protocol resolves equal minima toward the *lowest
+//! global condensed index* so every rank picks the same winner and
+//! dendrograms stay bitwise identical to the serial baseline. Inside one
+//! rank, [`Partition::global_index`](super::Partition::global_index) is
+//! strictly increasing in the local offset for every [`PartitionKind`]
+//! (contiguous chunks: `starts[r] + off`; cyclic: `off·p + r`), so
+//! "lowest global index" reduces to "lowest local offset". The tree
+//! encodes that by preferring the *left* child on equal values; leaves
+//! are stored in local-offset order.
+//!
+//! [`PartitionKind`]: super::PartitionKind
+
+/// A rank's shard of the condensed matrix: the cells, their live count,
+/// and (optionally) a segment-min index over them.
+///
+/// All mutation goes through [`set`](Self::set) / [`retire`](Self::retire)
+/// so the index can never go stale. Retired cells hold `+inf` — the same
+/// sentinel the L1 kernels and the dense [`CondensedMatrix`] use.
+///
+/// [`CondensedMatrix`]: super::CondensedMatrix
+#[derive(Clone, Debug)]
+pub struct ShardStore {
+    cells: Vec<f32>,
+    /// Cells not yet retired. Starts at `cells.len()` (protocol inputs are
+    /// finite distances) and decrements on every `retire`.
+    live: u64,
+    indexed: bool,
+    /// Tournament tree, 1-based heap layout: `tree[1]` is the overall
+    /// (min value, local offset); leaves live at `[leaf_base, leaf_base+m)`.
+    /// Empty unless `indexed` and the shard is non-empty.
+    tree: Vec<(f32, u32)>,
+    leaf_base: usize,
+    /// Tree nodes rewritten per retire/update: log₂(leaf_base) + 1.
+    path_len: u64,
+    /// Maintenance cost units accrued since the last
+    /// [`take_index_ops`](Self::take_index_ops) — the honest price of the
+    /// O(1) query, charged to the virtual clock by the worker.
+    index_ops: u64,
+}
+
+/// Left-biased min: on ties the left operand (lower local offset) wins.
+#[inline]
+fn better(l: (f32, u32), r: (f32, u32)) -> (f32, u32) {
+    if l.0 <= r.0 {
+        l
+    } else {
+        r
+    }
+}
+
+impl ShardStore {
+    /// Take ownership of a rank's cells. `indexed` builds the tournament
+    /// tree in O(m); unindexed stores are plain vectors with a live count
+    /// (the `Full` scan strategies).
+    pub fn new(cells: Vec<f32>, indexed: bool) -> Self {
+        let m = cells.len();
+        // Leaf offsets are u32 with u32::MAX as the padding sentinel; fail
+        // loudly rather than silently truncating on ≥2³²-cell shards.
+        assert!(
+            m < u32::MAX as usize,
+            "shard of {m} cells exceeds the u32 offset range of the min index"
+        );
+        let live = m as u64;
+        let (tree, leaf_base, path_len) = if indexed && m > 0 {
+            let size = m.next_power_of_two();
+            let mut tree = vec![(f32::INFINITY, u32::MAX); 2 * size];
+            for (off, &v) in cells.iter().enumerate() {
+                tree[size + off] = (v, off as u32);
+            }
+            for i in (1..size).rev() {
+                tree[i] = better(tree[2 * i], tree[2 * i + 1]);
+            }
+            (tree, size, size.trailing_zeros() as u64 + 1)
+        } else {
+            (Vec::new(), 0, 0)
+        };
+        Self {
+            cells,
+            live,
+            indexed,
+            tree,
+            leaf_base,
+            path_len,
+            index_ops: 0,
+        }
+    }
+
+    /// Number of cells (live + retired) in the shard.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    /// Cells not yet retired (the §5.4 "decreasing m").
+    #[inline]
+    pub fn live(&self) -> u64 {
+        self.live
+    }
+
+    /// Whether a tournament tree is maintained.
+    #[inline]
+    pub fn is_indexed(&self) -> bool {
+        self.indexed
+    }
+
+    /// Raw cell view — what the `Full` scan strategies rescan.
+    #[inline]
+    pub fn cells(&self) -> &[f32] {
+        &self.cells
+    }
+
+    /// Value of local cell `off` (`+inf` if retired).
+    #[inline]
+    pub fn get(&self, off: usize) -> f32 {
+        self.cells[off]
+    }
+
+    /// (min value, local offset) from the tree root in O(1); ties resolve
+    /// to the lowest offset, all-retired/empty shards to
+    /// `(+inf, usize::MAX)` — exactly the contract of
+    /// [`scalar_shard_min`](crate::coordinator::scalar_shard_min).
+    #[inline]
+    pub fn indexed_min(&self) -> (f32, usize) {
+        debug_assert!(self.indexed, "indexed_min on an unindexed ShardStore");
+        if self.tree.is_empty() {
+            return (f32::INFINITY, usize::MAX);
+        }
+        let (v, off) = self.tree[1];
+        if v.is_infinite() {
+            (f32::INFINITY, usize::MAX)
+        } else {
+            (v, off as usize)
+        }
+    }
+
+    /// Overwrite live cell `off` with the LW-updated distance.
+    #[inline]
+    pub fn set(&mut self, off: usize, v: f32) {
+        debug_assert!(v.is_finite(), "LW update produced a non-finite distance");
+        self.cells[off] = v;
+        self.fix(off, v);
+    }
+
+    /// Mark cell `off` erased ("not to be used again", §5.3 step 6a).
+    #[inline]
+    pub fn retire(&mut self, off: usize) {
+        debug_assert!(self.cells[off].is_finite(), "cell {off} retired twice");
+        self.cells[off] = f32::INFINITY;
+        self.live -= 1;
+        self.fix(off, f32::INFINITY);
+    }
+
+    /// Drain the maintenance cost accrued by `set`/`retire` since the last
+    /// call (0 for unindexed stores). Units are tree-node writes, charged
+    /// like cell touches by the worker's cost accounting.
+    #[inline]
+    pub fn take_index_ops(&mut self) -> u64 {
+        std::mem::take(&mut self.index_ops)
+    }
+
+    /// Recompute the root-ward path after leaf `off` changed. Always walks
+    /// the full path (no early-exit) so maintenance cost is a pure function
+    /// of the shard size — virtual time stays replay-deterministic.
+    #[inline]
+    fn fix(&mut self, off: usize, v: f32) {
+        if self.tree.is_empty() {
+            return;
+        }
+        let mut i = self.leaf_base + off;
+        self.tree[i] = (v, off as u32);
+        while i > 1 {
+            i /= 2;
+            self.tree[i] = better(self.tree[2 * i], self.tree[2 * i + 1]);
+        }
+        self.index_ops += self.path_len;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::scalar_shard_min;
+    use crate::matrix::{Partition, PartitionKind};
+    use crate::util::proptest::{run, Config};
+
+    /// The oracle: the indexed answer must equal the full rescan, bit for
+    /// bit, including the tie-break and the all-retired sentinel.
+    fn assert_matches_scan(store: &ShardStore) {
+        let scan = scalar_shard_min(store.cells());
+        assert_eq!(store.indexed_min(), scan, "cells: {:?}", store.cells());
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let empty = ShardStore::new(Vec::new(), true);
+        assert_eq!(empty.indexed_min(), (f32::INFINITY, usize::MAX));
+        assert_eq!(empty.live(), 0);
+
+        let mut one = ShardStore::new(vec![4.5], true);
+        assert_eq!(one.indexed_min(), (4.5, 0));
+        one.retire(0);
+        assert_eq!(one.indexed_min(), (f32::INFINITY, usize::MAX));
+        assert_eq!(one.live(), 0);
+    }
+
+    #[test]
+    fn duplicated_minima_take_lowest_offset() {
+        let store = ShardStore::new(vec![7.0, 2.0, 5.0, 2.0, 2.0], true);
+        assert_eq!(store.indexed_min(), (2.0, 1));
+        assert_matches_scan(&store);
+    }
+
+    #[test]
+    fn retire_and_update_track_scan() {
+        let mut store = ShardStore::new(vec![3.0, 1.0, 4.0, 1.0, 5.0, 9.0], true);
+        assert_eq!(store.indexed_min(), (1.0, 1));
+        store.retire(1); // next duplicate min takes over
+        assert_eq!(store.indexed_min(), (1.0, 3));
+        store.set(5, 0.5); // an LW update can create a new min
+        assert_eq!(store.indexed_min(), (0.5, 5));
+        store.retire(5);
+        store.retire(3);
+        assert_matches_scan(&store);
+        assert_eq!(store.live(), 3);
+    }
+
+    #[test]
+    fn all_retired_is_the_sentinel() {
+        let mut store = ShardStore::new(vec![2.0; 7], true);
+        for off in 0..7 {
+            store.retire(off);
+            assert_matches_scan(&store);
+        }
+        assert_eq!(store.indexed_min(), (f32::INFINITY, usize::MAX));
+        assert_eq!(store.live(), 0);
+    }
+
+    #[test]
+    fn unindexed_store_counts_but_builds_no_tree() {
+        let mut store = ShardStore::new(vec![1.0, 2.0, 3.0], false);
+        assert!(!store.is_indexed());
+        assert_eq!(store.live(), 3);
+        store.retire(2);
+        assert_eq!(store.live(), 2);
+        assert_eq!(store.take_index_ops(), 0);
+        assert_eq!(store.cells(), &[1.0, 2.0, f32::INFINITY]);
+    }
+
+    #[test]
+    fn index_ops_are_size_deterministic() {
+        // Maintenance cost must depend on shard size only — the virtual
+        // clock replays exactly (distributed_protocol.rs determinism tests).
+        let mut a = ShardStore::new(vec![5.0; 100], true);
+        let mut b = ShardStore::new((0..100).map(|i| i as f32).collect(), true);
+        a.retire(3);
+        b.retire(97);
+        assert_eq!(a.take_index_ops(), b.take_index_ops());
+    }
+
+    /// The ISSUE-1 satellite: on shards drawn through every PartitionKind,
+    /// with heavy duplicate minima, progressive retirement to empty, and
+    /// interleaved updates, the index must agree with `scalar_shard_min`
+    /// after every mutation.
+    #[test]
+    fn property_indexed_min_matches_scan_all_partition_kinds() {
+        run(Config::cases(30), |rng| {
+            let n = rng.range(2, 40);
+            let p = rng.range(1, 10);
+            // Only 3 distinct values ⇒ duplicated minima everywhere.
+            let vals = [1.0f32, 2.0, 3.0];
+            let total = crate::matrix::condensed_len(n);
+            let global: Vec<f32> = (0..total).map(|_| vals[rng.below(3)]).collect();
+            for kind in [
+                PartitionKind::BalancedCells,
+                PartitionKind::WholeRows,
+                PartitionKind::Cyclic,
+            ] {
+                let part = Partition::new(kind, n, p);
+                for r in 0..p {
+                    let cells: Vec<f32> = part.cells_of(r).map(|idx| global[idx]).collect();
+                    let mut store = ShardStore::new(cells, true);
+                    assert_matches_scan(&store); // includes empty shards
+                    // Mutate every cell once, in random op order: ~half
+                    // updates, then retire everything (all-retired tail).
+                    let m = store.len();
+                    for off in 0..m {
+                        if rng.below(2) == 0 {
+                            store.set(off, vals[rng.below(3)] + 0.5);
+                            assert_matches_scan(&store);
+                        }
+                    }
+                    for off in 0..m {
+                        store.retire(off);
+                        assert_matches_scan(&store);
+                    }
+                    assert_eq!(store.indexed_min(), (f32::INFINITY, usize::MAX));
+                }
+            }
+        });
+    }
+}

@@ -53,10 +53,14 @@ pub struct RunStats {
     pub msgs_sent: u64,
     /// Total bytes sent (all ranks).
     pub bytes_sent: u64,
-    /// Condensed cells scanned (all ranks).
+    /// Condensed cells scanned (all ranks). Under `ScanStrategy::Indexed`
+    /// this counts the O(1) root reads — the per-iteration rescan is gone.
     pub cells_scanned: u64,
     /// LW cell updates applied (all ranks).
     pub cells_updated: u64,
+    /// Tournament-tree maintenance writes (all ranks; 0 under `Full`) —
+    /// the O(log m)-per-write price of the indexed scan strategy.
+    pub index_ops: u64,
     /// Max cells resident on any single rank (§5.4 storage claim).
     pub peak_shard_cells: usize,
     /// Ranks used.
@@ -77,7 +81,7 @@ impl RunStats {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "n={} p={} wall={:.3}s virt={:.6}s msgs={} ({:.1}/iter) bytes={} peak_shard={} cells scanned={}",
+            "n={} p={} wall={:.3}s virt={:.6}s msgs={} ({:.1}/iter) bytes={} peak_shard={} cells scanned={} idx_ops={}",
             self.n,
             self.p,
             self.wall_s,
@@ -87,6 +91,7 @@ impl RunStats {
             self.bytes_sent,
             self.peak_shard_cells,
             self.cells_scanned,
+            self.index_ops,
         )
     }
 }

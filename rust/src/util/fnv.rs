@@ -1,0 +1,81 @@
+//! FNV-1a 64-bit hashing (substitute for the un-vendored `fnv` crate).
+//!
+//! Used by the coordinator's merge-agreement check: every rank folds its
+//! replicated merge decisions into one u64 as it goes, and the driver
+//! compares p digests instead of materializing and comparing p full
+//! merge lists (O(p) vs O(n·p) memory and compare work).
+
+/// Incremental FNV-1a 64-bit hasher.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fnv64(u64);
+
+impl Fnv64 {
+    const OFFSET_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    pub const fn new() -> Self {
+        Fnv64(Self::OFFSET_BASIS)
+    }
+
+    /// Fold 8 bytes (little-endian) into the digest.
+    #[inline]
+    pub fn write_u64(&mut self, v: u64) {
+        for b in v.to_le_bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(Self::PRIME);
+        }
+    }
+
+    #[inline]
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vector() {
+        // FNV-1a over the bytes 01 00 .. 00 (1u64 little-endian).
+        let mut h = Fnv64::new();
+        h.write_u64(1);
+        let mut expect = Fnv64::OFFSET_BASIS;
+        for b in 1u64.to_le_bytes() {
+            expect ^= b as u64;
+            expect = expect.wrapping_mul(Fnv64::PRIME);
+        }
+        assert_eq!(h.finish(), expect);
+        assert_ne!(h.finish(), Fnv64::new().finish());
+    }
+
+    #[test]
+    fn order_sensitive() {
+        let mut a = Fnv64::new();
+        a.write_u64(1);
+        a.write_u64(2);
+        let mut b = Fnv64::new();
+        b.write_u64(2);
+        b.write_u64(1);
+        assert_ne!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn deterministic() {
+        let digest = |vals: &[u64]| {
+            let mut h = Fnv64::new();
+            for &v in vals {
+                h.write_u64(v);
+            }
+            h.finish()
+        };
+        assert_eq!(digest(&[3, 1, 4, 1, 5]), digest(&[3, 1, 4, 1, 5]));
+    }
+}

@@ -7,9 +7,11 @@
 //! * [`rng`] — splitmix64 / xoshiro256++ deterministic PRNG,
 //! * [`cli`] — a small `--flag value` argument parser,
 //! * [`proptest`] — a seeded property-testing harness with shrinking,
-//! * [`stats`] — summary statistics + simple regression for the benches.
+//! * [`stats`] — summary statistics + simple regression for the benches,
+//! * [`fnv`] — FNV-1a 64-bit hashing for cheap agreement checks.
 
 pub mod cli;
+pub mod fnv;
 pub mod proptest;
 pub mod rng;
 pub mod stats;

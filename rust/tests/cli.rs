@@ -98,6 +98,45 @@ fn fig2_prints_series() {
 }
 
 #[test]
+fn cluster_indexed_scan_strategy() {
+    let (ok, text) = lancew(&[
+        "cluster", "--n", "60", "--p", "3", "--scan", "indexed", "--cut", "4", "--seed", "7",
+    ]);
+    assert!(ok, "{text}");
+    assert!(text.contains("n=60 p=3"));
+    // The indexed strategy reports its tree-maintenance price.
+    let idx_ops: u64 = text
+        .split("idx_ops=")
+        .nth(1)
+        .and_then(|s| s.split_whitespace().next())
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    assert!(idx_ops > 0, "expected nonzero idx_ops under --scan indexed:\n{text}");
+
+    // Bitwise-identical summary clustering vs the default full rescan:
+    // same cut sizes on the same seed.
+    let (ok2, full_text) = lancew(&[
+        "cluster", "--n", "60", "--p", "3", "--cut", "4", "--seed", "7",
+    ]);
+    assert!(ok2, "{full_text}");
+    let sizes_of = |t: &str| {
+        t.lines()
+            .find(|l| l.contains("cluster sizes"))
+            .map(String::from)
+    };
+    assert_eq!(sizes_of(&text), sizes_of(&full_text));
+}
+
+#[test]
+fn indexed_scan_rejects_engine_flag() {
+    let (ok, text) = lancew(&[
+        "cluster", "--n", "10", "--scan", "indexed", "--engine", "xla",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("--scan indexed"), "{text}");
+}
+
+#[test]
 fn unknown_flag_fails_loudly() {
     let (ok, text) = lancew(&["cluster", "--n", "10", "--bogus-flag", "3"]);
     assert!(!ok);

@@ -88,6 +88,69 @@ fn property_with_duplicate_distances() {
 }
 
 #[test]
+fn indexed_scan_bitwise_identical_every_scheme_kind_p() {
+    // ISSUE-1 acceptance: ScanStrategy::Indexed must reproduce the Full
+    // dendrogram bitwise for every scheme × partition kind × p ∈ {1..13}.
+    // (Full ≡ serial is covered above, so comparing against serial covers
+    // both strategies transitively.)
+    let m = gaussian_matrix(40, 16);
+    for scheme in Scheme::all() {
+        let serial = serial_lw_cluster(*scheme, &m);
+        for kind in [PartitionKind::BalancedCells, PartitionKind::WholeRows, PartitionKind::Cyclic] {
+            for p in 1..=13usize {
+                let run = ClusterConfig::new(*scheme, p)
+                    .with_partition(kind)
+                    .with_scan(ScanStrategy::Indexed)
+                    .run(&m)
+                    .unwrap();
+                dendrograms_equal(&serial, &run.dendrogram, 0.0)
+                    .unwrap_or_else(|e| panic!("indexed {scheme} {kind:?} p={p}: {e}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn indexed_scan_with_heavy_ties_property() {
+    // Duplicated minima everywhere: the tree's left-bias tie-break must
+    // pick the same lowest global index the full rescan picks.
+    prop_run(Config::cases(10), |rng| {
+        let n = rng.range(4, 24);
+        let p = rng.range(2, 7);
+        let vals = [1.0f32, 2.0, 3.0];
+        let m = CondensedMatrix::from_fn(n, |_, _| vals[rng.below(3)]);
+        let serial = serial_lw_cluster(Scheme::Complete, &m);
+        let run = ClusterConfig::new(Scheme::Complete, p)
+            .with_scan(ScanStrategy::Indexed)
+            .run(&m)
+            .unwrap();
+        dendrograms_equal(&serial, &run.dendrogram, 0.0)
+            .unwrap_or_else(|e| panic!("indexed ties n={n} p={p}: {e}"));
+    });
+}
+
+#[test]
+fn indexed_scan_cells_scanned_drops_5x_at_n500_p8() {
+    // ISSUE-1 acceptance: the measured scan-work win at n ≥ 500, p = 8.
+    let m = gaussian_matrix(500, 17);
+    let full = ClusterConfig::new(Scheme::Complete, 8).run(&m).unwrap();
+    let idx = ClusterConfig::new(Scheme::Complete, 8)
+        .with_scan(ScanStrategy::Indexed)
+        .run(&m)
+        .unwrap();
+    dendrograms_equal(&full.dendrogram, &idx.dendrogram, 0.0).unwrap();
+    assert!(
+        idx.stats.cells_scanned * 5 <= full.stats.cells_scanned,
+        "indexed scanned {} vs full {} — win < 5×",
+        idx.stats.cells_scanned,
+        full.stats.cells_scanned
+    );
+    // The tree's price is accounted, and still far below the rescan cost.
+    assert!(idx.stats.index_ops > 0);
+    assert!(idx.stats.cells_scanned + idx.stats.index_ops < full.stats.cells_scanned / 5);
+}
+
+#[test]
 fn rmsd_workload_end_to_end() {
     let e = EnsembleSpec { n: 32, residues: 30, templates: 3, noise: 0.2, bend: 1.2 }.generate(13);
     let m = rmsd_matrix(&e.structures);
