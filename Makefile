@@ -1,0 +1,39 @@
+# lancew build entry points. The rust crate is self-contained
+# (`cargo build`); `artifacts` is the one step that needs Python — it
+# AOT-lowers the L1/L2 Pallas/JAX graphs to HLO text that the rust
+# runtime executes through PJRT (see DESIGN.md §1). Everything else
+# works without artifacts: the XLA paths degrade to the scalar engine
+# and the xla_runtime tests skip loudly.
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: build test verify bench artifacts clean
+
+build:
+	$(CARGO) build --release
+
+# Tier-1 gate (ROADMAP): build + full test suite.
+verify: build test
+
+test:
+	$(CARGO) test -q
+
+bench:
+	$(CARGO) bench --bench scaling_n
+	$(CARGO) bench --bench storage
+	$(CARGO) bench --bench comm_volume
+	$(CARGO) bench --bench fig2_runtime_vs_p -- --quick
+	$(CARGO) bench --bench table1_schemes -- --quick
+	$(CARGO) bench --bench ablation -- --quick
+	$(CARGO) bench --bench kernel_ops
+
+# AOT-lower the Pallas/JAX kernels to artifacts/*.hlo.txt + manifest.txt.
+# Requires jax in the Python environment (not vendored; the rust side
+# works without the artifacts).
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out ../artifacts
+
+clean:
+	$(CARGO) clean
+	rm -rf artifacts

@@ -1,15 +1,22 @@
 //! BENCH C1 — the §5.4 computation claim: work is O(n³) serial and
 //! O(n³/p) distributed.
 //!
-//! Two sweeps:
+//! Four sweeps:
 //!   (a) n sweep at fixed p — fit the log-log slope of simulated time vs
 //!       n; expect ≈3 (the paper's cubic term dominates once n ≫ p).
 //!   (b) p sweep at fixed n under zero-communication — simulated time
 //!       should scale as 1/p (perfect work division, isolating the
 //!       paper's "all work is divided evenly amongst the processors").
+//!   (c) scan-strategy dimension (ISSUE-1): full rescan vs ShardStore
+//!       tournament tree, measured by `cells_scanned`.
+//!   (d) alive-walk dimension (ISSUE-2): full step-6a sweep vs per-rank
+//!       k-intervals, measured by `alive_visited`.
+//!
+//! Writes the whole table to BENCH_scaling_n.json at the repo root so the
+//! perf trajectory is tracked across PRs (EXPERIMENTS.md §Alive-walk A/B).
 
 use lancew::comm::CostModel;
-use lancew::coordinator::ScanStrategy;
+use lancew::coordinator::{AliveWalk, ScanStrategy};
 use lancew::prelude::*;
 use lancew::util::stats::loglog_slope;
 
@@ -20,6 +27,7 @@ fn main() -> anyhow::Result<()> {
     } else {
         vec![256, 384, 512, 768, 1024, 1536]
     };
+    let mut json = JsonRows::new(quick);
 
     // ---- (a) cubic growth in n ---------------------------------------
     println!("# C1a: simulated serial-equivalent time vs n (p=1)");
@@ -34,11 +42,16 @@ fn main() -> anyhow::Result<()> {
             "{:>6} {:>14.6} {:>16}",
             n, run.stats.virtual_s, run.stats.cells_scanned
         );
+        json.a.push(format!(
+            "{{\"n\": {n}, \"sim_time_s\": {:.6}, \"cells_scanned\": {}}}",
+            run.stats.virtual_s, run.stats.cells_scanned
+        ));
         xs.push(n as f64);
         ys.push(run.stats.virtual_s);
     }
     let slope = loglog_slope(&xs, &ys);
     println!("# log-log slope: {slope:.3}  (paper claim: 3.0 — O(n³))");
+    json.a_slope = slope;
     assert!(
         (slope - 3.0).abs() < 0.35,
         "cubic scaling violated: slope {slope:.3}"
@@ -73,6 +86,9 @@ fn main() -> anyhow::Result<()> {
         let tc = sim(p, PartitionKind::Cyclic)?;
         let (ep, ec) = (t1_paper / (tp * p as f64), t1_cyc / (tc * p as f64));
         println!("{:>4} {:>14.6} {:>10.3} {:>14.6} {:>10.3}", p, tp, ep, tc, ec);
+        json.b.push(format!(
+            "{{\"p\": {p}, \"paper_t_s\": {tp:.6}, \"paper_eff\": {ep:.3}, \"cyclic_t_s\": {tc:.6}, \"cyclic_eff\": {ec:.3}}}"
+        ));
         assert!(ep > 0.55, "p={p}: paper-partition efficiency {ep:.3} collapsed");
         assert!(ec > 0.9, "p={p}: cyclic efficiency {ec:.3} too low");
     }
@@ -108,6 +124,10 @@ fn main() -> anyhow::Result<()> {
             full.stats.virtual_s,
             idx.stats.virtual_s
         );
+        json.c.push(format!(
+            "{{\"n\": {n}, \"full_scanned\": {}, \"idx_scanned\": {}, \"idx_ops\": {}, \"ratio\": {ratio:.1}}}",
+            full.stats.cells_scanned, idx.stats.cells_scanned, idx.stats.index_ops
+        ));
         if n >= 500 {
             assert!(
                 ratio >= 5.0,
@@ -116,5 +136,90 @@ fn main() -> anyhow::Result<()> {
         }
     }
     println!("# indexed: O(1) query/iteration; total tree maintenance = idx_ops ≪ full_scanned");
+
+    // ---- (d) alive-walk dimension: full sweep vs k-intervals ------------
+    // ISSUE-2: with the rescan gone, the §5.3 step-6a routing walk — every
+    // rank sweeping the whole alive set — was the per-iteration floor.
+    // `alive_visited` counts the candidate ks each walk examines; full is
+    // exactly p·(n(n+1)/2 − 1), incremental is ~Σ|alive| + probe overhead.
+    // Both runs use the indexed scan so the rescan doesn't mask the walk.
+    println!("\n# C1d: alive_visited by walk at p=8, scan=indexed (dendrograms bitwise equal)");
+    println!(
+        "{:>6} {:>16} {:>14} {:>9} {:>14} {:>14}",
+        "n", "full_visited", "incr_visited", "ratio", "full_wall_s", "incr_wall_s"
+    );
+    for &n in &ns {
+        let lp = GaussianSpec { n, d: 6, k: 8, ..Default::default() }.generate(5);
+        let m = euclidean_matrix(&lp.points);
+        let walk_run = |walk: AliveWalk| -> anyhow::Result<ClusterRun> {
+            ClusterConfig::new(Scheme::Complete, 8)
+                .with_scan(ScanStrategy::Indexed)
+                .with_alive_walk(walk)
+                .run(&m)
+        };
+        let full = walk_run(AliveWalk::Full)?;
+        let incr = walk_run(AliveWalk::Incremental)?;
+        lancew::validate::dendrograms_equal(&full.dendrogram, &incr.dendrogram, 0.0)
+            .map_err(|e| anyhow::anyhow!("n={n}: walks diverged: {e}"))?;
+        let ratio = full.stats.alive_visited as f64 / incr.stats.alive_visited as f64;
+        println!(
+            "{:>6} {:>16} {:>14} {:>8.1}x {:>14.3} {:>14.3}",
+            n,
+            full.stats.alive_visited,
+            incr.stats.alive_visited,
+            ratio,
+            full.stats.wall_s,
+            incr.stats.wall_s
+        );
+        json.d.push(format!(
+            "{{\"n\": {n}, \"full_visited\": {}, \"incr_visited\": {}, \"ratio\": {ratio:.1}}}",
+            full.stats.alive_visited, incr.stats.alive_visited
+        ));
+        if n >= 500 {
+            assert!(
+                ratio >= 5.0,
+                "n={n}: alive-walk win {ratio:.1}x below the 5x acceptance bar"
+            );
+        }
+    }
+    println!("# incremental: send walks partitioned over ranks, expects from interval intersection");
+
+    let path = "BENCH_scaling_n.json";
+    std::fs::write(path, json.render())?;
+    println!("# json: {path}");
     Ok(())
+}
+
+/// Row collector → the BENCH_scaling_n.json document (no serde in the
+/// offline vendor set; the format is flat enough for format! assembly).
+struct JsonRows {
+    quick: bool,
+    a: Vec<String>,
+    a_slope: f64,
+    b: Vec<String>,
+    c: Vec<String>,
+    d: Vec<String>,
+}
+
+impl JsonRows {
+    fn new(quick: bool) -> Self {
+        Self { quick, a: Vec::new(), a_slope: 0.0, b: Vec::new(), c: Vec::new(), d: Vec::new() }
+    }
+
+    fn render(&self) -> String {
+        let join = |rows: &[String]| rows.join(",\n      ");
+        format!(
+            "{{\n  \"bench\": \"scaling_n\",\n  \"provenance\": \"measured (cargo bench --bench scaling_n{})\",\n  \
+             \"c1a_cubic_n\": {{\n    \"loglog_slope\": {:.3},\n    \"rows\": [\n      {}\n    ]\n  }},\n  \
+             \"c1b_work_division\": {{\n    \"rows\": [\n      {}\n    ]\n  }},\n  \
+             \"c1c_scan_strategy\": {{\n    \"rows\": [\n      {}\n    ]\n  }},\n  \
+             \"c1d_alive_walk\": {{\n    \"rows\": [\n      {}\n    ]\n  }}\n}}\n",
+            if self.quick { " -- --quick" } else { "" },
+            self.a_slope,
+            join(&self.a),
+            join(&self.b),
+            join(&self.c),
+            join(&self.d),
+        )
+    }
 }

@@ -79,6 +79,44 @@ impl ScanStrategy {
     }
 }
 
+/// How each rank executes the §5.3 step-6a routing walk (ISSUE-2).
+///
+/// * `Full` — the paper's walk as written: every rank sweeps the whole
+///   alive set every iteration to decide what to send, retire, and
+///   expect — O(n) per rank, O(n·p) aggregate per iteration. With the
+///   step-1 rescan gone (`ScanStrategy::Indexed`), this walk was the
+///   per-iteration floor (ROADMAP "Larger n").
+/// * `Incremental` — interval queries on the [`Partition`]
+///   ([`Partition::k_intervals`](crate::matrix::Partition::k_intervals)):
+///   each rank visits only the alive k whose `(k,j)` cell it owns, and
+///   derives its expected-sender set from interval intersection plus O(1)
+///   alive-range probes — O(n) *aggregate* per iteration. Message
+///   traffic, retire set, and update order are identical, so dendrograms
+///   are bitwise equal and the virtual clock replays the same.
+///
+/// The per-rank walk work is counted in [`RunStats::alive_visited`]
+/// either way — the A/B lives in `benches/scaling_n.rs` (C1d) and
+/// EXPERIMENTS.md §Alive-walk A/B.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum AliveWalk {
+    /// Full O(n)-per-rank sweep of the alive list (§5.3 step 6a as written).
+    Full,
+    /// Per-rank k-interval walk — only the ks this rank owns or expects.
+    #[default]
+    Incremental,
+}
+
+impl std::str::FromStr for AliveWalk {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "full" | "paper" => Ok(Self::Full),
+            "incremental" | "interval" => Ok(Self::Incremental),
+            other => anyhow::bail!("unknown alive-walk {other:?} (full|incremental)"),
+        }
+    }
+}
+
 /// The Engine::Scalar hot path: (min, first index of min) over a shard.
 ///
 /// Two-pass structure (perf pass, EXPERIMENTS.md §Perf): pass 1 folds
@@ -139,6 +177,8 @@ pub struct ClusterConfig {
     pub partition: PartitionKind,
     pub cost_model: CostModel,
     pub scan: ScanStrategy,
+    /// Step-6a routing walk: full sweep or per-rank k-intervals (ISSUE-2).
+    pub walk: AliveWalk,
     /// Paper-faithful naive fan-outs, or binomial trees (extension).
     pub collectives: Collectives,
 }
@@ -151,6 +191,7 @@ impl ClusterConfig {
             partition: PartitionKind::BalancedCells,
             cost_model: CostModel::nehalem_cluster(),
             scan: ScanStrategy::default(),
+            walk: AliveWalk::default(),
             collectives: Collectives::Naive,
         }
     }
@@ -178,6 +219,12 @@ impl ClusterConfig {
 
     pub fn with_scan(mut self, s: ScanStrategy) -> Self {
         self.scan = s;
+        self
+    }
+
+    /// Select the step-6a routing walk (A/B toggle; results identical).
+    pub fn with_alive_walk(mut self, w: AliveWalk) -> Self {
+        self.walk = w;
         self
     }
 
@@ -210,6 +257,7 @@ impl ClusterConfig {
                 scheme: self.scheme,
                 partition: partition.clone(),
                 scan: self.scan.clone(),
+                walk: self.walk,
                 collectives: self.collectives,
             };
             let src = (ep.rank() == 0).then(|| source.clone());
@@ -249,6 +297,7 @@ impl ClusterConfig {
             cells_scanned: outputs.iter().map(|o| o.cells_scanned).sum(),
             cells_updated: outputs.iter().map(|o| o.cells_updated).sum(),
             index_ops: outputs.iter().map(|o| o.index_ops).sum(),
+            alive_visited: outputs.iter().map(|o| o.alive_visited).sum(),
             peak_shard_cells: outputs.iter().map(|o| o.shard_cells).max().unwrap_or(0),
             p,
             n,
@@ -355,6 +404,46 @@ mod tests {
         // And the maintenance price is visible, not hidden.
         assert!(idx.stats.index_ops > 0);
         assert_eq!(full.stats.index_ops, 0);
+    }
+
+    #[test]
+    fn alive_walk_modes_identical_observables() {
+        // ISSUE-2: the incremental walk must change NOTHING observable but
+        // the alive_visited counter — same dendrogram, same traffic, same
+        // virtual clock (it sends the same messages in the same order).
+        let m = sample(60, 7);
+        for kind in [PartitionKind::BalancedCells, PartitionKind::WholeRows, PartitionKind::Cyclic] {
+            let run = |walk: AliveWalk| {
+                ClusterConfig::new(Scheme::Complete, 5)
+                    .with_partition(kind)
+                    .with_alive_walk(walk)
+                    .run(&m)
+                    .unwrap()
+            };
+            let full = run(AliveWalk::Full);
+            let incr = run(AliveWalk::Incremental);
+            crate::validate::dendrograms_equal(&full.dendrogram, &incr.dendrogram, 0.0)
+                .unwrap_or_else(|e| panic!("{kind:?}: {e}"));
+            assert_eq!(full.stats.msgs_sent, incr.stats.msgs_sent, "{kind:?}");
+            assert_eq!(full.stats.bytes_sent, incr.stats.bytes_sent, "{kind:?}");
+            assert_eq!(full.stats.virtual_s, incr.stats.virtual_s, "{kind:?}");
+            // The full walk is every rank × every alive k, in closed form.
+            let n = 60u64;
+            assert_eq!(full.stats.alive_visited, 5 * (n * (n + 1) / 2 - 1));
+            // The contiguous kinds shed the replicated sweep (the ≥5×
+            // aggregate claim is asserted at scale in
+            // rust/tests/parallel_vs_serial.rs — at n=60 the probe
+            // constant still matters); Cyclic only sheds its row-piece
+            // strides (EXPERIMENTS.md §Alive-walk).
+            if kind != PartitionKind::Cyclic {
+                assert!(
+                    incr.stats.alive_visited < full.stats.alive_visited,
+                    "{kind:?}: incr {} vs full {}",
+                    incr.stats.alive_visited,
+                    full.stats.alive_visited
+                );
+            }
+        }
     }
 
     #[test]

@@ -18,10 +18,12 @@ use std::sync::Arc;
 use crate::comm::{Collectives, Endpoint};
 use crate::coordinator::protocol::{exchange_minima, tag, Phase, ProtoMsg, DIST_TAG};
 use crate::coordinator::source::{DistSource, SourceKind};
-use crate::coordinator::ScanStrategy;
+use crate::coordinator::{AliveWalk, ScanStrategy};
 use crate::dendrogram::Merge;
 use crate::linkage::{lw_update, Scheme};
-use crate::matrix::{condensed_index, condensed_pair, Partition, ShardStore};
+use crate::matrix::{
+    condensed_index, condensed_pair, AliveSet, OwnerCursor, Partition, PartitionKind, ShardStore,
+};
 use crate::metrics::PhaseBreakdown;
 use crate::util::fnv::Fnv64;
 
@@ -41,6 +43,8 @@ pub struct WorkerOutput {
     pub cells_updated: u64,
     /// Tournament-tree maintenance writes (0 under `ScanStrategy::Full`).
     pub index_ops: u64,
+    /// Candidate ks examined by this rank's step-6a routing walks.
+    pub alive_visited: u64,
     pub shard_cells: usize,
 }
 
@@ -50,6 +54,7 @@ pub struct WorkerCtx {
     pub scheme: Scheme,
     pub partition: Partition,
     pub scan: ScanStrategy,
+    pub walk: AliveWalk,
     pub collectives: Collectives,
 }
 
@@ -124,16 +129,19 @@ pub fn worker_main(
     // this is a pure function, precomputed once.
     let my_cell0: Vec<usize> = part.cells_of(me).collect();
 
-    // Replicated O(n) metadata. `alive_list` is maintained ascending so
-    // every rank walks identical k-order (deterministic triple batching).
+    // Replicated O(n) metadata. The alive set iterates ascending so every
+    // rank walks identical k-order (deterministic triple batching); its
+    // intrusive-list form gives the O(1) remove and the seek() primitive
+    // the incremental walk needs (ISSUE-2 — see matrix::alive).
     let mut sizes = vec![1.0f32; n];
-    let mut alive_list: Vec<usize> = (0..n).collect();
+    let mut alive = AliveSet::new(n);
 
     let mut merges: Vec<Merge> = if me == 0 { Vec::with_capacity(n - 1) } else { Vec::new() };
     let mut merge_digest = Fnv64::new();
     let mut cells_scanned = 0u64;
     let mut cells_updated = 0u64;
     let mut index_ops = 0u64;
+    let mut alive_visited = 0u64;
 
     // Hot-loop buffers hoisted out of the iteration (perf pass,
     // EXPERIMENTS.md §Perf: no allocation on the per-merge path).
@@ -191,38 +199,30 @@ pub fn worker_main(
         // 6a outbound: for every live k, if I own (k,j) I must ship
         // (k, D_kj) to the owner of (k,i) — batched per destination.
         // Receivers know exactly who will message them (ownership is a
-        // pure function): collect the distinct source set for my cells.
-        // Both cell sequences ascend with k (fixed other endpoint), so
-        // owner lookups ride two monotone cursors instead of a binary
-        // search per cell.
+        // pure function). Under `AliveWalk::Full` every rank derives this
+        // by sweeping the whole alive set (the paper's O(n) walk); under
+        // `AliveWalk::Incremental` each rank touches only the k-intervals
+        // it owns (matrix::Partition::k_intervals) — same sends, same
+        // retire set, same ascending-k batch order, counted apart in
+        // `alive_visited`.
         for b in outbound.iter_mut() {
             b.clear();
         }
         expect_from.fill(false);
         local_dkj.clear();
 
-        let mut cur_kj = part.owner_cursor();
-        let mut cur_ki = part.owner_cursor();
-        for &k in &alive_list {
-            if k == i || k == j {
-                continue;
+        match ctx.walk {
+            AliveWalk::Full => {
+                alive_visited += route_full(
+                    part, &alive, &mut shard, me, i, j, &mut outbound, &mut expect_from,
+                    &mut local_dkj,
+                );
             }
-            let cell_kj = condensed_index(n, k.min(j), k.max(j));
-            let cell_ki = condensed_index(n, k.min(i), k.max(i));
-            let (owner_kj, off_kj) = cur_kj.locate(cell_kj);
-            let owner_ki = cur_ki.owner(cell_ki);
-            if owner_kj == me {
-                let v = shard.get(off_kj);
-                if owner_ki == me {
-                    local_dkj.push((k as u32, v));
-                } else {
-                    outbound[owner_ki].push((k as u32, v));
-                }
-                // "The sending processors mark the sent matrix elements as
-                // erased not to be used again."
-                shard.retire(off_kj);
-            } else if owner_ki == me {
-                expect_from[owner_kj] = true;
+            AliveWalk::Incremental => {
+                alive_visited += route_incremental(
+                    part, &mut alive, &mut shard, me, i, j, &mut outbound, &mut expect_from,
+                    &mut local_dkj,
+                );
             }
         }
         // Retire the (i,j) cell itself.
@@ -284,11 +284,12 @@ pub fn worker_main(
             index_ops += maint;
         }
 
-        // Replicated metadata update (identical on every rank).
+        // Replicated metadata update (identical on every rank). The
+        // remove is O(1) — the seed's sorted-Vec binary_search + remove
+        // memmoved O(n) cells per merge.
         sizes[i] += sizes[j];
         sizes[j] = 0.0;
-        let pos = alive_list.binary_search(&j).expect("j was alive");
-        alive_list.remove(pos);
+        alive.remove(j);
         merge_digest.write_u64(((i as u64) << 32) | j as u64);
         merge_digest.write_u64(d_ij.to_bits() as u64);
         if me == 0 {
@@ -308,8 +309,274 @@ pub fn worker_main(
         cells_scanned,
         cells_updated,
         index_ops,
+        alive_visited,
         shard_cells,
     }
+}
+
+/// One owned `(k,j)` cell on the step-6a send side: read it, route the
+/// `(k, D_kj)` triple to the owner of `(k,i)` (local list when that is
+/// me), and retire it ("the sending processors mark the sent matrix
+/// elements as erased not to be used again"). The single body behind
+/// every walk variant — full sweep, interval pieces, Cyclic strides — so
+/// future changes (e.g. charging routing to the virtual clock) land once.
+///
+/// `cur_ki` must be fed ascending k like every cursor; callers hand each
+/// k to exactly one of `send_cell` / their own expect check.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn send_cell(
+    shard: &mut ShardStore,
+    cur_ki: &mut OwnerCursor<'_>,
+    outbound: &mut [Vec<(u32, f32)>],
+    local_dkj: &mut Vec<(u32, f32)>,
+    me: usize,
+    n: usize,
+    i: usize,
+    k: usize,
+    off_kj: usize,
+) {
+    let cell_ki = condensed_index(n, k.min(i), k.max(i));
+    let owner_ki = cur_ki.owner(cell_ki);
+    let v = shard.get(off_kj);
+    if owner_ki == me {
+        local_dkj.push((k as u32, v));
+    } else {
+        outbound[owner_ki].push((k as u32, v));
+    }
+    shard.retire(off_kj);
+}
+
+/// Step-6a routing, `AliveWalk::Full`: the paper's walk as written —
+/// sweep every alive k, act on the cells I own, note the senders I must
+/// expect. Returns the ks visited (the whole alive set, every rank).
+#[allow(clippy::too_many_arguments)]
+fn route_full(
+    part: &Partition,
+    alive: &AliveSet,
+    shard: &mut ShardStore,
+    me: usize,
+    i: usize,
+    j: usize,
+    outbound: &mut [Vec<(u32, f32)>],
+    expect_from: &mut [bool],
+    local_dkj: &mut Vec<(u32, f32)>,
+) -> u64 {
+    let n = part.n();
+    let mut visited = 0u64;
+    // Both cell sequences ascend with k (fixed other endpoint), so owner
+    // lookups ride two monotone cursors instead of a binary search per
+    // cell (EXPERIMENTS.md §Perf pass 3).
+    let mut cur_kj = part.owner_cursor();
+    let mut cur_ki = part.owner_cursor();
+    let mut k = alive.first();
+    while k < n {
+        visited += 1;
+        if k != i && k != j {
+            let cell_kj = condensed_index(n, k.min(j), k.max(j));
+            let (owner_kj, off_kj) = cur_kj.locate(cell_kj);
+            if owner_kj == me {
+                send_cell(shard, &mut cur_ki, outbound, local_dkj, me, n, i, k, off_kj);
+            } else {
+                let cell_ki = condensed_index(n, k.min(i), k.max(i));
+                if cur_ki.owner(cell_ki) == me {
+                    expect_from[owner_kj] = true;
+                }
+            }
+        }
+        k = alive.succ(k);
+    }
+    visited
+}
+
+/// Step-6a routing, `AliveWalk::Incremental` (ISSUE-2 tentpole): identical
+/// sends / retires / expectations to [`route_full`], derived without the
+/// O(n) sweep.
+///
+/// * **Send side** — walk only the alive k whose `(k,j)` cell this rank
+///   owns: ≤2 contiguous k-ranges for the contiguous partition kinds, a
+///   stride-p progression for Cyclic's row piece (and an owner-filtered
+///   scan for Cyclic's closed-form-free column piece). Ascending k order
+///   is preserved, so per-destination triple batches stay sorted.
+/// * **Receive side** — a rank `s` will message me iff some alive
+///   k ∉ {i, j} lies in *both* s's `(k,j)` intervals and my `(k,i)`
+///   intervals. For the contiguous kinds the candidate senders form a
+///   contiguous rank range (ownership is monotone in the cell index), and
+///   each candidate costs one interval intersection plus an O(1)
+///   `AliveSet::seek` probe. Cyclic walks its own `(k,i)` set instead.
+///
+/// Aggregate over ranks: the send walks visit each alive k exactly once
+/// (its `(k,j)` cell has one owner) and the probes add O(p²) — O(n) per
+/// iteration versus the full walk's O(n·p) (EXPERIMENTS.md §Alive-walk).
+/// Returns the ks this rank visited.
+#[allow(clippy::too_many_arguments)]
+fn route_incremental(
+    part: &Partition,
+    alive: &mut AliveSet,
+    shard: &mut ShardStore,
+    me: usize,
+    i: usize,
+    j: usize,
+    outbound: &mut [Vec<(u32, f32)>],
+    expect_from: &mut [bool],
+    local_dkj: &mut Vec<(u32, f32)>,
+) -> u64 {
+    let n = part.n();
+    let p = part.p();
+    let mut visited = 0u64;
+    let mine_j = part.k_intervals(j, me);
+    let mut cur_kj = part.owner_cursor();
+    let mut cur_ki = part.owner_cursor();
+
+    // ---- Send side: alive k with (k,j) in my shard, ascending k ----
+    // Below-j piece. (May contain k == i, skipped like the full walk; the
+    // above-j piece has k > j > i, so no check is needed there.)
+    if mine_j.scan_below {
+        // Cyclic: no interval form below j — scan alive and filter. Since
+        // column i is equally closed-form-free, the same scan also covers
+        // the receive side for k < j (the full-walk body verbatim); only
+        // the k > j receive tail needs a separate stride below.
+        let mut k = alive.first();
+        while k < j {
+            visited += 1;
+            if k != i {
+                let cell_kj = condensed_index(n, k, j);
+                let (owner_kj, off_kj) = cur_kj.locate(cell_kj);
+                if owner_kj == me {
+                    send_cell(shard, &mut cur_ki, outbound, local_dkj, me, n, i, k, off_kj);
+                } else {
+                    let cell_ki = condensed_index(n, k.min(i), k.max(i));
+                    if cur_ki.owner(cell_ki) == me {
+                        expect_from[owner_kj] = true;
+                    }
+                }
+            }
+            k = alive.succ(k);
+        }
+    } else if let Some((lo, hi)) = mine_j.below {
+        let mut k = alive.seek(lo);
+        while k < hi {
+            visited += 1;
+            if k != i {
+                let cell_kj = condensed_index(n, k, j);
+                let (owner_kj, off_kj) = cur_kj.locate(cell_kj);
+                debug_assert_eq!(owner_kj, me);
+                send_cell(shard, &mut cur_ki, outbound, local_dkj, me, n, i, k, off_kj);
+            }
+            k = alive.succ(k);
+        }
+    }
+    if let Some((lo, hi)) = mine_j.above {
+        if mine_j.above_step == 1 {
+            let mut k = alive.seek(lo);
+            while k < hi {
+                visited += 1;
+                let cell_kj = condensed_index(n, j, k);
+                let (owner_kj, off_kj) = cur_kj.locate(cell_kj);
+                debug_assert_eq!(owner_kj, me);
+                send_cell(shard, &mut cur_ki, outbound, local_dkj, me, n, i, k, off_kj);
+                k = alive.succ(k);
+            }
+        } else {
+            // Cyclic row piece: arithmetic progression, alive-filtered.
+            let mut k = lo;
+            while k < hi {
+                visited += 1;
+                if alive.contains(k) {
+                    let cell_kj = condensed_index(n, j, k);
+                    let (owner_kj, off_kj) = cur_kj.locate(cell_kj);
+                    debug_assert_eq!(owner_kj, me);
+                    send_cell(shard, &mut cur_ki, outbound, local_dkj, me, n, i, k, off_kj);
+                }
+                k += mine_j.above_step;
+            }
+        }
+    }
+
+    // ---- Receive side: which ranks will send me a (k, D_kj) triple ----
+    if p > 1 {
+        if part.kind() == PartitionKind::Cyclic {
+            // k < j was folded into the scan above; the rest of my (k,i)
+            // stride (row i, k > j) names its senders directly.
+            let mine_i = part.k_intervals(i, me);
+            let mut cur = part.owner_cursor();
+            if let Some((lo, hi)) = mine_i.above {
+                let step = mine_i.above_step;
+                let mut k = if lo > j {
+                    lo
+                } else {
+                    lo + (j + 1 - lo).div_ceil(step) * step
+                };
+                while k < hi {
+                    visited += 1;
+                    if alive.contains(k) {
+                        let cell_kj = condensed_index(n, j, k);
+                        let owner_kj = cur.owner(cell_kj);
+                        if owner_kj != me {
+                            expect_from[owner_kj] = true;
+                        }
+                    }
+                    k += step;
+                }
+            }
+        } else {
+            // Contiguous kinds: candidate senders by interval intersection.
+            // Over any ascending k run, cell (k,j) ascends, and ownership
+            // is monotone in the cell index — so the senders for one of my
+            // (k,i) ranges lie in the rank span of its endpoints' (k,j)
+            // owners. For each candidate, intersect its (k,j) k-intervals
+            // with my range and probe the alive set (skipping i and j).
+            let mine_i = part.k_intervals(i, me);
+            for (mlo, mhi) in [mine_i.below, mine_i.above].into_iter().flatten() {
+                // Representative ks at the range ends, dodging k == j
+                // (cell (j,j) does not exist; i is outside by construction).
+                let mut k_first = mlo;
+                if k_first == j {
+                    k_first += 1;
+                }
+                let mut k_last = mhi - 1;
+                if k_last == j {
+                    if k_last == k_first {
+                        continue;
+                    }
+                    k_last -= 1;
+                }
+                if k_first > k_last {
+                    continue;
+                }
+                let cell_of = |k: usize| condensed_index(n, k.min(j), k.max(j));
+                let s_lo = part.owner(cell_of(k_first));
+                let s_hi = part.owner(cell_of(k_last));
+                for s in s_lo..=s_hi {
+                    if s == me || expect_from[s] {
+                        continue;
+                    }
+                    let theirs = part.k_intervals(j, s);
+                    'ranges: for (tlo, thi) in
+                        [theirs.below, theirs.above].into_iter().flatten()
+                    {
+                        let lo = mlo.max(tlo);
+                        let hi = mhi.min(thi);
+                        if lo >= hi {
+                            continue;
+                        }
+                        // Any alive k in [lo, hi) \ {i, j}? Usually one
+                        // seek; i/j collisions cost one succ each.
+                        let mut k = alive.seek(lo);
+                        while k < hi {
+                            visited += 1;
+                            if k != i && k != j {
+                                expect_from[s] = true;
+                                break 'ranges;
+                            }
+                            k = alive.succ(k);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    visited
 }
 
 /// Compute the cells this rank owns directly from the replicated dataset

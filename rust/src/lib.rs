@@ -15,7 +15,10 @@
 //!   the PJRT CPU client ([`runtime`]).
 //!
 //! Python never runs on the clustering path: after `make artifacts` the
-//! rust binary is self-contained.
+//! rust binary is self-contained. The crate itself builds fully offline —
+//! the lone dependency is the vendored `anyhow` shim (vendor/anyhow), and
+//! the PJRT bindings are stubbed in-tree ([`runtime::xla_shim`]) until a
+//! real `xla` crate is dropped in.
 //!
 //! ## Quick start
 //!
@@ -46,10 +49,12 @@ pub mod validate;
 pub mod prelude {
     pub use crate::baselines::serial_lw::serial_lw_cluster;
     pub use crate::comm::CostModel;
-    pub use crate::coordinator::{ClusterConfig, ClusterRun, DistSource, Engine, ScanStrategy};
+    pub use crate::coordinator::{
+        AliveWalk, ClusterConfig, ClusterRun, DistSource, Engine, ScanStrategy,
+    };
     pub use crate::data::{euclidean_matrix, rmsd_matrix, EnsembleSpec, GaussianSpec};
     pub use crate::dendrogram::{Dendrogram, Merge};
     pub use crate::linkage::Scheme;
-    pub use crate::matrix::{CondensedMatrix, Partition, PartitionKind, ShardStore};
+    pub use crate::matrix::{AliveSet, CondensedMatrix, Partition, PartitionKind, ShardStore};
     pub use crate::util::rng::Rng;
 }

@@ -14,7 +14,7 @@ use std::path::PathBuf;
 
 use lancew::baselines::serial_lw::{serial_lw_cluster, verify_against_definition};
 use lancew::comm::CostModel;
-use lancew::coordinator::{ClusterConfig, DistSource, Engine, ScanStrategy};
+use lancew::coordinator::{AliveWalk, ClusterConfig, DistSource, Engine, ScanStrategy};
 use lancew::data::{euclidean_matrix, io, rmsd_matrix, EnsembleSpec, GaussianSpec};
 use lancew::linkage::Scheme;
 use lancew::matrix::PartitionKind;
@@ -51,6 +51,7 @@ fn print_help() {
          cluster  --n 200 | --matrix file.bin | --conformations\n\
          \x20        --scheme complete --p 8 --partition paper --cost-model nehalem\n\
          \x20        --cut 5 --scan full|indexed --engine scalar|xla --seed 42\n\
+         \x20        --alive-walk full|incremental (step-6a routing; default incremental)\n\
          \x20        --newick out.nwk --ascii --linkage z.csv (scipy linkage matrix)\n\
          validate --n 60 --trials 5 --seed 1\n\
          fig2     --n 512 --ps 1,2,4,8,16,24 --scheme complete\n\
@@ -115,6 +116,13 @@ fn make_scan(args: &Args) -> anyhow::Result<ScanStrategy> {
     }
 }
 
+/// `--alive-walk incremental` (default: per-rank k-interval routing) or
+/// `--alive-walk full` (the paper's O(n)-per-rank step-6a sweep, kept for
+/// the A/B — results are bitwise identical either way).
+fn make_walk(args: &Args) -> anyhow::Result<AliveWalk> {
+    args.get("alive-walk").unwrap_or("incremental").parse()
+}
+
 fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     let (source, truth) = load_source(args)?;
     let scheme: Scheme = args.get("scheme").unwrap_or("complete").parse()?;
@@ -122,6 +130,7 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     let partition: PartitionKind = args.get("partition").unwrap_or("paper").parse()?;
     let cost_model: CostModel = args.get("cost-model").unwrap_or("nehalem").parse()?;
     let scan = make_scan(args)?;
+    let walk = make_walk(args)?;
     let cut: usize = args.parse_or("cut", 0usize)?;
     let newick = args.get("newick").map(PathBuf::from);
     let linkage_out = args.get("linkage").map(PathBuf::from);
@@ -132,6 +141,7 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         .with_partition(partition)
         .with_cost_model(cost_model)
         .with_scan(scan)
+        .with_alive_walk(walk)
         .run_source(source.clone())?;
 
     println!("{}", run.stats.summary());

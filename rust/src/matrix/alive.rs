@@ -1,0 +1,286 @@
+//! The replicated alive-cluster set — an ordered intrusive doubly-linked
+//! list over `0..n` (ISSUE-2 tentpole).
+//!
+//! Every rank replicates "which cluster slots are still alive" (paper
+//! §5.3: slot `j` retires at each merge). The seed kept this as a sorted
+//! `Vec<usize>` whose per-merge `binary_search` + `remove` memmoved O(n)
+//! elements, and whose only traversal primitive was the full sweep that
+//! made step 6a an O(n)-per-rank walk. [`AliveSet`] replaces it with:
+//!
+//! * **O(1) [`AliveSet::remove`]** — splice out of the linked list;
+//! * **ordered iteration** from any alive node via
+//!   [`AliveSet::first`] / [`AliveSet::succ`] — identical ascending
+//!   k-order on every rank, so the protocol's deterministic triple
+//!   batching is unchanged;
+//! * **amortized-O(1) [`AliveSet::seek`]** — first alive index ≥ a
+//!   bound, the primitive the incremental step-6a walk uses to visit only
+//!   the k-intervals this rank owns (see
+//!   [`Partition::k_intervals`](super::Partition::k_intervals)). Dead
+//!   nodes keep a forward hint that is path-compressed toward the next
+//!   alive node, union-find style, so chains of retired slots are crossed
+//!   once and then shortcut.
+
+/// Ordered set of alive cluster indices in `0..n`.
+///
+/// Indices are stored as `u32` (with `n` itself as the end sentinel), the
+/// same bound [`ShardStore`](super::ShardStore) imposes on shard offsets.
+#[derive(Clone, Debug)]
+pub struct AliveSet {
+    n: usize,
+    len: usize,
+    /// First alive index, or `n` when the set is empty.
+    head: usize,
+    /// Alive `x`: next alive index after `x` (or `n`).
+    /// Dead `x`: forward hint — some index `> x` that was alive when last
+    /// observed; never points backward, so hint chains terminate.
+    next: Vec<u32>,
+    /// Alive `x`: previous alive index (or `n` for "none"). Stale for
+    /// dead nodes (never read).
+    prev: Vec<u32>,
+    alive: Vec<bool>,
+}
+
+impl AliveSet {
+    /// The full set `{0, 1, …, n−1}`.
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1, "empty universe");
+        assert!(
+            n < u32::MAX as usize,
+            "universe of {n} exceeds the u32 index range"
+        );
+        Self {
+            n,
+            len: n,
+            head: 0,
+            next: (1..=n as u32).collect(),
+            prev: std::iter::once(n as u32)
+                .chain(0..n as u32 - 1)
+                .collect(),
+            alive: vec![true; n],
+        }
+    }
+
+    /// Universe size (alive + removed).
+    #[inline]
+    pub fn universe(&self) -> usize {
+        self.n
+    }
+
+    /// Alive members remaining.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Whether `k` is still alive.
+    #[inline]
+    pub fn contains(&self, k: usize) -> bool {
+        self.alive[k]
+    }
+
+    /// Lowest alive index, or `n` when empty.
+    #[inline]
+    pub fn first(&self) -> usize {
+        self.head
+    }
+
+    /// Next alive index after alive `k`, or `n` at the end. `k` must be
+    /// alive (checked in debug builds) — use [`seek`](Self::seek) to step
+    /// from arbitrary positions.
+    #[inline]
+    pub fn succ(&self, k: usize) -> usize {
+        debug_assert!(self.alive[k], "succ({k}) on a removed index");
+        self.next[k] as usize
+    }
+
+    /// Remove alive `k` in O(1). Panics if `k` was already removed — the
+    /// protocol invariant "merge slot j was alive" is load-bearing.
+    pub fn remove(&mut self, k: usize) {
+        assert!(self.alive[k], "slot {k} removed twice");
+        let nx = self.next[k] as usize;
+        let pv = self.prev[k] as usize;
+        if pv == self.n {
+            self.head = nx;
+        } else {
+            self.next[pv] = nx as u32;
+        }
+        if nx < self.n {
+            self.prev[nx] = pv as u32;
+        }
+        self.alive[k] = false;
+        self.len -= 1;
+        // next[k] keeps pointing at nx — the forward hint seek() follows
+        // (and tightens) once nx itself retires.
+    }
+
+    /// First alive index ≥ `from`, or `n` if none. Amortized ~O(1): the
+    /// dead prefix crossed is re-pointed directly at the answer, so the
+    /// next seek through the same region is a single hop.
+    pub fn seek(&mut self, from: usize) -> usize {
+        if from >= self.n {
+            return self.n;
+        }
+        let mut x = from;
+        while x < self.n && !self.alive[x] {
+            x = self.next[x] as usize;
+        }
+        // Path-compress the dead chain we just crossed.
+        let mut y = from;
+        while y < self.n && !self.alive[y] {
+            let hop = self.next[y] as usize;
+            self.next[y] = x as u32;
+            y = hop;
+        }
+        x
+    }
+
+    /// Ascending iterator over the alive members.
+    pub fn iter(&self) -> AliveIter<'_> {
+        AliveIter { set: self, at: self.head }
+    }
+}
+
+/// Iterator returned by [`AliveSet::iter`].
+pub struct AliveIter<'a> {
+    set: &'a AliveSet,
+    at: usize,
+}
+
+impl Iterator for AliveIter<'_> {
+    type Item = usize;
+
+    fn next(&mut self) -> Option<usize> {
+        if self.at >= self.set.n {
+            return None;
+        }
+        let k = self.at;
+        self.at = self.set.next[k] as usize;
+        Some(k)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{run, Config};
+
+    fn assert_matches_oracle(set: &AliveSet, oracle: &[usize]) {
+        assert_eq!(set.len(), oracle.len());
+        assert_eq!(set.iter().collect::<Vec<_>>(), oracle, "iteration order");
+        assert_eq!(set.first(), oracle.first().copied().unwrap_or(set.universe()));
+        for k in 0..set.universe() {
+            assert_eq!(set.contains(k), oracle.binary_search(&k).is_ok(), "contains({k})");
+        }
+    }
+
+    #[test]
+    fn fresh_set_is_identity() {
+        let s = AliveSet::new(5);
+        assert_matches_oracle(&s, &[0, 1, 2, 3, 4]);
+        assert_eq!(s.succ(2), 3);
+        assert_eq!(s.succ(4), 5);
+    }
+
+    #[test]
+    fn remove_splices_head_middle_tail() {
+        let mut s = AliveSet::new(6);
+        s.remove(0); // head
+        assert_matches_oracle(&s, &[1, 2, 3, 4, 5]);
+        s.remove(3); // middle
+        assert_matches_oracle(&s, &[1, 2, 4, 5]);
+        s.remove(5); // tail
+        assert_matches_oracle(&s, &[1, 2, 4]);
+        assert_eq!(s.succ(2), 4);
+        assert_eq!(s.succ(4), 6);
+    }
+
+    #[test]
+    fn remove_to_empty() {
+        let mut s = AliveSet::new(4);
+        for k in [2, 0, 3, 1] {
+            s.remove(k);
+        }
+        assert!(s.is_empty());
+        assert_eq!(s.first(), 4);
+        assert_eq!(s.iter().count(), 0);
+        assert_eq!(s.seek(0), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "removed twice")]
+    fn double_remove_panics() {
+        let mut s = AliveSet::new(3);
+        s.remove(1);
+        s.remove(1);
+    }
+
+    #[test]
+    fn seek_from_dead_and_alive_positions() {
+        let mut s = AliveSet::new(10);
+        for k in [3, 4, 5, 6, 8] {
+            s.remove(k);
+        }
+        // alive: 0 1 2 7 9
+        assert_eq!(s.seek(0), 0);
+        assert_eq!(s.seek(3), 7); // crosses the 3..=6 dead run
+        assert_eq!(s.seek(3), 7); // compressed: single hop now
+        assert_eq!(s.seek(7), 7);
+        assert_eq!(s.seek(8), 9);
+        assert_eq!(s.seek(10), 10);
+        s.remove(7);
+        assert_eq!(s.seek(3), 9); // hints retighten past the new dead node
+        assert_eq!(s.seek(6), 9);
+    }
+
+    #[test]
+    fn singleton_universe() {
+        let mut s = AliveSet::new(1);
+        assert_eq!(s.first(), 0);
+        s.remove(0);
+        assert_eq!(s.first(), 1);
+        assert_eq!(s.seek(0), 1);
+    }
+
+    /// The ISSUE-2 satellite: random removal orders against a sorted-Vec
+    /// oracle (the exact structure this type replaced), checking ordered
+    /// iteration, contains, first, succ, and seek after every removal.
+    #[test]
+    fn property_random_removals_match_vec_oracle() {
+        run(Config::cases(30), |rng| {
+            let n = rng.range(1, 80);
+            let mut set = AliveSet::new(n);
+            let mut oracle: Vec<usize> = (0..n).collect();
+            let mut order: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut order);
+            for &victim in &order {
+                let pos = oracle.binary_search(&victim).expect("oracle alive");
+                oracle.remove(pos);
+                set.remove(victim);
+                assert_matches_oracle(&set, &oracle);
+                // seek agrees with the oracle from a handful of random
+                // starting points (dead, alive, and out of range).
+                for _ in 0..4 {
+                    let from = rng.below(n + 2);
+                    let want = oracle
+                        .iter()
+                        .copied()
+                        .find(|&k| k >= from)
+                        .unwrap_or(n);
+                    assert_eq!(set.seek(from), want, "seek({from}) n={n}");
+                }
+                // succ walks the oracle pairwise.
+                for w in oracle.windows(2) {
+                    assert_eq!(set.succ(w[0]), w[1]);
+                }
+                if let Some(&last) = oracle.last() {
+                    assert_eq!(set.succ(last), n);
+                }
+            }
+        });
+    }
+}

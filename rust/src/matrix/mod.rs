@@ -1,10 +1,12 @@
 //! Distance-matrix storage: condensed upper-triangle layout + the
 //! partitioning schemes that distribute it over ranks (paper §5.2, Fig. 2).
 
+pub mod alive;
 mod condensed;
 mod partition;
 mod shard;
 
+pub use alive::AliveSet;
 pub use condensed::{CondensedMatrix, condensed_index, condensed_len, condensed_pair};
-pub use partition::{OwnerCursor, Partition, PartitionKind};
+pub use partition::{KIntervals, OwnerCursor, Partition, PartitionKind};
 pub use shard::ShardStore;

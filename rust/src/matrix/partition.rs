@@ -11,7 +11,7 @@
 //! * [`PartitionKind::Cyclic`] — cell k goes to rank `k mod p` (perfect
 //!   static balance, worst-case update routing).
 
-use super::condensed::condensed_len;
+use super::condensed::{condensed_index, condensed_len};
 
 /// Which distribution strategy to use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -193,6 +193,120 @@ impl Partition {
     #[inline]
     pub fn owner_cursor(&self) -> OwnerCursor<'_> {
         OwnerCursor { part: self, rank: 0 }
+    }
+
+    /// For a fixed endpoint `e`, which `k ≠ e` have their cell
+    /// `(min(k,e), max(k,e))` owned by rank `r` — the step-6a interval
+    /// query (ISSUE-2 tentpole).
+    ///
+    /// Column `e` of the matrix splits into two monotone pieces:
+    ///
+    /// * **below** (`k < e`) — one cell per condensed row `k`, at
+    ///   `offset(k) + (e − k − 1)`, *strictly increasing in k*; for the
+    ///   contiguous kinds (BalancedCells / WholeRows) the ks landing in
+    ///   the chunk `[starts[r], starts[r+1])` therefore form one
+    ///   contiguous k-range, found by binary search in O(log n).
+    /// * **above** (`k > e`) — the contiguous tail of row `e`; its
+    ///   intersection with a contiguous chunk is one k-range, and under
+    ///   Cyclic it is an arithmetic progression with stride `p`
+    ///   ([`KIntervals::above_step`]).
+    ///
+    /// Cyclic's *below* piece is quadratic in k modulo p and has no
+    /// closed form; [`KIntervals::scan_below`] tells the walker to scan
+    /// alive `k < e` and filter with [`owner`](Self::owner) instead.
+    pub fn k_intervals(&self, e: usize, r: usize) -> KIntervals {
+        let n = self.n;
+        debug_assert!(e < n);
+        match self.kind {
+            PartitionKind::Cyclic => {
+                let above = if e + 1 < n {
+                    let row0 = condensed_index(n, e, e + 1);
+                    let first = e + 1 + (r + self.p - row0 % self.p) % self.p;
+                    (first < n).then_some((first, n))
+                } else {
+                    None
+                };
+                KIntervals {
+                    below: None,
+                    above,
+                    above_step: self.p,
+                    scan_below: e > 0,
+                }
+            }
+            _ => {
+                let (s, t) = (self.starts[r], self.starts[r + 1]);
+                let below = if e > 0 && s < t {
+                    let cell = |k: usize| condensed_index(n, k, e);
+                    let lo = lower_bound(e, |k| cell(k) >= s);
+                    let hi = lower_bound(e, |k| cell(k) >= t);
+                    (lo < hi).then_some((lo, hi))
+                } else {
+                    None
+                };
+                let above = if e + 1 < n && s < t {
+                    let row0 = condensed_index(n, e, e + 1);
+                    let row_end = row0 + (n - 1 - e);
+                    let c_lo = row0.max(s);
+                    let c_hi = row_end.min(t);
+                    (c_lo < c_hi).then_some((e + 1 + (c_lo - row0), e + 1 + (c_hi - row0)))
+                } else {
+                    None
+                };
+                KIntervals {
+                    below,
+                    above,
+                    above_step: 1,
+                    scan_below: false,
+                }
+            }
+        }
+    }
+}
+
+/// Smallest `k` in `[0, e]` with `pred(k)` true, assuming `pred` is
+/// monotone (false…false true…true); `e` when no k < e satisfies it.
+fn lower_bound(e: usize, pred: impl Fn(usize) -> bool) -> usize {
+    let (mut lo, mut hi) = (0usize, e);
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        if pred(mid) {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    lo
+}
+
+/// Result of [`Partition::k_intervals`]: the `k`-sets for one (endpoint,
+/// rank) query, as up to two half-open ranges.
+///
+/// Walk `below` first, then `above` — the union is then visited in
+/// ascending k, which keeps the step-6a triple batches sorted (the
+/// receiver-side [`OwnerCursor`]s rely on it).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct KIntervals {
+    /// ks in `[lo, hi)` with `hi ≤ e` whose cell `(k, e)` rank r owns.
+    /// `None` for Cyclic (see [`scan_below`](Self::scan_below)).
+    pub below: Option<(usize, usize)>,
+    /// ks in `[lo, hi)` with `lo > e` whose cell `(e, k)` rank r owns,
+    /// visiting every `above_step`-th k from `lo`.
+    pub above: Option<(usize, usize)>,
+    /// Stride of `above`: 1 for the contiguous kinds, `p` for Cyclic.
+    pub above_step: usize,
+    /// Cyclic only: the below piece has no interval structure — scan
+    /// alive `k < e` and filter with `Partition::owner`.
+    pub scan_below: bool,
+}
+
+impl KIntervals {
+    /// Total ks the two ranges describe (scan_below not included).
+    pub fn span_len(&self) -> usize {
+        let below = self.below.map_or(0, |(lo, hi)| hi - lo);
+        let above = self
+            .above
+            .map_or(0, |(lo, hi)| (hi - lo).div_ceil(self.above_step));
+        below + above
     }
 }
 
@@ -397,6 +511,67 @@ mod tests {
                 last = Some(idx);
             }
         }
+    }
+
+    /// ISSUE-2: for every (kind, endpoint, rank), the k-interval query
+    /// must enumerate exactly the ks whose cell (min(k,e), max(k,e)) the
+    /// rank owns — checked against the brute-force owner() oracle.
+    #[test]
+    fn k_intervals_match_owner_oracle_property() {
+        run(Config::cases(25), |rng| {
+            let n = rng.range(2, 48);
+            let p = rng.range(1, 11);
+            for kind in [
+                PartitionKind::BalancedCells,
+                PartitionKind::WholeRows,
+                PartitionKind::Cyclic,
+            ] {
+                let part = Partition::new(kind, n, p);
+                for e in 0..n {
+                    let mut oracle: Vec<Vec<usize>> = vec![Vec::new(); p];
+                    for k in (0..n).filter(|&k| k != e) {
+                        let idx = condensed_index(n, k.min(e), k.max(e));
+                        oracle[part.owner(idx)].push(k);
+                    }
+                    for r in 0..p {
+                        let ki = part.k_intervals(e, r);
+                        let mut got: Vec<usize> = Vec::new();
+                        if ki.scan_below {
+                            // Cyclic: the walker scans + filters below e.
+                            for k in 0..e {
+                                if part.owner(condensed_index(n, k, e)) == r {
+                                    got.push(k);
+                                }
+                            }
+                        } else if let Some((lo, hi)) = ki.below {
+                            assert!(hi <= e, "below range crosses e");
+                            got.extend(lo..hi);
+                        }
+                        if let Some((lo, hi)) = ki.above {
+                            assert!(lo > e, "above range touches e");
+                            got.extend((lo..hi).step_by(ki.above_step));
+                        }
+                        assert_eq!(got, oracle[r], "{kind:?} n={n} p={p} e={e} r={r}");
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn k_intervals_paper_example() {
+        // Fig. 2: n=8, p=7, 4 cells per rank. Rank 0 owns cells 0..4 =
+        // (0,1) (0,2) (0,3) (0,4): for endpoint e=0 that is k ∈ 1..5
+        // (above); for e=3 it is k=0 only (below).
+        let part = Partition::new(PartitionKind::BalancedCells, 8, 7);
+        let ki = part.k_intervals(0, 0);
+        assert_eq!(ki.below, None);
+        assert_eq!(ki.above, Some((1, 5)));
+        assert_eq!(ki.above_step, 1);
+        let ki = part.k_intervals(3, 0);
+        assert_eq!(ki.below, Some((0, 1)));
+        assert_eq!(ki.above, None);
+        assert_eq!(ki.span_len(), 1);
     }
 
     #[test]

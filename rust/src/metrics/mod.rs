@@ -61,6 +61,13 @@ pub struct RunStats {
     /// Tournament-tree maintenance writes (all ranks; 0 under `Full`) —
     /// the O(log m)-per-write price of the indexed scan strategy.
     pub index_ops: u64,
+    /// Candidate cluster indices k examined during step-6a routing (all
+    /// ranks). Under `AliveWalk::Full` every rank sweeps the whole alive
+    /// set every iteration (O(n·p) aggregate); under
+    /// `AliveWalk::Incremental` each rank walks only its own k-intervals
+    /// plus O(1) expected-sender probes (O(n) aggregate) — see
+    /// EXPERIMENTS.md §Alive-walk A/B.
+    pub alive_visited: u64,
     /// Max cells resident on any single rank (§5.4 storage claim).
     pub peak_shard_cells: usize,
     /// Ranks used.
@@ -81,7 +88,7 @@ impl RunStats {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "n={} p={} wall={:.3}s virt={:.6}s msgs={} ({:.1}/iter) bytes={} peak_shard={} cells scanned={} idx_ops={}",
+            "n={} p={} wall={:.3}s virt={:.6}s msgs={} ({:.1}/iter) bytes={} peak_shard={} cells scanned={} idx_ops={} alive_visited={}",
             self.n,
             self.p,
             self.wall_s,
@@ -92,6 +99,7 @@ impl RunStats {
             self.peak_shard_cells,
             self.cells_scanned,
             self.index_ops,
+            self.alive_visited,
         )
     }
 }

@@ -12,6 +12,10 @@ use std::sync::Mutex;
 
 use super::manifest::Manifest;
 use crate::dendrogram::{Dendrogram, Merge};
+// Offline build: the PJRT bindings are satisfied by the in-tree stub
+// (every constructor errors, callers fall back / skip). To link the real
+// crate, point this alias at it instead — the method surface is 1:1.
+use crate::runtime::xla_shim as xla;
 
 /// Output of the whole-clustering (`full_lw_*`) artifact.
 #[derive(Clone, Debug)]

@@ -1,0 +1,153 @@
+//! Offline stub of the `xla` (xla-rs / PJRT) crate surface that
+//! [`super::engine`] compiles against.
+//!
+//! The real PJRT bindings need a prebuilt `xla_extension` shared library
+//! that is not part of this offline vendor set, so the runtime layer is
+//! compiled against this API-compatible shim instead: every constructor
+//! returns [`Error::Unavailable`], which [`XlaEngine::load`] surfaces as a
+//! normal `anyhow` error. All callers already handle that path — the CLI
+//! reports it, `Engine::Xla` falls back to the scalar scan, and the
+//! `xla_runtime` integration tests skip with a loud marker.
+//!
+//! To run against real PJRT, drop in the actual crate and replace the
+//! `use crate::runtime::xla_shim as xla;` alias in `engine.rs` — the
+//! method surface below mirrors the real one 1:1 (`PjRtClient::cpu`,
+//! `compile`, `execute`, `Literal::{vec1, to_vec, reshape, to_tuple}`,
+//! `HloModuleProto::from_text_file`, `XlaComputation::from_proto`).
+//!
+//! [`XlaEngine::load`]: super::XlaEngine::load
+
+use std::fmt;
+use std::path::Path;
+
+/// The single error this shim produces.
+#[derive(Debug)]
+pub enum Error {
+    /// The PJRT runtime is not linked into this build.
+    Unavailable,
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(
+            "XLA/PJRT runtime unavailable: this build uses the offline \
+             xla_shim (no xla_extension library in the vendor set); the \
+             scalar engine covers every code path",
+        )
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn unavailable<T>() -> Result<T, Error> {
+    Err(Error::Unavailable)
+}
+
+/// Host literal (stub). Constructible so call sites can build argument
+/// lists; every data accessor fails with [`Error::Unavailable`].
+pub struct Literal;
+
+/// Element types [`Literal::to_vec`] can be asked for.
+pub trait NativeType: Sized {}
+impl NativeType for f32 {}
+impl NativeType for i32 {}
+
+impl Literal {
+    /// Rank-1 f32 literal.
+    pub fn vec1(_values: &[f32]) -> Literal {
+        Literal
+    }
+
+    /// Read elements back out.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        unavailable()
+    }
+
+    /// Reinterpret with a new shape.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        unavailable()
+    }
+
+    /// Flatten a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        unavailable()
+    }
+}
+
+impl From<f32> for Literal {
+    fn from(_v: f32) -> Self {
+        Literal
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<Self, Error> {
+        unavailable()
+    }
+}
+
+/// Compilable computation (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Device buffer handle (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable()
+    }
+}
+
+/// Compiled executable (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    /// Returns per-device, per-output buffers in the real crate.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable()
+    }
+}
+
+/// PJRT client (stub). [`PjRtClient::cpu`] is the root constructor every
+/// engine path goes through, so failing here gates the whole closure.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self, Error> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("/nope.hlo.txt").is_err());
+        let lit = Literal::vec1(&[1.0, 2.0]);
+        assert!(lit.to_vec::<f32>().is_err());
+        assert!(lit.reshape(&[2]).is_err());
+        assert!(Literal::from(0.5f32).to_tuple().is_err());
+    }
+
+    #[test]
+    fn error_converts_into_anyhow() {
+        let e: anyhow::Error = Error::Unavailable.into();
+        assert!(e.to_string().contains("unavailable"));
+    }
+}

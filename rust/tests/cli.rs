@@ -128,6 +128,39 @@ fn cluster_indexed_scan_strategy() {
 }
 
 #[test]
+fn cluster_alive_walk_toggle() {
+    // ISSUE-2: --alive-walk full vs (default) incremental must agree on
+    // the clustering and differ only in the reported walk counter.
+    let grab = |t: &str, key: &str| -> u64 {
+        t.split(key)
+            .nth(1)
+            .and_then(|s| s.split_whitespace().next())
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0)
+    };
+    let (ok_f, full) = lancew(&[
+        "cluster", "--n", "80", "--p", "4", "--alive-walk", "full", "--cut", "3", "--seed", "9",
+    ]);
+    assert!(ok_f, "{full}");
+    let (ok_i, incr) = lancew(&["cluster", "--n", "80", "--p", "4", "--cut", "3", "--seed", "9"]);
+    assert!(ok_i, "{incr}");
+    let sizes_of = |t: &str| {
+        t.lines()
+            .find(|l| l.contains("cluster sizes"))
+            .map(String::from)
+    };
+    assert_eq!(sizes_of(&full), sizes_of(&incr));
+    let (vf, vi) = (grab(&full, "alive_visited="), grab(&incr, "alive_visited="));
+    // Full: p·(n(n+1)/2 − 1) exactly; incremental strictly less.
+    assert_eq!(vf, 4 * (80 * 81 / 2 - 1), "{full}");
+    assert!(vi < vf, "incremental {vi} !< full {vf}");
+
+    let (ok_bad, text) = lancew(&["cluster", "--n", "10", "--alive-walk", "sideways"]);
+    assert!(!ok_bad);
+    assert!(text.contains("alive-walk"), "{text}");
+}
+
+#[test]
 fn indexed_scan_rejects_engine_flag() {
     let (ok, text) = lancew(&[
         "cluster", "--n", "10", "--scan", "indexed", "--engine", "xla",

@@ -92,6 +92,35 @@ fn fig2_shape_speedup_then_saturation() {
 }
 
 #[test]
+fn alive_walk_counter_shapes() {
+    // The routing-work counter behind ROADMAP "Larger n": full is O(n·p)
+    // aggregate per iteration (grows with p at fixed n), incremental is
+    // O(n) aggregate (flat-ish in p) — measured on the live system.
+    let m = matrix(160, 12);
+    let visited = |p: usize, walk: AliveWalk| {
+        ClusterConfig::new(Scheme::Complete, p)
+            .with_alive_walk(walk)
+            .run(&m)
+            .unwrap()
+            .stats
+            .alive_visited
+    };
+    let full2 = visited(2, AliveWalk::Full);
+    let full8 = visited(8, AliveWalk::Full);
+    // Full: exactly p × Σ alive, so 8 ranks do 4× the walk of 2 ranks.
+    assert_eq!(full8, 4 * full2);
+    let incr2 = visited(2, AliveWalk::Incremental);
+    let incr8 = visited(8, AliveWalk::Incremental);
+    // Incremental: the send walks are partitioned, not replicated — going
+    // 2 → 8 ranks must NOT multiply the aggregate (probe overhead only).
+    assert!(incr8 < full8 / 2, "incr8 {incr8} vs full8 {full8}");
+    assert!(
+        incr8 < incr2 * 3,
+        "aggregate incremental walk grew with p: p=2 {incr2}, p=8 {incr8}"
+    );
+}
+
+#[test]
 fn virtual_time_replays_exactly() {
     let m = matrix(64, 5);
     let runs: Vec<_> = (0..3)

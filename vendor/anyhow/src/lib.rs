@@ -1,0 +1,202 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! This workspace builds with **no crates.io access** (the container image
+//! bakes in the toolchain but no registry), so the ergonomic error type is
+//! vendored as a path dependency under the same crate name — every call
+//! site stays source-compatible with the real `anyhow`.
+//!
+//! Provided (exactly what the tree uses):
+//!
+//! * [`Error`] — a message plus an optional boxed source;
+//! * [`Result`] — `Result<T, Error>` alias with the default type param;
+//! * [`anyhow!`], [`bail!`], [`ensure!`] — including the bare
+//!   `ensure!(cond)` form;
+//! * `From<E>` for every `E: std::error::Error + Send + Sync + 'static`,
+//!   so `?` converts io/parse errors;
+//! * `{e}` / `{e:#}` formatting (`:#` appends the source chain, like the
+//!   real crate's alternate mode).
+//!
+//! Not provided: `Context`, downcasting, backtraces — nothing in-tree
+//! needs them. Swap back to the real crate by replacing the path
+//! dependency with a registry one; no source changes required.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A lightweight dynamic error: display message + optional source chain.
+///
+/// Deliberately does **not** implement `std::error::Error` — exactly like
+/// the real `anyhow::Error` — so the blanket `From<E: std::error::Error>`
+/// impl cannot overlap with `impl From<T> for T`.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Error from anything displayable (what [`anyhow!`] expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Error wrapping a concrete `std::error::Error` (what `?` uses).
+    pub fn new<E>(error: E) -> Self
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        Error { msg: error.to_string(), source: Some(Box::new(error)) }
+    }
+
+    /// The root-cause chain below this error (possibly empty).
+    pub fn chain(&self) -> impl Iterator<Item = &(dyn std::error::Error + 'static)> {
+        // Auto-trait-dropping coercion (&dyn Error+Send+Sync → &dyn Error)
+        // happens at the constructor-argument coercion site; a .map()
+        // closure would not coerce without an annotated return type.
+        #[allow(clippy::manual_map)]
+        let mut next: Option<&(dyn std::error::Error + 'static)> = match self.source.as_deref() {
+            Some(e) => Some(e),
+            None => None,
+        };
+        std::iter::from_fn(move || {
+            let cur = next?;
+            next = cur.source();
+            Some(cur)
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            for cause in self.chain() {
+                // The wrapped source's own message is already the `msg`
+                // when constructed via `new`; avoid printing it twice.
+                let text = cause.to_string();
+                if text != self.msg {
+                    write!(f, ": {text}")?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        let mut first = true;
+        for cause in self.chain() {
+            let text = cause.to_string();
+            if text == self.msg {
+                continue;
+            }
+            if first {
+                write!(f, "\n\nCaused by:")?;
+                first = false;
+            }
+            write!(f, "\n    {text}")?;
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// Construct an [`Error`] from a format string (or any `Display` value).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Early-return with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::core::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Early-return with an error unless `cond` holds. The bare one-argument
+/// form reports the stringified condition, like the real crate.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::Error::msg(concat!(
+                "Condition failed: `",
+                stringify!($cond),
+                "`"
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return ::core::result::Result::Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<usize> {
+        let v: usize = s.parse()?; // From<ParseIntError>
+        ensure!(v >= 10, "too small: {v}");
+        ensure!(v != 13);
+        if v > 100 {
+            bail!("too big: {v}");
+        }
+        Ok(v)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(parse("abc").is_err());
+        assert_eq!(parse("42").unwrap(), 42);
+    }
+
+    #[test]
+    fn ensure_and_bail_messages() {
+        assert_eq!(parse("7").unwrap_err().to_string(), "too small: 7");
+        assert_eq!(
+            parse("13").unwrap_err().to_string(),
+            "Condition failed: `v != 13`"
+        );
+        assert_eq!(parse("999").unwrap_err().to_string(), "too big: 999");
+    }
+
+    #[test]
+    fn alternate_display_appends_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::Other, "disk on fire");
+        let e = Error::new(io);
+        // Source message equals msg here, so `:#` must not duplicate it.
+        assert_eq!(format!("{e:#}"), "disk on fire");
+        let plain = anyhow!("top level");
+        assert_eq!(format!("{plain:#}"), "top level");
+    }
+
+    #[test]
+    fn debug_is_populated() {
+        let e = anyhow!("x = {}", 5);
+        assert_eq!(format!("{e:?}"), "x = 5");
+    }
+}
