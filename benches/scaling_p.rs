@@ -1,0 +1,155 @@
+//! BENCH P1 (ISSUE-3) — rank-count scaling: threads vs event runtime.
+//!
+//! The event scheduler exists to make p a real scaling axis: thousands
+//! of ranks in one process, where thread-per-rank pays OS thread stacks,
+//! spawn/join, and context switches. Two sweeps:
+//!
+//!   (a) p sweep at fixed n under the scalable configuration
+//!       (`--collectives tree --scan indexed --alive-walk incremental`):
+//!       wall-clock for both runtimes (the A/B), plus the simulated
+//!       makespan and message volume — which must be *bitwise identical*
+//!       across runtimes (asserted, with the dendrogram).
+//!   (b) the acceptance run (full mode only): n=5000, p=1024 on the
+//!       event runtime in one process, bitwise-equal to the threads
+//!       runtime and the serial baseline.
+//!
+//! Peak resident ranks per process is p itself on the event runtime —
+//! every rank task lives in the scheduler; the threads column pays one
+//! OS thread per rank instead.
+//!
+//! Writes BENCH_scaling_p.json at the repo root (provenance-marked like
+//! BENCH_scaling_n.json; EXPERIMENTS.md §Rank scaling A/B).
+
+use lancew::baselines::serial_lw::serial_lw_cluster;
+use lancew::comm::Collectives;
+use lancew::metrics::Timer;
+use lancew::prelude::*;
+
+fn scalable_config(scheme: Scheme, p: usize) -> ClusterConfig {
+    ClusterConfig::new(scheme, p)
+        .with_collectives(Collectives::Tree)
+        .with_scan(ScanStrategy::Indexed)
+        .with_alive_walk(AliveWalk::Incremental)
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let n = if quick { 400 } else { 2000 };
+    let ps: Vec<usize> = if quick { vec![8, 32, 128] } else { vec![16, 64, 256, 1024] };
+    // OS-thread ceiling for the threads column (the event column has none).
+    let threads_cap = if quick { 128 } else { 1024 };
+    let mut rows: Vec<String> = Vec::new();
+
+    // ---- (a) p sweep: wall-clock A/B at fixed n -----------------------
+    println!("# P1a: threads vs event wall-clock at n={n} (tree/indexed/incremental)");
+    println!(
+        "{:>6} {:>14} {:>14} {:>14} {:>12} {:>14}",
+        "p", "event_wall_s", "threads_wall_s", "sim_time_s", "msgs/iter", "resident_ranks"
+    );
+    let lp = GaussianSpec { n, d: 6, k: 8, ..Default::default() }.generate(15);
+    let m = euclidean_matrix(&lp.points);
+    for &p in &ps {
+        let t = Timer::start();
+        let event = scalable_config(Scheme::Complete, p).run(&m)?;
+        let event_wall = t.elapsed_s();
+        let threads_wall = if p <= threads_cap {
+            let t = Timer::start();
+            let threads = scalable_config(Scheme::Complete, p)
+                .with_runtime(Runtime::Threads)
+                .run(&m)?;
+            let w = t.elapsed_s();
+            // The whole point: identical observables, different substrate.
+            lancew::validate::dendrograms_equal(&event.dendrogram, &threads.dendrogram, 0.0)
+                .map_err(|e| anyhow::anyhow!("p={p}: runtimes diverged: {e}"))?;
+            assert_eq!(event.stats.virtual_s, threads.stats.virtual_s, "p={p}: virtual time");
+            assert_eq!(event.stats.msgs_sent, threads.stats.msgs_sent, "p={p}: messages");
+            Some(w)
+        } else {
+            None
+        };
+        println!(
+            "{:>6} {:>14.3} {:>14} {:>14.6} {:>12.1} {:>14}",
+            p,
+            event_wall,
+            threads_wall.map_or("-".into(), |w| format!("{w:.3}")),
+            event.stats.virtual_s,
+            event.stats.msgs_per_iteration(),
+            event.stats.p,
+        );
+        rows.push(format!(
+            "{{\"p\": {p}, \"event_wall_s\": {:.3}, \"threads_wall_s\": {}, \"sim_time_s\": {:.6}, \
+             \"msgs_per_iter\": {:.1}, \"resident_ranks\": {}}}",
+            event_wall,
+            threads_wall.map_or("null".into(), |w| format!("{w:.3}")),
+            event.stats.virtual_s,
+            event.stats.msgs_per_iteration(),
+            event.stats.p,
+        ));
+    }
+
+    // ---- (b) acceptance: n=5000, p=1024, one process -------------------
+    let acceptance = if quick {
+        println!("\n# P1b skipped (--quick): n=5000 p=1024 acceptance run");
+        String::from("null")
+    } else {
+        println!("\n# P1b: acceptance — n=5000, p=1024, event runtime, one process");
+        let lp = GaussianSpec { n: 5000, d: 6, k: 8, ..Default::default() }.generate(16);
+        let m = euclidean_matrix(&lp.points);
+        let t = Timer::start();
+        let event = scalable_config(Scheme::Complete, 1024).run(&m)?;
+        let event_wall = t.elapsed_s();
+        assert_eq!(event.stats.p, 1024);
+        let t = Timer::start();
+        let threads = scalable_config(Scheme::Complete, 1024)
+            .with_runtime(Runtime::Threads)
+            .run(&m)?;
+        let threads_wall = t.elapsed_s();
+        lancew::validate::dendrograms_equal(&event.dendrogram, &threads.dendrogram, 0.0)
+            .map_err(|e| anyhow::anyhow!("acceptance: runtimes diverged: {e}"))?;
+        let serial = serial_lw_cluster(Scheme::Complete, &m);
+        lancew::validate::dendrograms_equal(&serial, &event.dendrogram, 0.0)
+            .map_err(|e| anyhow::anyhow!("acceptance: event != serial: {e}"))?;
+        println!(
+            "  event {event_wall:.1}s vs threads {threads_wall:.1}s; \
+             sim {:.4}s; bitwise == threads == serial ✓",
+            event.stats.virtual_s
+        );
+        format!(
+            "{{\"n\": 5000, \"p\": 1024, \"event_wall_s\": {event_wall:.3}, \
+             \"threads_wall_s\": {threads_wall:.3}, \"sim_time_s\": {:.6}, \"bitwise_serial\": true}}",
+            event.stats.virtual_s
+        )
+    };
+
+    // The committed python_sim_reference rows (protocol-exact, from
+    // python/tests/test_event_runtime.py — cited by EXPERIMENTS.md §Rank
+    // scaling A/B) are carried over from the existing snapshot so a bench
+    // rerun refreshes the measured sections without deleting them.
+    let path = "BENCH_scaling_p.json";
+    let reference = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|old| {
+            let start = old.find("\"python_sim_reference\": {")?;
+            // The section is the last object in the document: take through
+            // its closing brace (the document's final "}\n" follows).
+            let end = old.rfind('}')?;
+            let end = old[..end].rfind('}')? + 1;
+            (end > start).then(|| old[start..end].to_string())
+        })
+        .unwrap_or_else(|| "\"python_sim_reference\": null".into());
+    std::fs::write(
+        path,
+        format!(
+            "{{\n  \"bench\": \"scaling_p\",\n  \"provenance\": \"measured (cargo bench --bench scaling_p{})\",\n  \
+             \"config\": \"collectives=tree scan=indexed alive-walk=incremental scheme=complete n={n}\",\n  \
+             \"p1a_runtime_ab\": {{\n    \"rows\": [\n      {}\n    ]\n  }},\n  \
+             \"p1b_acceptance\": {},\n  {}\n}}\n",
+            if quick { " -- --quick" } else { "" },
+            rows.join(",\n      "),
+            acceptance,
+            reference,
+        ),
+    )?;
+    println!("# json: {path}");
+    Ok(())
+}

@@ -1,0 +1,787 @@
+"""Differential test for the ISSUE-3 event-driven rank runtime.
+
+Transliterates BOTH protocol drivers from `rust/src/coordinator/` into
+Python and checks them against each other and a serial Lance-Williams
+oracle, operation for operation:
+
+* ``run_blocking_sim`` — the pre-refactor straight-line ``worker_main``
+  (blocking receives, modelled with generators that suspend at each
+  ``recv``), including the naive allgather and the binomial-tree
+  gather/broadcast collectives exactly as ``comm::collectives`` writes
+  them;
+* ``run_event_sim`` — the new ``RankTask`` state machine (``task.rs``)
+  driven by the wake-log event scheduler (``sched.rs``), transliterated
+  state by state.
+
+Asserted, for every (partition kind, collectives, p) combination:
+
+1. merge sequences are identical (and equal to the serial f32 oracle);
+2. every rank's final virtual clock is *exactly* equal across drivers;
+3. per-rank message/byte counters and phase breakdowns are identical.
+
+This is the container-side stand-in for `rust/tests/runtime_equivalence.rs`
+(no Rust toolchain here); the Rust suite pins the same invariants in CI.
+Pure NumPy — independent of the JAX kernel tests next door.
+"""
+
+import math
+
+import numpy as np
+
+F32 = np.float32
+INF = F32(np.inf)
+
+# ---------------------------------------------------------------------------
+# condensed layout + partition (transliterated from rust/src/matrix)
+# ---------------------------------------------------------------------------
+
+
+def condensed_len(n):
+    return n * (n - 1) // 2
+
+
+def condensed_index(n, i, j):
+    assert i < j
+    return i * (2 * n - i - 3) // 2 + j - 1
+
+
+def condensed_pair(n, idx):
+    i = 0
+    row = n - 1
+    at = 0
+    while at + row <= idx:
+        at += row
+        row -= 1
+        i += 1
+    return i, i + 1 + (idx - at)
+
+
+class Partition:
+    def __init__(self, kind, n, p):
+        self.kind, self.n, self.p = kind, n, p
+        ln = condensed_len(n)
+        if kind == "cyclic":
+            self.starts = None
+        elif kind == "balanced":
+            base, rem = divmod(ln, p)
+            starts = [0]
+            at = 0
+            for r in range(p):
+                at += base + (1 if r < rem else 0)
+                starts.append(at)
+            self.starts = starts
+        elif kind == "rows":
+            starts = [0]
+            ideal = ln / p
+            cells = 0
+            for row in range(max(n - 1, 0)):
+                cells += n - 1 - row
+                if cells >= len(starts) * ideal and len(starts) < p:
+                    starts.append(cells)
+            while len(starts) < p:
+                starts.append(ln)
+            starts.append(ln)
+            self.starts = starts
+        else:
+            raise ValueError(kind)
+
+    def owner(self, idx):
+        if self.kind == "cyclic":
+            return idx % self.p
+        import bisect
+
+        pos = bisect.bisect_right(self.starts, idx) - 1
+        return min(pos, self.p - 1)
+
+    def local_offset(self, idx):
+        if self.kind == "cyclic":
+            return idx // self.p
+        return idx - self.starts[self.owner(idx)]
+
+    def cells_of(self, r):
+        if self.kind == "cyclic":
+            return list(range(r, condensed_len(self.n), self.p))
+        return list(range(self.starts[r], self.starts[r + 1]))
+
+
+# ---------------------------------------------------------------------------
+# cost model + wire sizes (comm/costmodel.rs, coordinator/protocol.rs)
+# ---------------------------------------------------------------------------
+
+
+class Model:
+    def __init__(self, latency=2.0e-6, per_byte=0.4e-9, send_overhead=1.4e-6,
+                 recv_overhead=1.4e-6, per_cell=1.0e-9):
+        self.latency = latency
+        self.per_byte = per_byte
+        self.send_overhead = send_overhead
+        self.recv_overhead = recv_overhead
+        self.per_cell = per_cell
+
+
+def nbytes(msg):
+    kind, payload = msg[0], msg[1]
+    if kind == "shard":
+        return 8 + 4 * len(payload)
+    if kind == "localmin":
+        return 12
+    if kind == "announce":
+        return 8
+    if kind == "triples":
+        return 8 + 8 * len(payload)
+    if kind == "minlist":
+        return 8 + 16 * len(payload)
+    raise ValueError(kind)
+
+
+class Endpoint:
+    """transport.rs: per-rank mailbox + virtual clock + traffic counters."""
+
+    def __init__(self, rank, p, model, boxes):
+        self.rank, self.p, self.model, self.boxes = rank, p, model, boxes
+        self.stash = []
+        self.clock = 0.0
+        self.msgs = 0
+        self.bytes = 0
+        self.wakes = None
+
+    def send(self, dst, tag, msg):
+        b = nbytes(msg)
+        if dst == self.rank:
+            arrival = self.clock
+        else:
+            self.clock += self.model.send_overhead + b * self.model.per_byte
+            arrival = self.clock + self.model.latency  # flat topology, 1 hop
+        self.msgs += 1
+        self.bytes += b
+        if self.wakes is not None and dst != self.rank:
+            self.wakes.append(dst)
+        env = (self.rank, tag, arrival, msg)
+        if dst == self.rank:
+            self.stash.append(env)
+        else:
+            self.boxes[dst].append(env)
+
+    def _finish(self, env):
+        if env[2] > self.clock:
+            self.clock = env[2]
+        self.clock += self.model.recv_overhead
+        return env[3]
+
+    def try_recv(self, src, tag):
+        box = self.boxes[self.rank]
+        self.stash.extend(box)
+        box.clear()
+        for i, e in enumerate(self.stash):
+            if e[0] == src and e[1] == tag:
+                return self._finish(self.stash.pop(i))
+        return None
+
+    def compute(self, cells):
+        self.clock += cells * self.model.per_cell
+
+
+# ---------------------------------------------------------------------------
+# shared protocol pieces (worker.rs helpers, f32 arithmetic throughout)
+# ---------------------------------------------------------------------------
+
+
+def coeffs(scheme, n_i, n_j, n_k):
+    n_i, n_j, n_k = F32(n_i), F32(n_j), F32(n_k)
+    if scheme == "complete":
+        return F32(0.5), F32(0.5), F32(0.0), F32(0.5)
+    if scheme == "average":
+        s = n_i + n_j
+        return n_i / s, n_j / s, F32(0.0), F32(0.0)
+    if scheme == "ward":
+        s = n_i + n_j + n_k
+        return (n_i + n_k) / s, (n_j + n_k) / s, -(n_k / s), F32(0.0)
+    raise ValueError(scheme)
+
+
+def lw_update(c, d_ki, d_kj, d_ij):
+    if np.isinf(d_ki) or np.isinf(d_kj):
+        return INF
+    ai, aj, b, g = c
+    return ai * d_ki + aj * d_kj + b * d_ij + g * F32(abs(d_ki - d_kj))
+
+
+def scalar_min(shard):
+    """(min, first index); (inf, MAX) when all retired."""
+    best, idx = INF, None
+    for k, v in enumerate(shard):
+        if v < best:
+            best, idx = v, k
+    return best, idx
+
+
+def global_min(pairs):
+    best = None
+    for rank, (v, idx) in enumerate(pairs):
+        if not math.isfinite(v):
+            continue
+        if best is None or v < best[1] or (v == best[1] and idx < best[2]):
+            best = (rank, v, idx)
+    return best
+
+
+def route_full(part, alive, shard, me, i, j, outbound, expect, local):
+    """Step-6a full walk (route_full in worker.rs); retires sent cells."""
+    n = part.n
+    for k in alive:
+        if k == i or k == j:
+            continue
+        ckj = condensed_index(n, min(k, j), max(k, j))
+        if part.owner(ckj) == me:
+            off = part.local_offset(ckj)
+            cki = condensed_index(n, min(k, i), max(k, i))
+            o = part.owner(cki)
+            v = shard[off]
+            if o == me:
+                local.append((k, v))
+            else:
+                outbound[o].append((k, v))
+            shard[off] = INF
+        else:
+            cki = condensed_index(n, min(k, i), max(k, i))
+            if part.owner(cki) == me:
+                expect[part.owner(ckj)] = True
+
+
+def tag(iteration, phase):
+    return iteration * 4 + phase
+
+
+DIST = -1
+MIN, ANN, TRI = 0, 1, 2
+
+
+# ---------------------------------------------------------------------------
+# driver (a): the straight-line blocking worker, as a generator
+# ---------------------------------------------------------------------------
+
+
+def worker_gen(ep, part, scheme, collectives, matrix):
+    """Original worker_main: `yield (src, tag)` marks every blocking recv;
+    the scheduler resumes the generator with the matching payload."""
+    me, p, n = ep.rank, ep.p, part.n
+
+    if me == 0:
+        for dst in range(1, p):
+            ep.send(dst, DIST, ("shard", [matrix[c] for c in part.cells_of(dst)]))
+        cells = [matrix[c] for c in part.cells_of(0)]
+    else:
+        msg = yield (0, DIST)
+        cells = list(msg[1])
+    phases = [ep.clock, 0.0, 0.0, 0.0]  # build, scan, coordinate, update
+    my_cell0 = part.cells_of(me)
+
+    sizes = [1.0] * n
+    alive = list(range(n))
+    merges = []
+
+    for it in range(n - 1):
+        t0 = ep.clock
+        live = sum(1 for v in cells if not np.isinf(v))
+        ep.compute(live)
+        lmin, lidx = scalar_min(cells)
+        gidx = my_cell0[lidx] if lidx is not None else None
+        phases[1] += ep.clock - t0
+        t1 = ep.clock
+
+        t = tag(it, MIN)
+        if collectives == "naive":
+            for dst in range(p):
+                if dst != me:
+                    ep.send(dst, t, ("localmin", (float(lmin), gidx)))
+            pairs = [None] * p
+            pairs[me] = (float(lmin), gidx)
+            for src in range(p):
+                if src != me:
+                    msg = yield (src, t)
+                    pairs[src] = msg[1]
+        else:  # tree: exchange_minima in protocol.rs
+            acc = [(me, float(lmin), gidx)]
+            mask, sent = 1, False
+            while mask < p and not sent:
+                if me & mask != 0:
+                    ep.send(me - mask, t, ("minlist", acc))
+                    acc, sent = [], True
+                else:
+                    if me + mask < p:
+                        msg = yield (me + mask, t)
+                        acc = acc + list(msg[1])
+                    mask <<= 1
+            bt = t ^ (1 << 62)
+            if me == 0:
+                acc.sort(key=lambda e: e[0])
+                full = yield from bcast_tree_gen(ep, bt, 0, ("minlist", acc))
+            else:
+                full = yield from bcast_tree_gen(ep, bt, 0, None)
+            pairs = [(v, i) for (_, v, i) in full[1]]
+
+        win, d_ij, widx = global_min(pairs)
+        i, j = condensed_pair(n, widx)
+        at = tag(it, ANN)
+        payload = ("announce", (i, j)) if me == win else None
+        if collectives == "naive":
+            if me == win:
+                for dst in range(p):
+                    if dst != me:
+                        ep.send(dst, at, payload)
+                ann = payload
+            else:
+                ann = yield (win, at)
+        else:
+            ann = yield from bcast_tree_gen(ep, at, win, payload)
+        assert ann[1] == (i, j)
+        phases[2] += ep.clock - t1
+        t2 = ep.clock
+
+        outbound = [[] for _ in range(p)]
+        expect = [False] * p
+        local = []
+        route_full(part, alive, cells, me, i, j, outbound, expect, local)
+        cij = condensed_index(n, i, j)
+        if part.owner(cij) == me:
+            cells[part.local_offset(cij)] = INF
+        tt = tag(it, TRI)
+        for dst in range(p):
+            if outbound[dst]:
+                ep.send(dst, tt, ("triples", outbound[dst]))
+        n_i, n_j = sizes[i], sizes[j]
+        for (k, d_kj) in local:
+            cki = condensed_index(n, min(k, i), max(k, i))
+            off = part.local_offset(cki)
+            c = coeffs(scheme, n_i, n_j, sizes[k])
+            cells[off] = lw_update(c, cells[off], d_kj, F32(d_ij))
+        for src in range(p):
+            if expect[src]:
+                msg = yield (src, tt)
+                ep.compute(len(msg[1]))
+                for (k, d_kj) in msg[1]:
+                    cki = condensed_index(n, min(k, i), max(k, i))
+                    off = part.local_offset(cki)
+                    c = coeffs(scheme, n_i, n_j, sizes[k])
+                    cells[off] = lw_update(c, cells[off], d_kj, F32(d_ij))
+        sizes[i] += sizes[j]
+        sizes[j] = 0.0
+        alive.remove(j)
+        merges.append((i, j, float(d_ij)))
+        phases[3] += ep.clock - t2
+
+    return {"rank": me, "merges": merges, "clock": ep.clock,
+            "msgs": ep.msgs, "bytes": ep.bytes, "phases": phases}
+
+
+def bcast_tree_gen(ep, t, root, payload):
+    """collectives.rs broadcast_tree, with `yield` at the parent recv."""
+    p, me = ep.p, ep.rank
+    rel = (me + p - root) % p
+    mask = 1
+    if rel == 0:
+        value = payload
+        while mask < p:
+            mask <<= 1
+    else:
+        while True:
+            if rel & mask != 0:
+                parent = (rel - mask + root) % p
+                value = yield (parent, t)
+                break
+            mask <<= 1
+    mask >>= 1
+    while mask > 0:
+        if rel & mask == 0 and rel + mask < p:
+            ep.send((rel + mask + root) % p, t, value)
+        mask >>= 1
+    return value
+
+
+def run_blocking_sim(kind, scheme, collectives, matrix, n, p, model):
+    boxes = [[] for _ in range(p)]
+    part = Partition(kind, n, p)
+    eps = [Endpoint(r, p, model, boxes) for r in range(p)]
+    gens = [worker_gen(eps[r], part, scheme, collectives, matrix) for r in range(p)]
+    waiting = [None] * p  # (src, tag) each blocked generator awaits
+    results = [None] * p
+    for r in range(p):
+        try:
+            waiting[r] = gens[r].send(None)
+        except StopIteration as s:
+            results[r] = s.value
+    while any(res is None for res in results):
+        progress = False
+        for r in range(p):
+            if results[r] is not None:
+                continue
+            src, t = waiting[r]
+            msg = eps[r].try_recv(src, t)
+            if msg is None:
+                continue
+            progress = True
+            try:
+                waiting[r] = gens[r].send(msg)
+            except StopIteration as s:
+                results[r] = s.value
+        assert progress, "blocking sim deadlocked"
+    return results
+
+
+# ---------------------------------------------------------------------------
+# driver (b): the RankTask state machine + wake-log event scheduler
+# ---------------------------------------------------------------------------
+
+
+class RankTask:
+    """task.rs transliterated: one Step per blocking point."""
+
+    def __init__(self, ep, part, scheme, collectives, matrix):
+        self.ep, self.part = ep, part
+        self.scheme, self.collectives = scheme, collectives
+        self.matrix = matrix if ep.rank == 0 else None
+        self.step = ("distribute",)
+        self.out = None
+
+    # -- poll loop ---------------------------------------------------------
+
+    def poll(self):
+        while True:
+            kind = self.step[0]
+            if kind == "done":
+                return None
+            pending = getattr(self, "do_" + kind)(*self.step[1:])
+            if pending is not None:
+                return pending
+
+    def do_distribute(self):
+        ep, part = self.ep, self.part
+        me, p = ep.rank, ep.p
+        if me == 0:
+            for dst in range(1, p):
+                ep.send(dst, DIST, ("shard", [self.matrix[c] for c in part.cells_of(dst)]))
+            cells = [self.matrix[c] for c in part.cells_of(0)]
+        else:
+            msg = ep.try_recv(0, DIST)
+            if msg is None:
+                return (0, DIST)
+            cells = list(msg[1])
+        n = part.n
+        self.cells = cells
+        self.phases = [ep.clock, 0.0, 0.0, 0.0]
+        self.my_cell0 = part.cells_of(me)
+        self.sizes = [1.0] * n
+        self.alive = list(range(n))
+        self.merges = []
+        self.iter = 0
+        self.t_mark = 0.0
+        self.pairs = []
+        self.acc = []
+        self.win = None
+        self.step = ("send_min",)
+        return None
+
+    def do_send_min(self):
+        ep = self.ep
+        me, p = ep.rank, ep.p
+        t0 = ep.clock
+        live = sum(1 for v in self.cells if not np.isinf(v))
+        ep.compute(live)
+        lmin, lidx = scalar_min(self.cells)
+        gidx = self.my_cell0[lidx] if lidx is not None else None
+        self.phases[1] += ep.clock - t0
+        self.t_mark = ep.clock
+        t = tag(self.iter, MIN)
+        if self.collectives == "naive":
+            for dst in range(p):
+                if dst != me:
+                    ep.send(dst, t, ("localmin", (float(lmin), gidx)))
+            self.pairs = [None] * p
+            self.pairs[me] = (float(lmin), gidx)
+            self.step = ("gather_min", 0)
+        else:
+            self.acc = [(me, float(lmin), gidx)]
+            self.step = ("tree_gather_min", 1)
+        return None
+
+    def do_gather_min(self, next_src):
+        ep = self.ep
+        me, p = ep.rank, ep.p
+        t = tag(self.iter, MIN)
+        for src in range(next_src, p):
+            if src == me:
+                continue
+            msg = ep.try_recv(src, t)
+            if msg is None:
+                self.step = ("gather_min", src)
+                return (src, t)
+            self.pairs[src] = msg[1]
+        self.pick_winner_and_announce()
+        return None
+
+    def do_tree_gather_min(self, mask):
+        ep = self.ep
+        me, p = ep.rank, ep.p
+        t = tag(self.iter, MIN)
+        while mask < p:
+            if me & mask != 0:
+                ep.send(me - mask, t, ("minlist", self.acc))
+                self.acc = []
+                self.step = ("await_min_list",)
+                return None
+            if me + mask < p:
+                msg = ep.try_recv(me + mask, t)
+                if msg is None:
+                    self.step = ("tree_gather_min", mask)
+                    return (me + mask, t)
+                self.acc = self.acc + list(msg[1])
+            mask <<= 1
+        bt = t ^ (1 << 62)
+        full = sorted(self.acc, key=lambda e: e[0])
+        self.acc = []
+        self.tree_forward(bt, 0, ("minlist", full))
+        self.finish_min_exchange(full)
+        return None
+
+    def do_await_min_list(self):
+        ep = self.ep
+        t = tag(self.iter, MIN)
+        bt = t ^ (1 << 62)
+        parent = tree_parent(ep.rank, 0, ep.p)
+        msg = ep.try_recv(parent, bt)
+        if msg is None:
+            return (parent, bt)
+        self.tree_forward(bt, 0, ("minlist", list(msg[1])))
+        self.finish_min_exchange(msg[1])
+        return None
+
+    def finish_min_exchange(self, full):
+        self.pairs = [(v, i) for (_, v, i) in full]
+        self.pick_winner_and_announce()
+
+    def pick_winner_and_announce(self):
+        ep = self.ep
+        me, p = ep.rank, ep.p
+        win, d_ij, widx = global_min(self.pairs)
+        i, j = condensed_pair(self.part.n, widx)
+        self.win = (win, d_ij, i, j)
+        at = tag(self.iter, ANN)
+        if me != win:
+            self.step = ("merge_broadcast",)
+            return
+        ann = ("announce", (i, j))
+        if self.collectives == "naive":
+            for dst in range(p):
+                if dst != me:
+                    ep.send(dst, at, ann)
+        else:
+            self.tree_forward(at, win, ann)
+        self.step = ("walk",)
+
+    def do_merge_broadcast(self):
+        ep = self.ep
+        win, d_ij, i, j = self.win
+        at = tag(self.iter, ANN)
+        src = win if self.collectives == "naive" else tree_parent(ep.rank, win, ep.p)
+        msg = ep.try_recv(src, at)
+        if msg is None:
+            return (src, at)
+        assert msg[1] == (i, j)
+        if self.collectives == "tree":
+            self.tree_forward(at, win, ("announce", msg[1]))
+        self.step = ("walk",)
+        return None
+
+    def do_walk(self):
+        ep, part = self.ep, self.part
+        me, p, n = ep.rank, ep.p, part.n
+        self.phases[2] += ep.clock - self.t_mark
+        self.t_mark = ep.clock
+        win, d_ij, i, j = self.win
+        outbound = [[] for _ in range(p)]
+        self.expect = [False] * p
+        local = []
+        route_full(part, self.alive, self.cells, me, i, j, outbound, self.expect, local)
+        cij = condensed_index(n, i, j)
+        if part.owner(cij) == me:
+            self.cells[part.local_offset(cij)] = INF
+        tt = tag(self.iter, TRI)
+        for dst in range(p):
+            if outbound[dst]:
+                ep.send(dst, tt, ("triples", outbound[dst]))
+        n_i, n_j = self.sizes[i], self.sizes[j]
+        for (k, d_kj) in local:
+            cki = condensed_index(n, min(k, i), max(k, i))
+            off = part.local_offset(cki)
+            c = coeffs(self.scheme, n_i, n_j, self.sizes[k])
+            self.cells[off] = lw_update(c, self.cells[off], d_kj, F32(d_ij))
+        self.step = ("retire_update", 0)
+        return None
+
+    def do_retire_update(self, next_src):
+        ep, part = self.ep, self.part
+        p, n = ep.p, part.n
+        win, d_ij, i, j = self.win
+        tt = tag(self.iter, TRI)
+        for src in range(next_src, p):
+            if not self.expect[src]:
+                continue
+            msg = ep.try_recv(src, tt)
+            if msg is None:
+                self.step = ("retire_update", src)
+                return (src, tt)
+            ep.compute(len(msg[1]))
+            n_i, n_j = self.sizes[i], self.sizes[j]
+            for (k, d_kj) in msg[1]:
+                cki = condensed_index(n, min(k, i), max(k, i))
+                off = part.local_offset(cki)
+                c = coeffs(self.scheme, n_i, n_j, self.sizes[k])
+                self.cells[off] = lw_update(c, self.cells[off], d_kj, F32(d_ij))
+        self.sizes[i] += self.sizes[j]
+        self.sizes[j] = 0.0
+        self.alive.remove(j)
+        self.merges.append((i, j, float(d_ij)))
+        self.phases[3] += ep.clock - self.t_mark
+        self.iter += 1
+        if self.iter == n - 1:
+            self.out = {"rank": ep.rank, "merges": self.merges, "clock": ep.clock,
+                        "msgs": ep.msgs, "bytes": ep.bytes, "phases": self.phases}
+            self.step = ("done",)
+        else:
+            self.step = ("send_min",)
+        return None
+
+    def tree_forward(self, t, root, value):
+        ep = self.ep
+        p, me = ep.p, ep.rank
+        rel = (me + p - root) % p
+        if rel == 0:
+            mask = 1
+            while mask < p:
+                mask <<= 1
+        else:
+            mask = rel & (-rel)
+        mask >>= 1
+        while mask > 0:
+            if rel & mask == 0 and rel + mask < p:
+                ep.send((rel + mask + root) % p, t, value)
+            mask >>= 1
+
+
+def tree_parent(me, root, p):
+    rel = (me + p - root) % p
+    low = rel & (-rel)
+    return (rel - low + root) % p
+
+
+def run_event_sim(kind, scheme, collectives, matrix, n, p, model):
+    """sched.rs run_event transliterated: ready queue + wake log."""
+    from collections import deque
+
+    boxes = [[] for _ in range(p)]
+    part = Partition(kind, n, p)
+    eps = [Endpoint(r, p, model, boxes) for r in range(p)]
+    for ep in eps:
+        ep.wakes = []
+    tasks = [RankTask(eps[r], part, scheme, collectives, matrix) for r in range(p)]
+    ready = deque(range(p))
+    queued = [True] * p
+    results = [None] * p
+    done = 0
+    while done < p:
+        assert ready, "event sim deadlocked"
+        r = ready.popleft()
+        queued[r] = False
+        pending = tasks[r].poll()
+        if pending is None and results[r] is None:
+            results[r] = tasks[r].out
+            done += 1
+        for dst in eps[r].wakes:
+            if not queued[dst] and results[dst] is None:
+                queued[dst] = True
+                ready.append(dst)
+        eps[r].wakes = []
+    return results
+
+
+# ---------------------------------------------------------------------------
+# serial oracle (baselines/serial_lw.rs, f32)
+# ---------------------------------------------------------------------------
+
+
+def serial_lw(scheme, matrix, n):
+    cells = list(matrix)
+    sizes = [1.0] * n
+    merges = []
+    for _ in range(n - 1):
+        best, bidx = INF, None
+        for idx, v in enumerate(cells):
+            if v < best:
+                best, bidx = v, idx
+        i, j = condensed_pair(n, bidx)
+        d_ij = cells[bidx]
+        n_i, n_j = sizes[i], sizes[j]
+        for k in range(n):
+            if k == i or k == j or sizes[k] == 0.0:
+                continue
+            cki = condensed_index(n, min(k, i), max(k, i))
+            ckj = condensed_index(n, min(k, j), max(k, j))
+            c = coeffs(scheme, n_i, n_j, sizes[k])
+            cells[cki] = lw_update(c, cells[cki], cells[ckj], d_ij)
+            cells[ckj] = INF
+        cells[bidx] = INF
+        sizes[i] += sizes[j]
+        sizes[j] = 0.0
+        merges.append((i, j, float(d_ij)))
+    return merges
+
+
+# ---------------------------------------------------------------------------
+# the differential
+# ---------------------------------------------------------------------------
+
+
+def random_matrix(n, seed):
+    rng = np.random.default_rng(seed)
+    # Heavy ties: quantized values stress the lowest-index tie-break.
+    vals = rng.integers(1, 40, size=condensed_len(n)).astype(np.float32)
+    return [F32(v) for v in vals]
+
+
+def check_combo(kind, scheme, collectives, n, p, seed):
+    matrix = random_matrix(n, seed)
+    model = Model()
+    oracle = serial_lw(scheme, matrix, n)
+    a = run_blocking_sim(kind, scheme, collectives, matrix, n, p, model)
+    b = run_event_sim(kind, scheme, collectives, matrix, n, p, model)
+    ctx = f"{kind}/{scheme}/{collectives} n={n} p={p} seed={seed}"
+    for r in range(p):
+        assert a[r]["merges"] == b[r]["merges"], f"{ctx}: rank {r} merges diverge"
+        assert a[r]["clock"] == b[r]["clock"], \
+            f"{ctx}: rank {r} clock {a[r]['clock']} != {b[r]['clock']}"
+        assert a[r]["msgs"] == b[r]["msgs"], f"{ctx}: rank {r} msgs"
+        assert a[r]["bytes"] == b[r]["bytes"], f"{ctx}: rank {r} bytes"
+        assert a[r]["phases"] == b[r]["phases"], f"{ctx}: rank {r} phases"
+    assert a[0]["merges"] == oracle, f"{ctx}: diverges from serial oracle"
+
+
+def test_event_equals_blocking_equals_serial():
+    for kind in ["balanced", "rows", "cyclic"]:
+        for collectives in ["naive", "tree"]:
+            for p in [1, 2, 3, 5, 7, 8, 13]:
+                check_combo(kind, "complete", collectives, 20, p, 100 + p)
+    # Size-dependent schemes exercise the sizes[] replication ordering.
+    for scheme in ["average", "ward"]:
+        for collectives in ["naive", "tree"]:
+            check_combo("balanced", scheme, collectives, 24, 6, 7)
+
+
+def test_many_ranks_single_process():
+    # p ≫ typical thread counts, one "process": the tentpole's point.
+    check_combo("balanced", "complete", "tree", 26, 64, 42)
+
+
+if __name__ == "__main__":
+    test_event_equals_blocking_equals_serial()
+    test_many_ranks_single_process()
+    print("event ≡ blocking ≡ serial: all combos OK")

@@ -8,9 +8,13 @@ use crate::util::rng::Rng;
 /// K-means result.
 #[derive(Clone, Debug)]
 pub struct KMeansResult {
+    /// Cluster assignment per point.
     pub labels: Vec<usize>,
+    /// Final cluster centers.
     pub centers: Vec<Vec<f64>>,
+    /// Sum of squared distances to assigned centers.
     pub inertia: f64,
+    /// Lloyd iterations until convergence / cap.
     pub iterations: usize,
 }
 

@@ -12,8 +12,11 @@ use crate::matrix::CondensedMatrix;
 /// An MST edge.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Edge {
+    /// One endpoint (item index).
     pub a: usize,
+    /// Other endpoint (item index).
     pub b: usize,
+    /// Edge weight (the pairwise distance).
     pub w: f32,
 }
 

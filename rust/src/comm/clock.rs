@@ -12,6 +12,7 @@ pub struct VirtualClock {
 }
 
 impl VirtualClock {
+    /// A clock at t = 0.
     pub fn new() -> Self {
         Self { now: 0.0 }
     }

@@ -6,6 +6,16 @@
 //! O(p) fan-out the paper assumes ("At most p broadcasts per iteration"),
 //! not trees — matching its communication model, and measured as such by
 //! the comm-volume bench.
+//!
+//! Since ISSUE-3 these blocking routines are the *reference
+//! specification*: the protocol hot path executes the same message
+//! patterns through the resumable [`RankTask`] state machine (which can
+//! park between receives), whose decomposition is pinned against these
+//! shapes by its unit tests and by the runtime-equivalence suite. They
+//! remain public as the straightforward, spec-shaped implementations for
+//! tests, benches, and library users of the transport.
+//!
+//! [`RankTask`]: crate::coordinator::task::RankTask
 
 use super::transport::{Endpoint, Wire};
 
@@ -83,7 +93,9 @@ impl<T: Wire> Endpoint<T> {
     /// Binomial-tree broadcast from `root`: ⌈log₂p⌉ rounds instead of p−1
     /// sequential sends at the root. (Tree *allgather* lives at the
     /// protocol layer — it needs a list-shaped payload to aggregate; see
-    /// `coordinator::protocol::exchange_minima`.)
+    /// the `TreeGatherMin`/`AwaitMinList` steps of
+    /// `coordinator::task::RankTask`, which mirror this routine's tree
+    /// shape exactly.)
     pub fn broadcast_tree(&mut self, tag: u64, root: usize, payload: Option<T>) -> T {
         let p = self.p();
         let me = self.rank();

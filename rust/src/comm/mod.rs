@@ -1,10 +1,13 @@
 //! Message-passing substrate: the "MPI on a network of workstations" the
 //! paper runs on (§5.1), rebuilt in-process.
 //!
-//! Ranks are OS threads connected by unbounded channels with MPI-style
-//! `(source, tag)` receive matching. On top of point-to-point we build the
-//! collectives the algorithm needs (broadcast, allgather, allreduce-min,
-//! barrier).
+//! Ranks are connected by unbounded channels with MPI-style
+//! `(source, tag)` receive matching; who executes a rank — a dedicated OS
+//! thread or the event scheduler — is the coordinator's
+//! [`Runtime`](crate::coordinator::Runtime) choice, and both disciplines
+//! (blocking [`Endpoint::recv`], polling [`Endpoint::try_recv`]) run over
+//! the same mailboxes. On top of point-to-point we build the collectives
+//! the algorithm needs (broadcast, allgather, allreduce-min, barrier).
 //!
 //! **Why a cost model:** this container has one core, so real wall-clock
 //! cannot exhibit the paper's Figure-2 shape (speedup → optimum →

@@ -5,6 +5,20 @@
 //! message with its simulated arrival time, `recv` blocks (really blocks,
 //! on the host channel) until a matching message exists and then merges
 //! the arrival into the local clock.
+//!
+//! Two receive disciplines share one mailbox, so both rank runtimes run
+//! over identical channels (ISSUE-3):
+//!
+//! * **blocking** — [`Endpoint::recv`] parks the OS thread on the host
+//!   channel (the thread-per-rank runtime);
+//! * **polling** — [`Endpoint::try_recv`] drains the channel into the
+//!   stash without blocking and returns `None` on no match (the
+//!   event-driven runtime; the scheduler parks the *task* instead).
+//!
+//! Selection order is identical either way: messages enter the stash in
+//! host-arrival order and the first `(source, tag)` match wins — and
+//! since tags are unique per (iteration, phase) and each peer sends at
+//! most one message per tag, matching never depends on host timing.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 
@@ -75,8 +89,11 @@ struct Envelope<T> {
 /// Cumulative traffic counters for one endpoint.
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct TrafficStats {
+    /// Messages this endpoint has sent (self-sends included).
     pub msgs_sent: u64,
+    /// Payload bytes this endpoint has sent, per [`Wire::nbytes`].
     pub bytes_sent: u64,
+    /// Messages this endpoint has received.
     pub msgs_recv: u64,
 }
 
@@ -88,8 +105,17 @@ pub struct Endpoint<T> {
     receiver: Receiver<Envelope<T>>,
     /// Messages that arrived but did not match a pending recv.
     stash: Vec<Envelope<T>>,
+    /// Destination ranks of sends since the last [`take_wakes`]
+    /// (`None` unless an event executor enabled logging — the
+    /// thread-per-rank runtime must not accumulate an unbounded log).
+    ///
+    /// [`take_wakes`]: Endpoint::take_wakes
+    wake_log: Option<Vec<usize>>,
+    /// This rank's simulated clock (advanced by sends/receives/compute).
     pub clock: VirtualClock,
+    /// The cost model pricing every send, receive, and compute call.
     pub model: CostModel,
+    /// Cumulative message/byte counters for this rank.
     pub traffic: TrafficStats,
 }
 
@@ -97,6 +123,7 @@ pub struct Endpoint<T> {
 pub struct Network;
 
 impl Network {
+    /// Create `p` endpoints wired all-to-all with the given cost model.
     pub fn with_ranks<T: Wire>(p: usize, model: CostModel) -> Vec<Endpoint<T>> {
         assert!(p >= 1);
         let mut senders = Vec::with_capacity(p);
@@ -115,6 +142,7 @@ impl Network {
                 senders: senders.clone(),
                 receiver,
                 stash: Vec::new(),
+                wake_log: None,
                 clock: VirtualClock::new(),
                 model,
                 traffic: TrafficStats::default(),
@@ -124,10 +152,12 @@ impl Network {
 }
 
 impl<T: Wire> Endpoint<T> {
+    /// This endpoint's rank id in `0..p`.
     pub fn rank(&self) -> usize {
         self.rank
     }
 
+    /// Total number of ranks in the network.
     pub fn p(&self) -> usize {
         self.p
     }
@@ -146,6 +176,11 @@ impl<T: Wire> Endpoint<T> {
         };
         self.traffic.msgs_sent += 1;
         self.traffic.bytes_sent += bytes as u64;
+        if dst != self.rank {
+            if let Some(log) = &mut self.wake_log {
+                log.push(dst);
+            }
+        }
         let env = Envelope {
             src: self.rank,
             tag,
@@ -195,6 +230,50 @@ impl<T: Wire> Endpoint<T> {
                 return env;
             }
             self.stash.push(env);
+        }
+    }
+
+    /// Non-blocking receive matching (src, tag): drain whatever has
+    /// reached the host channel into the stash, then take the first match
+    /// if one exists. Clock/traffic effects are identical to a [`recv`]
+    /// that found the same message — the event runtime's only receive
+    /// primitive (it never parks the host thread).
+    ///
+    /// [`recv`]: Endpoint::recv
+    pub fn try_recv(&mut self, src: usize, tag: u64) -> Option<T> {
+        while let Ok(env) = self.receiver.try_recv() {
+            self.stash.push(env);
+        }
+        let pos = self.stash.iter().position(|e| e.src == src && e.tag == tag)?;
+        let env = self.stash.remove(pos);
+        Some(self.finish_recv(env))
+    }
+
+    /// Block the host thread until at least one more message reaches the
+    /// stash (no matching, no clock effects — the arrival is merged only
+    /// when some later receive consumes it). Lets the thread-per-rank
+    /// driver run the same poll loop as the event executor: poll, and on
+    /// `Pending` park here instead of returning to a scheduler.
+    pub fn park_until_message(&mut self) {
+        let env = self
+            .receiver
+            .recv()
+            .expect("peer endpoints dropped while a task was parked");
+        self.stash.push(env);
+    }
+
+    /// Start recording the destination rank of every outgoing message so
+    /// an event executor can wake the tasks that may now be unblocked.
+    pub fn enable_wake_log(&mut self) {
+        self.wake_log = Some(Vec::new());
+    }
+
+    /// Drain the destinations recorded since the last call (empty unless
+    /// [`enable_wake_log`](Endpoint::enable_wake_log) was called).
+    pub fn take_wakes(&mut self) -> Vec<usize> {
+        match &mut self.wake_log {
+            Some(log) => std::mem::take(log),
+            None => Vec::new(),
         }
     }
 
@@ -271,6 +350,54 @@ mod tests {
         assert_eq!(a.traffic.bytes_sent, 48); // 10*4 + 8 header
         let _ = b.recv(0, 0);
         assert_eq!(b.traffic.msgs_recv, 1);
+    }
+
+    #[test]
+    fn try_recv_matches_like_recv() {
+        let mut eps = Network::with_ranks::<u32>(2, CostModel::nehalem_cluster());
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        assert_eq!(b.try_recv(0, 1), None, "nothing sent yet");
+        a.send(1, 1, 100);
+        a.send(1, 2, 200);
+        // Same out-of-order tag matching as the blocking recv...
+        assert_eq!(b.try_recv(0, 2), Some(200));
+        assert_eq!(b.try_recv(0, 2), None, "consumed");
+        // ...and the same clock/traffic effects.
+        let t_after_200 = b.clock.now();
+        assert!(t_after_200 > 0.0, "arrival merged into clock");
+        assert_eq!(b.try_recv(0, 1), Some(100));
+        assert_eq!(b.traffic.msgs_recv, 2);
+    }
+
+    #[test]
+    fn park_until_message_stashes_without_clock_effects() {
+        let mut eps = Network::with_ranks::<u32>(2, CostModel::nehalem_cluster());
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        let t = std::thread::spawn(move || {
+            a.send(1, 9, 7);
+            a
+        });
+        b.park_until_message();
+        t.join().unwrap();
+        assert_eq!(b.clock.now(), 0.0, "parking must not touch the clock");
+        assert_eq!(b.traffic.msgs_recv, 0);
+        assert_eq!(b.try_recv(0, 9), Some(7));
+        assert_eq!(b.traffic.msgs_recv, 1);
+    }
+
+    #[test]
+    fn wake_log_records_destinations() {
+        let mut eps = Network::with_ranks::<u32>(3, CostModel::zero_comm());
+        let mut a = eps.remove(0);
+        assert_eq!(a.take_wakes(), Vec::<usize>::new(), "disabled by default");
+        a.enable_wake_log();
+        a.send(1, 0, 1);
+        a.send(2, 0, 2);
+        a.send(0, 0, 3); // self-send: no wake needed, goes to own stash
+        assert_eq!(a.take_wakes(), vec![1, 2]);
+        assert_eq!(a.take_wakes(), Vec::<usize>::new(), "drained");
     }
 
     #[test]

@@ -1,15 +1,24 @@
 //! The paper's contribution: the distributed Lance-Williams coordinator.
 //!
-//! [`ClusterConfig::run`] spawns `p` worker ranks (threads) over the
+//! [`ClusterConfig::run`] executes `p` worker ranks over the
 //! [`crate::comm`] substrate, distributes the condensed matrix per the
-//! configured [`PartitionKind`], executes the §5.3 protocol, and returns
+//! configured [`PartitionKind`], runs the §5.3 protocol, and returns
 //! the dendrogram plus [`RunStats`] (wall time, simulated makespan,
 //! traffic, per-phase breakdown).
+//!
+//! Each rank is a resumable [`task::RankTask`] state machine; the
+//! [`Runtime`] selects who drives it — one OS thread per rank
+//! ([`Runtime::Threads`]) or an event scheduler that fits thousands of
+//! ranks in one process ([`Runtime::Event`], the default). Results are
+//! bitwise identical either way (DESIGN.md §Runtime).
 
 pub mod protocol;
+pub mod sched;
 pub mod source;
+pub mod task;
 pub mod worker;
 
+pub use sched::Runtime;
 pub use source::DistSource;
 
 use std::sync::Arc;
@@ -21,7 +30,7 @@ use crate::matrix::{CondensedMatrix, Partition, PartitionKind};
 use crate::metrics::{RunStats, Timer};
 use crate::runtime::XlaEngine;
 use protocol::ProtoMsg;
-use worker::{worker_main, WorkerCtx};
+use worker::WorkerCtx;
 
 /// How a `Full` rescan executes (step 1 min-scan over the whole shard).
 #[derive(Clone, Default)]
@@ -169,21 +178,40 @@ pub fn scalar_shard_min_branchy(shard: &[f32]) -> (f32, usize) {
 }
 
 /// Configuration of one distributed clustering run.
+///
+/// ```
+/// use lancew::prelude::*;
+///
+/// let m = CondensedMatrix::from_fn(8, |i, j| (i + j) as f32 + 0.25 * i as f32);
+/// let run = ClusterConfig::new(Scheme::Average, 4).run(&m).unwrap();
+/// assert_eq!(run.dendrogram.merges().len(), 7); // n − 1 merges
+/// assert_eq!(run.stats.p, 4);
+/// ```
 #[derive(Clone)]
 pub struct ClusterConfig {
+    /// Lance-Williams linkage scheme.
     pub scheme: Scheme,
     /// Number of ranks ("processors" in the paper).
     pub p: usize,
+    /// How the condensed cells are distributed over ranks (§5.2).
     pub partition: PartitionKind,
+    /// Network/compute cost model for the virtual clock.
     pub cost_model: CostModel,
+    /// Step-1 min-scan strategy: full rescan or ShardStore index (ISSUE-1).
     pub scan: ScanStrategy,
     /// Step-6a routing walk: full sweep or per-rank k-intervals (ISSUE-2).
     pub walk: AliveWalk,
     /// Paper-faithful naive fan-outs, or binomial trees (extension).
     pub collectives: Collectives,
+    /// Execution substrate for the rank tasks: thread-per-rank or the
+    /// event scheduler (ISSUE-3; default event — results identical).
+    pub runtime: Runtime,
 }
 
 impl ClusterConfig {
+    /// Defaults: BalancedCells partition, Nehalem-cluster cost model,
+    /// full scalar scan, incremental walk, naive collectives, event
+    /// runtime.
     pub fn new(scheme: Scheme, p: usize) -> Self {
         Self {
             scheme,
@@ -193,21 +221,47 @@ impl ClusterConfig {
             scan: ScanStrategy::default(),
             walk: AliveWalk::default(),
             collectives: Collectives::Naive,
+            runtime: Runtime::default(),
         }
     }
 
+    /// Select the collective algorithm (naive fan-out or binomial tree).
     pub fn with_collectives(mut self, c: Collectives) -> Self {
         self.collectives = c;
         self
     }
 
+    /// Select the condensed-matrix partition kind.
     pub fn with_partition(mut self, kind: PartitionKind) -> Self {
         self.partition = kind;
         self
     }
 
+    /// Select the cost model pricing the virtual clock.
     pub fn with_cost_model(mut self, m: CostModel) -> Self {
         self.cost_model = m;
+        self
+    }
+
+    /// Select the rank execution substrate (`--runtime` on the CLI).
+    /// Dendrograms and virtual time are bitwise identical across
+    /// runtimes; only host resources (threads, wall time) differ.
+    ///
+    /// ```
+    /// use lancew::prelude::*;
+    ///
+    /// let m = CondensedMatrix::from_fn(12, |i, j| ((i * 31 + j * 17) % 23) as f32);
+    /// let event = ClusterConfig::new(Scheme::Complete, 6).run(&m).unwrap();
+    /// let threads = ClusterConfig::new(Scheme::Complete, 6)
+    ///     .with_runtime(Runtime::Threads)
+    ///     .run(&m)
+    ///     .unwrap();
+    /// // Same merges, same simulated makespan — only the driver differs.
+    /// assert_eq!(event.dendrogram.merges(), threads.dendrogram.merges());
+    /// assert_eq!(event.stats.virtual_s, threads.stats.virtual_s);
+    /// ```
+    pub fn with_runtime(mut self, r: Runtime) -> Self {
+        self.runtime = r;
         self
     }
 
@@ -217,6 +271,7 @@ impl ClusterConfig {
         self.with_scan(ScanStrategy::Full(e))
     }
 
+    /// Select the step-1 min-scan strategy (`--scan` on the CLI).
     pub fn with_scan(mut self, s: ScanStrategy) -> Self {
         self.scan = s;
         self
@@ -250,24 +305,14 @@ impl ClusterConfig {
         let timer = Timer::start();
         let endpoints = Network::with_ranks::<ProtoMsg>(p, self.cost_model);
         let source = Arc::new(source);
-
-        let mut handles = Vec::with_capacity(p);
-        for ep in endpoints {
-            let ctx = WorkerCtx {
-                scheme: self.scheme,
-                partition: partition.clone(),
-                scan: self.scan.clone(),
-                walk: self.walk,
-                collectives: self.collectives,
-            };
-            let src = (ep.rank() == 0).then(|| source.clone());
-            handles.push(std::thread::spawn(move || worker_main(ep, ctx, src)));
-        }
-        let mut outputs: Vec<worker::WorkerOutput> = handles
-            .into_iter()
-            .map(|h| h.join().map_err(|_| anyhow::anyhow!("worker panicked")))
-            .collect::<anyhow::Result<_>>()?;
-        outputs.sort_by_key(|o| o.rank);
+        let ctx = WorkerCtx {
+            scheme: self.scheme,
+            partition,
+            scan: self.scan.clone(),
+            walk: self.walk,
+            collectives: self.collectives,
+        };
+        let mut outputs = sched::run_ranks(self.runtime, endpoints, &ctx, &source)?;
         let wall_s = timer.elapsed_s();
 
         // Every rank derived the same merge sequence; each folded it into
@@ -299,6 +344,7 @@ impl ClusterConfig {
             index_ops: outputs.iter().map(|o| o.index_ops).sum(),
             alive_visited: outputs.iter().map(|o| o.alive_visited).sum(),
             peak_shard_cells: outputs.iter().map(|o| o.shard_cells).max().unwrap_or(0),
+            runtime: self.runtime.label(),
             p,
             n,
         };
@@ -308,7 +354,9 @@ impl ClusterConfig {
 
 /// Result of a distributed run.
 pub struct ClusterRun {
+    /// The n−1 merges, bitwise identical to the serial baseline.
     pub dendrogram: Dendrogram,
+    /// Wall/virtual timing, traffic, and work counters for the run.
     pub stats: RunStats,
 }
 
@@ -564,5 +612,106 @@ mod tests {
         let b = ClusterConfig::new(Scheme::Complete, 5).run(&m).unwrap();
         assert_eq!(a.stats.virtual_s, b.stats.virtual_s);
         assert_eq!(a.stats.msgs_sent, b.stats.msgs_sent);
+    }
+
+    #[test]
+    fn runtimes_observationally_identical() {
+        // ISSUE-3 heart: thread-per-rank, the event scheduler, and the
+        // sharded event pool must agree on EVERYTHING the simulation
+        // reports — dendrogram, virtual time, traffic, per-phase
+        // breakdown, work counters. Only wall time and the label differ.
+        let m = sample(40, 11);
+        let run = |rt: Runtime| {
+            ClusterConfig::new(Scheme::Average, 7)
+                .with_runtime(rt)
+                .run(&m)
+                .unwrap()
+        };
+        let threads = run(Runtime::Threads);
+        assert_eq!(threads.stats.runtime, "threads");
+        for rt in [Runtime::Event, Runtime::EventPool(3)] {
+            let other = run(rt);
+            assert_eq!(other.stats.runtime, rt.label());
+            crate::validate::dendrograms_equal(&threads.dendrogram, &other.dendrogram, 0.0)
+                .unwrap_or_else(|e| panic!("{rt}: {e}"));
+            assert_eq!(threads.stats.virtual_s, other.stats.virtual_s, "{rt}");
+            assert_eq!(threads.stats.rank_virtual_s, other.stats.rank_virtual_s, "{rt}");
+            assert_eq!(threads.stats.msgs_sent, other.stats.msgs_sent, "{rt}");
+            assert_eq!(threads.stats.bytes_sent, other.stats.bytes_sent, "{rt}");
+            assert_eq!(threads.stats.cells_scanned, other.stats.cells_scanned, "{rt}");
+            assert_eq!(threads.stats.cells_updated, other.stats.cells_updated, "{rt}");
+            assert_eq!(threads.stats.alive_visited, other.stats.alive_visited, "{rt}");
+            assert_eq!(threads.stats.phases, other.stats.phases, "{rt}");
+        }
+    }
+
+    #[test]
+    fn runtimes_identical_under_tree_collectives_and_indexed_scan() {
+        // The state machine's tree-gather/tree-broadcast decomposition
+        // must replay broadcast_tree exactly, including with the indexed
+        // scan charging maintenance to the clock.
+        let m = sample(36, 12);
+        let run = |rt: Runtime| {
+            ClusterConfig::new(Scheme::Ward, 6)
+                .with_collectives(Collectives::Tree)
+                .with_scan(ScanStrategy::Indexed)
+                .with_runtime(rt)
+                .run(&m)
+                .unwrap()
+        };
+        let threads = run(Runtime::Threads);
+        let event = run(Runtime::Event);
+        crate::validate::dendrograms_equal(&threads.dendrogram, &event.dendrogram, 0.0).unwrap();
+        assert_eq!(threads.stats.virtual_s, event.stats.virtual_s);
+        assert_eq!(threads.stats.msgs_sent, event.stats.msgs_sent);
+        assert_eq!(threads.stats.index_ops, event.stats.index_ops);
+    }
+
+    #[test]
+    fn event_runtime_handles_many_ranks_in_one_process() {
+        // The point of the tentpole: p far beyond sane OS-thread counts,
+        // in-process. 512 ranks over 1770 cells, still bitwise-serial.
+        let m = sample(60, 13);
+        let serial = serial_lw_cluster(Scheme::Complete, &m);
+        let run = ClusterConfig::new(Scheme::Complete, 512)
+            .with_collectives(Collectives::Tree)
+            .with_scan(ScanStrategy::Indexed)
+            .run(&m)
+            .unwrap();
+        assert_eq!(run.stats.p, 512);
+        dendrograms_equal(&serial, &run.dendrogram, 0.0).unwrap();
+    }
+
+    #[test]
+    fn worker_panic_surfaces_as_error_on_every_runtime() {
+        // A protocol-level panic (here: no finite distance ever exists, so
+        // global_min finds nothing) must come back as Err from run() on
+        // every substrate — the event schedulers run on the caller's
+        // thread, so without the catch they would unwind through run().
+        let m = CondensedMatrix::from_fn(4, |_, _| f32::INFINITY);
+        for rt in [Runtime::Threads, Runtime::Event, Runtime::EventPool(2)] {
+            let res = ClusterConfig::new(Scheme::Complete, 2).with_runtime(rt).run(&m);
+            let err = format!("{:#}", res.err().unwrap_or_else(|| panic!("{rt}: must fail")));
+            assert!(err.contains("worker panicked"), "{rt}: {err}");
+        }
+    }
+
+    #[test]
+    fn distributed_build_identical_across_runtimes() {
+        // The §5.1 build path (rank 0 replicates the dataset, every rank
+        // computes its own cells) also goes through the state machine.
+        let lp = crate::data::GaussianSpec { n: 30, d: 4, k: 3, ..Default::default() }.generate(21);
+        let src = DistSource::Points(lp.points);
+        let run = |rt: Runtime| {
+            ClusterConfig::new(Scheme::Complete, 5)
+                .with_runtime(rt)
+                .run_source(src.clone())
+                .unwrap()
+        };
+        let threads = run(Runtime::Threads);
+        let event = run(Runtime::Event);
+        crate::validate::dendrograms_equal(&threads.dendrogram, &event.dendrogram, 0.0).unwrap();
+        assert_eq!(threads.stats.virtual_s, event.stats.virtual_s);
+        assert!(event.stats.phases.iter().all(|ph| ph.build > 0.0));
     }
 }

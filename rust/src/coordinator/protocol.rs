@@ -2,9 +2,12 @@
 //!
 //! One message enum covers the whole protocol; tags encode
 //! `(iteration, phase)` so receives match deterministically even though
-//! each endpoint has a single mailbox.
+//! each endpoint has a single mailbox. The send/receive *sequencing* of
+//! these messages — including the min-exchange collectives — lives in the
+//! [`RankTask`](super::task::RankTask) state machine, so both rank
+//! runtimes execute it identically.
 
-use crate::comm::{Collectives, Endpoint, Wire};
+use crate::comm::Wire;
 
 /// Protocol phases within one iteration.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -64,68 +67,8 @@ impl Wire for ProtoMsg {
     }
 }
 
-/// Step 2-3 under either collective algorithm: every rank ends up with all
-/// p `(value, index)` local minima, rank-ordered.
-///
-/// * `Naive` — the paper's "each p_m broadcasts their local minimum":
-///   p·(p−1) messages, one latency.
-/// * `Tree` — binomial gather of a [`ProtoMsg::MinList`] to rank 0 plus a
-///   binomial broadcast back: 2·(p−1) messages, 2·⌈log₂p⌉ latencies.
-pub fn exchange_minima(
-    ep: &mut Endpoint<ProtoMsg>,
-    strategy: Collectives,
-    iter: usize,
-    mine: (f32, u64),
-) -> Vec<(f32, u64)> {
-    let t = tag(iter, Phase::MinExchange);
-    match strategy {
-        Collectives::Naive => ep
-            .allgather(t, ProtoMsg::LocalMin(mine.0, mine.1))
-            .into_iter()
-            .map(|m| m.expect_local_min())
-            .collect(),
-        Collectives::Tree => {
-            let p = ep.p();
-            let me = ep.rank();
-            let mut acc: Vec<(u32, f32, u64)> = vec![(me as u32, mine.0, mine.1)];
-            // Gather (reverse binomial, root 0).
-            let mut mask = 1usize;
-            let mut sent = false;
-            while mask < p && !sent {
-                if me & mask != 0 {
-                    ep.send(me - mask, t, ProtoMsg::MinList(acc));
-                    acc = Vec::new();
-                    sent = true;
-                } else {
-                    if me + mask < p {
-                        let part = match ep.recv(me + mask, t) {
-                            ProtoMsg::MinList(l) => l,
-                            other => panic!("protocol error: expected MinList, got {other:?}"),
-                        };
-                        acc.extend(part);
-                    }
-                    mask <<= 1;
-                }
-            }
-            // Broadcast the assembled list back down.
-            let bt = t ^ (1 << 62);
-            let payload = if me == 0 {
-                acc.sort_by_key(|&(r, _, _)| r);
-                Some(ProtoMsg::MinList(acc))
-            } else {
-                None
-            };
-            let full = match ep.broadcast_tree(bt, 0, payload) {
-                ProtoMsg::MinList(l) => l,
-                other => panic!("protocol error: expected MinList, got {other:?}"),
-            };
-            debug_assert_eq!(full.len(), p);
-            full.into_iter().map(|(_, v, i)| (v, i)).collect()
-        }
-    }
-}
-
 impl ProtoMsg {
+    /// Unwrap a [`ProtoMsg::Shard`]; panics loudly on any other variant.
     pub fn expect_shard(self) -> Vec<f32> {
         match self {
             ProtoMsg::Shard(v) => v,
@@ -133,6 +76,7 @@ impl ProtoMsg {
         }
     }
 
+    /// Unwrap a [`ProtoMsg::LocalMin`] into (value, global index).
     pub fn expect_local_min(self) -> (f32, u64) {
         match self {
             ProtoMsg::LocalMin(v, i) => (v, i),
@@ -140,6 +84,7 @@ impl ProtoMsg {
         }
     }
 
+    /// Unwrap a [`ProtoMsg::MergeAnnounce`] into the (i, j) slot pair.
     pub fn expect_merge(self) -> (usize, usize) {
         match self {
             ProtoMsg::MergeAnnounce(i, j) => (i as usize, j as usize),
@@ -147,6 +92,7 @@ impl ProtoMsg {
         }
     }
 
+    /// Unwrap a [`ProtoMsg::Triples`] payload list.
     pub fn expect_triples(self) -> Vec<(u32, f32)> {
         match self {
             ProtoMsg::Triples(t) => t,
@@ -154,6 +100,7 @@ impl ProtoMsg {
         }
     }
 
+    /// Unwrap a [`ProtoMsg::Dataset`] replication payload.
     pub fn expect_dataset(self) -> (u8, u32, u32, Vec<f32>) {
         match self {
             ProtoMsg::Dataset(k, r, c, flat) => (k, r, c, flat),

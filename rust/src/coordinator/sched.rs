@@ -1,0 +1,374 @@
+//! Rank execution substrates: thread-per-rank vs event-driven (ISSUE-3).
+//!
+//! The protocol itself lives in [`super::task::RankTask`]; this module
+//! only decides *who drives the polls*:
+//!
+//! * [`Runtime::Threads`] — the seed substrate: one OS thread per rank,
+//!   parking on its mailbox whenever the task blocks. Faithful to "p
+//!   processors", but OS threads cap realistic p at a few hundred.
+//! * [`Runtime::Event`] — the default: a single-threaded scheduler owns
+//!   all `p` tasks, polls ready tasks to their next blocking point, and
+//!   uses the transport wake log to re-queue exactly the receivers of
+//!   each send. Thousands of ranks fit in one process — p becomes a
+//!   measurable scaling axis (`benches/scaling_p.rs`).
+//! * [`Runtime::EventPool`] — the event scheduler sharded over N host
+//!   threads (static round-robin shard, not work-stealing): cross-shard
+//!   wakes are picked up by sweeping, so shards make progress without
+//!   shared queues or locks.
+//!
+//! All three produce bitwise-identical dendrograms and virtual times —
+//! the scheduler can only reorder *host* execution, never the per-rank
+//! operation order (see the equivalence argument in [`super::task`]).
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use crate::comm::Endpoint;
+use crate::coordinator::protocol::ProtoMsg;
+use crate::coordinator::source::DistSource;
+use crate::coordinator::task::{Poll, RankTask, Step};
+use crate::coordinator::worker::{WorkerCtx, WorkerOutput};
+
+/// Which substrate drives the `p` rank tasks.
+///
+/// Selected by `--runtime threads|event|event:N` on the CLI and
+/// [`ClusterConfig::with_runtime`](super::ClusterConfig::with_runtime) in
+/// code. Results are bitwise identical across all variants; only host
+/// resource usage (threads, memory locality, wall time) differs.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Runtime {
+    /// One OS thread per rank, blocking on its mailbox (the paper-shaped
+    /// substrate; p capped by host thread limits).
+    Threads,
+    /// Single-threaded event scheduler over all ranks (default; p in the
+    /// thousands per process).
+    #[default]
+    Event,
+    /// Event scheduler statically sharded over this many host threads.
+    EventPool(usize),
+}
+
+impl Runtime {
+    /// Stats label (`RunStats::runtime`).
+    pub fn label(&self) -> String {
+        match self {
+            Runtime::Threads => "threads".into(),
+            Runtime::Event => "event".into(),
+            Runtime::EventPool(n) => format!("event:{n}"),
+        }
+    }
+}
+
+impl std::fmt::Display for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+impl std::str::FromStr for Runtime {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "threads" | "thread" => Ok(Self::Threads),
+            "event" => Ok(Self::Event),
+            other => match other.strip_prefix("event:") {
+                Some(n) => {
+                    let n: usize = n
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("bad event pool size {n:?}: {e}"))?;
+                    anyhow::ensure!(n >= 1, "event pool needs at least 1 thread");
+                    Ok(if n == 1 { Self::Event } else { Self::EventPool(n) })
+                }
+                None => anyhow::bail!("unknown runtime {other:?} (threads|event|event:N)"),
+            },
+        }
+    }
+}
+
+/// Run all `p` ranks to completion on the selected substrate. Outputs are
+/// in rank order. `source` is handed to rank 0 (the distributor) only.
+///
+/// A rank panic (protocol error) is caught on every substrate and
+/// surfaced as `Err("worker panicked…")` — the event schedulers run on
+/// the caller's thread, so without the catch the default runtime would
+/// unwind straight through `ClusterConfig::run`.
+pub(crate) fn run_ranks(
+    runtime: Runtime,
+    endpoints: Vec<Endpoint<ProtoMsg>>,
+    ctx: &WorkerCtx,
+    source: &Arc<DistSource>,
+) -> anyhow::Result<Vec<WorkerOutput>> {
+    let tasks: Vec<RankTask> = endpoints
+        .into_iter()
+        .map(|ep| {
+            let src = (ep.rank() == 0).then(|| source.clone());
+            RankTask::new(ep, ctx.clone(), src)
+        })
+        .collect();
+    let caught = |f: Box<dyn std::any::Any + Send>| {
+        let msg = f
+            .downcast_ref::<&str>()
+            .map(|s| s.to_string())
+            .or_else(|| f.downcast_ref::<String>().cloned())
+            .unwrap_or_else(|| "non-string panic payload".into());
+        anyhow::anyhow!("worker panicked: {msg}")
+    };
+    let mut outputs = match runtime {
+        Runtime::Threads => run_threads(tasks)?,
+        Runtime::Event => {
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_event(tasks)))
+                .map_err(caught)?
+        }
+        Runtime::EventPool(threads) => std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || run_event_pool(tasks, threads),
+        ))
+        .map_err(caught)?,
+    };
+    outputs.sort_by_key(|o| o.rank);
+    Ok(outputs)
+}
+
+/// Thread-per-rank: spawn, block, join (the seed substrate).
+fn run_threads(tasks: Vec<RankTask>) -> anyhow::Result<Vec<WorkerOutput>> {
+    let handles: Vec<_> = tasks
+        .into_iter()
+        .map(|t| std::thread::spawn(move || t.run_blocking()))
+        .collect();
+    handles
+        .into_iter()
+        .map(|h| h.join().map_err(|_| anyhow::anyhow!("worker panicked")))
+        .collect()
+}
+
+/// Single-threaded event scheduler over all ranks: the scheduler core in
+/// standalone mode (an empty ready queue is then an immediate, provable
+/// deadlock — every possible sender lives in this loop).
+fn run_event(tasks: Vec<RankTask>) -> Vec<WorkerOutput> {
+    let abort = AtomicBool::new(false);
+    let progress = AtomicUsize::new(0);
+    sched_loop(tasks, true, &abort, &progress)
+}
+
+/// Event scheduler sharded over `threads` host threads: each shard runs
+/// the scheduler core in pool mode over a static round-robin slice of the
+/// ranks (rank r → shard r % N — keeps rank 0, the distributor, and the
+/// low ranks, the binomial-tree roots, spread out).
+///
+/// Failure containment: a panic in one shard (task protocol error) flips
+/// the shared abort flag so sibling shards stop sweeping and unwind too —
+/// the first panic then resurfaces from the scope join instead of hanging
+/// the process.
+fn run_event_pool(tasks: Vec<RankTask>, threads: usize) -> Vec<WorkerOutput> {
+    let p = tasks.len();
+    let nt = threads.clamp(1, p.max(1));
+    let mut shards: Vec<Vec<RankTask>> = (0..nt).map(|_| Vec::new()).collect();
+    for (r, t) in tasks.into_iter().enumerate() {
+        shards[r % nt].push(t);
+    }
+    let abort = AtomicBool::new(false);
+    let progress = AtomicUsize::new(0);
+    let mut outputs: Vec<WorkerOutput> = Vec::with_capacity(p);
+    let mut first_err: Option<Box<dyn std::any::Any + Send>> = None;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = shards
+            .into_iter()
+            .map(|shard| scope.spawn(|| sched_loop(shard, false, &abort, &progress)))
+            .collect();
+        for h in handles {
+            match h.join() {
+                Ok(outs) => outputs.extend(outs),
+                Err(e) => {
+                    first_err.get_or_insert(e);
+                }
+            }
+        }
+    });
+    if let Some(e) = first_err {
+        std::panic::resume_unwind(e);
+    }
+    outputs
+}
+
+/// How long a pool shard tolerates zero *global* progress before calling
+/// the run a protocol deadlock. Progress is counted per consumed message
+/// (any poll that changes a task's resume point), not per finished rank —
+/// in this protocol every rank finishes only at the very end, so a
+/// completion-based detector would mistake any long healthy run for a
+/// hang.
+const STALL_LIMIT: std::time::Duration = std::time::Duration::from_secs(30);
+
+/// Fruitless sweeps a pool shard spins through (with `yield_now`) before
+/// it starts sleeping between sweeps — latency for the common short waits,
+/// bounded CPU burn for long cross-shard lulls.
+const SPIN_SWEEPS: u32 = 64;
+
+/// The scheduler core shared by [`run_event`] (standalone) and each
+/// [`run_event_pool`] shard.
+///
+/// Run-to-next-block polling with precise wakeups: a task leaves the
+/// ready queue only when its poll returns `Pending`, and re-enters when a
+/// task *in this loop* sends it a message (the transport wake log).
+///
+/// * `standalone` — this loop owns every rank: an empty ready queue with
+///   unfinished tasks is a protocol bug, reported immediately with every
+///   parked task's phase and awaited (source, tag).
+/// * pool mode — cross-shard sends produce no local wake entries, so an
+///   empty queue is routine: sweep the parked tasks (each poll re-drains
+///   its own mailbox), yield, and after [`SPIN_SWEEPS`] fruitless rounds
+///   back off to short sleeps. A sibling panic (shared `abort`) unwinds
+///   this shard too, and [`STALL_LIMIT`] without any shard consuming a
+///   message flags a genuine deadlock.
+///
+/// Progress is detected by resume-point change: a poll that consumed
+/// messages either completes the task or parks it at a new
+/// `(step, source, tag)` signature — tags encode (iteration, phase), so a
+/// signature can never repeat across iterations.
+fn sched_loop(
+    mut tasks: Vec<RankTask>,
+    standalone: bool,
+    abort: &AtomicBool,
+    progress: &AtomicUsize,
+) -> Vec<WorkerOutput> {
+    /// Flip the shared abort flag if this loop unwinds, so pool siblings
+    /// stop sweeping for messages that will never come.
+    struct AbortOnPanic<'a>(&'a AtomicBool);
+    impl Drop for AbortOnPanic<'_> {
+        fn drop(&mut self) {
+            if std::thread::panicking() {
+                self.0.store(true, Ordering::SeqCst);
+            }
+        }
+    }
+    let _guard = AbortOnPanic(abort);
+
+    let n = tasks.len();
+    for t in &mut tasks {
+        t.enable_wake_log();
+    }
+    // Wake destinations are ranks; the queue holds local slots.
+    let slot_of: std::collections::HashMap<usize, usize> =
+        tasks.iter().enumerate().map(|(i, t)| (t.rank(), i)).collect();
+    let mut ready: VecDeque<usize> = (0..n).collect();
+    let mut queued = vec![true; n];
+    let mut parked_at: Vec<Option<(Step, usize, u64)>> = vec![None; n];
+    let mut outputs: Vec<Option<WorkerOutput>> = (0..n).map(|_| None).collect();
+    let mut done = 0usize;
+    let mut fruitless = 0u32;
+    let mut stall_mark = (progress.load(Ordering::SeqCst), std::time::Instant::now());
+    while done < n {
+        let slot = match ready.pop_front() {
+            Some(s) => s,
+            None => {
+                let parked = |tasks: &[RankTask]| -> String {
+                    (0..n)
+                        .filter(|&s| outputs[s].is_none())
+                        .map(|s| {
+                            let (src, tag) = parked_at[s]
+                                .map_or((usize::MAX, u64::MAX), |(_, src, tag)| (src, tag));
+                            let (rank, step) = (tasks[s].rank(), tasks[s].step().name());
+                            format!("rank {rank} in {step} awaiting (src {src}, tag {tag:#x})")
+                        })
+                        .collect::<Vec<_>>()
+                        .join("; ")
+                };
+                if standalone {
+                    // Every sender lives in this loop, so nothing can
+                    // arrive later: this is a protocol bug, not a lull.
+                    panic!(
+                        "event runtime deadlock: {done}/{n} ranks done; parked: {}",
+                        parked(&tasks)
+                    );
+                }
+                if abort.load(Ordering::SeqCst) {
+                    panic!("event pool shard aborted: a sibling shard panicked");
+                }
+                let seen = progress.load(Ordering::SeqCst);
+                if seen != stall_mark.0 {
+                    stall_mark = (seen, std::time::Instant::now());
+                } else if stall_mark.1.elapsed() > STALL_LIMIT {
+                    panic!(
+                        "event pool deadlock: no rank consumed a message in {STALL_LIMIT:?}; \
+                         this shard parked: {}",
+                        parked(&tasks)
+                    );
+                }
+                // Parked on cross-shard traffic: sweep everyone once
+                // (each poll re-drains its own mailbox), then yield —
+                // or sleep once the lull outlasts the spin budget.
+                for s in 0..n {
+                    if outputs[s].is_none() && !queued[s] {
+                        queued[s] = true;
+                        ready.push_back(s);
+                    }
+                }
+                fruitless = fruitless.saturating_add(1);
+                if fruitless > SPIN_SWEEPS {
+                    std::thread::sleep(std::time::Duration::from_micros(50));
+                } else {
+                    std::thread::yield_now();
+                }
+                continue;
+            }
+        };
+        queued[slot] = false;
+        match tasks[slot].poll() {
+            Poll::Complete => {
+                outputs[slot] =
+                    Some(tasks[slot].take_output().expect("Complete poll leaves an output"));
+                parked_at[slot] = None;
+                done += 1;
+                progress.fetch_add(1, Ordering::SeqCst);
+                fruitless = 0;
+            }
+            Poll::Pending { src, tag } => {
+                let sig = (tasks[slot].step(), src, tag);
+                if parked_at[slot] != Some(sig) {
+                    // The resume point moved: this poll consumed input.
+                    parked_at[slot] = Some(sig);
+                    progress.fetch_add(1, Ordering::SeqCst);
+                    fruitless = 0;
+                }
+            }
+        }
+        // Wake the receivers of everything this poll sent. Spurious wakes
+        // (message for a later phase) cost one no-progress poll and are
+        // harmless; missed wakes are impossible within a loop — every
+        // message was sent by some poll, and its wake is drained here.
+        for dst in tasks[slot].take_wakes() {
+            if let Some(&s) = slot_of.get(&dst) {
+                if !queued[s] && outputs[s].is_none() {
+                    queued[s] = true;
+                    ready.push_back(s);
+                }
+            }
+        }
+    }
+    outputs.into_iter().map(|o| o.expect("all ranks done")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runtime_parses() {
+        assert_eq!("threads".parse::<Runtime>().unwrap(), Runtime::Threads);
+        assert_eq!("event".parse::<Runtime>().unwrap(), Runtime::Event);
+        assert_eq!("event:4".parse::<Runtime>().unwrap(), Runtime::EventPool(4));
+        // event:1 is just the single-threaded scheduler.
+        assert_eq!("event:1".parse::<Runtime>().unwrap(), Runtime::Event);
+        assert!("event:0".parse::<Runtime>().is_err());
+        assert!("event:x".parse::<Runtime>().is_err());
+        assert!("fibers".parse::<Runtime>().is_err());
+    }
+
+    #[test]
+    fn runtime_labels_round_trip() {
+        for rt in [Runtime::Threads, Runtime::Event, Runtime::EventPool(3)] {
+            assert_eq!(rt.label().parse::<Runtime>().unwrap(), rt);
+            assert_eq!(format!("{rt}"), rt.label());
+        }
+        assert_eq!(Runtime::default(), Runtime::Event);
+    }
+}

@@ -123,6 +123,7 @@ impl DistSource {
         }
     }
 
+    /// Wire tag of this source (Matrix sources never hit the wire).
     pub fn kind(&self) -> SourceKind {
         match self {
             DistSource::Matrix(_) => SourceKind::Points, // unused
@@ -142,7 +143,9 @@ impl DistSource {
 /// Wire tag for [`DistSource::from_wire`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum SourceKind {
+    /// An (n, d) point set.
     Points,
+    /// An (n, residues, 3) conformation set.
     Ensemble,
 }
 

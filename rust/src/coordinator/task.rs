@@ -1,0 +1,845 @@
+//! The rank protocol as a resumable state machine (ISSUE-3 tentpole).
+//!
+//! [`RankTask`] is the *single* implementation of the §5.3 worker
+//! protocol. It replaces the old straight-line `worker_main` body whose
+//! blocking `recv` calls pinned one OS thread per rank: every point where
+//! the protocol must wait for a message is now an explicit [`Step`]
+//! variant, and [`RankTask::poll`] runs the machine forward until it
+//! either completes or needs a message that has not arrived yet
+//! ([`Poll::Pending`]).
+//!
+//! Both execution substrates drive the same machine (see
+//! [`super::sched`]):
+//!
+//! * **thread-per-rank** — [`RankTask::run_blocking`]: poll, and on
+//!   `Pending` park the OS thread on the mailbox
+//!   ([`Endpoint::park_until_message`]);
+//! * **event-driven** — a scheduler owns all `p` tasks in one thread (or
+//!   a small pool), polls ready tasks run-to-completion-style, and uses
+//!   the transport's wake log to re-queue the receivers of every send.
+//!
+//! ## Equivalence invariants
+//!
+//! The two runtimes must be *observationally identical* — bitwise-equal
+//! dendrograms AND bitwise-equal virtual time (pinned by
+//! `rust/tests/runtime_equivalence.rs`). That holds because:
+//!
+//! 1. every rank performs the same sends, receives, and `compute` charges
+//!    in the same program order regardless of who drives the machine
+//!    (the machine *is* the order — host scheduling can only change when
+//!    a poll happens, never what it does);
+//! 2. per-(source, tag) at most one message is ever in flight, and tags
+//!    encode (iteration, phase), so receive matching never races;
+//! 3. the virtual clock is advanced only by those sends/receives/computes
+//!    and by arrival stamps that are themselves deterministic functions
+//!    of the sender's clock.
+//!
+//! [`Endpoint::park_until_message`]: crate::comm::Endpoint::park_until_message
+
+use std::sync::Arc;
+
+use crate::comm::{global_min, Collectives, Endpoint};
+use crate::coordinator::protocol::{tag, Phase, ProtoMsg, DIST_TAG};
+use crate::coordinator::source::{DistSource, SourceKind};
+use crate::coordinator::worker::{
+    build_shard, route_full, route_incremental, WorkerCtx, WorkerOutput,
+};
+use crate::coordinator::{AliveWalk, ScanStrategy};
+use crate::dendrogram::Merge;
+use crate::linkage::lw_update;
+use crate::matrix::{condensed_index, condensed_pair, AliveSet, ShardStore};
+use crate::metrics::PhaseBreakdown;
+use crate::util::fnv::Fnv64;
+
+/// Result of one [`RankTask::poll`] call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Poll {
+    /// The protocol ran to completion; the [`WorkerOutput`] is ready
+    /// ([`RankTask::take_output`]).
+    Complete,
+    /// The machine cannot advance until a message with this (source,
+    /// tag) arrives. The caller must not poll in a hot loop without
+    /// waiting — park the thread or re-queue on the sender's wake.
+    Pending {
+        /// Rank whose message the task is blocked on.
+        src: usize,
+        /// Protocol tag of the awaited message.
+        tag: u64,
+    },
+}
+
+/// Protocol phase the machine is parked in — one variant per §5.3 step
+/// that can wait on the network, plus the transient compute-only phases
+/// (kept explicit so the machine documents the full message lifecycle;
+/// see DESIGN.md §Runtime for the diagram).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Step {
+    /// Preamble: awaiting the initial `Shard`/`Dataset` from rank 0
+    /// (rank 0 itself distributes and never parks here).
+    Distribute,
+    /// Step 1: scan my shard for the local minimum and send it to the
+    /// peers (never parks; sends only).
+    SendMin,
+    /// Steps 2–3, naive collectives: collecting the p−1 peer minima in
+    /// rank order; `next_src` is the first rank not yet received.
+    GatherMin {
+        /// Next source rank to receive a `LocalMin` from.
+        next_src: usize,
+    },
+    /// Steps 2–3, tree collectives: binomial gather of the `MinList`
+    /// toward rank 0; `mask` is the current gather round.
+    TreeGatherMin {
+        /// Current binomial round (power of two).
+        mask: usize,
+    },
+    /// Steps 2–3, tree collectives: awaiting the assembled `MinList`
+    /// broadcast back down from my tree parent.
+    AwaitMinList,
+    /// Step 5: awaiting the winning rank's `MergeAnnounce` broadcast
+    /// (the winner itself never parks here).
+    MergeBroadcast,
+    /// Step 6a: the routing walk — derive this iteration's sends,
+    /// retires, and expected senders, then fire the `Triples` messages
+    /// and apply the local LW updates (never parks; sends only).
+    Walk,
+    /// Step 6b: awaiting the expected `Triples` lists in rank order,
+    /// retiring/updating cells as each arrives; `next_src` is the first
+    /// expected source not yet received.
+    RetireUpdate {
+        /// Next source rank to check for an expected `Triples` list.
+        next_src: usize,
+    },
+    /// All n−1 merges done; the output has been assembled.
+    Done,
+}
+
+impl Step {
+    /// Short human name for scheduler diagnostics.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Step::Distribute => "distribute",
+            Step::SendMin => "send-min",
+            Step::GatherMin { .. } => "gather-min",
+            Step::TreeGatherMin { .. } => "tree-gather-min",
+            Step::AwaitMinList => "await-min-list",
+            Step::MergeBroadcast => "merge-broadcast",
+            Step::Walk => "walk",
+            Step::RetireUpdate { .. } => "retire-update",
+            Step::Done => "done",
+        }
+    }
+}
+
+/// Everything a rank accumulates between its first shard cell and its
+/// final output — the former `worker_main` locals, now owned by the task
+/// so any poll can resume mid-protocol. Dropped (freeing the shard) the
+/// moment the output is assembled.
+struct RankState {
+    shard: ShardStore,
+    shard_cells: usize,
+    /// Global condensed index of each local cell (pure function of the
+    /// partition, precomputed once).
+    my_cell0: Vec<usize>,
+    /// Replicated O(n) metadata: cluster sizes and the alive set.
+    sizes: Vec<f32>,
+    alive: AliveSet,
+    merges: Vec<Merge>,
+    merge_digest: Fnv64,
+    phases: PhaseBreakdown,
+    cells_scanned: u64,
+    cells_updated: u64,
+    index_ops: u64,
+    alive_visited: u64,
+    /// Current iteration (merge) index, `0..n-1`.
+    iter: usize,
+    /// Virtual-clock mark for the phase-breakdown accounting.
+    t_mark: f64,
+    /// Naive min exchange: the rank-indexed (value, global index) pairs.
+    pairs: Vec<(f32, u64)>,
+    /// Tree min exchange: the (rank, value, index) gather accumulator.
+    acc: Vec<(u32, f32, u64)>,
+    /// This iteration's winner: rank, distance, merging slots (i < j).
+    win_rank: usize,
+    d_ij: f32,
+    mi: usize,
+    mj: usize,
+    /// Hot-loop buffers hoisted out of the iteration (perf pass).
+    outbound: Vec<Vec<(u32, f32)>>,
+    expect_from: Vec<bool>,
+    local_dkj: Vec<(u32, f32)>,
+}
+
+/// One rank of the distributed protocol as a pollable task.
+///
+/// Construct with [`RankTask::new`], then either [`run_blocking`] on a
+/// dedicated thread or hand the task to the event scheduler
+/// ([`super::sched`]). The task owns its [`Endpoint`] — mailbox, virtual
+/// clock, and traffic counters travel with it.
+///
+/// [`run_blocking`]: RankTask::run_blocking
+pub struct RankTask {
+    ep: Endpoint<ProtoMsg>,
+    ctx: WorkerCtx,
+    /// Rank 0's data source (None on every other rank).
+    source: Option<Arc<DistSource>>,
+    step: Step,
+    st: Option<RankState>,
+    output: Option<WorkerOutput>,
+}
+
+impl RankTask {
+    /// Wrap one endpoint + worker configuration into a pollable task.
+    /// `source` must be `Some` exactly on rank 0 (the distributor).
+    pub fn new(ep: Endpoint<ProtoMsg>, ctx: WorkerCtx, source: Option<Arc<DistSource>>) -> Self {
+        Self { ep, ctx, source, step: Step::Distribute, st: None, output: None }
+    }
+
+    /// This task's rank.
+    pub fn rank(&self) -> usize {
+        self.ep.rank()
+    }
+
+    /// The protocol phase the machine is currently in.
+    pub fn step(&self) -> Step {
+        self.step
+    }
+
+    /// Enable the transport wake log (event scheduler only).
+    pub fn enable_wake_log(&mut self) {
+        self.ep.enable_wake_log();
+    }
+
+    /// Drain the ranks this task has sent to since the last call.
+    pub fn take_wakes(&mut self) -> Vec<usize> {
+        self.ep.take_wakes()
+    }
+
+    /// Take the finished output (present after a `Complete` poll).
+    pub fn take_output(&mut self) -> Option<WorkerOutput> {
+        self.output.take()
+    }
+
+    /// Drive the machine on the current thread, parking on the mailbox
+    /// whenever it blocks — the thread-per-rank runtime.
+    pub fn run_blocking(mut self) -> WorkerOutput {
+        loop {
+            match self.poll() {
+                Poll::Complete => {
+                    return self.take_output().expect("Complete poll leaves an output")
+                }
+                Poll::Pending { .. } => self.ep.park_until_message(),
+            }
+        }
+    }
+
+    /// Advance the protocol as far as possible without waiting. Returns
+    /// [`Poll::Pending`] with the exact (source, tag) the machine needs
+    /// next, or [`Poll::Complete`] once all n−1 merges are done.
+    pub fn poll(&mut self) -> Poll {
+        loop {
+            let pending = match self.step {
+                Step::Distribute => self.do_distribute(),
+                Step::SendMin => {
+                    self.do_send_min();
+                    None
+                }
+                Step::GatherMin { next_src } => self.do_gather_min(next_src),
+                Step::TreeGatherMin { mask } => self.do_tree_gather_min(mask),
+                Step::AwaitMinList => self.do_await_min_list(),
+                Step::MergeBroadcast => self.do_merge_broadcast(),
+                Step::Walk => {
+                    self.do_walk();
+                    None
+                }
+                Step::RetireUpdate { next_src } => self.do_retire_update(next_src),
+                Step::Done => return Poll::Complete,
+            };
+            if let Some(p) = pending {
+                return p;
+            }
+        }
+    }
+
+    // ---- Preamble: initial distribution / distributed build ------------
+
+    fn do_distribute(&mut self) -> Option<Poll> {
+        let me = self.ep.rank();
+        let p = self.ep.p();
+        let part = &self.ctx.partition;
+        let t_build = self.ep.clock.now();
+        let cells: Vec<f32> = if me == 0 {
+            let src = self.source.take().expect("rank 0 needs the data source");
+            match src.to_wire() {
+                None => {
+                    // Prebuilt matrix: ship shards (paper §5.3 preamble).
+                    let DistSource::Matrix(ref m) = *src else { unreachable!() };
+                    let full = m.cells();
+                    for dst in 1..p {
+                        let cells: Vec<f32> = part.cells_of(dst).map(|idx| full[idx]).collect();
+                        self.ep.send(dst, DIST_TAG, ProtoMsg::Shard(cells));
+                    }
+                    part.cells_of(0).map(|idx| full[idx]).collect()
+                }
+                Some((flat, rows, cols)) => {
+                    // Raw dataset: replicate, then build my own cells. The
+                    // local copy goes through the same f32 wire quantization.
+                    let kind = match src.kind() {
+                        SourceKind::Points => 0u8,
+                        SourceKind::Ensemble => 1u8,
+                    };
+                    for dst in 1..p {
+                        self.ep
+                            .send(dst, DIST_TAG, ProtoMsg::Dataset(kind, rows, cols, flat.clone()));
+                    }
+                    build_shard(&mut self.ep, part, me, &src.quantized())
+                }
+            }
+        } else {
+            match self.ep.try_recv(0, DIST_TAG) {
+                None => return Some(Poll::Pending { src: 0, tag: DIST_TAG }),
+                Some(ProtoMsg::Shard(cells)) => cells,
+                Some(ProtoMsg::Dataset(kind, rows, cols, flat)) => {
+                    let kind = if kind == 0 { SourceKind::Points } else { SourceKind::Ensemble };
+                    let src = DistSource::from_wire(kind, &flat, rows, cols);
+                    build_shard(&mut self.ep, part, me, &src)
+                }
+                Some(other) => panic!("protocol error: expected Shard|Dataset, got {other:?}"),
+            }
+        };
+        // The store owns the cells from here on; every read and write — the
+        // step-1 scan, the 6a retires, the 6b LW updates — goes through it.
+        // Building the index costs O(m/p) once, charged like a shard pass.
+        let shard = ShardStore::new(cells, self.ctx.scan.wants_index());
+        let shard_cells = shard.len();
+        if shard.is_indexed() {
+            self.ep.compute(shard_cells);
+        }
+        let phases = PhaseBreakdown { build: self.ep.clock.now() - t_build, ..Default::default() };
+        let n = part.n();
+        self.st = Some(RankState {
+            shard,
+            shard_cells,
+            my_cell0: part.cells_of(me).collect(),
+            sizes: vec![1.0f32; n],
+            alive: AliveSet::new(n),
+            merges: if me == 0 { Vec::with_capacity(n - 1) } else { Vec::new() },
+            merge_digest: Fnv64::new(),
+            phases,
+            cells_scanned: 0,
+            cells_updated: 0,
+            index_ops: 0,
+            alive_visited: 0,
+            iter: 0,
+            t_mark: 0.0,
+            pairs: Vec::with_capacity(p),
+            acc: Vec::new(),
+            win_rank: 0,
+            d_ij: 0.0,
+            mi: 0,
+            mj: 0,
+            outbound: vec![Vec::new(); p],
+            expect_from: vec![false; p],
+            local_dkj: Vec::new(),
+        });
+        self.step = Step::SendMin;
+        None
+    }
+
+    // ---- Step 1 + send side of steps 2–3 -------------------------------
+
+    fn do_send_min(&mut self) {
+        let me = self.ep.rank();
+        let p = self.ep.p();
+        let st = self.st.as_mut().expect("state exists after Distribute");
+        let t0 = self.ep.clock.now();
+        let (lmin, lidx) = match &self.ctx.scan {
+            ScanStrategy::Full(engine) => {
+                // Cost: the scan touches the live cells (retired ones are
+                // inf and shrink the effective matrix, §5.4's decreasing m).
+                self.ep.compute(st.shard.live() as usize);
+                st.cells_scanned += st.shard.live();
+                engine.shard_min(st.shard.cells())
+            }
+            ScanStrategy::Indexed => {
+                // O(1): the tree root already holds (min, lowest offset).
+                // The scan's cost moved to the O(log m) write maintenance,
+                // charged in the update phase below.
+                self.ep.compute(1);
+                st.cells_scanned += 1;
+                st.shard.indexed_min()
+            }
+        };
+        let global_idx = if lidx == usize::MAX { u64::MAX } else { st.my_cell0[lidx] as u64 };
+        st.phases.scan += self.ep.clock.now() - t0;
+        st.t_mark = self.ep.clock.now();
+
+        let t = tag(st.iter, Phase::MinExchange);
+        match self.ctx.collectives {
+            Collectives::Naive => {
+                // The paper's "each p_m broadcasts their local minimum":
+                // p·(p−1) messages, one latency.
+                for dst in 0..p {
+                    if dst != me {
+                        self.ep.send(dst, t, ProtoMsg::LocalMin(lmin, global_idx));
+                    }
+                }
+                st.pairs.clear();
+                st.pairs.resize(p, (0.0, 0));
+                st.pairs[me] = (lmin, global_idx);
+                self.step = Step::GatherMin { next_src: 0 };
+            }
+            Collectives::Tree => {
+                // Binomial gather of a MinList to rank 0 plus a binomial
+                // broadcast back: 2·(p−1) messages, 2·⌈log₂p⌉ latencies.
+                st.acc.clear();
+                st.acc.push((me as u32, lmin, global_idx));
+                self.step = Step::TreeGatherMin { mask: 1 };
+            }
+        }
+    }
+
+    // ---- Steps 2–3, naive: receive the peer minima ---------------------
+
+    fn do_gather_min(&mut self, next_src: usize) -> Option<Poll> {
+        let me = self.ep.rank();
+        let p = self.ep.p();
+        let t = {
+            let st = self.st.as_ref().expect("state exists");
+            tag(st.iter, Phase::MinExchange)
+        };
+        for src in next_src..p {
+            if src == me {
+                continue;
+            }
+            match self.ep.try_recv(src, t) {
+                None => {
+                    self.step = Step::GatherMin { next_src: src };
+                    return Some(Poll::Pending { src, tag: t });
+                }
+                Some(msg) => {
+                    let st = self.st.as_mut().expect("state exists");
+                    st.pairs[src] = msg.expect_local_min();
+                }
+            }
+        }
+        self.pick_winner_and_announce();
+        None
+    }
+
+    // ---- Steps 2–3, tree: binomial gather toward rank 0 ----------------
+
+    fn do_tree_gather_min(&mut self, mut mask: usize) -> Option<Poll> {
+        let me = self.ep.rank();
+        let p = self.ep.p();
+        let t = {
+            let st = self.st.as_ref().expect("state exists");
+            tag(st.iter, Phase::MinExchange)
+        };
+        while mask < p {
+            if me & mask != 0 {
+                // My turn to fold into the parent and go wait for the
+                // assembled list to come back down.
+                let acc = {
+                    let st = self.st.as_mut().expect("state exists");
+                    std::mem::take(&mut st.acc)
+                };
+                self.ep.send(me - mask, t, ProtoMsg::MinList(acc));
+                self.step = Step::AwaitMinList;
+                return None;
+            }
+            if me + mask < p {
+                match self.ep.try_recv(me + mask, t) {
+                    None => {
+                        self.step = Step::TreeGatherMin { mask };
+                        return Some(Poll::Pending { src: me + mask, tag: t });
+                    }
+                    Some(ProtoMsg::MinList(l)) => {
+                        let st = self.st.as_mut().expect("state exists");
+                        st.acc.extend(l);
+                    }
+                    Some(other) => panic!("protocol error: expected MinList, got {other:?}"),
+                }
+            }
+            mask <<= 1;
+        }
+        // mask reached p without sending: I am rank 0, the gather root.
+        // Sort by rank and push the list back down the same tree.
+        debug_assert_eq!(me, 0);
+        let bt = t ^ (1 << 62);
+        let full = {
+            let st = self.st.as_mut().expect("state exists");
+            let mut acc = std::mem::take(&mut st.acc);
+            acc.sort_by_key(|&(r, _, _)| r);
+            acc
+        };
+        self.tree_forward(bt, 0, ProtoMsg::MinList(full.clone()));
+        self.finish_min_exchange(full);
+        None
+    }
+
+    // ---- Steps 2–3, tree: the assembled list comes back down -----------
+
+    fn do_await_min_list(&mut self) -> Option<Poll> {
+        let me = self.ep.rank();
+        let t = {
+            let st = self.st.as_ref().expect("state exists");
+            tag(st.iter, Phase::MinExchange)
+        };
+        let bt = t ^ (1 << 62);
+        let parent = tree_parent(me, 0, self.ep.p());
+        match self.ep.try_recv(parent, bt) {
+            None => Some(Poll::Pending { src: parent, tag: bt }),
+            Some(ProtoMsg::MinList(full)) => {
+                self.tree_forward(bt, 0, ProtoMsg::MinList(full.clone()));
+                self.finish_min_exchange(full);
+                None
+            }
+            Some(other) => panic!("protocol error: expected MinList, got {other:?}"),
+        }
+    }
+
+    /// Tree-collective tail shared by root and non-root: the full
+    /// rank-sorted list is in hand; reduce it to the naive-format pairs.
+    fn finish_min_exchange(&mut self, full: Vec<(u32, f32, u64)>) {
+        debug_assert_eq!(full.len(), self.ep.p());
+        {
+            let st = self.st.as_mut().expect("state exists");
+            st.pairs.clear();
+            st.pairs.extend(full.into_iter().map(|(_, v, i)| (v, i)));
+        }
+        self.pick_winner_and_announce();
+    }
+
+    // ---- Step 4 (replicated, no communication) + step 5 send side ------
+
+    fn pick_winner_and_announce(&mut self) {
+        let me = self.ep.rank();
+        let p = self.ep.p();
+        let (win_rank, d_ij, win_idx) = {
+            let st = self.st.as_ref().expect("state exists");
+            global_min(&st.pairs)
+                .expect("all cells retired before n-1 merges — non-finite input distance?")
+        };
+        let n = self.ctx.partition.n();
+        let (i, j) = condensed_pair(n, win_idx as usize);
+        let (at, announce) = {
+            let st = self.st.as_mut().expect("state exists");
+            st.win_rank = win_rank;
+            st.d_ij = d_ij;
+            st.mi = i;
+            st.mj = j;
+            (tag(st.iter, Phase::MergeAnnounce), ProtoMsg::MergeAnnounce(i as u32, j as u32))
+        };
+        // Step 5: winner announces the merge. Redundant information-wise
+        // (every rank just computed it), but the paper's protocol includes
+        // the broadcast, so the cost model does too.
+        if me != win_rank {
+            self.step = Step::MergeBroadcast;
+            return;
+        }
+        match self.ctx.collectives {
+            Collectives::Naive => {
+                for dst in 0..p {
+                    if dst != me {
+                        self.ep.send(dst, at, announce.clone());
+                    }
+                }
+            }
+            Collectives::Tree => self.tree_forward(at, win_rank, announce),
+        }
+        self.step = Step::Walk;
+    }
+
+    // ---- Step 5, receive side ------------------------------------------
+
+    fn do_merge_broadcast(&mut self) -> Option<Poll> {
+        let me = self.ep.rank();
+        let (at, win_rank, mi, mj) = {
+            let st = self.st.as_ref().expect("state exists");
+            (tag(st.iter, Phase::MergeAnnounce), st.win_rank, st.mi, st.mj)
+        };
+        let src = match self.ctx.collectives {
+            Collectives::Naive => win_rank,
+            Collectives::Tree => tree_parent(me, win_rank, self.ep.p()),
+        };
+        match self.ep.try_recv(src, at) {
+            None => Some(Poll::Pending { src, tag: at }),
+            Some(msg) => {
+                let (ai, aj) = msg.expect_merge();
+                debug_assert_eq!((ai, aj), (mi, mj));
+                if self.ctx.collectives == Collectives::Tree {
+                    self.tree_forward(at, win_rank, ProtoMsg::MergeAnnounce(ai as u32, aj as u32));
+                }
+                self.step = Step::Walk;
+                None
+            }
+        }
+    }
+
+    // ---- Step 6a: routing walk + sends + local LW updates --------------
+
+    fn do_walk(&mut self) {
+        let me = self.ep.rank();
+        let p = self.ep.p();
+        let n = self.ctx.partition.n();
+        let part = &self.ctx.partition;
+        let st = self.st.as_mut().expect("state exists");
+        let now = self.ep.clock.now();
+        st.phases.coordinate += now - st.t_mark;
+        st.t_mark = now;
+        let (i, j, d_ij) = (st.mi, st.mj, st.d_ij);
+
+        // 6a outbound: for every live k, if I own (k,j) I must ship
+        // (k, D_kj) to the owner of (k,i) — batched per destination.
+        // Receivers know exactly who will message them (ownership is a
+        // pure function).
+        for b in st.outbound.iter_mut() {
+            b.clear();
+        }
+        st.expect_from.fill(false);
+        st.local_dkj.clear();
+        match self.ctx.walk {
+            AliveWalk::Full => {
+                st.alive_visited += route_full(
+                    part,
+                    &st.alive,
+                    &mut st.shard,
+                    me,
+                    i,
+                    j,
+                    &mut st.outbound,
+                    &mut st.expect_from,
+                    &mut st.local_dkj,
+                );
+            }
+            AliveWalk::Incremental => {
+                st.alive_visited += route_incremental(
+                    part,
+                    &mut st.alive,
+                    &mut st.shard,
+                    me,
+                    i,
+                    j,
+                    &mut st.outbound,
+                    &mut st.expect_from,
+                    &mut st.local_dkj,
+                );
+            }
+        }
+        // Retire the (i,j) cell itself.
+        {
+            let cell_ij = condensed_index(n, i, j);
+            if part.owner(cell_ij) == me {
+                st.shard.retire(part.local_offset(cell_ij));
+            }
+        }
+        let ttag = tag(st.iter, Phase::Triples);
+        for dst in 0..p {
+            if !st.outbound[dst].is_empty() {
+                let list = std::mem::take(&mut st.outbound[dst]);
+                self.ep.send(dst, ttag, ProtoMsg::Triples(list));
+            }
+        }
+
+        // 6b, local half: apply the LW formula for every (k, D_kj) I
+        // routed to myself. Each triple list ascends in k, so cell (k,i)
+        // ascends too — a fresh cursor resolves offsets without binary
+        // searches.
+        let (n_i, n_j) = (st.sizes[i], st.sizes[j]);
+        let mut cur = part.owner_cursor();
+        for &(k, d_kj) in &st.local_dkj {
+            let k = k as usize;
+            let cell_ki = condensed_index(n, k.min(i), k.max(i));
+            let (owner, off) = cur.locate(cell_ki);
+            debug_assert_eq!(owner, me);
+            let c = self.ctx.scheme.coeffs(n_i, n_j, st.sizes[k]);
+            let v = lw_update(c, st.shard.get(off), d_kj, d_ij);
+            st.shard.set(off, v);
+            st.cells_updated += 1;
+        }
+        self.step = Step::RetireUpdate { next_src: 0 };
+    }
+
+    // ---- Step 6b, remote half + iteration finalization -----------------
+
+    fn do_retire_update(&mut self, next_src: usize) -> Option<Poll> {
+        let me = self.ep.rank();
+        let p = self.ep.p();
+        let n = self.ctx.partition.n();
+        let ttag = {
+            let st = self.st.as_ref().expect("state exists");
+            tag(st.iter, Phase::Triples)
+        };
+        for src in next_src..p {
+            {
+                let st = self.st.as_ref().expect("state exists");
+                if !st.expect_from[src] {
+                    continue;
+                }
+            }
+            match self.ep.try_recv(src, ttag) {
+                None => {
+                    self.step = Step::RetireUpdate { next_src: src };
+                    return Some(Poll::Pending { src, tag: ttag });
+                }
+                Some(msg) => {
+                    let triples = msg.expect_triples();
+                    self.ep.compute(triples.len());
+                    let st = self.st.as_mut().expect("state exists");
+                    let (i, j, d_ij) = (st.mi, st.mj, st.d_ij);
+                    let (n_i, n_j) = (st.sizes[i], st.sizes[j]);
+                    let mut cur = self.ctx.partition.owner_cursor();
+                    for (k, d_kj) in triples {
+                        let k = k as usize;
+                        let cell_ki = condensed_index(n, k.min(i), k.max(i));
+                        let (owner, off) = cur.locate(cell_ki);
+                        debug_assert_eq!(owner, me);
+                        let c = self.ctx.scheme.coeffs(n_i, n_j, st.sizes[k]);
+                        let v = lw_update(c, st.shard.get(off), d_kj, d_ij);
+                        st.shard.set(off, v);
+                        st.cells_updated += 1;
+                    }
+                }
+            }
+        }
+        // Charge this iteration's index maintenance (retires + updates) to
+        // the virtual clock — the Indexed strategy is not free, it trades
+        // the O(m/p) rescan for O(log m) per write.
+        let maint = {
+            let st = self.st.as_mut().expect("state exists");
+            st.shard.take_index_ops()
+        };
+        if maint > 0 {
+            self.ep.compute(maint as usize);
+        }
+        let now = self.ep.clock.now();
+        let finished = {
+            let st = self.st.as_mut().expect("state exists");
+            st.index_ops += maint;
+            let (i, j, d_ij) = (st.mi, st.mj, st.d_ij);
+            // Replicated metadata update (identical on every rank).
+            st.sizes[i] += st.sizes[j];
+            st.sizes[j] = 0.0;
+            st.alive.remove(j);
+            st.merge_digest.write_u64(((i as u64) << 32) | j as u64);
+            st.merge_digest.write_u64(d_ij.to_bits() as u64);
+            if me == 0 {
+                st.merges.push(Merge { i, j, height: d_ij });
+            }
+            st.phases.update += now - st.t_mark;
+            st.iter += 1;
+            st.iter == n - 1
+        };
+        if finished {
+            self.finish();
+            self.step = Step::Done;
+        } else {
+            self.step = Step::SendMin;
+        }
+        None
+    }
+
+    /// Assemble the [`WorkerOutput`] and drop the per-rank state (the
+    /// shard memory is released here, not at scheduler teardown).
+    fn finish(&mut self) {
+        let st = self.st.take().expect("state exists");
+        self.output = Some(WorkerOutput {
+            rank: self.ep.rank(),
+            merges: st.merges,
+            merge_digest: st.merge_digest.finish(),
+            virtual_s: self.ep.clock.now(),
+            phases: st.phases,
+            msgs_sent: self.ep.traffic.msgs_sent,
+            bytes_sent: self.ep.traffic.bytes_sent,
+            cells_scanned: st.cells_scanned,
+            cells_updated: st.cells_updated,
+            index_ops: st.index_ops,
+            alive_visited: st.alive_visited,
+            shard_cells: st.shard_cells,
+        });
+    }
+
+    /// The send half of a binomial-tree broadcast rooted at `root`: fan
+    /// `value` out to the subtrees hanging below this rank's receive bit
+    /// (the full tree for the root itself). Mirrors the reference
+    /// [`Endpoint::broadcast_tree`](crate::comm::Endpoint::broadcast_tree)
+    /// — same children, same send order — so the resumable decomposition
+    /// keeps the spec's message pattern (the receive half is
+    /// [`tree_parent`], pinned against the reference by
+    /// `tree_parent_matches_broadcast_tree_receive`).
+    fn tree_forward(&mut self, tag: u64, root: usize, value: ProtoMsg) {
+        let p = self.ep.p();
+        let me = self.ep.rank();
+        let rel = (me + p - root) % p;
+        let mut mask = if rel == 0 {
+            let mut m = 1usize;
+            while m < p {
+                m <<= 1;
+            }
+            m
+        } else {
+            rel & rel.wrapping_neg() // lowest set bit: my receive round
+        };
+        mask >>= 1;
+        while mask > 0 {
+            if rel & mask == 0 && rel + mask < p {
+                let child = (rel + mask + root) % p;
+                self.ep.send(child, tag, value.clone());
+            }
+            mask >>= 1;
+        }
+    }
+}
+
+/// Parent of `me` in the binomial broadcast tree rooted at `root` (must
+/// not be called for the root itself).
+fn tree_parent(me: usize, root: usize, p: usize) -> usize {
+    let rel = (me + p - root) % p;
+    debug_assert_ne!(rel, 0, "root has no parent");
+    let low = rel & rel.wrapping_neg();
+    (rel - low + root) % p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tree_parent_matches_broadcast_tree_receive() {
+        // broadcast_tree receives from (rel - lowbit + root) % p; the
+        // resumable machine must compute the same parent for every
+        // (me, root, p) it can park in.
+        for p in [2usize, 3, 5, 8, 13, 16] {
+            for root in 0..p {
+                for me in (0..p).filter(|&m| m != root) {
+                    let rel = (me + p - root) % p;
+                    let mut mask = 1usize;
+                    let expected = loop {
+                        if rel & mask != 0 {
+                            break (rel - mask + root) % p;
+                        }
+                        mask <<= 1;
+                    };
+                    assert_eq!(tree_parent(me, root, p), expected, "me={me} root={root} p={p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn step_names_cover_all_variants() {
+        for s in [
+            Step::Distribute,
+            Step::SendMin,
+            Step::GatherMin { next_src: 0 },
+            Step::TreeGatherMin { mask: 1 },
+            Step::AwaitMinList,
+            Step::MergeBroadcast,
+            Step::Walk,
+            Step::RetireUpdate { next_src: 0 },
+            Step::Done,
+        ] {
+            assert!(!s.name().is_empty());
+        }
+    }
+}

@@ -1,5 +1,15 @@
-//! Worker rank: the SPMD body of the distributed Lance-Williams protocol
-//! (paper §5.3, steps 1–6).
+//! Worker rank surface: configuration in, results out — plus the step-6a
+//! routing walks shared by every execution substrate.
+//!
+//! The protocol body itself is the resumable state machine in
+//! [`super::task::RankTask`] (ISSUE-3), driven to completion either by a
+//! dedicated OS thread ([`RankTask::run_blocking`]) or by the event
+//! scheduler — the [`super::sched::Runtime`] choice. The routing helpers
+//! at the bottom of this file ([`route_full`], [`route_incremental`]) are
+//! pure shard/partition computations with no communication, called from
+//! the task's `Walk` step.
+//!
+//! [`RankTask::run_blocking`]: super::task::RankTask::run_blocking
 //!
 //! Every rank holds only its shard of the condensed matrix (`(n²−n)/2 / p`
 //! cells) plus O(n) replicated metadata (cluster sizes, liveness) — the
@@ -13,305 +23,59 @@
 //! any rank can reconstruct the dendrogram; rank 0's copy is returned and
 //! the other ranks contribute only an FNV digest for the agreement check.
 
-use std::sync::Arc;
-
 use crate::comm::{Collectives, Endpoint};
-use crate::coordinator::protocol::{exchange_minima, tag, Phase, ProtoMsg, DIST_TAG};
-use crate::coordinator::source::{DistSource, SourceKind};
+use crate::coordinator::protocol::ProtoMsg;
+use crate::coordinator::source::DistSource;
 use crate::coordinator::{AliveWalk, ScanStrategy};
 use crate::dendrogram::Merge;
-use crate::linkage::{lw_update, Scheme};
+use crate::linkage::Scheme;
 use crate::matrix::{
     condensed_index, condensed_pair, AliveSet, OwnerCursor, Partition, PartitionKind, ShardStore,
 };
 use crate::metrics::PhaseBreakdown;
-use crate::util::fnv::Fnv64;
 
 /// Per-worker results returned to the driver.
 pub struct WorkerOutput {
+    /// Which rank produced this output.
     pub rank: usize,
     /// The merge list — materialized on rank 0 only; other ranks return
     /// an empty vec plus `merge_digest` for the agreement check.
     pub merges: Vec<Merge>,
     /// FNV-1a digest of the full (i, j, height) merge sequence.
     pub merge_digest: u64,
+    /// This rank's final virtual-clock reading (simulated seconds).
     pub virtual_s: f64,
+    /// Virtual-time breakdown by protocol phase.
     pub phases: PhaseBreakdown,
+    /// Messages this rank sent.
     pub msgs_sent: u64,
+    /// Payload bytes this rank sent.
     pub bytes_sent: u64,
+    /// Condensed cells this rank's step-1 scans touched.
     pub cells_scanned: u64,
+    /// LW cell updates this rank applied.
     pub cells_updated: u64,
     /// Tournament-tree maintenance writes (0 under `ScanStrategy::Full`).
     pub index_ops: u64,
     /// Candidate ks examined by this rank's step-6a routing walks.
     pub alive_visited: u64,
+    /// Cells resident in this rank's shard.
     pub shard_cells: usize,
 }
 
 /// Worker configuration (shared, cheap to clone).
 #[derive(Clone)]
 pub struct WorkerCtx {
+    /// Lance-Williams linkage scheme for the LW coefficient updates.
     pub scheme: Scheme,
+    /// The condensed-matrix partition (owner map, k-intervals).
     pub partition: Partition,
+    /// Step-1 min-scan strategy: full rescan or ShardStore tree index.
     pub scan: ScanStrategy,
+    /// Step-6a routing walk: full sweep or per-rank k-intervals (ISSUE-2).
     pub walk: AliveWalk,
+    /// Collective algorithm for the min exchange and merge broadcast.
     pub collectives: Collectives,
-}
-
-/// Run one rank of the protocol to completion.
-///
-/// Rank 0 doubles as the data distributor (paper: files are read and
-/// "sent to the processors"): for a prebuilt matrix it ships each rank
-/// its shard; for raw points/conformations it replicates the dataset and
-/// every rank *builds* its own shard cells — the paper's §5.1
-/// "parallelized RMSD" stage.
-pub fn worker_main(
-    mut ep: Endpoint<ProtoMsg>,
-    ctx: WorkerCtx,
-    source: Option<Arc<DistSource>>,
-) -> WorkerOutput {
-    let me = ep.rank();
-    let p = ep.p();
-    let n = ctx.partition.n();
-    let part = &ctx.partition;
-    let mut phases = PhaseBreakdown::default();
-
-    // ---- Initial distribution / distributed build ----------------------
-    let t_build = ep.clock.now();
-    let cells: Vec<f32> = if me == 0 {
-        let src = source.expect("rank 0 needs the data source");
-        match src.to_wire() {
-            None => {
-                // Prebuilt matrix: ship shards (paper §5.3 preamble).
-                let DistSource::Matrix(ref m) = *src else { unreachable!() };
-                let full = m.cells();
-                for dst in 1..p {
-                    let cells: Vec<f32> = part.cells_of(dst).map(|idx| full[idx]).collect();
-                    ep.send(dst, DIST_TAG, ProtoMsg::Shard(cells));
-                }
-                part.cells_of(0).map(|idx| full[idx]).collect()
-            }
-            Some((flat, rows, cols)) => {
-                // Raw dataset: replicate, then build my own cells. The
-                // local copy goes through the same f32 wire quantization.
-                let kind = match src.kind() {
-                    SourceKind::Points => 0u8,
-                    SourceKind::Ensemble => 1u8,
-                };
-                for dst in 1..p {
-                    ep.send(dst, DIST_TAG, ProtoMsg::Dataset(kind, rows, cols, flat.clone()));
-                }
-                build_shard(&mut ep, part, me, &src.quantized())
-            }
-        }
-    } else {
-        match ep.recv(0, DIST_TAG) {
-            ProtoMsg::Shard(cells) => cells,
-            ProtoMsg::Dataset(kind, rows, cols, flat) => {
-                let kind = if kind == 0 { SourceKind::Points } else { SourceKind::Ensemble };
-                let src = DistSource::from_wire(kind, &flat, rows, cols);
-                build_shard(&mut ep, part, me, &src)
-            }
-            other => panic!("protocol error: expected Shard|Dataset, got {other:?}"),
-        }
-    };
-    // The store owns the cells from here on; every read and write — the
-    // step-1 scan, the 6a retires, the 6b LW updates — goes through it.
-    // Building the index costs O(m/p) once, charged like a shard pass.
-    let mut shard = ShardStore::new(cells, ctx.scan.wants_index());
-    let shard_cells = shard.len();
-    if shard.is_indexed() {
-        ep.compute(shard_cells);
-    }
-    phases.build = ep.clock.now() - t_build;
-    // Global index of each local cell (the paper sends "the (i,j) global
-    // matrix indices for their data portion"); for our partition kinds
-    // this is a pure function, precomputed once.
-    let my_cell0: Vec<usize> = part.cells_of(me).collect();
-
-    // Replicated O(n) metadata. The alive set iterates ascending so every
-    // rank walks identical k-order (deterministic triple batching); its
-    // intrusive-list form gives the O(1) remove and the seek() primitive
-    // the incremental walk needs (ISSUE-2 — see matrix::alive).
-    let mut sizes = vec![1.0f32; n];
-    let mut alive = AliveSet::new(n);
-
-    let mut merges: Vec<Merge> = if me == 0 { Vec::with_capacity(n - 1) } else { Vec::new() };
-    let mut merge_digest = Fnv64::new();
-    let mut cells_scanned = 0u64;
-    let mut cells_updated = 0u64;
-    let mut index_ops = 0u64;
-    let mut alive_visited = 0u64;
-
-    // Hot-loop buffers hoisted out of the iteration (perf pass,
-    // EXPERIMENTS.md §Perf: no allocation on the per-merge path).
-    let mut outbound: Vec<Vec<(u32, f32)>> = vec![Vec::new(); p];
-    let mut expect_from = vec![false; p];
-    let mut local_dkj: Vec<(u32, f32)> = Vec::new();
-
-    for iter in 0..(n - 1) {
-        // ---- Step 1: local minimum over my shard ----------------------
-        let t0 = ep.clock.now();
-        let (lmin, lidx) = match &ctx.scan {
-            ScanStrategy::Full(engine) => {
-                // Cost: the scan touches the live cells (retired ones are
-                // inf and shrink the effective matrix, §5.4's decreasing m).
-                ep.compute(shard.live() as usize);
-                cells_scanned += shard.live();
-                engine.shard_min(shard.cells())
-            }
-            ScanStrategy::Indexed => {
-                // O(1): the tree root already holds (min, lowest offset).
-                // The scan's cost moved to the O(log m) write maintenance,
-                // charged in the update phase below.
-                ep.compute(1);
-                cells_scanned += 1;
-                shard.indexed_min()
-            }
-        };
-        let global_idx = if lidx == usize::MAX {
-            u64::MAX
-        } else {
-            my_cell0[lidx] as u64
-        };
-        phases.scan += ep.clock.now() - t0;
-
-        // ---- Steps 2–4: exchange minima, pick global winner ------------
-        let t1 = ep.clock.now();
-        let pairs = exchange_minima(&mut ep, ctx.collectives, iter, (lmin, global_idx));
-        let (win_rank, d_ij, win_idx) = crate::comm::global_min(&pairs)
-            .expect("all cells retired before n-1 merges — non-finite input distance?");
-        let (i, j) = condensed_pair(n, win_idx as usize);
-
-        // ---- Step 5: winner announces the merge ------------------------
-        // Redundant information-wise (every rank just computed it), but the
-        // paper's protocol includes the broadcast, so the cost model does too.
-        let announce = ProtoMsg::MergeAnnounce(i as u32, j as u32);
-        let payload = if me == win_rank { Some(announce) } else { None };
-        let (ai, aj) = ep
-            .broadcast_via(ctx.collectives, tag(iter, Phase::MergeAnnounce), win_rank, payload)
-            .expect_merge();
-        debug_assert_eq!((ai, aj), (i, j));
-        phases.coordinate += ep.clock.now() - t1;
-
-        // ---- Step 6: update row i, retire row j ------------------------
-        let t2 = ep.clock.now();
-        // 6a outbound: for every live k, if I own (k,j) I must ship
-        // (k, D_kj) to the owner of (k,i) — batched per destination.
-        // Receivers know exactly who will message them (ownership is a
-        // pure function). Under `AliveWalk::Full` every rank derives this
-        // by sweeping the whole alive set (the paper's O(n) walk); under
-        // `AliveWalk::Incremental` each rank touches only the k-intervals
-        // it owns (matrix::Partition::k_intervals) — same sends, same
-        // retire set, same ascending-k batch order, counted apart in
-        // `alive_visited`.
-        for b in outbound.iter_mut() {
-            b.clear();
-        }
-        expect_from.fill(false);
-        local_dkj.clear();
-
-        match ctx.walk {
-            AliveWalk::Full => {
-                alive_visited += route_full(
-                    part, &alive, &mut shard, me, i, j, &mut outbound, &mut expect_from,
-                    &mut local_dkj,
-                );
-            }
-            AliveWalk::Incremental => {
-                alive_visited += route_incremental(
-                    part, &mut alive, &mut shard, me, i, j, &mut outbound, &mut expect_from,
-                    &mut local_dkj,
-                );
-            }
-        }
-        // Retire the (i,j) cell itself.
-        {
-            let cell_ij = condensed_index(n, i, j);
-            if part.owner(cell_ij) == me {
-                shard.retire(part.local_offset(cell_ij));
-            }
-        }
-        let ttag = tag(iter, Phase::Triples);
-        for dst in 0..p {
-            if !outbound[dst].is_empty() {
-                let list = std::mem::take(&mut outbound[dst]);
-                ep.send(dst, ttag, ProtoMsg::Triples(list));
-            }
-        }
-
-        // 6b: apply the LW formula for every (k, D_kj) that reaches me.
-        // Each triple list (local and per-source) ascends in k, so cell
-        // (k,i) ascends too — a fresh cursor per list resolves offsets
-        // without per-triple binary searches. Body duplicated rather than
-        // closured: the hot loop borrows shard, sizes, and a cursor at
-        // once, and plain loops keep those borrows trivially disjoint.
-        let (n_i, n_j) = (sizes[i], sizes[j]);
-        let mut cur = part.owner_cursor();
-        for &(k, d_kj) in &local_dkj {
-            let k = k as usize;
-            let cell_ki = condensed_index(n, k.min(i), k.max(i));
-            let (owner, off) = cur.locate(cell_ki);
-            debug_assert_eq!(owner, me);
-            let c = ctx.scheme.coeffs(n_i, n_j, sizes[k]);
-            let v = lw_update(c, shard.get(off), d_kj, d_ij);
-            shard.set(off, v);
-            cells_updated += 1;
-        }
-        for src in 0..p {
-            if expect_from[src] {
-                let triples = ep.recv(src, ttag).expect_triples();
-                ep.compute(triples.len());
-                let mut cur = part.owner_cursor();
-                for (k, d_kj) in triples {
-                    let k = k as usize;
-                    let cell_ki = condensed_index(n, k.min(i), k.max(i));
-                    let (owner, off) = cur.locate(cell_ki);
-                    debug_assert_eq!(owner, me);
-                    let c = ctx.scheme.coeffs(n_i, n_j, sizes[k]);
-                    let v = lw_update(c, shard.get(off), d_kj, d_ij);
-                    shard.set(off, v);
-                    cells_updated += 1;
-                }
-            }
-        }
-        // Charge this iteration's index maintenance (retires + updates) to
-        // the virtual clock — the Indexed strategy is not free, it trades
-        // the O(m/p) rescan for O(log m) per write.
-        let maint = shard.take_index_ops();
-        if maint > 0 {
-            ep.compute(maint as usize);
-            index_ops += maint;
-        }
-
-        // Replicated metadata update (identical on every rank). The
-        // remove is O(1) — the seed's sorted-Vec binary_search + remove
-        // memmoved O(n) cells per merge.
-        sizes[i] += sizes[j];
-        sizes[j] = 0.0;
-        alive.remove(j);
-        merge_digest.write_u64(((i as u64) << 32) | j as u64);
-        merge_digest.write_u64(d_ij.to_bits() as u64);
-        if me == 0 {
-            merges.push(Merge { i, j, height: d_ij });
-        }
-        phases.update += ep.clock.now() - t2;
-    }
-
-    WorkerOutput {
-        rank: me,
-        merges,
-        merge_digest: merge_digest.finish(),
-        virtual_s: ep.clock.now(),
-        phases,
-        msgs_sent: ep.traffic.msgs_sent,
-        bytes_sent: ep.traffic.bytes_sent,
-        cells_scanned,
-        cells_updated,
-        index_ops,
-        alive_visited,
-        shard_cells,
-    }
 }
 
 /// One owned `(k,j)` cell on the step-6a send side: read it, route the
@@ -351,7 +115,7 @@ fn send_cell(
 /// sweep every alive k, act on the cells I own, note the senders I must
 /// expect. Returns the ks visited (the whole alive set, every rank).
 #[allow(clippy::too_many_arguments)]
-fn route_full(
+pub(crate) fn route_full(
     part: &Partition,
     alive: &AliveSet,
     shard: &mut ShardStore,
@@ -410,7 +174,7 @@ fn route_full(
 /// iteration versus the full walk's O(n·p) (EXPERIMENTS.md §Alive-walk).
 /// Returns the ks this rank visited.
 #[allow(clippy::too_many_arguments)]
-fn route_incremental(
+pub(crate) fn route_incremental(
     part: &Partition,
     alive: &mut AliveSet,
     shard: &mut ShardStore,
@@ -582,7 +346,7 @@ fn route_incremental(
 /// Compute the cells this rank owns directly from the replicated dataset
 /// (the distributed-build path). Deterministic: cell (i,j) is the same
 /// f32 everywhere because all ranks hold the same quantized coordinates.
-fn build_shard(
+pub(crate) fn build_shard(
     ep: &mut Endpoint<ProtoMsg>,
     part: &Partition,
     me: usize,

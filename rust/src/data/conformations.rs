@@ -41,12 +41,16 @@ impl Default for EnsembleSpec {
 /// Generated ensemble: conformations + ground-truth template labels.
 #[derive(Clone, Debug)]
 pub struct ConformationEnsemble {
+    /// The sampled conformations, one per item.
     pub structures: Vec<Structure>,
+    /// Ground-truth fold template per item (for ARI).
     pub labels: Vec<usize>,
+    /// Backbone length (atoms per structure).
     pub residues: usize,
 }
 
 impl EnsembleSpec {
+    /// Sample an ensemble deterministically from `seed`.
     pub fn generate(&self, seed: u64) -> ConformationEnsemble {
         assert!(self.templates >= 1 && self.n >= self.templates && self.residues >= 4);
         let mut rng = Rng::new(seed);

@@ -35,12 +35,16 @@ impl Default for GaussianSpec {
 /// Points plus their ground-truth component labels.
 #[derive(Clone, Debug)]
 pub struct LabelledPoints {
+    /// The sampled points, one Vec<f64> of length d per item.
     pub points: Vec<Vec<f64>>,
+    /// Ground-truth mixture component per point (for ARI).
     pub labels: Vec<usize>,
+    /// Point dimensionality.
     pub d: usize,
 }
 
 impl LabelledPoints {
+    /// Number of points.
     pub fn n(&self) -> usize {
         self.points.len()
     }

@@ -100,12 +100,14 @@ pub struct CsvReport {
 }
 
 impl CsvReport {
+    /// Create/truncate `path` and write the header line.
     pub fn create(path: &Path, header: &str) -> anyhow::Result<Self> {
         let mut w = BufWriter::new(std::fs::File::create(path)?);
         writeln!(w, "{header}")?;
         Ok(Self { w })
     }
 
+    /// Append one comma-joined row.
     pub fn row(&mut self, fields: &[String]) -> anyhow::Result<()> {
         writeln!(self.w, "{}", fields.join(","))?;
         Ok(())

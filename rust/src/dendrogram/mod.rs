@@ -29,6 +29,7 @@ pub struct Dendrogram {
 }
 
 impl Dendrogram {
+    /// Wrap a merge list for n items (panics unless exactly n−1 merges).
     pub fn new(n: usize, merges: Vec<Merge>) -> Self {
         assert_eq!(merges.len(), n - 1, "need exactly n-1 merges");
         let mut retired = vec![false; n];
@@ -40,14 +41,17 @@ impl Dendrogram {
         Self { n, merges }
     }
 
+    /// Number of clustered items.
     pub fn n(&self) -> usize {
         self.n
     }
 
+    /// The merges, in agglomeration order.
     pub fn merges(&self) -> &[Merge] {
         &self.merges
     }
 
+    /// Merge heights, in agglomeration order.
     pub fn heights(&self) -> Vec<f32> {
         self.merges.iter().map(|m| m.height).collect()
     }
@@ -152,12 +156,14 @@ pub struct UnionFind {
 }
 
 impl UnionFind {
+    /// n singleton sets.
     pub fn new(n: usize) -> Self {
         Self {
             parent: (0..n).collect(),
         }
     }
 
+    /// Root of x, with path halving.
     pub fn find(&mut self, mut x: usize) -> usize {
         while self.parent[x] != x {
             self.parent[x] = self.parent[self.parent[x]];

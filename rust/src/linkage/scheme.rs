@@ -4,9 +4,13 @@
 /// cluster sizes (n_i, n_j, n_k), γ never does.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Coeffs {
+    /// Weight of D_ki (the surviving cluster side).
     pub alpha_i: f32,
+    /// Weight of D_kj (the retired cluster side).
     pub alpha_j: f32,
+    /// Weight of D_ij (the merge distance itself).
     pub beta: f32,
+    /// Weight of |D_ki − D_kj|.
     pub gamma: f32,
 }
 
@@ -31,6 +35,7 @@ pub enum Scheme {
     Median,
 }
 
+/// Every scheme, in the shared rust/Python id order (see [`Scheme`]).
 pub const ALL_SCHEMES: [Scheme; 7] = [
     Scheme::Single,
     Scheme::Complete,
@@ -118,6 +123,7 @@ impl Scheme {
         !matches!(self, Scheme::Centroid | Scheme::Median)
     }
 
+    /// Lower-case scheme name (the CLI `--scheme` spelling).
     pub fn name(self) -> &'static str {
         match self {
             Scheme::Single => "single",

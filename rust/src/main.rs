@@ -13,8 +13,8 @@
 use std::path::PathBuf;
 
 use lancew::baselines::serial_lw::{serial_lw_cluster, verify_against_definition};
-use lancew::comm::CostModel;
-use lancew::coordinator::{AliveWalk, ClusterConfig, DistSource, Engine, ScanStrategy};
+use lancew::comm::{Collectives, CostModel};
+use lancew::coordinator::{AliveWalk, ClusterConfig, DistSource, Engine, Runtime, ScanStrategy};
 use lancew::data::{euclidean_matrix, io, rmsd_matrix, EnsembleSpec, GaussianSpec};
 use lancew::linkage::Scheme;
 use lancew::matrix::PartitionKind;
@@ -51,10 +51,17 @@ fn print_help() {
          cluster  --n 200 | --matrix file.bin | --conformations\n\
          \x20        --scheme complete --p 8 --partition paper --cost-model nehalem\n\
          \x20        --cut 5 --scan full|indexed --engine scalar|xla --seed 42\n\
+         \x20        --runtime threads|event|event:N (rank substrate; default event —\n\
+         \x20          one scheduler drives all p ranks, so p can reach the thousands)\n\
+         \x20        --collectives naive|tree (min exchange/broadcast; tree for big p)\n\
          \x20        --alive-walk full|incremental (step-6a routing; default incremental)\n\
+         \x20          caveat: with --partition cyclic the incremental walk still scans\n\
+         \x20          alive k below the retired column j — Cyclic's below-j cells have\n\
+         \x20          no closed interval form (Partition::k_intervals scan_below), so\n\
+         \x20          only the above-j stride sheds work there\n\
          \x20        --newick out.nwk --ascii --linkage z.csv (scipy linkage matrix)\n\
          validate --n 60 --trials 5 --seed 1\n\
-         fig2     --n 512 --ps 1,2,4,8,16,24 --scheme complete\n\
+         fig2     --n 512 --ps 1,2,4,8,16,24 --scheme complete --runtime event\n\
          gen      --kind gaussian|conformations --n 200 --out data.bin --seed 7\n\
          info     [--artifacts dir]"
     );
@@ -118,9 +125,27 @@ fn make_scan(args: &Args) -> anyhow::Result<ScanStrategy> {
 
 /// `--alive-walk incremental` (default: per-rank k-interval routing) or
 /// `--alive-walk full` (the paper's O(n)-per-rank step-6a sweep, kept for
-/// the A/B — results are bitwise identical either way).
+/// the A/B — results are bitwise identical either way). Caveat: under
+/// `--partition cyclic` the incremental walk still *scans* alive k below
+/// the retired column (no closed interval form — see
+/// `Partition::k_intervals`), so only the above-column stride sheds work.
 fn make_walk(args: &Args) -> anyhow::Result<AliveWalk> {
     args.get("alive-walk").unwrap_or("incremental").parse()
+}
+
+/// `--runtime event` (default: the ISSUE-3 event scheduler — all ranks in
+/// one process), `--runtime event:N` (scheduler sharded over N host
+/// threads), or `--runtime threads` (one OS thread per rank). Results are
+/// bitwise identical; only host resources differ.
+fn make_runtime(args: &Args) -> anyhow::Result<Runtime> {
+    args.get("runtime").unwrap_or("event").parse()
+}
+
+/// `--collectives naive` (default: the paper's O(p) fan-outs) or
+/// `--collectives tree` (binomial gather/broadcast — essential once p
+/// reaches the hundreds, where naive's p² min-exchange messages dominate).
+fn make_collectives(args: &Args) -> anyhow::Result<Collectives> {
+    args.get("collectives").unwrap_or("naive").parse()
 }
 
 fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
@@ -131,6 +156,8 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     let cost_model: CostModel = args.get("cost-model").unwrap_or("nehalem").parse()?;
     let scan = make_scan(args)?;
     let walk = make_walk(args)?;
+    let runtime = make_runtime(args)?;
+    let collectives = make_collectives(args)?;
     let cut: usize = args.parse_or("cut", 0usize)?;
     let newick = args.get("newick").map(PathBuf::from);
     let linkage_out = args.get("linkage").map(PathBuf::from);
@@ -142,6 +169,8 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         .with_cost_model(cost_model)
         .with_scan(scan)
         .with_alive_walk(walk)
+        .with_runtime(runtime)
+        .with_collectives(collectives)
         .run_source(source.clone())?;
 
     println!("{}", run.stats.summary());
@@ -217,15 +246,16 @@ fn cmd_fig2(args: &Args) -> anyhow::Result<()> {
     let ps: Vec<usize> = parse_list(args.get("ps").unwrap_or("1,2,4,8,12,16,20,24,28"))?;
     let scheme: Scheme = args.get("scheme").unwrap_or("complete").parse()?;
     let seed: u64 = args.parse_or("seed", 42u64)?;
+    let runtime = make_runtime(args)?;
     args.reject_unknown()?;
 
     let lp = GaussianSpec { n, k: 8, ..Default::default() }.generate(seed);
     let m = euclidean_matrix(&lp.points);
-    println!("# Figure 2 (quick): n={n} scheme={scheme} model=nehalem");
+    println!("# Figure 2 (quick): n={n} scheme={scheme} model=nehalem runtime={runtime}");
     println!("{:>4} {:>14} {:>10} {:>12}", "p", "sim_time_s", "speedup", "msgs/iter");
     let mut t1 = None;
     for &p in &ps {
-        let run = ClusterConfig::new(scheme, p).run(&m)?;
+        let run = ClusterConfig::new(scheme, p).with_runtime(runtime).run(&m)?;
         let t = run.stats.virtual_s;
         let t1v = *t1.get_or_insert(t);
         println!(

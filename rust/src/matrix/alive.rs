@@ -73,6 +73,7 @@ impl AliveSet {
     }
 
     #[inline]
+    /// Whether every index has been removed.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }

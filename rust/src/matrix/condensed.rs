@@ -97,22 +97,27 @@ impl CondensedMatrix {
         m
     }
 
+    /// Number of items (matrix side length).
     pub fn n(&self) -> usize {
         self.n
     }
 
+    /// Number of condensed cells, (n²−n)/2.
     pub fn len(&self) -> usize {
         self.cells.len()
     }
 
+    /// Whether there are no cells (n < 2).
     pub fn is_empty(&self) -> bool {
         self.cells.is_empty()
     }
 
+    /// The cells in SciPy `pdist` (row-major upper-triangle) order.
     pub fn cells(&self) -> &[f32] {
         &self.cells
     }
 
+    /// Mutable view of the cells (same order).
     pub fn cells_mut(&mut self) -> &mut [f32] {
         &mut self.cells
     }

@@ -52,6 +52,7 @@ pub struct Partition {
 }
 
 impl Partition {
+    /// Partition `condensed_len(n)` cells over `p` ranks.
     pub fn new(kind: PartitionKind, n: usize, p: usize) -> Self {
         assert!(p >= 1 && n >= 2);
         let len = condensed_len(n);
@@ -93,14 +94,17 @@ impl Partition {
         Self { kind, n, p, starts }
     }
 
+    /// The distribution strategy in use.
     pub fn kind(&self) -> PartitionKind {
         self.kind
     }
 
+    /// Number of items (matrix side length).
     pub fn n(&self) -> usize {
         self.n
     }
 
+    /// Number of ranks.
     pub fn p(&self) -> usize {
         self.p
     }
@@ -110,6 +114,7 @@ impl Partition {
         condensed_len(self.n)
     }
 
+    /// Whether there are no cells (n < 2).
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -211,9 +216,28 @@ impl Partition {
     ///   Cyclic it is an arithmetic progression with stride `p`
     ///   ([`KIntervals::above_step`]).
     ///
-    /// Cyclic's *below* piece is quadratic in k modulo p and has no
-    /// closed form; [`KIntervals::scan_below`] tells the walker to scan
-    /// alive `k < e` and filter with [`owner`](Self::owner) instead.
+    /// **Caveat (CLI `--alive-walk incremental`, the default):** Cyclic's
+    /// *below* piece is quadratic in k modulo p and has no closed form;
+    /// [`KIntervals::scan_below`] tells the walker to scan alive `k < e`
+    /// and filter with [`owner`](Self::owner) instead. Under
+    /// `--partition cyclic` the incremental walk therefore still pays an
+    /// O(alive) scan below the retired column each iteration — only the
+    /// above-`e` stride sheds work (EXPERIMENTS.md §Alive-walk A/B; the
+    /// `--help` text carries the same warning).
+    ///
+    /// ```
+    /// use lancew::matrix::{Partition, PartitionKind};
+    ///
+    /// // The paper's Fig. 2 layout: n=8, p=7, 4 cells per rank.
+    /// let part = Partition::new(PartitionKind::BalancedCells, 8, 7);
+    /// // Rank 0 owns cells (0,1)..(0,4): for endpoint 0 that is k ∈ 1..5.
+    /// let ki = part.k_intervals(0, 0);
+    /// assert_eq!((ki.below, ki.above), (None, Some((1, 5))));
+    ///
+    /// // Cyclic has no interval form below the endpoint — walkers scan.
+    /// let cyc = Partition::new(PartitionKind::Cyclic, 8, 3);
+    /// assert!(cyc.k_intervals(5, 1).scan_below);
+    /// ```
     pub fn k_intervals(&self, e: usize, r: usize) -> KIntervals {
         let n = self.n;
         debug_assert!(e < n);

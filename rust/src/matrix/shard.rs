@@ -106,6 +106,7 @@ impl ShardStore {
     }
 
     #[inline]
+    /// Whether the shard holds no cells at all.
     pub fn is_empty(&self) -> bool {
         self.cells.is_empty()
     }

@@ -10,10 +10,12 @@ pub struct Timer {
 }
 
 impl Timer {
+    /// Start a stopwatch now.
     pub fn start() -> Self {
         Self { start: Instant::now() }
     }
 
+    /// Seconds of host wall time since [`start`](Timer::start).
     pub fn elapsed_s(&self) -> f64 {
         self.start.elapsed().as_secs_f64()
     }
@@ -33,6 +35,7 @@ pub struct PhaseBreakdown {
 }
 
 impl PhaseBreakdown {
+    /// Sum over all phases (≈ the rank's final virtual clock).
     pub fn total(&self) -> f64 {
         self.build + self.scan + self.coordinate + self.update
     }
@@ -70,7 +73,13 @@ pub struct RunStats {
     pub alive_visited: u64,
     /// Max cells resident on any single rank (§5.4 storage claim).
     pub peak_shard_cells: usize,
-    /// Ranks used.
+    /// Execution substrate label (`"threads"`, `"event"`, `"event:N"`) —
+    /// which runtime drove the rank tasks (ISSUE-3). Informational: every
+    /// other field in this struct is identical across runtimes except
+    /// `wall_s` (host time) — that A/B is `benches/scaling_p.rs`.
+    pub runtime: String,
+    /// Ranks used — with the event runtime all of them are resident in
+    /// one process, so this is also the peak concurrent rank-task count.
     pub p: usize,
     /// Items clustered.
     pub n: usize,
@@ -88,9 +97,10 @@ impl RunStats {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "n={} p={} wall={:.3}s virt={:.6}s msgs={} ({:.1}/iter) bytes={} peak_shard={} cells scanned={} idx_ops={} alive_visited={}",
+            "n={} p={} runtime={} wall={:.3}s virt={:.6}s msgs={} ({:.1}/iter) bytes={} peak_shard={} cells scanned={} idx_ops={} alive_visited={}",
             self.n,
             self.p,
+            if self.runtime.is_empty() { "?" } else { self.runtime.as_str() },
             self.wall_s,
             self.virtual_s,
             self.msgs_sent,

@@ -20,6 +20,7 @@ use crate::runtime::xla_shim as xla;
 /// Output of the whole-clustering (`full_lw_*`) artifact.
 #[derive(Clone, Debug)]
 pub struct FullLwResult {
+    /// The n−1 merges decoded from the artifact output.
     pub dendrogram: Dendrogram,
 }
 
@@ -61,6 +62,7 @@ impl XlaEngine {
             .unwrap_or_else(|| PathBuf::from("artifacts"))
     }
 
+    /// The parsed artifact manifest this engine was loaded from.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }

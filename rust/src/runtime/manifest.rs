@@ -14,18 +14,23 @@ use std::path::{Path, PathBuf};
 /// Element type of a tensor spec.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum DType {
+    /// 32-bit float.
     F32,
+    /// 32-bit signed integer.
     I32,
 }
 
 /// One input/output tensor: dtype + shape.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TensorSpec {
+    /// Element type.
     pub dtype: DType,
+    /// Dimension sizes (empty = scalar).
     pub shape: Vec<usize>,
 }
 
 impl TensorSpec {
+    /// Total element count (1 for scalars).
     pub fn elems(&self) -> usize {
         self.shape.iter().product::<usize>().max(1)
     }
@@ -56,9 +61,13 @@ impl TensorSpec {
 /// One artifact entry.
 #[derive(Clone, Debug)]
 pub struct ArtifactSpec {
+    /// Artifact name (manifest key, e.g. `shard_min_4096`).
     pub name: String,
+    /// HLO text file, relative to the manifest directory.
     pub path: PathBuf,
+    /// Input tensor specs, in call order.
     pub inputs: Vec<TensorSpec>,
+    /// Output tensor specs, in result order.
     pub outputs: Vec<TensorSpec>,
 }
 
@@ -101,18 +110,22 @@ impl Manifest {
         Ok(Self { entries })
     }
 
+    /// Spec for `name`, if the manifest lists it.
     pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
         self.entries.get(name)
     }
 
+    /// All artifact names, sorted (BTreeMap order).
     pub fn names(&self) -> impl Iterator<Item = &str> {
         self.entries.keys().map(|s| s.as_str())
     }
 
+    /// Number of artifacts listed.
     pub fn len(&self) -> usize {
         self.entries.len()
     }
 
+    /// Whether the manifest lists no artifacts.
     pub fn is_empty(&self) -> bool {
         self.entries.is_empty()
     }

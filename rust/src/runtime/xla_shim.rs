@@ -84,6 +84,7 @@ impl From<f32> for Literal {
 pub struct HloModuleProto;
 
 impl HloModuleProto {
+    /// Parse HLO text (stub: always unavailable).
     pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<Self, Error> {
         unavailable()
     }
@@ -93,6 +94,7 @@ impl HloModuleProto {
 pub struct XlaComputation;
 
 impl XlaComputation {
+    /// Wrap a parsed module (stub: trivially constructs).
     pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
         XlaComputation
     }
@@ -102,6 +104,7 @@ impl XlaComputation {
 pub struct PjRtBuffer;
 
 impl PjRtBuffer {
+    /// Copy device buffer to host (stub: always unavailable).
     pub fn to_literal_sync(&self) -> Result<Literal, Error> {
         unavailable()
     }
@@ -122,10 +125,12 @@ impl PjRtLoadedExecutable {
 pub struct PjRtClient;
 
 impl PjRtClient {
+    /// Create the host CPU client (stub: always unavailable).
     pub fn cpu() -> Result<Self, Error> {
         unavailable()
     }
 
+    /// Compile a computation (stub: always unavailable).
     pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
         unavailable()
     }

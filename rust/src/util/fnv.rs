@@ -13,6 +13,7 @@ impl Fnv64 {
     const OFFSET_BASIS: u64 = 0xcbf2_9ce4_8422_2325;
     const PRIME: u64 = 0x0000_0100_0000_01b3;
 
+    /// Fresh digest (FNV offset basis).
     pub const fn new() -> Self {
         Fnv64(Self::OFFSET_BASIS)
     }
@@ -27,6 +28,7 @@ impl Fnv64 {
     }
 
     #[inline]
+    /// Current digest value.
     pub fn finish(&self) -> u64 {
         self.0
     }

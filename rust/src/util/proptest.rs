@@ -20,11 +20,14 @@ use super::rng::Rng;
 /// Harness configuration.
 #[derive(Clone, Debug)]
 pub struct Config {
+    /// Number of random cases to run.
     pub cases: usize,
+    /// Base seed (case i runs with seed + i).
     pub seed: u64,
 }
 
 impl Config {
+    /// Config with `cases` cases and the default seed.
     pub fn cases(cases: usize) -> Self {
         // Honour an externally pinned seed for reproduction.
         let seed = std::env::var("LANCEW_PROP_SEED")

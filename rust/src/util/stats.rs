@@ -4,15 +4,22 @@
 /// Summary of a sample of measurements.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub std: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
+    /// Median (midpoint convention for even n).
     pub median: f64,
 }
 
 impl Summary {
+    /// Summarize a sample (all-zero summary for empty input).
     pub fn of(xs: &[f64]) -> Summary {
         assert!(!xs.is_empty());
         let n = xs.len();

@@ -32,6 +32,48 @@ fn help_lists_subcommands() {
 }
 
 #[test]
+fn help_documents_runtime_and_alive_walk_caveat() {
+    // ISSUE-3 bugfix: the help text must name the --runtime substrates
+    // and the --alive-walk Cyclic scan_below fallback (the caveat also
+    // lives in Partition::k_intervals rustdoc).
+    let (ok, text) = lancew(&[]);
+    assert!(ok);
+    assert!(text.contains("--runtime threads|event|event:N"), "{text}");
+    assert!(text.contains("--alive-walk full|incremental"), "{text}");
+    assert!(text.contains("--collectives naive|tree"), "{text}");
+    assert!(
+        text.contains("cyclic") && text.contains("scan_below"),
+        "help must warn about the Cyclic scan_below fallback:\n{text}"
+    );
+}
+
+#[test]
+fn cluster_runtime_toggle() {
+    // threads and event runtimes must agree on everything but the label.
+    let run = |rt: &str| {
+        let (ok, text) = lancew(&[
+            "cluster", "--n", "50", "--p", "6", "--runtime", rt, "--cut", "3", "--seed", "5",
+        ]);
+        assert!(ok, "{text}");
+        assert!(text.contains(&format!("runtime={rt}")), "{text}");
+        text
+    };
+    let threads = run("threads");
+    let event = run("event");
+    let grab = |t: &str, key: &str| {
+        t.split(key).nth(1).and_then(|s| s.split_whitespace().next()).map(String::from)
+    };
+    assert_eq!(grab(&threads, "virt="), grab(&event, "virt="));
+    assert_eq!(grab(&threads, "msgs="), grab(&event, "msgs="));
+    let sizes = |t: &str| t.lines().find(|l| l.contains("cluster sizes")).map(String::from);
+    assert_eq!(sizes(&threads), sizes(&event));
+
+    let (ok_bad, text) = lancew(&["cluster", "--n", "10", "--runtime", "fibers"]);
+    assert!(!ok_bad);
+    assert!(text.contains("runtime"), "{text}");
+}
+
+#[test]
 fn cluster_reports_and_cuts() {
     let (ok, text) = lancew(&[
         "cluster", "--n", "60", "--scheme", "complete", "--p", "3", "--cut", "4", "--seed", "7",

@@ -1,0 +1,183 @@
+//! ISSUE-3 acceptance suite: `runtime=event ≡ runtime=threads ≡ serial`.
+//!
+//! The event scheduler may only change *who drives the polls* — never
+//! what a rank does. So for every linkage scheme × partition kind ×
+//! rank count (up to p in the thousands) the suites pin:
+//!
+//! * **bitwise-identical dendrograms** across both runtimes and the
+//!   serial baseline (`dendrograms_equal` with tolerance 0.0);
+//! * **identical virtual time** (f64-equal makespan and per-rank
+//!   clocks) and identical traffic/work counters.
+//!
+//! Thread-per-rank runs are capped at p=64 in the full sweep (OS
+//! threads are exactly what the event runtime exists to avoid); one
+//! p=1024 thread run is kept as the direct thousands-scale A/B.
+
+use lancew::baselines::serial_lw::serial_lw_cluster;
+use lancew::comm::Collectives;
+use lancew::prelude::*;
+use lancew::validate::dendrograms_equal;
+
+fn gaussian_matrix(n: usize, seed: u64) -> CondensedMatrix {
+    let lp = GaussianSpec { n, d: 5, k: 4, ..Default::default() }.generate(seed);
+    euclidean_matrix(&lp.points)
+}
+
+/// Assert that two runs of the same config are observationally identical.
+fn assert_identical(a: &ClusterRun, b: &ClusterRun, ctx: &str) {
+    dendrograms_equal(&a.dendrogram, &b.dendrogram, 0.0).unwrap_or_else(|e| panic!("{ctx}: {e}"));
+    assert_eq!(a.stats.virtual_s, b.stats.virtual_s, "{ctx}: virtual makespan");
+    assert_eq!(a.stats.rank_virtual_s, b.stats.rank_virtual_s, "{ctx}: per-rank clocks");
+    assert_eq!(a.stats.msgs_sent, b.stats.msgs_sent, "{ctx}: messages");
+    assert_eq!(a.stats.bytes_sent, b.stats.bytes_sent, "{ctx}: bytes");
+    assert_eq!(a.stats.cells_scanned, b.stats.cells_scanned, "{ctx}: cells_scanned");
+    assert_eq!(a.stats.cells_updated, b.stats.cells_updated, "{ctx}: cells_updated");
+    assert_eq!(a.stats.index_ops, b.stats.index_ops, "{ctx}: index_ops");
+    assert_eq!(a.stats.alive_visited, b.stats.alive_visited, "{ctx}: alive_visited");
+}
+
+#[test]
+fn event_equals_threads_equals_serial_full_sweep() {
+    // The ISSUE-3 satellite grid: all schemes × all partition kinds ×
+    // p ∈ {1, 2, 7, 64} (1024 runs in the dedicated tests below — with
+    // naive collectives p=64 already pushes ~4k messages/iteration
+    // through both substrates).
+    let m = gaussian_matrix(40, 33);
+    for scheme in Scheme::all() {
+        let serial = serial_lw_cluster(*scheme, &m);
+        for kind in
+            [PartitionKind::BalancedCells, PartitionKind::WholeRows, PartitionKind::Cyclic]
+        {
+            for p in [1usize, 2, 7, 64] {
+                let ctx = format!("{scheme} {kind:?} p={p}");
+                let run = |rt: Runtime| {
+                    ClusterConfig::new(*scheme, p)
+                        .with_partition(kind)
+                        .with_runtime(rt)
+                        .run(&m)
+                        .unwrap_or_else(|e| panic!("{ctx} ({rt}): {e}"))
+                };
+                let event = run(Runtime::Event);
+                let threads = run(Runtime::Threads);
+                assert_identical(&event, &threads, &ctx);
+                dendrograms_equal(&serial, &event.dendrogram, 0.0)
+                    .unwrap_or_else(|e| panic!("{ctx} vs serial: {e}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn event_equals_threads_at_p1024() {
+    // The thousands-of-ranks A/B, run directly: 1024 rank tasks in one
+    // scheduler vs 1024 OS threads. Tree collectives + indexed scan keep
+    // the message and scan volume sane at this p (see DESIGN.md
+    // §Runtime); n=64 gives 2016 cells, ~2 per rank.
+    let m = gaussian_matrix(64, 34);
+    let serial = serial_lw_cluster(Scheme::Complete, &m);
+    let run = |rt: Runtime| {
+        ClusterConfig::new(Scheme::Complete, 1024)
+            .with_collectives(Collectives::Tree)
+            .with_scan(ScanStrategy::Indexed)
+            .with_runtime(rt)
+            .run(&m)
+            .unwrap()
+    };
+    let event = run(Runtime::Event);
+    assert_eq!(event.stats.p, 1024);
+    let threads = run(Runtime::Threads);
+    assert_identical(&event, &threads, "p=1024");
+    dendrograms_equal(&serial, &event.dendrogram, 0.0).unwrap();
+}
+
+#[test]
+fn event_p1024_all_partition_kinds_vs_serial() {
+    // p=1024 across every partition kind (event runtime only — the
+    // threads A/B at this scale is the test above).
+    let m = gaussian_matrix(72, 35);
+    for kind in [PartitionKind::BalancedCells, PartitionKind::WholeRows, PartitionKind::Cyclic] {
+        for scheme in [Scheme::Single, Scheme::Ward] {
+            let serial = serial_lw_cluster(scheme, &m);
+            let run = ClusterConfig::new(scheme, 1024)
+                .with_partition(kind)
+                .with_collectives(Collectives::Tree)
+                .with_scan(ScanStrategy::Indexed)
+                .run(&m)
+                .unwrap();
+            assert_eq!(run.stats.p, 1024, "{kind:?}");
+            dendrograms_equal(&serial, &run.dendrogram, 0.0)
+                .unwrap_or_else(|e| panic!("{kind:?} {scheme}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn event_pool_equals_event() {
+    // The sharded pool is the same scheduler with cross-shard sweeps;
+    // nothing observable may change, at an awkward p/thread ratio.
+    let m = gaussian_matrix(48, 36);
+    let run = |rt: Runtime| {
+        ClusterConfig::new(Scheme::Average, 13)
+            .with_partition(PartitionKind::WholeRows)
+            .with_runtime(rt)
+            .run(&m)
+            .unwrap()
+    };
+    let single = run(Runtime::Event);
+    for threads in [2usize, 5] {
+        let pool = run(Runtime::EventPool(threads));
+        assert_identical(&single, &pool, &format!("pool:{threads}"));
+    }
+}
+
+#[test]
+fn runtime_equivalence_covers_scan_walk_and_collective_toggles() {
+    // Cross-product of the ISSUE-1/2 toggles under both runtimes: the
+    // state machine must be equivalence-preserving for every path the
+    // old straight-line worker had.
+    let m = gaussian_matrix(36, 37);
+    let serial = serial_lw_cluster(Scheme::Complete, &m);
+    for scan in [ScanStrategy::Full(Engine::Scalar), ScanStrategy::Indexed] {
+        for walk in [AliveWalk::Full, AliveWalk::Incremental] {
+            for coll in [Collectives::Naive, Collectives::Tree] {
+                let ctx = format!(
+                    "scan={} walk={walk:?} coll={coll:?}",
+                    if matches!(scan, ScanStrategy::Indexed) { "indexed" } else { "full" }
+                );
+                let run = |rt: Runtime| {
+                    ClusterConfig::new(Scheme::Complete, 9)
+                        .with_scan(scan.clone())
+                        .with_alive_walk(walk)
+                        .with_collectives(coll)
+                        .with_runtime(rt)
+                        .run(&m)
+                        .unwrap()
+                };
+                let event = run(Runtime::Event);
+                let threads = run(Runtime::Threads);
+                assert_identical(&event, &threads, &ctx);
+                dendrograms_equal(&serial, &event.dendrogram, 0.0)
+                    .unwrap_or_else(|e| panic!("{ctx} vs serial: {e}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn distributed_build_equivalent_across_runtimes() {
+    // The §5.1 build path: rank 0 replicates raw points, every rank
+    // computes its own cells — same state machine, same equivalence.
+    let lp = GaussianSpec { n: 40, d: 4, k: 4, ..Default::default() }.generate(38);
+    let src = DistSource::Points(lp.points);
+    let serial = serial_lw_cluster(Scheme::Complete, &src.build_matrix());
+    let run = |rt: Runtime| {
+        ClusterConfig::new(Scheme::Complete, 8)
+            .with_runtime(rt)
+            .run_source(src.clone())
+            .unwrap()
+    };
+    let event = run(Runtime::Event);
+    let threads = run(Runtime::Threads);
+    assert_identical(&event, &threads, "build path");
+    dendrograms_equal(&serial, &event.dendrogram, 0.0).unwrap();
+}
