@@ -149,8 +149,10 @@ fn main() -> anyhow::Result<()> {
         let full_t = t.elapsed().as_secs_f64() / iters as f64;
         std::hint::black_box(&cells);
 
-        // B: tournament tree — O(1) query, O(log m) per write.
-        let mut store = ShardStore::new(base.clone(), true);
+        // B: tournament tree — O(1) query, O(log m) per write (eager
+        // policy: this loop queries between single writes, so there is
+        // no wave to batch; the wave A/B is scaling_n C1e).
+        let mut store = ShardStore::new(base.clone(), true, MaintenancePolicy::Eager);
         let t = Instant::now();
         for &u in &touch {
             let (_, idx) = store.indexed_min();
@@ -161,7 +163,7 @@ fn main() -> anyhow::Result<()> {
             }
         }
         let idx_t = t.elapsed().as_secs_f64() / iters as f64;
-        let idx_touched = iters as u64 + store.take_index_ops();
+        let idx_touched = iters as u64 + store.take_maintenance().ops;
         std::hint::black_box(&store);
 
         println!(

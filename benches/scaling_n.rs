@@ -108,8 +108,11 @@ fn main() -> anyhow::Result<()> {
         let lp = GaussianSpec { n, d: 6, k: 8, ..Default::default() }.generate(5);
         let m = euclidean_matrix(&lp.points);
         let full = ClusterConfig::new(Scheme::Complete, 8).run(&m)?;
+        // Eager maintenance pins this dimension to the ISSUE-1 closed
+        // form, (n−1)²·path_len tree writes — the wave A/B is C1e below.
         let idx = ClusterConfig::new(Scheme::Complete, 8)
             .with_scan(ScanStrategy::Indexed)
+            .with_maintenance(MaintenancePolicy::Eager)
             .run(&m)?;
         lancew::validate::dendrograms_equal(&full.dendrogram, &idx.dendrogram, 0.0)
             .map_err(|e| anyhow::anyhow!("n={n}: strategies diverged: {e}"))?;
@@ -184,6 +187,52 @@ fn main() -> anyhow::Result<()> {
     }
     println!("# incremental: send walks partitioned over ranks, expects from interval intersection");
 
+    // ---- (e) maintenance-wave dimension: eager vs batched tree repair --
+    // ISSUE-5: one bottom-up repair wave per iteration instead of a
+    // root-ward walk per write. `index_ops` counts realized tree-node
+    // writes; the virtual-clock charge is policy-independent, so sim
+    // times (and dendrograms, and traffic) are bitwise equal — asserted.
+    println!("\n# C1e: index_ops by maintenance policy at p=8, scan=indexed (observables bitwise equal)");
+    println!(
+        "{:>6} {:>16} {:>16} {:>9} {:>12}",
+        "n", "eager_idx_ops", "batched_idx_ops", "ratio", "idx_waves"
+    );
+    for &n in &ns {
+        let lp = GaussianSpec { n, d: 6, k: 8, ..Default::default() }.generate(5);
+        let m = euclidean_matrix(&lp.points);
+        let pol_run = |pol: MaintenancePolicy| -> anyhow::Result<ClusterRun> {
+            ClusterConfig::new(Scheme::Complete, 8)
+                .with_scan(ScanStrategy::Indexed)
+                .with_maintenance(pol)
+                .run(&m)
+        };
+        let eager = pol_run(MaintenancePolicy::Eager)?;
+        let batched = pol_run(MaintenancePolicy::Batched)?;
+        lancew::validate::dendrograms_equal(&eager.dendrogram, &batched.dendrogram, 0.0)
+            .map_err(|e| anyhow::anyhow!("n={n}: policies diverged: {e}"))?;
+        assert_eq!(
+            eager.stats.virtual_s, batched.stats.virtual_s,
+            "n={n}: virtual time diverged across maintenance policies"
+        );
+        assert_eq!(eager.stats.msgs_sent, batched.stats.msgs_sent);
+        let ratio = eager.stats.index_ops as f64 / batched.stats.index_ops as f64;
+        println!(
+            "{:>6} {:>16} {:>16} {:>8.2}x {:>12}",
+            n, eager.stats.index_ops, batched.stats.index_ops, ratio, batched.stats.idx_waves
+        );
+        json.e.push(format!(
+            "{{\"n\": {n}, \"eager_idx_ops\": {}, \"batched_idx_ops\": {}, \"ratio\": {ratio:.2}, \"idx_waves\": {}}}",
+            eager.stats.index_ops, batched.stats.index_ops, batched.stats.idx_waves
+        ));
+        if n >= 1000 {
+            assert!(
+                ratio >= 1.5,
+                "n={n}: maintenance-wave win {ratio:.2}x below the 1.5x acceptance bar"
+            );
+        }
+    }
+    println!("# batched: w leaf writes + each dirty internal node once per wave, vs w·(log m + 1)");
+
     let path = "BENCH_scaling_n.json";
     std::fs::write(path, json.render())?;
     println!("# json: {path}");
@@ -199,11 +248,20 @@ struct JsonRows {
     b: Vec<String>,
     c: Vec<String>,
     d: Vec<String>,
+    e: Vec<String>,
 }
 
 impl JsonRows {
     fn new(quick: bool) -> Self {
-        Self { quick, a: Vec::new(), a_slope: 0.0, b: Vec::new(), c: Vec::new(), d: Vec::new() }
+        Self {
+            quick,
+            a: Vec::new(),
+            a_slope: 0.0,
+            b: Vec::new(),
+            c: Vec::new(),
+            d: Vec::new(),
+            e: Vec::new(),
+        }
     }
 
     fn render(&self) -> String {
@@ -213,13 +271,15 @@ impl JsonRows {
              \"c1a_cubic_n\": {{\n    \"loglog_slope\": {:.3},\n    \"rows\": [\n      {}\n    ]\n  }},\n  \
              \"c1b_work_division\": {{\n    \"rows\": [\n      {}\n    ]\n  }},\n  \
              \"c1c_scan_strategy\": {{\n    \"rows\": [\n      {}\n    ]\n  }},\n  \
-             \"c1d_alive_walk\": {{\n    \"rows\": [\n      {}\n    ]\n  }}\n}}\n",
+             \"c1d_alive_walk\": {{\n    \"rows\": [\n      {}\n    ]\n  }},\n  \
+             \"c1e_maintenance_wave\": {{\n    \"rows\": [\n      {}\n    ]\n  }}\n}}\n",
             if self.quick { " -- --quick" } else { "" },
             self.a_slope,
             join(&self.a),
             join(&self.b),
             join(&self.c),
             join(&self.d),
+            join(&self.e),
         )
     }
 }

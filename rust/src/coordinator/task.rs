@@ -47,7 +47,7 @@ use crate::coordinator::worker::{
 use crate::coordinator::{AliveWalk, ScanStrategy};
 use crate::dendrogram::Merge;
 use crate::linkage::lw_update;
-use crate::matrix::{condensed_index, condensed_pair, AliveSet, ShardStore};
+use crate::matrix::{condensed_index, condensed_pair, AliveSet, ShardOp, ShardStore};
 use crate::metrics::PhaseBreakdown;
 use crate::util::fnv::Fnv64;
 
@@ -149,6 +149,7 @@ struct RankState {
     cells_scanned: u64,
     cells_updated: u64,
     index_ops: u64,
+    idx_waves: u64,
     alive_visited: u64,
     /// Current iteration (merge) index, `0..n-1`.
     iter: usize,
@@ -167,6 +168,10 @@ struct RankState {
     outbound: Vec<Vec<(u32, f32)>>,
     expect_from: Vec<bool>,
     local_dkj: Vec<(u32, f32)>,
+    /// The iteration's deferred shard write set (§6 retires + LW sets),
+    /// applied through [`ShardStore::apply_batch`] so the indexed store
+    /// can repair its tree in one wave per iteration (ISSUE-5).
+    ops: Vec<ShardOp>,
 }
 
 /// One rank of the distributed protocol as a pollable task.
@@ -309,7 +314,7 @@ impl RankTask {
         // The store owns the cells from here on; every read and write — the
         // step-1 scan, the 6a retires, the 6b LW updates — goes through it.
         // Building the index costs O(m/p) once, charged like a shard pass.
-        let shard = ShardStore::new(cells, self.ctx.scan.wants_index());
+        let shard = ShardStore::new(cells, self.ctx.scan.wants_index(), self.ctx.maintenance);
         let shard_cells = shard.len();
         if shard.is_indexed() {
             self.ep.compute(shard_cells);
@@ -328,6 +333,7 @@ impl RankTask {
             cells_scanned: 0,
             cells_updated: 0,
             index_ops: 0,
+            idx_waves: 0,
             alive_visited: 0,
             iter: 0,
             t_mark: 0.0,
@@ -340,6 +346,7 @@ impl RankTask {
             outbound: vec![Vec::new(); p],
             expect_from: vec![false; p],
             local_dkj: Vec::new(),
+            ops: Vec::new(),
         });
         self.step = Step::SendMin;
         None
@@ -362,8 +369,13 @@ impl RankTask {
             }
             ScanStrategy::Indexed => {
                 // O(1): the tree root already holds (min, lowest offset).
-                // The scan's cost moved to the O(log m) write maintenance,
-                // charged in the update phase below.
+                // The scan's cost moved to the write maintenance, charged
+                // in the update phase below. Each iteration's wave closes
+                // in RetireUpdate — debug-checked so a dropped flush
+                // fails loudly; the flush here is release-build defense
+                // only (it never touches the clock either way).
+                debug_assert!(st.shard.is_flushed(), "iteration write set not flushed");
+                st.shard.flush();
                 self.ep.compute(1);
                 st.cells_scanned += 1;
                 st.shard.indexed_min()
@@ -598,12 +610,14 @@ impl RankTask {
         }
         st.expect_from.fill(false);
         st.local_dkj.clear();
+        // (st.ops needs no clear: every apply_batch drains it.)
         match self.ctx.walk {
             AliveWalk::Full => {
                 st.alive_visited += route_full(
                     part,
                     &st.alive,
-                    &mut st.shard,
+                    &st.shard,
+                    &mut st.ops,
                     me,
                     i,
                     j,
@@ -616,7 +630,8 @@ impl RankTask {
                 st.alive_visited += route_incremental(
                     part,
                     &mut st.alive,
-                    &mut st.shard,
+                    &st.shard,
+                    &mut st.ops,
                     me,
                     i,
                     j,
@@ -630,7 +645,7 @@ impl RankTask {
         {
             let cell_ij = condensed_index(n, i, j);
             if part.owner(cell_ij) == me {
-                st.shard.retire(part.local_offset(cell_ij));
+                st.ops.push(ShardOp::Retire(part.local_offset(cell_ij) as u32));
             }
         }
         let ttag = tag(st.iter, Phase::Triples);
@@ -644,7 +659,9 @@ impl RankTask {
         // 6b, local half: apply the LW formula for every (k, D_kj) I
         // routed to myself. Each triple list ascends in k, so cell (k,i)
         // ascends too — a fresh cursor resolves offsets without binary
-        // searches.
+        // searches. The (k,i) read set is disjoint from the batch's
+        // (k,j)/(i,j) retires and each (k,i) cell is written once per
+        // iteration, so deferring the writes changes no value read here.
         let (n_i, n_j) = (st.sizes[i], st.sizes[j]);
         let mut cur = part.owner_cursor();
         for &(k, d_kj) in &st.local_dkj {
@@ -654,9 +671,10 @@ impl RankTask {
             debug_assert_eq!(owner, me);
             let c = self.ctx.scheme.coeffs(n_i, n_j, st.sizes[k]);
             let v = lw_update(c, st.shard.get(off), d_kj, d_ij);
-            st.shard.set(off, v);
+            st.ops.push(ShardOp::Set(off as u32, v));
             st.cells_updated += 1;
         }
+        st.shard.apply_batch(st.ops.drain(..));
         self.step = Step::RetireUpdate { next_src: 0 };
     }
 
@@ -688,6 +706,7 @@ impl RankTask {
                     let st = self.st.as_mut().expect("state exists");
                     let (i, j, d_ij) = (st.mi, st.mj, st.d_ij);
                     let (n_i, n_j) = (st.sizes[i], st.sizes[j]);
+                    // st.ops is empty here: every apply_batch drains it.
                     let mut cur = self.ctx.partition.owner_cursor();
                     for (k, d_kj) in triples {
                         let k = k as usize;
@@ -696,26 +715,31 @@ impl RankTask {
                         debug_assert_eq!(owner, me);
                         let c = self.ctx.scheme.coeffs(n_i, n_j, st.sizes[k]);
                         let v = lw_update(c, st.shard.get(off), d_kj, d_ij);
-                        st.shard.set(off, v);
+                        st.ops.push(ShardOp::Set(off as u32, v));
                         st.cells_updated += 1;
                     }
+                    st.shard.apply_batch(st.ops.drain(..));
                 }
             }
         }
-        // Charge this iteration's index maintenance (retires + updates) to
-        // the virtual clock — the Indexed strategy is not free, it trades
-        // the O(m/p) rescan for O(log m) per write.
+        // The iteration's write set is complete: close it with one repair
+        // wave, then charge the canonical maintenance cost (leaf writes ×
+        // root-path length — identical across policies, so eager and
+        // batched replay the same virtual time) to the clock. The Indexed
+        // strategy is not free: it trades the O(m/p) rescan for this.
         let maint = {
             let st = self.st.as_mut().expect("state exists");
-            st.shard.take_index_ops()
+            st.shard.flush();
+            st.shard.take_maintenance()
         };
-        if maint > 0 {
-            self.ep.compute(maint as usize);
+        if maint.charge > 0 {
+            self.ep.compute(maint.charge as usize);
         }
         let now = self.ep.clock.now();
         let finished = {
             let st = self.st.as_mut().expect("state exists");
-            st.index_ops += maint;
+            st.index_ops += maint.ops;
+            st.idx_waves += maint.waves;
             let (i, j, d_ij) = (st.mi, st.mj, st.d_ij);
             // Replicated metadata update (identical on every rank).
             st.sizes[i] += st.sizes[j];
@@ -754,6 +778,7 @@ impl RankTask {
             cells_scanned: st.cells_scanned,
             cells_updated: st.cells_updated,
             index_ops: st.index_ops,
+            idx_waves: st.idx_waves,
             alive_visited: st.alive_visited,
             shard_cells: st.shard_cells,
         });

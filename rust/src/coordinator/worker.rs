@@ -30,7 +30,8 @@ use crate::coordinator::{AliveWalk, ScanStrategy};
 use crate::dendrogram::Merge;
 use crate::linkage::Scheme;
 use crate::matrix::{
-    condensed_index, condensed_pair, AliveSet, OwnerCursor, Partition, PartitionKind, ShardStore,
+    condensed_index, condensed_pair, AliveSet, MaintenancePolicy, OwnerCursor, Partition,
+    PartitionKind, ShardOp, ShardStore,
 };
 use crate::metrics::PhaseBreakdown;
 
@@ -55,8 +56,12 @@ pub struct WorkerOutput {
     pub cells_scanned: u64,
     /// LW cell updates this rank applied.
     pub cells_updated: u64,
-    /// Tournament-tree maintenance writes (0 under `ScanStrategy::Full`).
+    /// Tournament-tree maintenance writes actually performed (0 under
+    /// `ScanStrategy::Full`; under `MaintenancePolicy::Batched` strictly
+    /// fewer than the eager per-write walks whenever paths share nodes).
     pub index_ops: u64,
+    /// Batched repair waves flushed (0 under `Eager` or `Full`).
+    pub idx_waves: u64,
     /// Candidate ks examined by this rank's step-6a routing walks.
     pub alive_visited: u64,
     /// Cells resident in this rank's shard.
@@ -76,13 +81,18 @@ pub struct WorkerCtx {
     pub walk: AliveWalk,
     /// Collective algorithm for the min exchange and merge broadcast.
     pub collectives: Collectives,
+    /// Tree-repair policy for the indexed scan: per-write eager walks or
+    /// one batched wave per iteration (ISSUE-5; inert under `Full`).
+    pub maintenance: MaintenancePolicy,
 }
 
 /// One owned `(k,j)` cell on the step-6a send side: read it, route the
 /// `(k, D_kj)` triple to the owner of `(k,i)` (local list when that is
-/// me), and retire it ("the sending processors mark the sent matrix
-/// elements as erased not to be used again"). The single body behind
-/// every walk variant — full sweep, interval pieces, Cyclic strides — so
+/// me), and log its retire into the iteration's batch ("the sending
+/// processors mark the sent matrix elements as erased not to be used
+/// again" — applied through [`ShardStore::apply_batch`] so the tree
+/// repair can run as one wave, ISSUE-5). The single body behind every
+/// walk variant — full sweep, interval pieces, Cyclic strides — so
 /// future changes (e.g. charging routing to the virtual clock) land once.
 ///
 /// `cur_ki` must be fed ascending k like every cursor; callers hand each
@@ -90,7 +100,8 @@ pub struct WorkerCtx {
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn send_cell(
-    shard: &mut ShardStore,
+    shard: &ShardStore,
+    ops: &mut Vec<ShardOp>,
     cur_ki: &mut OwnerCursor<'_>,
     outbound: &mut [Vec<(u32, f32)>],
     local_dkj: &mut Vec<(u32, f32)>,
@@ -108,7 +119,7 @@ fn send_cell(
     } else {
         outbound[owner_ki].push((k as u32, v));
     }
-    shard.retire(off_kj);
+    ops.push(ShardOp::Retire(off_kj as u32));
 }
 
 /// Step-6a routing, `AliveWalk::Full`: the paper's walk as written —
@@ -118,7 +129,8 @@ fn send_cell(
 pub(crate) fn route_full(
     part: &Partition,
     alive: &AliveSet,
-    shard: &mut ShardStore,
+    shard: &ShardStore,
+    ops: &mut Vec<ShardOp>,
     me: usize,
     i: usize,
     j: usize,
@@ -140,7 +152,7 @@ pub(crate) fn route_full(
             let cell_kj = condensed_index(n, k.min(j), k.max(j));
             let (owner_kj, off_kj) = cur_kj.locate(cell_kj);
             if owner_kj == me {
-                send_cell(shard, &mut cur_ki, outbound, local_dkj, me, n, i, k, off_kj);
+                send_cell(shard, ops, &mut cur_ki, outbound, local_dkj, me, n, i, k, off_kj);
             } else {
                 let cell_ki = condensed_index(n, k.min(i), k.max(i));
                 if cur_ki.owner(cell_ki) == me {
@@ -158,26 +170,43 @@ pub(crate) fn route_full(
 /// O(n) sweep.
 ///
 /// * **Send side** — walk only the alive k whose `(k,j)` cell this rank
-///   owns: ≤2 contiguous k-ranges for the contiguous partition kinds, a
-///   stride-p progression for Cyclic's row piece (and an owner-filtered
-///   scan for Cyclic's closed-form-free column piece). Ascending k order
-///   is preserved, so per-destination triple batches stay sorted.
+///   owns: ≤2 contiguous k-ranges for the contiguous partition kinds, and
+///   for Cyclic a stride-p progression above j plus the closed-form
+///   residue pattern below j ([`BelowPattern`], ISSUE-5 — this replaced
+///   the former unconditional O(alive) owner-filtered scan). Ascending k
+///   order is preserved, so per-destination triple batches stay sorted.
 /// * **Receive side** — a rank `s` will message me iff some alive
 ///   k ∉ {i, j} lies in *both* s's `(k,j)` intervals and my `(k,i)`
 ///   intervals. For the contiguous kinds the candidate senders form a
 ///   contiguous rank range (ownership is monotone in the cell index), and
 ///   each candidate costs one interval intersection plus an O(1)
-///   `AliveSet::seek` probe. Cyclic walks its own `(k,i)` set instead.
+///   `AliveSet::seek` probe. Cyclic walks its own `(k,i)` set (pattern
+///   below i, stride above) and names each sender by the O(1) mod-p
+///   owner of the `(k,j)` cell.
+///
+/// **Cyclic dense/sparse dispatch**: the pattern+stride walk costs
+/// ~2n/p candidates per rank (alive or not) plus the O(p) residue
+/// windows behind its `k_intervals` calls, while the ISSUE-2 scan shape
+/// visits only alive ks but on *every* rank. Each iteration picks
+/// whichever is smaller — pattern while `|alive| ≥ 2n/p + 4p`, scan
+/// once the run goes sparse (or p dominates) — a pure function of
+/// (n, p, |alive|), so every rank picks the same shape and replay
+/// determinism holds; both shapes produce identical
+/// sends/retires/expects in identical ascending-k order.
 ///
 /// Aggregate over ranks: the send walks visit each alive k exactly once
-/// (its `(k,j)` cell has one owner) and the probes add O(p²) — O(n) per
-/// iteration versus the full walk's O(n·p) (EXPERIMENTS.md §Alive-walk).
+/// (its `(k,j)` cell has one owner), the receive walks each k at most
+/// once more, and the contiguous probes add O(p²) — O(n) per iteration
+/// versus the full walk's O(n·p) (EXPERIMENTS.md §Alive-walk).
 /// Returns the ks this rank visited.
+///
+/// [`BelowPattern`]: crate::matrix::BelowPattern
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn route_incremental(
     part: &Partition,
     alive: &mut AliveSet,
-    shard: &mut ShardStore,
+    shard: &ShardStore,
+    ops: &mut Vec<ShardOp>,
     me: usize,
     i: usize,
     j: usize,
@@ -188,18 +217,29 @@ pub(crate) fn route_incremental(
     let n = part.n();
     let p = part.p();
     let mut visited = 0u64;
-    let mine_j = part.k_intervals(j, me);
+    // Cyclic only: pattern walk while dense, alive-filtered scan once
+    // sparse (see the dispatch note in the doc comment above). The
+    // dense side's cost is the ~2n/p candidates it walks PLUS the two
+    // O(min(period, e)) ≤ 2p residue-window builds behind its
+    // k_intervals calls — the 4p term — while the sparse scan costs
+    // ~|alive| per rank and asks only for the O(1) row pieces.
+    let cyclic_sparse = part.kind() == PartitionKind::Cyclic && alive.len() < 2 * n / p + 4 * p;
+    let mine_j = if cyclic_sparse {
+        part.k_row_interval(j, me)
+    } else {
+        part.k_intervals(j, me)
+    };
     let mut cur_kj = part.owner_cursor();
     let mut cur_ki = part.owner_cursor();
 
     // ---- Send side: alive k with (k,j) in my shard, ascending k ----
     // Below-j piece. (May contain k == i, skipped like the full walk; the
     // above-j piece has k > j > i, so no check is needed there.)
-    if mine_j.scan_below {
-        // Cyclic: no interval form below j — scan alive and filter. Since
-        // column i is equally closed-form-free, the same scan also covers
-        // the receive side for k < j (the full-walk body verbatim); only
-        // the k > j receive tail needs a separate stride below.
+    if cyclic_sparse {
+        // Cyclic, sparse: scan the (few) alive k < j and filter by
+        // owner — the same walk also covers the receive side for k < j
+        // (column i is read through the same cursor), so only the k > j
+        // receive tail remains below.
         let mut k = alive.first();
         while k < j {
             visited += 1;
@@ -207,7 +247,7 @@ pub(crate) fn route_incremental(
                 let cell_kj = condensed_index(n, k, j);
                 let (owner_kj, off_kj) = cur_kj.locate(cell_kj);
                 if owner_kj == me {
-                    send_cell(shard, &mut cur_ki, outbound, local_dkj, me, n, i, k, off_kj);
+                    send_cell(shard, ops, &mut cur_ki, outbound, local_dkj, me, n, i, k, off_kj);
                 } else {
                     let cell_ki = condensed_index(n, k.min(i), k.max(i));
                     if cur_ki.owner(cell_ki) == me {
@@ -217,6 +257,19 @@ pub(crate) fn route_incremental(
             }
             k = alive.succ(k);
         }
+    } else if let Some(bp) = &mine_j.below_pattern {
+        // Cyclic, dense: the closed-form residue pattern enumerates
+        // exactly the ks whose (k,j) cell is mine — alive-filtered,
+        // ascending.
+        for k in bp.ks() {
+            visited += 1;
+            if k != i && alive.contains(k) {
+                let cell_kj = condensed_index(n, k, j);
+                let (owner_kj, off_kj) = cur_kj.locate(cell_kj);
+                debug_assert_eq!(owner_kj, me);
+                send_cell(shard, ops, &mut cur_ki, outbound, local_dkj, me, n, i, k, off_kj);
+            }
+        }
     } else if let Some((lo, hi)) = mine_j.below {
         let mut k = alive.seek(lo);
         while k < hi {
@@ -225,7 +278,7 @@ pub(crate) fn route_incremental(
                 let cell_kj = condensed_index(n, k, j);
                 let (owner_kj, off_kj) = cur_kj.locate(cell_kj);
                 debug_assert_eq!(owner_kj, me);
-                send_cell(shard, &mut cur_ki, outbound, local_dkj, me, n, i, k, off_kj);
+                send_cell(shard, ops, &mut cur_ki, outbound, local_dkj, me, n, i, k, off_kj);
             }
             k = alive.succ(k);
         }
@@ -238,7 +291,7 @@ pub(crate) fn route_incremental(
                 let cell_kj = condensed_index(n, j, k);
                 let (owner_kj, off_kj) = cur_kj.locate(cell_kj);
                 debug_assert_eq!(owner_kj, me);
-                send_cell(shard, &mut cur_ki, outbound, local_dkj, me, n, i, k, off_kj);
+                send_cell(shard, ops, &mut cur_ki, outbound, local_dkj, me, n, i, k, off_kj);
                 k = alive.succ(k);
             }
         } else {
@@ -250,7 +303,7 @@ pub(crate) fn route_incremental(
                     let cell_kj = condensed_index(n, j, k);
                     let (owner_kj, off_kj) = cur_kj.locate(cell_kj);
                     debug_assert_eq!(owner_kj, me);
-                    send_cell(shard, &mut cur_ki, outbound, local_dkj, me, n, i, k, off_kj);
+                    send_cell(shard, ops, &mut cur_ki, outbound, local_dkj, me, n, i, k, off_kj);
                 }
                 k += mine_j.above_step;
             }
@@ -260,24 +313,45 @@ pub(crate) fn route_incremental(
     // ---- Receive side: which ranks will send me a (k, D_kj) triple ----
     if p > 1 {
         if part.kind() == PartitionKind::Cyclic {
-            // k < j was folded into the scan above; the rest of my (k,i)
-            // stride (row i, k > j) names its senders directly.
-            let mine_i = part.k_intervals(i, me);
+            // My (k,i) set names my senders directly: for each alive k in
+            // it, the (k,j) owner is O(1) (idx mod p). Dense: walk the
+            // pattern (k < i) and the full stride (k > i, skipping j).
+            // Sparse: k < j was folded into the send-side scan above, so
+            // only the k > j stride tail remains.
+            let mine_i = if cyclic_sparse {
+                part.k_row_interval(i, me)
+            } else {
+                part.k_intervals(i, me)
+            };
             let mut cur = part.owner_cursor();
+            if let Some(bp) = &mine_i.below_pattern {
+                for k in bp.ks() {
+                    visited += 1;
+                    if alive.contains(k) {
+                        let cell_kj = condensed_index(n, k, j);
+                        let owner_kj = cur.owner(cell_kj);
+                        if owner_kj != me {
+                            expect_from[owner_kj] = true;
+                        }
+                    }
+                }
+            }
             if let Some((lo, hi)) = mine_i.above {
                 let step = mine_i.above_step;
-                let mut k = if lo > j {
+                let mut k = if !cyclic_sparse || lo > j {
                     lo
                 } else {
                     lo + (j + 1 - lo).div_ceil(step) * step
                 };
                 while k < hi {
-                    visited += 1;
-                    if alive.contains(k) {
-                        let cell_kj = condensed_index(n, j, k);
-                        let owner_kj = cur.owner(cell_kj);
-                        if owner_kj != me {
-                            expect_from[owner_kj] = true;
+                    if k != j {
+                        visited += 1;
+                        if alive.contains(k) {
+                            let cell_kj = condensed_index(n, k.min(j), k.max(j));
+                            let owner_kj = cur.owner(cell_kj);
+                            if owner_kj != me {
+                                expect_from[owner_kj] = true;
+                            }
                         }
                     }
                     k += step;

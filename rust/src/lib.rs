@@ -66,6 +66,8 @@ pub mod prelude {
     pub use crate::data::{euclidean_matrix, rmsd_matrix, EnsembleSpec, GaussianSpec};
     pub use crate::dendrogram::{Dendrogram, Merge};
     pub use crate::linkage::Scheme;
-    pub use crate::matrix::{AliveSet, CondensedMatrix, Partition, PartitionKind, ShardStore};
+    pub use crate::matrix::{
+        AliveSet, CondensedMatrix, MaintenancePolicy, Partition, PartitionKind, ShardStore,
+    };
     pub use crate::util::rng::Rng;
 }

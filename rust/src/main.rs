@@ -17,7 +17,7 @@ use lancew::comm::{Collectives, CostModel};
 use lancew::coordinator::{AliveWalk, ClusterConfig, DistSource, Engine, Runtime, ScanStrategy};
 use lancew::data::{euclidean_matrix, io, rmsd_matrix, EnsembleSpec, GaussianSpec};
 use lancew::linkage::Scheme;
-use lancew::matrix::PartitionKind;
+use lancew::matrix::{MaintenancePolicy, PartitionKind};
 use lancew::runtime::XlaEngine;
 use lancew::util::cli::{parse_list, Args};
 use lancew::validate::{ari, cophenetic_correlation, dendrograms_equal};
@@ -51,14 +51,14 @@ fn print_help() {
          cluster  --n 200 | --matrix file.bin | --conformations\n\
          \x20        --scheme complete --p 8 --partition paper --cost-model nehalem\n\
          \x20        --cut 5 --scan full|indexed --engine scalar|xla --seed 42\n\
+         \x20        --index-maintenance eager|batched (tree repair for --scan indexed;\n\
+         \x20          default batched — one bottom-up wave per iteration instead of a\n\
+         \x20          root-ward walk per write; results bitwise identical either way)\n\
          \x20        --runtime threads|event|event:N (rank substrate; default event —\n\
          \x20          one scheduler drives all p ranks, so p can reach the thousands)\n\
          \x20        --collectives naive|tree (min exchange/broadcast; tree for big p)\n\
-         \x20        --alive-walk full|incremental (step-6a routing; default incremental)\n\
-         \x20          caveat: with --partition cyclic the incremental walk still scans\n\
-         \x20          alive k below the retired column j — Cyclic's below-j cells have\n\
-         \x20          no closed interval form (Partition::k_intervals scan_below), so\n\
-         \x20          only the above-j stride sheds work there\n\
+         \x20        --alive-walk full|incremental (step-6a routing; default incremental,\n\
+         \x20          closed-form k-intervals for every partition kind incl. cyclic)\n\
          \x20        --newick out.nwk --ascii --linkage z.csv (scipy linkage matrix)\n\
          validate --n 60 --trials 5 --seed 1\n\
          fig2     --n 512 --ps 1,2,4,8,16,24 --scheme complete --runtime event\n\
@@ -123,14 +123,32 @@ fn make_scan(args: &Args) -> anyhow::Result<ScanStrategy> {
     }
 }
 
-/// `--alive-walk incremental` (default: per-rank k-interval routing) or
-/// `--alive-walk full` (the paper's O(n)-per-rank step-6a sweep, kept for
-/// the A/B — results are bitwise identical either way). Caveat: under
-/// `--partition cyclic` the incremental walk still *scans* alive k below
-/// the retired column (no closed interval form — see
-/// `Partition::k_intervals`), so only the above-column stride sheds work.
+/// `--alive-walk incremental` (default: per-rank k-interval routing —
+/// closed-form for every partition kind, including Cyclic's below-column
+/// residue pattern since ISSUE-5) or `--alive-walk full` (the paper's
+/// O(n)-per-rank step-6a sweep, kept for the A/B — results are bitwise
+/// identical either way).
 fn make_walk(args: &Args) -> anyhow::Result<AliveWalk> {
     args.get("alive-walk").unwrap_or("incremental").parse()
+}
+
+/// `--index-maintenance batched` (default: one bottom-up tree-repair
+/// wave per iteration) or `--index-maintenance eager` (a root-ward walk
+/// per write — the ISSUE-1 behavior, kept as the differential oracle).
+/// Only meaningful with `--scan indexed`; rejected otherwise so a no-op
+/// flag fails loudly. Dendrograms, traffic, and virtual time are bitwise
+/// identical across policies — only `idx_ops`/`idx_waves` differ.
+fn make_maintenance(args: &Args, scan: &ScanStrategy) -> anyhow::Result<MaintenancePolicy> {
+    match args.get("index-maintenance") {
+        None => Ok(MaintenancePolicy::default()),
+        Some(s) => {
+            anyhow::ensure!(
+                matches!(scan, ScanStrategy::Indexed),
+                "--index-maintenance only applies to --scan indexed (the full rescan keeps no tree)"
+            );
+            s.parse()
+        }
+    }
 }
 
 /// `--runtime event` (default: the ISSUE-3 event scheduler — all ranks in
@@ -155,6 +173,7 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     let partition: PartitionKind = args.get("partition").unwrap_or("paper").parse()?;
     let cost_model: CostModel = args.get("cost-model").unwrap_or("nehalem").parse()?;
     let scan = make_scan(args)?;
+    let maintenance = make_maintenance(args, &scan)?;
     let walk = make_walk(args)?;
     let runtime = make_runtime(args)?;
     let collectives = make_collectives(args)?;
@@ -168,6 +187,7 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         .with_partition(partition)
         .with_cost_model(cost_model)
         .with_scan(scan)
+        .with_maintenance(maintenance)
         .with_alive_walk(walk)
         .with_runtime(runtime)
         .with_collectives(collectives)

@@ -8,5 +8,5 @@ mod shard;
 
 pub use alive::AliveSet;
 pub use condensed::{CondensedMatrix, condensed_index, condensed_len, condensed_pair};
-pub use partition::{KIntervals, OwnerCursor, Partition, PartitionKind};
-pub use shard::ShardStore;
+pub use partition::{BelowPattern, KIntervals, OwnerCursor, Partition, PartitionKind};
+pub use shard::{Maintenance, MaintenancePolicy, ShardOp, ShardStore};

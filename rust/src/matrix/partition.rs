@@ -210,20 +210,18 @@ impl Partition {
     ///   `offset(k) + (e − k − 1)`, *strictly increasing in k*; for the
     ///   contiguous kinds (BalancedCells / WholeRows) the ks landing in
     ///   the chunk `[starts[r], starts[r+1])` therefore form one
-    ///   contiguous k-range, found by binary search in O(log n).
+    ///   contiguous k-range, found by binary search in O(log n). Under
+    ///   Cyclic the cell index is quadratic in k, but its residues mod p
+    ///   repeat with period p (odd p) / 2p (even p) — consecutive cell
+    ///   indices differ by `n − k − 2`, and that difference telescopes to
+    ///   ≡ 0 (odd) or ≡ p/2 (even) over a window — so the ks rank `r`
+    ///   owns are a union of arithmetic progressions, returned in closed
+    ///   form as a [`BelowPattern`] (ISSUE-5; this killed the former
+    ///   `scan_below` O(alive) fallback scan).
     /// * **above** (`k > e`) — the contiguous tail of row `e`; its
     ///   intersection with a contiguous chunk is one k-range, and under
     ///   Cyclic it is an arithmetic progression with stride `p`
     ///   ([`KIntervals::above_step`]).
-    ///
-    /// **Caveat (CLI `--alive-walk incremental`, the default):** Cyclic's
-    /// *below* piece is quadratic in k modulo p and has no closed form;
-    /// [`KIntervals::scan_below`] tells the walker to scan alive `k < e`
-    /// and filter with [`owner`](Self::owner) instead. Under
-    /// `--partition cyclic` the incremental walk therefore still pays an
-    /// O(alive) scan below the retired column each iteration — only the
-    /// above-`e` stride sheds work (EXPERIMENTS.md §Alive-walk A/B; the
-    /// `--help` text carries the same warning).
     ///
     /// ```
     /// use lancew::matrix::{Partition, PartitionKind};
@@ -234,28 +232,39 @@ impl Partition {
     /// let ki = part.k_intervals(0, 0);
     /// assert_eq!((ki.below, ki.above), (None, Some((1, 5))));
     ///
-    /// // Cyclic has no interval form below the endpoint — walkers scan.
+    /// // Cyclic below the endpoint: closed-form stride pattern. Cell
+    /// // (k, 5) sits at condensed index k·(13−k)/2 + 4 when n = 8.
     /// let cyc = Partition::new(PartitionKind::Cyclic, 8, 3);
-    /// assert!(cyc.k_intervals(5, 1).scan_below);
+    /// let ki = cyc.k_intervals(5, 1);
+    /// let ks: Vec<usize> = ki.below_pattern.as_ref().unwrap().ks().collect();
+    /// let oracle: Vec<usize> = (0..5).filter(|&k| cyc.owner(k * (13 - k) / 2 + 4) == 1).collect();
+    /// assert_eq!(ks, oracle);
     /// ```
     pub fn k_intervals(&self, e: usize, r: usize) -> KIntervals {
         let n = self.n;
         debug_assert!(e < n);
+        let (above, above_step) = self.above_piece(e, r);
         match self.kind {
             PartitionKind::Cyclic => {
-                let above = if e + 1 < n {
-                    let row0 = condensed_index(n, e, e + 1);
-                    let first = e + 1 + (r + self.p - row0 % self.p) % self.p;
-                    (first < n).then_some((first, n))
-                } else {
-                    None
-                };
-                KIntervals {
-                    below: None,
-                    above,
-                    above_step: self.p,
-                    scan_below: e > 0,
-                }
+                let p = self.p;
+                let below_pattern = (e > 0).then(|| {
+                    // f(k) = condensed_index(n, k, e) mod p. Consecutive
+                    // differences are n − k − 2, so f repeats with period
+                    // p (odd p) / 2p (even p): one window of residues,
+                    // computed incrementally, names every k this rank
+                    // owns below e as offset + t·period progressions.
+                    let period = if p % 2 == 1 { p } else { 2 * p };
+                    let mut offsets = Vec::new();
+                    let mut f = (e - 1) % p;
+                    for k in 0..period.min(e) {
+                        if f == r {
+                            offsets.push(k as u32);
+                        }
+                        f = (f + n - k - 2) % p;
+                    }
+                    BelowPattern { offsets, period, limit: e }
+                });
+                KIntervals { below: None, above, above_step, below_pattern }
             }
             _ => {
                 let (s, t) = (self.starts[r], self.starts[r + 1]);
@@ -267,6 +276,41 @@ impl Partition {
                 } else {
                     None
                 };
+                KIntervals { below, above, above_step, below_pattern: None }
+            }
+        }
+    }
+
+    /// The row piece of [`k_intervals`](Self::k_intervals) alone — the
+    /// `above` range and stride, with `below`/`below_pattern` left
+    /// `None`. O(1) for every kind: the sparse Cyclic routing walk (see
+    /// `coordinator::worker`) reads only the row stride, so this skips
+    /// the O(p) residue-window build (and its allocation) that
+    /// `k_intervals` would do for a pattern nobody reads.
+    pub fn k_row_interval(&self, e: usize, r: usize) -> KIntervals {
+        debug_assert!(e < self.n);
+        let (above, above_step) = self.above_piece(e, r);
+        KIntervals { below: None, above, above_step, below_pattern: None }
+    }
+
+    /// Shared `above` computation: the ks in `(e, n)` whose cell `(e, k)`
+    /// rank `r` owns, as one range plus its stride.
+    fn above_piece(&self, e: usize, r: usize) -> (Option<(usize, usize)>, usize) {
+        let n = self.n;
+        match self.kind {
+            PartitionKind::Cyclic => {
+                let p = self.p;
+                let above = if e + 1 < n {
+                    let row0 = condensed_index(n, e, e + 1);
+                    let first = e + 1 + (r + p - row0 % p) % p;
+                    (first < n).then_some((first, n))
+                } else {
+                    None
+                };
+                (above, p)
+            }
+            _ => {
+                let (s, t) = (self.starts[r], self.starts[r + 1]);
                 let above = if e + 1 < n && s < t {
                     let row0 = condensed_index(n, e, e + 1);
                     let row_end = row0 + (n - 1 - e);
@@ -276,12 +320,7 @@ impl Partition {
                 } else {
                     None
                 };
-                KIntervals {
-                    below,
-                    above,
-                    above_step: 1,
-                    scan_below: false,
-                }
+                (above, 1)
             }
         }
     }
@@ -303,34 +342,83 @@ fn lower_bound(e: usize, pred: impl Fn(usize) -> bool) -> usize {
 }
 
 /// Result of [`Partition::k_intervals`]: the `k`-sets for one (endpoint,
-/// rank) query, as up to two half-open ranges.
+/// rank) query, as up to two half-open ranges (plus Cyclic's closed-form
+/// below-column [`BelowPattern`]).
 ///
-/// Walk `below` first, then `above` — the union is then visited in
-/// ascending k, which keeps the step-6a triple batches sorted (the
-/// receiver-side [`OwnerCursor`]s rely on it).
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+/// Walk `below` (or `below_pattern`) first, then `above` — the union is
+/// then visited in ascending k, which keeps the step-6a triple batches
+/// sorted (the receiver-side [`OwnerCursor`]s rely on it).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct KIntervals {
     /// ks in `[lo, hi)` with `hi ≤ e` whose cell `(k, e)` rank r owns.
-    /// `None` for Cyclic (see [`scan_below`](Self::scan_below)).
+    /// `None` for Cyclic (see [`below_pattern`](Self::below_pattern)).
     pub below: Option<(usize, usize)>,
     /// ks in `[lo, hi)` with `lo > e` whose cell `(e, k)` rank r owns,
     /// visiting every `above_step`-th k from `lo`.
     pub above: Option<(usize, usize)>,
     /// Stride of `above`: 1 for the contiguous kinds, `p` for Cyclic.
     pub above_step: usize,
-    /// Cyclic only: the below piece has no interval structure — scan
-    /// alive `k < e` and filter with `Partition::owner`.
-    pub scan_below: bool,
+    /// Cyclic only (`Some` iff `e > 0`): the below-column ks in closed
+    /// stride form — the cell index is quadratic in k, but its residues
+    /// mod p repeat, so one window of offsets + a period describe the
+    /// whole set (ISSUE-5; replaced the former `scan_below` fallback).
+    pub below_pattern: Option<BelowPattern>,
 }
 
 impl KIntervals {
-    /// Total ks the two ranges describe (scan_below not included).
+    /// Total ks the query describes (O(log) — the pattern count is
+    /// closed-form, see [`BelowPattern::len`]).
     pub fn span_len(&self) -> usize {
         let below = self.below.map_or(0, |(lo, hi)| hi - lo);
         let above = self
             .above
             .map_or(0, |(lo, hi)| (hi - lo).div_ceil(self.above_step));
-        below + above
+        let pattern = self.below_pattern.as_ref().map_or(0, BelowPattern::len);
+        below + above + pattern
+    }
+}
+
+/// Cyclic's below-column `k`-set for one (endpoint, rank) query, as a
+/// union of arithmetic progressions: `{ o + t·period | o ∈ offsets,
+/// t ≥ 0 } ∩ [0, limit)`.
+///
+/// The residues `condensed_index(n, k, e) mod p` repeat with period `p`
+/// for odd p and `2p` for even p (the per-step difference `n − k − 2`
+/// telescopes to ≡ 0 resp. ≡ p/2 over one window), so one window of
+/// owned offsets — at most `period` of them, computed in O(period) —
+/// enumerates the whole column piece without scanning or owner probes.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct BelowPattern {
+    /// Window offsets in `[0, period)` this rank owns, ascending.
+    pub offsets: Vec<u32>,
+    /// Residue period: `p` for odd p, `2p` for even p.
+    pub period: usize,
+    /// Exclusive upper bound on k (the endpoint `e`).
+    pub limit: usize,
+}
+
+impl BelowPattern {
+    /// The ks the pattern describes, ascending (all `< limit`).
+    pub fn ks(&self) -> impl Iterator<Item = usize> + '_ {
+        (0usize..)
+            .map(|w| w * self.period)
+            .take_while(|&base| base < self.limit)
+            .flat_map(|base| self.offsets.iter().map(move |&o| base + o as usize))
+            .filter(|&k| k < self.limit)
+    }
+
+    /// Number of ks the pattern describes, in closed form: every full
+    /// window contributes all offsets, the partial tail window only the
+    /// offsets below `limit % period`.
+    pub fn len(&self) -> usize {
+        let full = self.limit / self.period * self.offsets.len();
+        let tail = self.limit % self.period;
+        full + self.offsets.partition_point(|&o| (o as usize) < tail)
+    }
+
+    /// Whether the pattern names no ks at all.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 }
 
@@ -560,13 +648,11 @@ mod tests {
                     for r in 0..p {
                         let ki = part.k_intervals(e, r);
                         let mut got: Vec<usize> = Vec::new();
-                        if ki.scan_below {
-                            // Cyclic: the walker scans + filters below e.
-                            for k in 0..e {
-                                if part.owner(condensed_index(n, k, e)) == r {
-                                    got.push(k);
-                                }
-                            }
+                        if let Some(bp) = &ki.below_pattern {
+                            // Cyclic: the closed-form stride pattern.
+                            assert!(ki.below.is_none());
+                            got.extend(bp.ks());
+                            assert!(got.iter().all(|&k| k < e), "pattern crosses e");
                         } else if let Some((lo, hi)) = ki.below {
                             assert!(hi <= e, "below range crosses e");
                             got.extend(lo..hi);
@@ -576,6 +662,11 @@ mod tests {
                             got.extend((lo..hi).step_by(ki.above_step));
                         }
                         assert_eq!(got, oracle[r], "{kind:?} n={n} p={p} e={e} r={r}");
+                        assert_eq!(ki.span_len(), got.len(), "{kind:?} n={n} p={p} e={e} r={r}");
+                        // The O(1) row-only query is the same above piece.
+                        let row = part.k_row_interval(e, r);
+                        assert_eq!((row.above, row.above_step), (ki.above, ki.above_step));
+                        assert_eq!((row.below, &row.below_pattern), (None, &None));
                     }
                 }
             }
@@ -596,6 +687,35 @@ mod tests {
         assert_eq!(ki.below, Some((0, 1)));
         assert_eq!(ki.above, None);
         assert_eq!(ki.span_len(), 1);
+    }
+
+    #[test]
+    fn cyclic_below_pattern_period_and_coverage() {
+        // The residue-period argument, checked directly: for odd p one
+        // window of p residues repeats verbatim; for even p the period is
+        // 2p. Every k < e must appear in exactly one rank's pattern.
+        for (n, p) in [(23, 1), (23, 2), (23, 5), (23, 8), (40, 7), (40, 12)] {
+            let part = Partition::new(PartitionKind::Cyclic, n, p);
+            for e in 1..n {
+                let expected_period = if p % 2 == 1 { p } else { 2 * p };
+                let mut seen = vec![false; e];
+                for r in 0..p {
+                    let bp = part.k_intervals(e, r).below_pattern.unwrap();
+                    assert_eq!(bp.period, expected_period, "n={n} p={p} e={e}");
+                    assert_eq!(bp.limit, e);
+                    for k in bp.ks() {
+                        assert!(!seen[k], "k={k} claimed twice (n={n} p={p} e={e})");
+                        seen[k] = true;
+                        assert_eq!(
+                            part.owner(condensed_index(n, k, e)),
+                            r,
+                            "n={n} p={p} e={e} k={k}"
+                        );
+                    }
+                }
+                assert!(seen.iter().all(|&s| s), "some k < e unclaimed (n={n} p={p} e={e})");
+            }
+        }
     }
 
     #[test]

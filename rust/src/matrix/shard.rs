@@ -10,6 +10,32 @@
 //! index" is answered in O(1) from the root, with O(log m) maintenance
 //! per retire/update (see EXPERIMENTS.md §Scan-strategy A/B).
 //!
+//! ## Maintenance policies (ISSUE-5 tentpole)
+//!
+//! How the tree absorbs writes is a [`MaintenancePolicy`]:
+//!
+//! * [`Eager`](MaintenancePolicy::Eager) — every `set`/`retire` rewalks
+//!   its full root-ward path immediately (the ISSUE-1 behavior, kept as
+//!   the differential oracle): w writes cost w·(log₂m + 1) tree-node
+//!   writes.
+//! * [`Batched`](MaintenancePolicy::Batched) (default) — writes land in
+//!   the cells and a pending leaf log; [`flush`](ShardStore::flush)
+//!   repairs the tree in **one bottom-up wave**: dedupe + sort the
+//!   touched leaves, then recompute each dirty internal node exactly
+//!   once per level — O(w + min(w·log m, m)) tree-node writes, because
+//!   root-ward paths merge. The §6 write set of one iteration (retires
+//!   ascending k, then LW updates ascending k) is exactly such a wave.
+//!
+//! The policies are *observationally identical* outside the realized
+//! maintenance-work counter: the post-flush tree equals the eager tree
+//! node for node (a level-order wave recomputes parents only after both
+//! children), and the virtual clock is charged the policy-independent
+//! canonical cost (`writes × path_len`, a pure function of the shard
+//! size and the touched-offset multiset — see
+//! [`take_maintenance`](ShardStore::take_maintenance)), so dendrograms,
+//! message traffic, and virtual time are bitwise equal across policies
+//! (EXPERIMENTS.md §Maintenance-wave A/B, DESIGN.md §Maintenance waves).
+//!
 //! ## Tie-breaking
 //!
 //! The distributed protocol resolves equal minima toward the *lowest
@@ -24,12 +50,75 @@
 //!
 //! [`PartitionKind`]: super::PartitionKind
 
+/// How an indexed [`ShardStore`] repairs its tournament tree after
+/// writes (CLI `--index-maintenance eager|batched`; inert without the
+/// index, i.e. under `--scan full`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum MaintenancePolicy {
+    /// Rewalk the O(log m) root-ward path on every write — the ISSUE-1
+    /// behavior, kept as the differential oracle for the batched mode.
+    Eager,
+    /// Log touched leaves; repair once per iteration in a single
+    /// bottom-up [`flush`](ShardStore::flush) wave (default).
+    #[default]
+    Batched,
+}
+
+impl std::str::FromStr for MaintenancePolicy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "eager" | "per-write" => Ok(Self::Eager),
+            "batched" | "wave" => Ok(Self::Batched),
+            other => anyhow::bail!("unknown index-maintenance {other:?} (eager|batched)"),
+        }
+    }
+}
+
+impl std::fmt::Display for MaintenancePolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Eager => "eager",
+            Self::Batched => "batched",
+        })
+    }
+}
+
+/// One deferred shard mutation of an iteration's §6 write set, applied
+/// through [`ShardStore::apply_batch`]. Offsets are local (u32 — the
+/// store rejects shards that would overflow it).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ShardOp {
+    /// Overwrite a live cell with the LW-updated distance.
+    Set(u32, f32),
+    /// Mark a cell erased (§5.3 step 6a).
+    Retire(u32),
+}
+
+/// Maintenance accounting drained once per iteration by the worker —
+/// see [`ShardStore::take_maintenance`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Maintenance {
+    /// Virtual-clock charge: the policy-independent canonical cost,
+    /// `leaf writes × (log₂ size + 1)`. Equal across policies by
+    /// construction, so A/B runs replay the same virtual time.
+    pub charge: u64,
+    /// Tree-node writes actually performed (== `charge` under
+    /// [`MaintenancePolicy::Eager`]; strictly fewer under `Batched`
+    /// whenever paths share nodes — the measured win).
+    pub ops: u64,
+    /// Repair waves flushed (0 under `Eager`).
+    pub waves: u64,
+}
+
 /// A rank's shard of the condensed matrix: the cells, their live count,
 /// and (optionally) a segment-min index over them.
 ///
 /// All mutation goes through [`set`](Self::set) / [`retire`](Self::retire)
-/// so the index can never go stale. Retired cells hold `+inf` — the same
-/// sentinel the L1 kernels and the dense [`CondensedMatrix`] use.
+/// (or [`apply_batch`](Self::apply_batch)); under the batched policy the
+/// tree lags the cells until [`flush`](Self::flush). Retired cells hold
+/// `+inf` — the same sentinel the L1 kernels and the dense
+/// [`CondensedMatrix`] use.
 ///
 /// [`CondensedMatrix`]: super::CondensedMatrix
 #[derive(Clone, Debug)]
@@ -44,12 +133,21 @@ pub struct ShardStore {
     /// Empty unless `indexed` and the shard is non-empty.
     tree: Vec<(f32, u32)>,
     leaf_base: usize,
-    /// Tree nodes rewritten per retire/update: log₂(leaf_base) + 1.
+    /// Tree nodes on one leaf's root-ward path: log₂(leaf_base) + 1.
     path_len: u64,
-    /// Maintenance cost units accrued since the last
-    /// [`take_index_ops`](Self::take_index_ops) — the honest price of the
-    /// O(1) query, charged to the virtual clock by the worker.
+    policy: MaintenancePolicy,
+    /// Batched: local offsets written since the last flush (duplicates
+    /// kept — the wave dedupes).
+    pending: Vec<u32>,
+    /// Flush scratch (tree node indices), kept for its capacity.
+    wave: Vec<usize>,
+    /// Leaf writes since the last [`take_maintenance`](Self::take_maintenance)
+    /// (either policy) — the canonical-charge numerator.
+    writes: u64,
+    /// Tree-node writes actually performed since the last drain.
     index_ops: u64,
+    /// Completed repair waves since the last drain.
+    waves: u64,
 }
 
 /// Left-biased min: on ties the left operand (lower local offset) wins.
@@ -65,8 +163,8 @@ fn better(l: (f32, u32), r: (f32, u32)) -> (f32, u32) {
 impl ShardStore {
     /// Take ownership of a rank's cells. `indexed` builds the tournament
     /// tree in O(m); unindexed stores are plain vectors with a live count
-    /// (the `Full` scan strategies).
-    pub fn new(cells: Vec<f32>, indexed: bool) -> Self {
+    /// (the `Full` scan strategies) and `policy` is inert.
+    pub fn new(cells: Vec<f32>, indexed: bool, policy: MaintenancePolicy) -> Self {
         let m = cells.len();
         // Leaf offsets are u32 with u32::MAX as the padding sentinel; fail
         // loudly rather than silently truncating on ≥2³²-cell shards.
@@ -95,7 +193,12 @@ impl ShardStore {
             tree,
             leaf_base,
             path_len,
+            policy,
+            pending: Vec::new(),
+            wave: Vec::new(),
+            writes: 0,
             index_ops: 0,
+            waves: 0,
         }
     }
 
@@ -123,7 +226,24 @@ impl ShardStore {
         self.indexed
     }
 
-    /// Raw cell view — what the `Full` scan strategies rescan.
+    /// The tree-repair policy this store was built with.
+    #[inline]
+    pub fn policy(&self) -> MaintenancePolicy {
+        self.policy
+    }
+
+    /// Whether no writes are pending a [`flush`](Self::flush) (always
+    /// true under `Eager`). The worker debug-asserts this at the top of
+    /// each scan so a dropped end-of-iteration flush fails loudly
+    /// instead of being absorbed by the defensive flush there.
+    #[inline]
+    pub fn is_flushed(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Raw cell view — what the `Full` scan strategies rescan. Always
+    /// current: writes land in the cells immediately under either policy
+    /// (only the *tree* lags until [`flush`](Self::flush)).
     #[inline]
     pub fn cells(&self) -> &[f32] {
         &self.cells
@@ -139,9 +259,18 @@ impl ShardStore {
     /// to the lowest offset, all-retired/empty shards to
     /// `(+inf, usize::MAX)` — exactly the contract of
     /// [`scalar_shard_min`](crate::coordinator::scalar_shard_min).
+    ///
+    /// Under the batched policy the caller must [`flush`](Self::flush)
+    /// first (checked in debug builds) — the worker closes every
+    /// iteration's write set with one wave before the next scan.
     #[inline]
     pub fn indexed_min(&self) -> (f32, usize) {
         debug_assert!(self.indexed, "indexed_min on an unindexed ShardStore");
+        debug_assert!(
+            self.pending.is_empty(),
+            "indexed_min on an unflushed ShardStore ({} writes pending)",
+            self.pending.len()
+        );
         if self.tree.is_empty() {
             return (f32::INFINITY, usize::MAX);
         }
@@ -158,7 +287,7 @@ impl ShardStore {
     pub fn set(&mut self, off: usize, v: f32) {
         debug_assert!(v.is_finite(), "LW update produced a non-finite distance");
         self.cells[off] = v;
-        self.fix(off, v);
+        self.log_write(off, v);
     }
 
     /// Mark cell `off` erased ("not to be used again", §5.3 step 6a).
@@ -167,25 +296,103 @@ impl ShardStore {
         debug_assert!(self.cells[off].is_finite(), "cell {off} retired twice");
         self.cells[off] = f32::INFINITY;
         self.live -= 1;
-        self.fix(off, f32::INFINITY);
+        self.log_write(off, f32::INFINITY);
     }
 
-    /// Drain the maintenance cost accrued by `set`/`retire` since the last
-    /// call (0 for unindexed stores). Units are tree-node writes, charged
-    /// like cell touches by the worker's cost accounting.
-    #[inline]
-    pub fn take_index_ops(&mut self) -> u64 {
-        std::mem::take(&mut self.index_ops)
+    /// Apply one iteration's write set in order. The §6 routing emits
+    /// ascending local offsets per source, which keeps the batched wave's
+    /// sort nearly free and the eager oracle's fix order deterministic.
+    pub fn apply_batch(&mut self, ops: impl IntoIterator<Item = ShardOp>) {
+        for op in ops {
+            match op {
+                ShardOp::Set(off, v) => self.set(off as usize, v),
+                ShardOp::Retire(off) => self.retire(off as usize),
+            }
+        }
     }
 
-    /// Recompute the root-ward path after leaf `off` changed. Always walks
-    /// the full path (no early-exit) so maintenance cost is a pure function
-    /// of the shard size — virtual time stays replay-deterministic.
+    /// Route a write to the index: eager fixes now, batched logs the
+    /// leaf for the next [`flush`](Self::flush) wave.
     #[inline]
-    fn fix(&mut self, off: usize, v: f32) {
+    fn log_write(&mut self, off: usize, v: f32) {
         if self.tree.is_empty() {
             return;
         }
+        self.writes += 1;
+        match self.policy {
+            MaintenancePolicy::Eager => self.fix(off, v),
+            MaintenancePolicy::Batched => self.pending.push(off as u32),
+        }
+    }
+
+    /// Repair the tree in one bottom-up wave over the pending leaf log:
+    /// dedupe + sort the touched offsets, rewrite those leaves, then
+    /// recompute each dirty internal node exactly once per level (a
+    /// parent is recomputed only after the whole child level, so the
+    /// result equals the eager tree node for node). No-op when nothing
+    /// is pending; never touches the virtual clock — the canonical cost
+    /// is charged via [`take_maintenance`](Self::take_maintenance).
+    pub fn flush(&mut self) {
+        if self.pending.is_empty() {
+            return;
+        }
+        self.waves += 1;
+        let mut pend = std::mem::take(&mut self.pending);
+        pend.sort_unstable();
+        pend.dedup();
+        let mut level = std::mem::take(&mut self.wave);
+        level.clear();
+        level.extend(pend.iter().map(|&o| self.leaf_base + o as usize));
+        for &i in &level {
+            let off = i - self.leaf_base;
+            self.tree[i] = (self.cells[off], off as u32);
+        }
+        self.index_ops += level.len() as u64;
+        // Ascending node indices stay ascending under /2, so dedup keeps
+        // each level sorted and unique; stop once the root is rewritten.
+        while level[0] > 1 {
+            for i in level.iter_mut() {
+                *i /= 2;
+            }
+            level.dedup();
+            for &i in &level {
+                self.tree[i] = better(self.tree[2 * i], self.tree[2 * i + 1]);
+            }
+            self.index_ops += level.len() as u64;
+        }
+        pend.clear();
+        self.pending = pend;
+        self.wave = level;
+    }
+
+    /// Drain the maintenance accounting accrued since the last call (all
+    /// zero for unindexed stores). The `charge` component — leaf writes ×
+    /// root-path length — is what the worker feeds the virtual clock: it
+    /// is a pure function of the shard size and the touched-offset
+    /// multiset, identical across policies, so eager and batched runs
+    /// replay bitwise-equal virtual time while `ops` reports the realized
+    /// tree work (the A/B in EXPERIMENTS.md §Maintenance-wave A/B).
+    ///
+    /// Callers must [`flush`](Self::flush) first so `ops` covers the
+    /// whole write set (checked in debug builds).
+    #[inline]
+    pub fn take_maintenance(&mut self) -> Maintenance {
+        debug_assert!(
+            self.pending.is_empty(),
+            "take_maintenance on an unflushed ShardStore"
+        );
+        Maintenance {
+            charge: std::mem::take(&mut self.writes) * self.path_len,
+            ops: std::mem::take(&mut self.index_ops),
+            waves: std::mem::take(&mut self.waves),
+        }
+    }
+
+    /// Recompute the root-ward path after leaf `off` changed (eager
+    /// policy). Always walks the full path (no early-exit) so the
+    /// realized cost equals the canonical charge exactly.
+    #[inline]
+    fn fix(&mut self, off: usize, v: f32) {
         let mut i = self.leaf_base + off;
         self.tree[i] = (v, off as u32);
         while i > 1 {
@@ -203,86 +410,146 @@ mod tests {
     use crate::matrix::{Partition, PartitionKind};
     use crate::util::proptest::{run, Config};
 
+    const POLICIES: [MaintenancePolicy; 2] =
+        [MaintenancePolicy::Eager, MaintenancePolicy::Batched];
+
     /// The oracle: the indexed answer must equal the full rescan, bit for
     /// bit, including the tie-break and the all-retired sentinel.
-    fn assert_matches_scan(store: &ShardStore) {
+    fn assert_matches_scan(store: &mut ShardStore) {
+        store.flush();
         let scan = scalar_shard_min(store.cells());
         assert_eq!(store.indexed_min(), scan, "cells: {:?}", store.cells());
     }
 
     #[test]
     fn empty_and_singleton() {
-        let empty = ShardStore::new(Vec::new(), true);
-        assert_eq!(empty.indexed_min(), (f32::INFINITY, usize::MAX));
-        assert_eq!(empty.live(), 0);
+        for policy in POLICIES {
+            let empty = ShardStore::new(Vec::new(), true, policy);
+            assert_eq!(empty.indexed_min(), (f32::INFINITY, usize::MAX));
+            assert_eq!(empty.live(), 0);
 
-        let mut one = ShardStore::new(vec![4.5], true);
-        assert_eq!(one.indexed_min(), (4.5, 0));
-        one.retire(0);
-        assert_eq!(one.indexed_min(), (f32::INFINITY, usize::MAX));
-        assert_eq!(one.live(), 0);
+            let mut one = ShardStore::new(vec![4.5], true, policy);
+            assert_eq!(one.indexed_min(), (4.5, 0));
+            one.retire(0);
+            one.flush();
+            assert_eq!(one.indexed_min(), (f32::INFINITY, usize::MAX));
+            assert_eq!(one.live(), 0);
+        }
     }
 
     #[test]
     fn duplicated_minima_take_lowest_offset() {
-        let store = ShardStore::new(vec![7.0, 2.0, 5.0, 2.0, 2.0], true);
-        assert_eq!(store.indexed_min(), (2.0, 1));
-        assert_matches_scan(&store);
+        for policy in POLICIES {
+            let mut store = ShardStore::new(vec![7.0, 2.0, 5.0, 2.0, 2.0], true, policy);
+            assert_eq!(store.indexed_min(), (2.0, 1));
+            assert_matches_scan(&mut store);
+        }
     }
 
     #[test]
     fn retire_and_update_track_scan() {
-        let mut store = ShardStore::new(vec![3.0, 1.0, 4.0, 1.0, 5.0, 9.0], true);
-        assert_eq!(store.indexed_min(), (1.0, 1));
-        store.retire(1); // next duplicate min takes over
-        assert_eq!(store.indexed_min(), (1.0, 3));
-        store.set(5, 0.5); // an LW update can create a new min
-        assert_eq!(store.indexed_min(), (0.5, 5));
-        store.retire(5);
-        store.retire(3);
-        assert_matches_scan(&store);
-        assert_eq!(store.live(), 3);
+        for policy in POLICIES {
+            let mut store = ShardStore::new(vec![3.0, 1.0, 4.0, 1.0, 5.0, 9.0], true, policy);
+            assert_eq!(store.indexed_min(), (1.0, 1));
+            store.retire(1); // next duplicate min takes over
+            store.flush();
+            assert_eq!(store.indexed_min(), (1.0, 3));
+            store.set(5, 0.5); // an LW update can create a new min
+            store.flush();
+            assert_eq!(store.indexed_min(), (0.5, 5));
+            store.retire(5);
+            store.retire(3);
+            assert_matches_scan(&mut store);
+            assert_eq!(store.live(), 3);
+        }
     }
 
     #[test]
     fn all_retired_is_the_sentinel() {
-        let mut store = ShardStore::new(vec![2.0; 7], true);
-        for off in 0..7 {
-            store.retire(off);
-            assert_matches_scan(&store);
+        for policy in POLICIES {
+            let mut store = ShardStore::new(vec![2.0; 7], true, policy);
+            for off in 0..7 {
+                store.retire(off);
+                assert_matches_scan(&mut store);
+            }
+            assert_eq!(store.indexed_min(), (f32::INFINITY, usize::MAX));
+            assert_eq!(store.live(), 0);
         }
-        assert_eq!(store.indexed_min(), (f32::INFINITY, usize::MAX));
-        assert_eq!(store.live(), 0);
     }
 
     #[test]
     fn unindexed_store_counts_but_builds_no_tree() {
-        let mut store = ShardStore::new(vec![1.0, 2.0, 3.0], false);
+        let mut store = ShardStore::new(vec![1.0, 2.0, 3.0], false, MaintenancePolicy::Batched);
         assert!(!store.is_indexed());
         assert_eq!(store.live(), 3);
         store.retire(2);
+        store.flush();
         assert_eq!(store.live(), 2);
-        assert_eq!(store.take_index_ops(), 0);
+        assert_eq!(store.take_maintenance(), Maintenance::default());
         assert_eq!(store.cells(), &[1.0, 2.0, f32::INFINITY]);
     }
 
     #[test]
-    fn index_ops_are_size_deterministic() {
-        // Maintenance cost must depend on shard size only — the virtual
-        // clock replays exactly (distributed_protocol.rs determinism tests).
-        let mut a = ShardStore::new(vec![5.0; 100], true);
-        let mut b = ShardStore::new((0..100).map(|i| i as f32).collect(), true);
-        a.retire(3);
-        b.retire(97);
-        assert_eq!(a.take_index_ops(), b.take_index_ops());
+    fn charge_is_size_deterministic_and_policy_independent() {
+        // The virtual-clock charge must depend on shard size and write
+        // count only — never on values or policy — so the clock replays
+        // exactly (distributed_protocol.rs determinism tests) and the
+        // eager/batched A/B stays bitwise-comparable.
+        let mut charges = Vec::new();
+        for policy in POLICIES {
+            let mut a = ShardStore::new(vec![5.0; 100], true, policy);
+            let mut b = ShardStore::new((0..100).map(|i| i as f32).collect(), true, policy);
+            a.retire(3);
+            b.retire(97);
+            a.flush();
+            b.flush();
+            let (ma, mb) = (a.take_maintenance(), b.take_maintenance());
+            assert_eq!(ma.charge, mb.charge, "{policy}");
+            charges.push(ma.charge);
+        }
+        assert_eq!(charges[0], charges[1], "charge differs across policies");
     }
 
-    /// The ISSUE-1 satellite: on shards drawn through every PartitionKind,
-    /// with heavy duplicate minima, progressive retirement to empty, and
-    /// interleaved updates, the index must agree with `scalar_shard_min`
-    /// after every mutation.
     #[test]
-    fn property_indexed_min_matches_scan_all_partition_kinds() {
+    fn eager_realizes_exactly_the_charge() {
+        let mut store = ShardStore::new(vec![1.0; 64], true, MaintenancePolicy::Eager);
+        for off in 0..10 {
+            store.set(off, 0.5);
+        }
+        let m = store.take_maintenance();
+        // 64 leaves → path of log₂64 + 1 = 7 nodes per write.
+        assert_eq!(m.charge, 10 * 7);
+        assert_eq!(m.ops, m.charge);
+        assert_eq!(m.waves, 0);
+    }
+
+    #[test]
+    fn batched_wave_shares_paths_and_dedupes() {
+        // 16 leaves, path_len 5. Touch leaves 0 and 1 (shared path above
+        // their parent) plus leaf 0 again: eager would pay 3·5 = 15;
+        // the wave pays 2 leaves + 4 shared internal nodes = 6.
+        let mut store = ShardStore::new(vec![9.0; 16], true, MaintenancePolicy::Batched);
+        store.set(0, 3.0);
+        store.set(1, 2.0);
+        store.set(0, 1.0);
+        store.flush();
+        assert_eq!(store.indexed_min(), (1.0, 0));
+        let m = store.take_maintenance();
+        assert_eq!(m.charge, 15);
+        assert_eq!(m.ops, 6);
+        assert_eq!(m.waves, 1);
+        // An empty flush is free.
+        store.flush();
+        assert_eq!(store.take_maintenance(), Maintenance::default());
+    }
+
+    /// ISSUE-5 satellite: batched ≡ eager ≡ `scalar_shard_min` after
+    /// every flush, on shards drawn through every PartitionKind, with
+    /// heavy duplicate minima, random op orders (interleaved updates and
+    /// retires, duplicate offsets within a wave), progressive retirement
+    /// to empty, and empty shards.
+    #[test]
+    fn property_batched_equals_eager_equals_scan_all_partition_kinds() {
         run(Config::cases(30), |rng| {
             let n = rng.range(2, 40);
             let p = rng.range(1, 10);
@@ -298,24 +565,71 @@ mod tests {
                 let part = Partition::new(kind, n, p);
                 for r in 0..p {
                     let cells: Vec<f32> = part.cells_of(r).map(|idx| global[idx]).collect();
-                    let mut store = ShardStore::new(cells, true);
-                    assert_matches_scan(&store); // includes empty shards
-                    // Mutate every cell once, in random op order: ~half
-                    // updates, then retire everything (all-retired tail).
-                    let m = store.len();
-                    for off in 0..m {
+                    let mut eager = ShardStore::new(cells.clone(), true, MaintenancePolicy::Eager);
+                    let mut batched = ShardStore::new(cells, true, MaintenancePolicy::Batched);
+                    assert_matches_scan(&mut batched); // includes empty shards
+                    let m = batched.len();
+                    // Random op order: a shuffled retire schedule with
+                    // interleaved updates (some offsets written twice in
+                    // one wave), flushing at random batch boundaries.
+                    let mut order: Vec<usize> = (0..m).collect();
+                    for i in (1..m).rev() {
+                        order.swap(i, rng.below(i + 1));
+                    }
+                    for (step, &off) in order.iter().enumerate() {
                         if rng.below(2) == 0 {
-                            store.set(off, vals[rng.below(3)] + 0.5);
-                            assert_matches_scan(&store);
+                            let v = vals[rng.below(3)] + 0.5;
+                            eager.set(off, v);
+                            batched.set(off, v);
+                        }
+                        eager.retire(off);
+                        batched.retire(off);
+                        if rng.below(3) == 0 || step == m - 1 {
+                            batched.flush();
+                            assert_eq!(
+                                batched.indexed_min(),
+                                eager.indexed_min(),
+                                "{kind:?} n={n} p={p} r={r} step={step}"
+                            );
+                            assert_matches_scan(&mut batched);
                         }
                     }
-                    for off in 0..m {
-                        store.retire(off);
-                        assert_matches_scan(&store);
-                    }
-                    assert_eq!(store.indexed_min(), (f32::INFINITY, usize::MAX));
+                    assert_eq!(batched.indexed_min(), (f32::INFINITY, usize::MAX));
+                    assert_eq!(batched.live(), 0);
+                    // Same canonical charge; realized ops never exceed it.
+                    let (me, mb) = (eager.take_maintenance(), batched.take_maintenance());
+                    assert_eq!(me.charge, mb.charge);
+                    assert_eq!(me.ops, me.charge);
+                    assert!(mb.ops <= mb.charge, "wave did more work than eager");
                 }
             }
         });
+    }
+
+    #[test]
+    fn apply_batch_routes_sets_and_retires() {
+        for policy in POLICIES {
+            let mut store = ShardStore::new(vec![4.0, 3.0, 2.0, 1.0], true, policy);
+            store.apply_batch([ShardOp::Retire(3), ShardOp::Set(0, 0.5), ShardOp::Retire(2)]);
+            store.flush();
+            assert_eq!(store.indexed_min(), (0.5, 0));
+            assert_eq!(store.live(), 2);
+            assert_eq!(store.cells(), &[0.5, 3.0, f32::INFINITY, f32::INFINITY]);
+        }
+    }
+
+    #[test]
+    fn policy_parses() {
+        assert_eq!(
+            "batched".parse::<MaintenancePolicy>().unwrap(),
+            MaintenancePolicy::Batched
+        );
+        assert_eq!(
+            "eager".parse::<MaintenancePolicy>().unwrap(),
+            MaintenancePolicy::Eager
+        );
+        assert!("sloppy".parse::<MaintenancePolicy>().is_err());
+        assert_eq!(MaintenancePolicy::default(), MaintenancePolicy::Batched);
+        assert_eq!(format!("{}", MaintenancePolicy::Eager), "eager");
     }
 }

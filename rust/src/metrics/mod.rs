@@ -61,9 +61,18 @@ pub struct RunStats {
     pub cells_scanned: u64,
     /// LW cell updates applied (all ranks).
     pub cells_updated: u64,
-    /// Tournament-tree maintenance writes (all ranks; 0 under `Full`) —
-    /// the O(log m)-per-write price of the indexed scan strategy.
+    /// Tournament-tree maintenance writes actually performed (all ranks;
+    /// 0 under `Full`). Under `MaintenancePolicy::Eager` every write
+    /// walks its full O(log m) path, so this equals the canonical
+    /// virtual-clock charge; under `Batched` (default) the per-iteration
+    /// repair wave recomputes each dirty node once, so this is strictly
+    /// smaller whenever paths share nodes — the ISSUE-5 A/B
+    /// (EXPERIMENTS.md §Maintenance-wave A/B). The charge itself is
+    /// policy-independent, so virtual time is identical either way.
     pub index_ops: u64,
+    /// Batched tree-repair waves flushed (all ranks; 0 under `Eager` or
+    /// `Full`) — one per rank-iteration that wrote any indexed cell.
+    pub idx_waves: u64,
     /// Candidate cluster indices k examined during step-6a routing (all
     /// ranks). Under `AliveWalk::Full` every rank sweeps the whole alive
     /// set every iteration (O(n·p) aggregate); under
@@ -97,7 +106,7 @@ impl RunStats {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "n={} p={} runtime={} wall={:.3}s virt={:.6}s msgs={} ({:.1}/iter) bytes={} peak_shard={} cells scanned={} idx_ops={} alive_visited={}",
+            "n={} p={} runtime={} wall={:.3}s virt={:.6}s msgs={} ({:.1}/iter) bytes={} peak_shard={} cells scanned={} idx_ops={} idx_waves={} alive_visited={}",
             self.n,
             self.p,
             if self.runtime.is_empty() { "?" } else { self.runtime.as_str() },
@@ -109,6 +118,7 @@ impl RunStats {
             self.peak_shard_cells,
             self.cells_scanned,
             self.index_ops,
+            self.idx_waves,
             self.alive_visited,
         )
     }

@@ -32,18 +32,20 @@ fn help_lists_subcommands() {
 }
 
 #[test]
-fn help_documents_runtime_and_alive_walk_caveat() {
-    // ISSUE-3 bugfix: the help text must name the --runtime substrates
-    // and the --alive-walk Cyclic scan_below fallback (the caveat also
-    // lives in Partition::k_intervals rustdoc).
+fn help_documents_runtime_walk_and_maintenance_flags() {
+    // The help text must name the --runtime substrates, the walk and
+    // collective toggles, and the ISSUE-5 --index-maintenance policy.
+    // The old Cyclic scan_below caveat is gone: the below-column piece
+    // has a closed stride form now (Partition::k_intervals rustdoc).
     let (ok, text) = lancew(&[]);
     assert!(ok);
     assert!(text.contains("--runtime threads|event|event:N"), "{text}");
     assert!(text.contains("--alive-walk full|incremental"), "{text}");
     assert!(text.contains("--collectives naive|tree"), "{text}");
+    assert!(text.contains("--index-maintenance eager|batched"), "{text}");
     assert!(
-        text.contains("cyclic") && text.contains("scan_below"),
-        "help must warn about the Cyclic scan_below fallback:\n{text}"
+        !text.contains("scan_below"),
+        "stale Cyclic scan_below caveat resurfaced in help:\n{text}"
     );
 }
 
@@ -200,6 +202,54 @@ fn cluster_alive_walk_toggle() {
     let (ok_bad, text) = lancew(&["cluster", "--n", "10", "--alive-walk", "sideways"]);
     assert!(!ok_bad);
     assert!(text.contains("alive-walk"), "{text}");
+}
+
+#[test]
+fn cluster_index_maintenance_toggle() {
+    // ISSUE-5: --index-maintenance eager vs (default) batched must agree
+    // on the clustering, the virtual clock, and the traffic — only the
+    // realized maintenance counters may differ (fewer ops, nonzero waves
+    // under batched).
+    let grab = |t: &str, key: &str| {
+        t.split(key).nth(1).and_then(|s| s.split_whitespace().next()).map(String::from)
+    };
+    let num = |t: &str, key: &str| -> u64 {
+        grab(t, key).and_then(|s| s.parse().ok()).unwrap_or(0)
+    };
+    let (ok_e, eager) = lancew(&[
+        "cluster", "--n", "70", "--p", "4", "--scan", "indexed",
+        "--index-maintenance", "eager", "--cut", "3", "--seed", "11",
+    ]);
+    assert!(ok_e, "{eager}");
+    let (ok_b, batched) = lancew(&[
+        "cluster", "--n", "70", "--p", "4", "--scan", "indexed", "--cut", "3", "--seed", "11",
+    ]);
+    assert!(ok_b, "{batched}");
+    assert_eq!(grab(&eager, "virt="), grab(&batched, "virt="));
+    assert_eq!(grab(&eager, "msgs="), grab(&batched, "msgs="));
+    let sizes = |t: &str| t.lines().find(|l| l.contains("cluster sizes")).map(String::from);
+    assert_eq!(sizes(&eager), sizes(&batched));
+    let (oe, ob) = (num(&eager, "idx_ops="), num(&batched, "idx_ops="));
+    assert!(ob > 0 && ob < oe, "batched idx_ops {ob} !< eager {oe}");
+    assert_eq!(num(&eager, "idx_waves="), 0, "{eager}");
+    assert!(num(&batched, "idx_waves=") > 0, "{batched}");
+
+    let (ok_bad, text) = lancew(&[
+        "cluster", "--n", "10", "--scan", "indexed", "--index-maintenance", "sloppy",
+    ]);
+    assert!(!ok_bad);
+    assert!(text.contains("index-maintenance"), "{text}");
+}
+
+#[test]
+fn full_scan_rejects_index_maintenance_flag() {
+    // The full rescan keeps no tree; a no-op policy flag fails loudly
+    // (same contract as --scan indexed rejecting --engine).
+    let (ok, text) = lancew(&[
+        "cluster", "--n", "10", "--index-maintenance", "batched",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("--scan indexed"), "{text}");
 }
 
 #[test]

@@ -250,6 +250,79 @@ fn alive_walk_acceptance_n2000_p8_balanced() {
 }
 
 #[test]
+fn maintenance_wave_acceptance_n2000_p8() {
+    // ISSUE-5 acceptance: at n=2000, p=8, indexed+batched must realize
+    // ≥1.5× fewer index_ops than indexed+eager, with dendrograms,
+    // virtual time, and message traffic bitwise identical across both
+    // policies and the serial baseline.
+    let m = gaussian_matrix(2000, 22);
+    let run_with = |pol: MaintenancePolicy| {
+        ClusterConfig::new(Scheme::Complete, 8)
+            .with_scan(ScanStrategy::Indexed)
+            .with_maintenance(pol)
+            .run(&m)
+            .unwrap()
+    };
+    let serial = serial_lw_cluster(Scheme::Complete, &m);
+    let eager = run_with(MaintenancePolicy::Eager);
+    let batched = run_with(MaintenancePolicy::Batched);
+    dendrograms_equal(&serial, &eager.dendrogram, 0.0).expect("eager ≡ serial");
+    dendrograms_equal(&serial, &batched.dendrogram, 0.0).expect("batched ≡ serial");
+
+    // Identical write sets ⇒ identical canonical charge ⇒ identical
+    // virtual time; routing is untouched ⇒ identical traffic.
+    assert_eq!(eager.stats.virtual_s, batched.stats.virtual_s);
+    assert_eq!(eager.stats.rank_virtual_s, batched.stats.rank_virtual_s);
+    assert_eq!(eager.stats.msgs_sent, batched.stats.msgs_sent);
+    assert_eq!(eager.stats.bytes_sent, batched.stats.bytes_sent);
+
+    // Eager realizes exactly the canonical charge, in closed form:
+    // (n−1)² leaf writes (each iteration retires alive−1 cells and
+    // LW-updates alive−2), each walking the full root-ward path. At
+    // n=2000, p=8 every shard holds exactly 249875 cells → 2^18-leaf
+    // trees → 19 nodes per path.
+    let n = 2000u64;
+    assert_eq!(eager.stats.index_ops, (n - 1) * (n - 1) * 19);
+    assert_eq!(eager.stats.idx_waves, 0);
+    assert!(batched.stats.idx_waves > 0);
+
+    // The acceptance bar: the wave shares root-ward paths across the
+    // iteration's write set — ≥1.5× fewer realized tree-node writes.
+    assert!(
+        batched.stats.index_ops * 3 <= eager.stats.index_ops * 2,
+        "batched {} vs eager {} — win < 1.5×",
+        batched.stats.index_ops,
+        eager.stats.index_ops
+    );
+}
+
+#[test]
+fn maintenance_policies_with_heavy_ties_property() {
+    // Duplicated minima everywhere: the flushed tree's left-bias
+    // tie-break must pick the same lowest global index eager picks,
+    // across partition kinds and rank counts.
+    prop_run(Config::cases(10), |rng| {
+        let n = rng.range(4, 24);
+        let p = rng.range(2, 7);
+        let kind = [PartitionKind::BalancedCells, PartitionKind::WholeRows, PartitionKind::Cyclic]
+            [rng.below(3)];
+        let vals = [1.0f32, 2.0, 3.0];
+        let m = CondensedMatrix::from_fn(n, |_, _| vals[rng.below(3)]);
+        let serial = serial_lw_cluster(Scheme::Complete, &m);
+        for pol in [MaintenancePolicy::Eager, MaintenancePolicy::Batched] {
+            let run = ClusterConfig::new(Scheme::Complete, p)
+                .with_partition(kind)
+                .with_scan(ScanStrategy::Indexed)
+                .with_maintenance(pol)
+                .run(&m)
+                .unwrap();
+            dendrograms_equal(&serial, &run.dendrogram, 0.0)
+                .unwrap_or_else(|e| panic!("{pol} ties n={n} p={p} {kind:?}: {e}"));
+        }
+    });
+}
+
+#[test]
 fn rmsd_workload_end_to_end() {
     let e = EnsembleSpec { n: 32, residues: 30, templates: 3, noise: 0.2, bend: 1.2 }.generate(13);
     let m = rmsd_matrix(&e.structures);

@@ -33,6 +33,7 @@ fn assert_identical(a: &ClusterRun, b: &ClusterRun, ctx: &str) {
     assert_eq!(a.stats.cells_scanned, b.stats.cells_scanned, "{ctx}: cells_scanned");
     assert_eq!(a.stats.cells_updated, b.stats.cells_updated, "{ctx}: cells_updated");
     assert_eq!(a.stats.index_ops, b.stats.index_ops, "{ctx}: index_ops");
+    assert_eq!(a.stats.idx_waves, b.stats.idx_waves, "{ctx}: idx_waves");
     assert_eq!(a.stats.alive_visited, b.stats.alive_visited, "{ctx}: alive_visited");
 }
 
@@ -131,34 +132,83 @@ fn event_pool_equals_event() {
 }
 
 #[test]
-fn runtime_equivalence_covers_scan_walk_and_collective_toggles() {
-    // Cross-product of the ISSUE-1/2 toggles under both runtimes: the
+fn runtime_equivalence_covers_scan_walk_collective_and_maintenance_toggles() {
+    // Cross-product of the ISSUE-1/2/5 toggles under both runtimes: the
     // state machine must be equivalence-preserving for every path the
-    // old straight-line worker had.
+    // old straight-line worker had (the maintenance policy is inert
+    // under the full scan — covered anyway to pin that).
     let m = gaussian_matrix(36, 37);
     let serial = serial_lw_cluster(Scheme::Complete, &m);
     for scan in [ScanStrategy::Full(Engine::Scalar), ScanStrategy::Indexed] {
         for walk in [AliveWalk::Full, AliveWalk::Incremental] {
             for coll in [Collectives::Naive, Collectives::Tree] {
-                let ctx = format!(
-                    "scan={} walk={walk:?} coll={coll:?}",
-                    if matches!(scan, ScanStrategy::Indexed) { "indexed" } else { "full" }
-                );
-                let run = |rt: Runtime| {
-                    ClusterConfig::new(Scheme::Complete, 9)
-                        .with_scan(scan.clone())
-                        .with_alive_walk(walk)
-                        .with_collectives(coll)
-                        .with_runtime(rt)
-                        .run(&m)
-                        .unwrap()
-                };
-                let event = run(Runtime::Event);
-                let threads = run(Runtime::Threads);
-                assert_identical(&event, &threads, &ctx);
-                dendrograms_equal(&serial, &event.dendrogram, 0.0)
-                    .unwrap_or_else(|e| panic!("{ctx} vs serial: {e}"));
+                for pol in [MaintenancePolicy::Eager, MaintenancePolicy::Batched] {
+                    let ctx = format!(
+                        "scan={} walk={walk:?} coll={coll:?} maint={pol}",
+                        if matches!(scan, ScanStrategy::Indexed) { "indexed" } else { "full" }
+                    );
+                    let run = |rt: Runtime| {
+                        ClusterConfig::new(Scheme::Complete, 9)
+                            .with_scan(scan.clone())
+                            .with_maintenance(pol)
+                            .with_alive_walk(walk)
+                            .with_collectives(coll)
+                            .with_runtime(rt)
+                            .run(&m)
+                            .unwrap()
+                    };
+                    let event = run(Runtime::Event);
+                    let threads = run(Runtime::Threads);
+                    assert_identical(&event, &threads, &ctx);
+                    dendrograms_equal(&serial, &event.dendrogram, 0.0)
+                        .unwrap_or_else(|e| panic!("{ctx} vs serial: {e}"));
+                }
             }
+        }
+    }
+}
+
+#[test]
+fn maintenance_policies_identical_across_runtimes_and_schemes() {
+    // ISSUE-5 satellite: eager ≡ batched on every observable but the
+    // realized maintenance counters — bitwise dendrogram, virtual time
+    // (makespan AND per-rank clocks), traffic, phase breakdown — for
+    // every linkage scheme, on both runtime substrates.
+    let m = gaussian_matrix(42, 40);
+    for scheme in Scheme::all() {
+        let serial = serial_lw_cluster(*scheme, &m);
+        for rt in [Runtime::Event, Runtime::Threads] {
+            let ctx = format!("{scheme} {rt}");
+            let run = |pol: MaintenancePolicy| {
+                ClusterConfig::new(*scheme, 6)
+                    .with_scan(ScanStrategy::Indexed)
+                    .with_maintenance(pol)
+                    .with_runtime(rt)
+                    .run(&m)
+                    .unwrap()
+            };
+            let eager = run(MaintenancePolicy::Eager);
+            let batched = run(MaintenancePolicy::Batched);
+            dendrograms_equal(&eager.dendrogram, &batched.dendrogram, 0.0)
+                .unwrap_or_else(|e| panic!("{ctx}: {e}"));
+            dendrograms_equal(&serial, &batched.dendrogram, 0.0)
+                .unwrap_or_else(|e| panic!("{ctx} vs serial: {e}"));
+            assert_eq!(eager.stats.virtual_s, batched.stats.virtual_s, "{ctx}");
+            assert_eq!(eager.stats.rank_virtual_s, batched.stats.rank_virtual_s, "{ctx}");
+            assert_eq!(eager.stats.msgs_sent, batched.stats.msgs_sent, "{ctx}");
+            assert_eq!(eager.stats.bytes_sent, batched.stats.bytes_sent, "{ctx}");
+            assert_eq!(eager.stats.cells_scanned, batched.stats.cells_scanned, "{ctx}");
+            assert_eq!(eager.stats.cells_updated, batched.stats.cells_updated, "{ctx}");
+            assert_eq!(eager.stats.alive_visited, batched.stats.alive_visited, "{ctx}");
+            assert_eq!(eager.stats.phases, batched.stats.phases, "{ctx}");
+            assert!(
+                batched.stats.index_ops < eager.stats.index_ops,
+                "{ctx}: batched {} !< eager {}",
+                batched.stats.index_ops,
+                eager.stats.index_ops
+            );
+            assert_eq!(eager.stats.idx_waves, 0, "{ctx}");
+            assert!(batched.stats.idx_waves > 0, "{ctx}");
         }
     }
 }
