@@ -8,7 +8,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test verify bench artifacts clean
+.PHONY: build test verify bench bench-smoke artifacts clean
 
 build:
 	$(CARGO) build --release
@@ -27,6 +27,13 @@ bench:
 	$(CARGO) bench --bench table1_schemes -- --quick
 	$(CARGO) bench --bench ablation -- --quick
 	$(CARGO) bench --bench kernel_ops
+
+# CI shape of the P1 rank-scaling bench (PR 6): reduced P1a sweep plus
+# the full n=5000 p=1024 acceptance row (threads vs event vs steal:4,
+# all bitwise-equal, steal expected >= event throughput), regenerating
+# BENCH_scaling_p.json with measured wall-clock columns.
+bench-smoke:
+	$(CARGO) bench --bench scaling_p -- --smoke
 
 # AOT-lower the Pallas/JAX kernels to artifacts/*.hlo.txt + manifest.txt.
 # Requires jax in the Python environment (not vendored; the rust side

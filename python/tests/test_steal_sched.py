@@ -1,0 +1,184 @@
+"""Differential test for the PR 6 work-stealing event pool.
+
+Transliterates the `run_pool` scheduler core from
+`rust/src/coordinator/sched.rs` — per-shard deques of runnable rank
+tasks (owner end = right, thief end = left), per-shard injector queues
+for cross-shard wakes, ownership that moves with a steal, and a
+randomized-start round-robin victim scan — and drives the same
+``RankTask`` state machine as `test_event_runtime.py` under many random
+host interleavings.
+
+Asserted, for every (partition kind, collectives, p, shard count,
+interleaving seed) combination:
+
+1. merge sequences are identical to the blocking driver and the serial
+   f32 oracle;
+2. every rank's final virtual clock, message/byte counters, and phase
+   breakdown are *exactly* equal — the steal order may permute host
+   execution but never what a rank does;
+3. on a skewed workload ("rows" partition at large p) some interleaving
+   actually steals (the scheduler is not vacuously pinned).
+
+This is the container-side stand-in for the steal cases in
+`rust/tests/runtime_equivalence.rs` (no Rust toolchain here); the Rust
+suite pins the same invariants in CI, plus true multi-thread execution.
+"""
+
+import random
+from collections import deque
+
+from test_event_runtime import (
+    Endpoint,
+    Model,
+    Partition,
+    RankTask,
+    check_combo,
+    random_matrix,
+    run_blocking_sim,
+    serial_lw,
+)
+
+
+def run_steal_sim(kind, scheme, collectives, matrix, n, p, model, shards, seed):
+    """sched.rs run_pool transliterated, sequentially interleaved.
+
+    Python is single-threaded, so the "host schedule" is explicit: each
+    loop step picks a random shard and gives it one scheduler turn
+    (drain injector, pop own deque from the owner end, else steal from a
+    victim's thief end, poll once, deliver wakes).  Different seeds
+    exercise different interleavings; every one must be observationally
+    identical.  Returns (results, counters).
+    """
+    boxes = [[] for _ in range(p)]
+    part = Partition(kind, n, p)
+    eps = [Endpoint(r, p, model, boxes) for r in range(p)]
+    for ep in eps:
+        ep.wakes = []
+    tasks = [RankTask(eps[r], part, scheme, collectives, matrix) for r in range(p)]
+
+    nt = max(1, min(shards, p))
+    deques = [deque() for _ in range(nt)]
+    inject = [[] for _ in range(nt)]
+    owner = [r % nt for r in range(p)]  # moves with the task on steal
+    queued = [True] * p
+    for r in range(p):
+        deques[r % nt].append(r)  # seed shard r % nt, rank order
+
+    rng = random.Random(seed)
+    results = [None] * p
+    counters = {"steals": 0, "injected_wakes": 0, "parks": 0}
+    done = 0
+    while done < p:
+        if not any(deques) and not any(inject):
+            raise AssertionError("steal sim deadlocked")
+        me = rng.randrange(nt)  # the host interleaving
+        # Fold cross-shard wakes into the owner end of the deque.
+        if inject[me]:
+            deques[me].extend(inject[me])
+            inject[me].clear()
+        if deques[me]:
+            slot = deques[me].pop()  # owner pops at the bottom
+        elif nt > 1:
+            slot = None
+            start = rng.randrange(nt)  # randomized-start round-robin scan
+            for k in range(nt):
+                v = (start + k) % nt
+                if v == me or not deques[v]:
+                    continue
+                slot = deques[v].popleft()  # thief pops at the top
+                owner[slot] = me  # ownership moves with the task
+                counters["steals"] += 1
+                break
+            if slot is None:
+                continue  # park: nothing runnable on any deque
+        else:
+            continue
+        queued[slot] = False
+        pending = tasks[slot].poll()
+        if pending is None and results[slot] is None:
+            results[slot] = tasks[slot].out
+            done += 1
+        elif pending is not None:
+            counters["parks"] += 1
+        # Deliver this poll's wakes to each target's *current* owner.
+        for dst in eps[slot].wakes:
+            if queued[dst] or results[dst] is not None:
+                continue
+            queued[dst] = True
+            o = owner[dst]
+            if o == me:
+                deques[o].append(dst)
+            else:
+                inject[o].append(dst)
+                counters["injected_wakes"] += 1
+        eps[slot].wakes = []
+    return results, counters
+
+
+def check_steal_combo(kind, scheme, collectives, n, p, shards, seed):
+    matrix = random_matrix(n, seed)
+    model = Model()
+    oracle = serial_lw(scheme, matrix, n)
+    a = run_blocking_sim(kind, scheme, collectives, matrix, n, p, model)
+    total_steals = 0
+    for interleave in range(3):
+        b, counters = run_steal_sim(
+            kind, scheme, collectives, matrix, n, p, model, shards, 1000 * seed + interleave
+        )
+        ctx = (f"{kind}/{scheme}/{collectives} n={n} p={p} shards={shards} "
+               f"seed={seed} interleave={interleave}")
+        for r in range(p):
+            assert a[r]["merges"] == b[r]["merges"], f"{ctx}: rank {r} merges diverge"
+            assert a[r]["clock"] == b[r]["clock"], \
+                f"{ctx}: rank {r} clock {a[r]['clock']} != {b[r]['clock']}"
+            assert a[r]["msgs"] == b[r]["msgs"], f"{ctx}: rank {r} msgs"
+            assert a[r]["bytes"] == b[r]["bytes"], f"{ctx}: rank {r} bytes"
+            assert a[r]["phases"] == b[r]["phases"], f"{ctx}: rank {r} phases"
+        assert b[0]["merges"] == oracle, f"{ctx}: diverges from serial oracle"
+        total_steals += counters["steals"]
+    return total_steals
+
+
+def test_steal_equals_blocking_equals_serial():
+    for kind in ["balanced", "rows", "cyclic"]:
+        for collectives in ["naive", "tree"]:
+            for p, shards in [(1, 2), (2, 2), (5, 2), (7, 3), (13, 4)]:
+                check_steal_combo(kind, "complete", collectives, 20, p, shards, 200 + p)
+    # Size-dependent schemes exercise the sizes[] replication ordering.
+    for scheme in ["average", "ward"]:
+        check_steal_combo("balanced", scheme, "tree", 24, 6, 3, 17)
+
+
+def test_steal_many_ranks_and_actually_steals():
+    # The skew case the Rust acceptance test mirrors: "rows" at large p
+    # leaves late-run work concentrated on few ranks.  Observables stay
+    # bitwise; across interleavings the scheduler must migrate tasks.
+    steals = check_steal_combo("rows", "complete", "tree", 26, 24, 4, 42)
+    assert steals > 0, "no interleaving migrated a single task"
+
+
+def test_single_shard_degenerates_to_event_order():
+    # shards=1: no victims, no injections — just the event scheduler.
+    matrix = random_matrix(18, 9)
+    model = Model()
+    results, counters = run_steal_sim(
+        "balanced", "complete", "naive", matrix, 18, 5, model, 1, 3
+    )
+    assert all(r is not None for r in results)
+    assert counters["steals"] == 0
+    assert counters["injected_wakes"] == 0
+    assert results[0]["merges"] == serial_lw("complete", matrix, 18)
+
+
+def test_blocking_vs_event_baseline_still_holds():
+    # Anchor: the PR 6 harness rides on the ISSUE-3 one — keep one
+    # cross-file combo alive so a drift in either file fails both.
+    check_combo("rows", "complete", "tree", 20, 7, 11)
+
+
+if __name__ == "__main__":
+    test_steal_equals_blocking_equals_serial()
+    test_steal_many_ranks_and_actually_steals()
+    test_single_shard_degenerates_to_event_order()
+    test_blocking_vs_event_baseline_still_holds()
+    print("steal ≡ blocking ≡ serial: all combos and interleavings OK")

@@ -277,6 +277,16 @@ impl<T: Wire> Endpoint<T> {
         }
     }
 
+    /// Drain the wake log into a caller-owned buffer (appends, then
+    /// clears). Allocation-free on the scheduler hot path: the event
+    /// executors reuse one buffer across every poll instead of taking a
+    /// fresh `Vec` per send batch.
+    pub fn drain_wakes_into(&mut self, out: &mut Vec<usize>) {
+        if let Some(log) = &mut self.wake_log {
+            out.append(log);
+        }
+    }
+
     /// Account local compute over `cells` condensed cells.
     pub fn compute(&mut self, cells: usize) {
         self.clock.advance(self.model.compute_cost(cells));
@@ -398,6 +408,22 @@ mod tests {
         a.send(0, 0, 3); // self-send: no wake needed, goes to own stash
         assert_eq!(a.take_wakes(), vec![1, 2]);
         assert_eq!(a.take_wakes(), Vec::<usize>::new(), "drained");
+    }
+
+    #[test]
+    fn drain_wakes_into_appends_and_clears() {
+        let mut eps = Network::with_ranks::<u32>(3, CostModel::zero_comm());
+        let mut a = eps.remove(0);
+        let mut buf = vec![9usize]; // pre-existing contents survive
+        a.drain_wakes_into(&mut buf);
+        assert_eq!(buf, vec![9], "disabled log drains nothing");
+        a.enable_wake_log();
+        a.send(1, 0, 1);
+        a.send(2, 0, 2);
+        a.drain_wakes_into(&mut buf);
+        assert_eq!(buf, vec![9, 1, 2]);
+        a.drain_wakes_into(&mut buf);
+        assert_eq!(buf, vec![9, 1, 2], "log cleared by the drain");
     }
 
     #[test]

@@ -1,0 +1,153 @@
+//! Host-side scheduler cost table: the opt-in `--cost-model host` axis
+//! (PR 6).
+//!
+//! The canonical cost model (EXPERIMENTS.md §F2, `comm::CostModel`)
+//! prices *protocol* work — message latency, per-byte wire time,
+//! send/recv overheads, per-cell scan cost — and deliberately charges
+//! index maintenance at its policy-independent per-write price so every
+//! maintenance policy stays on one clock (PR 5). That keeps the virtual
+//! clock bitwise-identical across every runtime substrate, but it also
+//! means the clock cannot *claim* the work the realized counters
+//! (`index_ops`, `alive_visited`) already show being saved.
+//!
+//! [`HostCostModel::Host`] is the second axis: it additionally charges
+//!
+//! * scheduler overhead — one [`HostOp::Poll`] per task poll, one
+//!   [`HostOp::Steal`] per stolen task, one [`HostOp::ParkUnpark`] per
+//!   blocking point — and
+//! * the **realized** batched-maintenance cost: `Maintenance::ops ×
+//!   index_op_s` (the wave-shaped count PR 5 measured) instead of the
+//!   canonical per-write `charge`.
+//!
+//! Host mode is deterministic and reproducible only under `--runtime
+//! event` (a single-threaded scheduler polls in a deterministic order);
+//! under `threads` and the pools the poll/park counts depend on the host
+//! schedule, exactly like wall time. It is therefore never asserted
+//! bitwise across substrates — the equivalence suites all run canonical.
+//!
+//! All constants live in [`HOST_COSTS`], one table, calibrated against
+//! the §F2 overhead scale (`o ≈ 1.4 µs` per message): a condvar
+//! park/unpark round-trip costs about one message overhead, a poll is
+//! ~10× cheaper, a steal sits between (one CAS + one deque pop under a
+//! mutex), and one index op is priced at the §F2 per-cell unit so
+//! canonical `charge` and host `ops` are in the same currency.
+
+/// Which cost the virtual clock charges for scheduler and maintenance
+/// work. Selected by `--cost-model canonical|host` (combinable with a
+/// network preset, e.g. `--cost-model gbe+host`); default canonical.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum HostCostModel {
+    /// Protocol costs only (§F2 network table + per-cell scan + the
+    /// policy-independent maintenance charge). Bitwise-identical across
+    /// all runtime substrates — the repo's equivalence anchor.
+    #[default]
+    Canonical,
+    /// Canonical plus scheduler overhead (poll/steal/park) and the
+    /// realized wave-shaped maintenance cost. Deterministic under
+    /// `--runtime event` only.
+    Host,
+}
+
+impl HostCostModel {
+    /// Stats label (`RunStats::cost_model` suffix, CLI round-trip).
+    pub fn label(&self) -> &'static str {
+        match self {
+            HostCostModel::Canonical => "canonical",
+            HostCostModel::Host => "host",
+        }
+    }
+}
+
+impl std::fmt::Display for HostCostModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+impl std::str::FromStr for HostCostModel {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "canonical" => Ok(Self::Canonical),
+            "host" => Ok(Self::Host),
+            other => anyhow::bail!("unknown host cost model {other:?} (canonical|host)"),
+        }
+    }
+}
+
+/// One scheduler-level operation the host model prices.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum HostOp {
+    /// One `RankTask::poll` dispatch (state-machine re-entry, mailbox
+    /// `try_recv`).
+    Poll,
+    /// Taking a task from another shard's deque (CAS + mutex'd pop +
+    /// the cold-cache penalty of running a migrated task).
+    Steal,
+    /// One blocking point: parking on `Pending` plus the later unpark.
+    ParkUnpark,
+}
+
+/// The single host-cost calibration table (see module docs for the §F2
+/// anchoring). Seconds per operation, same currency as
+/// `comm::CostModel`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct HostCosts {
+    /// Seconds per task poll.
+    pub poll_s: f64,
+    /// Seconds per steal.
+    pub steal_s: f64,
+    /// Seconds per park + unpark round-trip.
+    pub park_unpark_s: f64,
+    /// Seconds per realized index-maintenance op (`Maintenance::ops`
+    /// unit) — equal to the §F2 per-cell cost so canonical `charge` and
+    /// host `ops` differ only by the op count, never the unit price.
+    pub index_op_s: f64,
+}
+
+/// §F2-calibrated constants. `park_unpark_s` ≈ one §F2 message overhead
+/// (o = 1.4 µs); `index_op_s` = the §F2 per-cell cost (1 ns).
+pub const HOST_COSTS: HostCosts = HostCosts {
+    poll_s: 1.2e-7,
+    steal_s: 2.5e-7,
+    park_unpark_s: 1.5e-6,
+    index_op_s: 1.0e-9,
+};
+
+impl HostCosts {
+    /// Price of one scheduler operation.
+    #[inline]
+    pub fn of(&self, op: HostOp) -> f64 {
+        match op {
+            HostOp::Poll => self.poll_s,
+            HostOp::Steal => self.steal_s,
+            HostOp::ParkUnpark => self.park_unpark_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_and_round_trips() {
+        for m in [HostCostModel::Canonical, HostCostModel::Host] {
+            assert_eq!(m.label().parse::<HostCostModel>().unwrap(), m);
+            assert_eq!(format!("{m}"), m.label());
+        }
+        assert!("hosty".parse::<HostCostModel>().is_err());
+        assert_eq!(HostCostModel::default(), HostCostModel::Canonical);
+    }
+
+    #[test]
+    fn table_prices_are_positive_and_ordered() {
+        for op in [HostOp::Poll, HostOp::Steal, HostOp::ParkUnpark] {
+            assert!(HOST_COSTS.of(op) > 0.0, "{op:?}");
+        }
+        // A park round-trip dwarfs a poll; a steal sits between.
+        assert!(HOST_COSTS.poll_s < HOST_COSTS.steal_s);
+        assert!(HOST_COSTS.steal_s < HOST_COSTS.park_unpark_s);
+        assert!(HOST_COSTS.index_op_s > 0.0);
+    }
+}

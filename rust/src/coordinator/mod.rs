@@ -12,12 +12,14 @@
 //! ranks in one process ([`Runtime::Event`], the default). Results are
 //! bitwise identical either way (DESIGN.md §Runtime).
 
+pub mod costmodel_host;
 pub mod protocol;
 pub mod sched;
 pub mod source;
 pub mod task;
 pub mod worker;
 
+pub use costmodel_host::HostCostModel;
 pub use sched::Runtime;
 pub use source::DistSource;
 
@@ -214,6 +216,10 @@ pub struct ClusterConfig {
     /// Execution substrate for the rank tasks: thread-per-rank or the
     /// event scheduler (ISSUE-3; default event — results identical).
     pub runtime: Runtime,
+    /// Whether the virtual clock also charges scheduler overhead and
+    /// realized maintenance waves (`--cost-model host`; default
+    /// canonical — the cross-substrate equivalence anchor).
+    pub host_costs: HostCostModel,
 }
 
 impl ClusterConfig {
@@ -231,6 +237,7 @@ impl ClusterConfig {
             walk: AliveWalk::default(),
             collectives: Collectives::Naive,
             runtime: Runtime::default(),
+            host_costs: HostCostModel::default(),
         }
     }
 
@@ -249,6 +256,17 @@ impl ClusterConfig {
     /// Select the cost model pricing the virtual clock.
     pub fn with_cost_model(mut self, m: CostModel) -> Self {
         self.cost_model = m;
+        self
+    }
+
+    /// Opt into (or out of) the host-cost axis: under
+    /// [`HostCostModel::Host`] the virtual clock additionally charges
+    /// scheduler overhead (poll, steal, park/unpark) and the realized
+    /// wave-shaped maintenance cost (`--cost-model host` on the CLI).
+    /// Deterministic under `Runtime::Event` only; canonical (the
+    /// default) stays bitwise identical across every substrate.
+    pub fn with_host_costs(mut self, h: HostCostModel) -> Self {
+        self.host_costs = h;
         self
     }
 
@@ -331,6 +349,7 @@ impl ClusterConfig {
             maintenance: self.maintenance,
             walk: self.walk,
             collectives: self.collectives,
+            host: self.host_costs,
         };
         let mut outputs = sched::run_ranks(self.runtime, endpoints, &ctx, &source)?;
         let wall_s = timer.elapsed_s();
@@ -364,6 +383,9 @@ impl ClusterConfig {
             index_ops: outputs.iter().map(|o| o.index_ops).sum(),
             idx_waves: outputs.iter().map(|o| o.idx_waves).sum(),
             alive_visited: outputs.iter().map(|o| o.alive_visited).sum(),
+            steals: outputs.iter().map(|o| o.steals).sum(),
+            injected_wakes: outputs.iter().map(|o| o.injected_wakes).sum(),
+            parks: outputs.iter().map(|o| o.parks).sum(),
             peak_shard_cells: outputs.iter().map(|o| o.shard_cells).max().unwrap_or(0),
             runtime: self.runtime.label(),
             p,
@@ -691,7 +713,7 @@ mod tests {
         };
         let threads = run(Runtime::Threads);
         assert_eq!(threads.stats.runtime, "threads");
-        for rt in [Runtime::Event, Runtime::EventPool(3)] {
+        for rt in [Runtime::Event, Runtime::EventPool(3), Runtime::Steal(3)] {
             let other = run(rt);
             assert_eq!(other.stats.runtime, rt.label());
             crate::validate::dendrograms_equal(&threads.dendrogram, &other.dendrogram, 0.0)
@@ -751,11 +773,40 @@ mod tests {
         // every substrate — the event schedulers run on the caller's
         // thread, so without the catch they would unwind through run().
         let m = CondensedMatrix::from_fn(4, |_, _| f32::INFINITY);
-        for rt in [Runtime::Threads, Runtime::Event, Runtime::EventPool(2)] {
+        for rt in [Runtime::Threads, Runtime::Event, Runtime::EventPool(2), Runtime::Steal(2)] {
             let res = ClusterConfig::new(Scheme::Complete, 2).with_runtime(rt).run(&m);
             let err = format!("{:#}", res.err().unwrap_or_else(|| panic!("{rt}: must fail")));
             assert!(err.contains("worker panicked"), "{rt}: {err}");
         }
+    }
+
+    #[test]
+    fn host_cost_model_charges_scheduler_overhead_deterministically() {
+        // `--cost-model host` must not change the clustering or the
+        // traffic — only the clock (more time: the same protocol plus
+        // poll/park overhead and the realized maintenance waves). Under
+        // the event runtime the poll order is deterministic, so two host
+        // runs replay bitwise.
+        let m = sample(32, 14);
+        let run = |h: HostCostModel| {
+            ClusterConfig::new(Scheme::Average, 6)
+                .with_scan(ScanStrategy::Indexed)
+                .with_host_costs(h)
+                .run(&m)
+                .unwrap()
+        };
+        let canonical = run(HostCostModel::Canonical);
+        let host = run(HostCostModel::Host);
+        dendrograms_equal(&canonical.dendrogram, &host.dendrogram, 0.0).unwrap();
+        assert_eq!(canonical.stats.msgs_sent, host.stats.msgs_sent);
+        assert_eq!(canonical.stats.bytes_sent, host.stats.bytes_sent);
+        assert_eq!(canonical.stats.index_ops, host.stats.index_ops);
+        assert_ne!(canonical.stats.virtual_s, host.stats.virtual_s);
+        let host2 = run(HostCostModel::Host);
+        assert_eq!(host.stats.virtual_s, host2.stats.virtual_s);
+        assert_eq!(host.stats.rank_virtual_s, host2.stats.rank_virtual_s);
+        assert_eq!(host.stats.parks, host2.stats.parks);
+        assert!(host.stats.parks > 0, "p=6 must block at least once");
     }
 
     #[test]

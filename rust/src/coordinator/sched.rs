@@ -1,4 +1,5 @@
-//! Rank execution substrates: thread-per-rank vs event-driven (ISSUE-3).
+//! Rank execution substrates: thread-per-rank, event-driven, and the
+//! work-stealing pool (ISSUE-3 tentpole, work stealing added in PR 6).
 //!
 //! The protocol itself lives in [`super::task::RankTask`]; this module
 //! only decides *who drives the polls*:
@@ -12,30 +13,45 @@
 //!   each send. Thousands of ranks fit in one process — p becomes a
 //!   measurable scaling axis (`benches/scaling_p.rs`).
 //! * [`Runtime::EventPool`] — the event scheduler sharded over N host
-//!   threads (static round-robin shard, not work-stealing): cross-shard
-//!   wakes are picked up by sweeping, so shards make progress without
-//!   shared queues or locks.
+//!   threads with *pinned* ownership (rank r lives on shard r % N):
+//!   cross-shard wakes go through the target shard's injector queue and
+//!   condvar, so idle shards sleep instead of sweeping (the pre-PR-6
+//!   bounded-sleep sweep fallback is gone).
+//! * [`Runtime::Steal`] — the pool with work stealing on top: each shard
+//!   owns a deque of runnable tasks (the owner pushes and pops at the
+//!   bottom); a shard that runs dry steals from the *top* of a victim
+//!   chosen by a randomized-start round-robin scan, and task ownership
+//!   moves with the steal so later wakes route to the thief's shard.
+//!   This is what keeps every host thread busy through the skewed
+//!   late-run iterations (EXPERIMENTS.md §Work-stealing A/B).
 //!
-//! All three produce bitwise-identical dendrograms and virtual times —
-//! the scheduler can only reorder *host* execution, never the per-rank
-//! operation order (see the equivalence argument in [`super::task`]).
+//! All variants produce bitwise-identical dendrograms and virtual times
+//! under the canonical cost model — a scheduler can only reorder *host*
+//! execution, never the per-rank operation order (see the equivalence
+//! argument in [`super::task`]). The `steals` / `injected_wakes` /
+//! `parks` counters are the one exception: they describe the host
+//! schedule itself, so they vary across substrates (and, for the pools,
+//! across runs) and are excluded from the equivalence suites.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 use crate::comm::Endpoint;
+use crate::coordinator::costmodel_host::HostOp;
 use crate::coordinator::protocol::ProtoMsg;
 use crate::coordinator::source::DistSource;
 use crate::coordinator::task::{Poll, RankTask, Step};
 use crate::coordinator::worker::{WorkerCtx, WorkerOutput};
+use crate::util::rng::Rng;
 
 /// Which substrate drives the `p` rank tasks.
 ///
-/// Selected by `--runtime threads|event|event:N` on the CLI and
+/// Selected by `--runtime threads|event|event:N|steal:N` on the CLI and
 /// [`ClusterConfig::with_runtime`](super::ClusterConfig::with_runtime) in
-/// code. Results are bitwise identical across all variants; only host
-/// resource usage (threads, memory locality, wall time) differs.
+/// code. Results are bitwise identical across all variants under the
+/// canonical cost model; only host resource usage (threads, memory
+/// locality, wall time) and the host-schedule counters differ.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum Runtime {
     /// One OS thread per rank, blocking on its mailbox (the paper-shaped
@@ -45,8 +61,13 @@ pub enum Runtime {
     /// thousands per process).
     #[default]
     Event,
-    /// Event scheduler statically sharded over this many host threads.
+    /// Event scheduler sharded over this many host threads with pinned
+    /// task ownership (no stealing); cross-shard wakes via injectors.
     EventPool(usize),
+    /// The sharded scheduler with work stealing: idle shards take
+    /// runnable tasks from the top of a victim's deque, and ownership
+    /// moves with the task.
+    Steal(usize),
 }
 
 impl Runtime {
@@ -56,6 +77,7 @@ impl Runtime {
             Runtime::Threads => "threads".into(),
             Runtime::Event => "event".into(),
             Runtime::EventPool(n) => format!("event:{n}"),
+            Runtime::Steal(n) => format!("steal:{n}"),
         }
     }
 }
@@ -72,17 +94,58 @@ impl std::str::FromStr for Runtime {
         match s {
             "threads" | "thread" => Ok(Self::Threads),
             "event" => Ok(Self::Event),
-            other => match other.strip_prefix("event:") {
-                Some(n) => {
+            other => {
+                if let Some(n) = other.strip_prefix("steal:") {
                     let n: usize = n
                         .parse()
-                        .map_err(|e| anyhow::anyhow!("bad event pool size {n:?}: {e}"))?;
-                    anyhow::ensure!(n >= 1, "event pool needs at least 1 thread");
-                    Ok(if n == 1 { Self::Event } else { Self::EventPool(n) })
+                        .map_err(|e| anyhow::anyhow!("bad steal pool size {n:?}: {e}"))?;
+                    anyhow::ensure!(n >= 1, "steal pool needs at least 1 thread");
+                    // A 1-shard steal pool has no victim to steal from:
+                    // it *is* the single-threaded scheduler.
+                    return Ok(if n == 1 { Self::Event } else { Self::Steal(n) });
                 }
-                None => anyhow::bail!("unknown runtime {other:?} (threads|event|event:N)"),
-            },
+                match other.strip_prefix("event:") {
+                    Some(n) => {
+                        if let Some(stripped) = n.strip_suffix('!') {
+                            anyhow::bail!(
+                                "event:{stripped}! is not a runtime — work stealing is spelled \
+                                 steal:{stripped}"
+                            );
+                        }
+                        let n: usize = n
+                            .parse()
+                            .map_err(|e| anyhow::anyhow!("bad event pool size {n:?}: {e}"))?;
+                        anyhow::ensure!(n >= 1, "event pool needs at least 1 thread");
+                        Ok(if n == 1 { Self::Event } else { Self::EventPool(n) })
+                    }
+                    None => {
+                        anyhow::bail!("unknown runtime {other:?} (threads|event|event:N|steal:N)")
+                    }
+                }
+            }
         }
+    }
+}
+
+/// Cap a requested pool width at the host's available parallelism (with
+/// a floor of 2 so the cross-shard machinery — and any `steals > 0`
+/// expectation — survives single-core containers). Oversubscribing an
+/// event pool only adds context-switch churn; warn instead of silently
+/// doing it. Observables are unaffected: the label keeps the requested
+/// width and the schedule equivalence holds at any width.
+fn clamp_pool_width(requested: usize) -> usize {
+    let avail = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
+    if requested > avail {
+        let eff = avail.max(2);
+        if eff < requested {
+            eprintln!(
+                "warning: --runtime pool width {requested} exceeds the {avail} available host \
+                 thread(s); clamping to {eff} shards (results are identical at any width)"
+            );
+        }
+        eff
+    } else {
+        requested
     }
 }
 
@@ -120,10 +183,20 @@ pub(crate) fn run_ranks(
             std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_event(tasks)))
                 .map_err(caught)?
         }
-        Runtime::EventPool(threads) => std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-            || run_event_pool(tasks, threads),
-        ))
-        .map_err(caught)?,
+        Runtime::EventPool(threads) => {
+            let nt = clamp_pool_width(threads);
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                pool::run_pool(tasks, nt, false)
+            }))
+            .map_err(caught)?
+        }
+        Runtime::Steal(threads) => {
+            let nt = clamp_pool_width(threads);
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                pool::run_pool(tasks, nt, true)
+            }))
+            .map_err(caught)?
+        }
     };
     outputs.sort_by_key(|o| o.rank);
     Ok(outputs)
@@ -141,107 +214,15 @@ fn run_threads(tasks: Vec<RankTask>) -> anyhow::Result<Vec<WorkerOutput>> {
         .collect()
 }
 
-/// Single-threaded event scheduler over all ranks: the scheduler core in
-/// standalone mode (an empty ready queue is then an immediate, provable
-/// deadlock — every possible sender lives in this loop).
-fn run_event(tasks: Vec<RankTask>) -> Vec<WorkerOutput> {
-    let abort = AtomicBool::new(false);
-    let progress = AtomicUsize::new(0);
-    sched_loop(tasks, true, &abort, &progress)
-}
-
-/// Event scheduler sharded over `threads` host threads: each shard runs
-/// the scheduler core in pool mode over a static round-robin slice of the
-/// ranks (rank r → shard r % N — keeps rank 0, the distributor, and the
-/// low ranks, the binomial-tree roots, spread out).
-///
-/// Failure containment: a panic in one shard (task protocol error) flips
-/// the shared abort flag so sibling shards stop sweeping and unwind too —
-/// the first panic then resurfaces from the scope join instead of hanging
-/// the process.
-fn run_event_pool(tasks: Vec<RankTask>, threads: usize) -> Vec<WorkerOutput> {
-    let p = tasks.len();
-    let nt = threads.clamp(1, p.max(1));
-    let mut shards: Vec<Vec<RankTask>> = (0..nt).map(|_| Vec::new()).collect();
-    for (r, t) in tasks.into_iter().enumerate() {
-        shards[r % nt].push(t);
-    }
-    let abort = AtomicBool::new(false);
-    let progress = AtomicUsize::new(0);
-    let mut outputs: Vec<WorkerOutput> = Vec::with_capacity(p);
-    let mut first_err: Option<Box<dyn std::any::Any + Send>> = None;
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = shards
-            .into_iter()
-            .map(|shard| scope.spawn(|| sched_loop(shard, false, &abort, &progress)))
-            .collect();
-        for h in handles {
-            match h.join() {
-                Ok(outs) => outputs.extend(outs),
-                Err(e) => {
-                    first_err.get_or_insert(e);
-                }
-            }
-        }
-    });
-    if let Some(e) = first_err {
-        std::panic::resume_unwind(e);
-    }
-    outputs
-}
-
-/// How long a pool shard tolerates zero *global* progress before calling
-/// the run a protocol deadlock. Progress is counted per consumed message
-/// (any poll that changes a task's resume point), not per finished rank —
-/// in this protocol every rank finishes only at the very end, so a
-/// completion-based detector would mistake any long healthy run for a
-/// hang.
-const STALL_LIMIT: std::time::Duration = std::time::Duration::from_secs(30);
-
-/// Fruitless sweeps a pool shard spins through (with `yield_now`) before
-/// it starts sleeping between sweeps — latency for the common short waits,
-/// bounded CPU burn for long cross-shard lulls.
-const SPIN_SWEEPS: u32 = 64;
-
-/// The scheduler core shared by [`run_event`] (standalone) and each
-/// [`run_event_pool`] shard.
+/// Single-threaded event scheduler over all ranks.
 ///
 /// Run-to-next-block polling with precise wakeups: a task leaves the
 /// ready queue only when its poll returns `Pending`, and re-enters when a
-/// task *in this loop* sends it a message (the transport wake log).
-///
-/// * `standalone` — this loop owns every rank: an empty ready queue with
-///   unfinished tasks is a protocol bug, reported immediately with every
-///   parked task's phase and awaited (source, tag).
-/// * pool mode — cross-shard sends produce no local wake entries, so an
-///   empty queue is routine: sweep the parked tasks (each poll re-drains
-///   its own mailbox), yield, and after [`SPIN_SWEEPS`] fruitless rounds
-///   back off to short sleeps. A sibling panic (shared `abort`) unwinds
-///   this shard too, and [`STALL_LIMIT`] without any shard consuming a
-///   message flags a genuine deadlock.
-///
-/// Progress is detected by resume-point change: a poll that consumed
-/// messages either completes the task or parks it at a new
-/// `(step, source, tag)` signature — tags encode (iteration, phase), so a
-/// signature can never repeat across iterations.
-fn sched_loop(
-    mut tasks: Vec<RankTask>,
-    standalone: bool,
-    abort: &AtomicBool,
-    progress: &AtomicUsize,
-) -> Vec<WorkerOutput> {
-    /// Flip the shared abort flag if this loop unwinds, so pool siblings
-    /// stop sweeping for messages that will never come.
-    struct AbortOnPanic<'a>(&'a AtomicBool);
-    impl Drop for AbortOnPanic<'_> {
-        fn drop(&mut self) {
-            if std::thread::panicking() {
-                self.0.store(true, Ordering::SeqCst);
-            }
-        }
-    }
-    let _guard = AbortOnPanic(abort);
-
+/// task in this loop sends it a message (the transport wake log). This
+/// loop owns every rank, so an empty ready queue with unfinished tasks is
+/// a protocol bug — reported immediately with every parked task's phase
+/// and awaited (source, tag); nothing can arrive later.
+fn run_event(mut tasks: Vec<RankTask>) -> Vec<WorkerOutput> {
     let n = tasks.len();
     for t in &mut tasks {
         t.enable_wake_log();
@@ -252,90 +233,49 @@ fn sched_loop(
     let mut ready: VecDeque<usize> = (0..n).collect();
     let mut queued = vec![true; n];
     let mut parked_at: Vec<Option<(Step, usize, u64)>> = vec![None; n];
+    let mut parks = vec![0u64; n];
     let mut outputs: Vec<Option<WorkerOutput>> = (0..n).map(|_| None).collect();
+    let mut wakes: Vec<usize> = Vec::new();
     let mut done = 0usize;
-    let mut fruitless = 0u32;
-    let mut stall_mark = (progress.load(Ordering::SeqCst), std::time::Instant::now());
     while done < n {
         let slot = match ready.pop_front() {
             Some(s) => s,
             None => {
-                let parked = |tasks: &[RankTask]| -> String {
-                    (0..n)
-                        .filter(|&s| outputs[s].is_none())
-                        .map(|s| {
-                            let (src, tag) = parked_at[s]
-                                .map_or((usize::MAX, u64::MAX), |(_, src, tag)| (src, tag));
-                            let (rank, step) = (tasks[s].rank(), tasks[s].step().name());
-                            format!("rank {rank} in {step} awaiting (src {src}, tag {tag:#x})")
-                        })
-                        .collect::<Vec<_>>()
-                        .join("; ")
-                };
-                if standalone {
-                    // Every sender lives in this loop, so nothing can
-                    // arrive later: this is a protocol bug, not a lull.
-                    panic!(
-                        "event runtime deadlock: {done}/{n} ranks done; parked: {}",
-                        parked(&tasks)
-                    );
-                }
-                if abort.load(Ordering::SeqCst) {
-                    panic!("event pool shard aborted: a sibling shard panicked");
-                }
-                let seen = progress.load(Ordering::SeqCst);
-                if seen != stall_mark.0 {
-                    stall_mark = (seen, std::time::Instant::now());
-                } else if stall_mark.1.elapsed() > STALL_LIMIT {
-                    panic!(
-                        "event pool deadlock: no rank consumed a message in {STALL_LIMIT:?}; \
-                         this shard parked: {}",
-                        parked(&tasks)
-                    );
-                }
-                // Parked on cross-shard traffic: sweep everyone once
-                // (each poll re-drains its own mailbox), then yield —
-                // or sleep once the lull outlasts the spin budget.
-                for s in 0..n {
-                    if outputs[s].is_none() && !queued[s] {
-                        queued[s] = true;
-                        ready.push_back(s);
-                    }
-                }
-                fruitless = fruitless.saturating_add(1);
-                if fruitless > SPIN_SWEEPS {
-                    std::thread::sleep(std::time::Duration::from_micros(50));
-                } else {
-                    std::thread::yield_now();
-                }
-                continue;
+                let parked = (0..n)
+                    .filter(|&s| outputs[s].is_none())
+                    .map(|s| {
+                        let (src, tag) = parked_at[s]
+                            .map_or((usize::MAX, u64::MAX), |(_, src, tag)| (src, tag));
+                        let (rank, step) = (tasks[s].rank(), tasks[s].step().name());
+                        format!("rank {rank} in {step} awaiting (src {src}, tag {tag:#x})")
+                    })
+                    .collect::<Vec<_>>()
+                    .join("; ");
+                panic!("event runtime deadlock: {done}/{n} ranks done; parked: {parked}");
             }
         };
         queued[slot] = false;
+        tasks[slot].charge_host(HostOp::Poll);
         match tasks[slot].poll() {
             Poll::Complete => {
-                outputs[slot] =
-                    Some(tasks[slot].take_output().expect("Complete poll leaves an output"));
+                let mut out = tasks[slot].take_output().expect("Complete poll leaves an output");
+                out.parks = parks[slot];
+                outputs[slot] = Some(out);
                 parked_at[slot] = None;
                 done += 1;
-                progress.fetch_add(1, Ordering::SeqCst);
-                fruitless = 0;
             }
             Poll::Pending { src, tag } => {
-                let sig = (tasks[slot].step(), src, tag);
-                if parked_at[slot] != Some(sig) {
-                    // The resume point moved: this poll consumed input.
-                    parked_at[slot] = Some(sig);
-                    progress.fetch_add(1, Ordering::SeqCst);
-                    fruitless = 0;
-                }
+                parked_at[slot] = Some((tasks[slot].step(), src, tag));
+                parks[slot] += 1;
+                tasks[slot].charge_host(HostOp::ParkUnpark);
             }
         }
         // Wake the receivers of everything this poll sent. Spurious wakes
         // (message for a later phase) cost one no-progress poll and are
         // harmless; missed wakes are impossible within a loop — every
         // message was sent by some poll, and its wake is drained here.
-        for dst in tasks[slot].take_wakes() {
+        tasks[slot].drain_wakes_into(&mut wakes);
+        for dst in wakes.drain(..) {
             if let Some(&s) = slot_of.get(&dst) {
                 if !queued[s] && outputs[s].is_none() {
                     queued[s] = true;
@@ -345,6 +285,388 @@ fn sched_loop(
         }
     }
     outputs.into_iter().map(|o| o.expect("all ranks done")).collect()
+}
+
+/// The sharded pool core shared by [`Runtime::EventPool`] (pinned) and
+/// [`Runtime::Steal`] (work stealing): per-shard deques + injector queues
+/// + condvar parking, with a per-task atomic wake protocol instead of the
+/// pre-PR-6 sweep-everything fallback.
+mod pool {
+    use super::*;
+
+    /// Task is waiting for a message; not in any queue. A waker moves it
+    /// to `QUEUED` and enqueues it on its owner shard.
+    const PARKED: u8 = 0;
+    /// Task sits in exactly one shard deque (or injector), awaiting a
+    /// poll.
+    const QUEUED: u8 = 1;
+    /// A shard is polling the task right now.
+    const RUNNING: u8 = 2;
+    /// A wake arrived mid-poll: the polling shard must requeue instead of
+    /// parking (the lost-wake guard).
+    const NOTIFIED: u8 = 3;
+    /// Protocol finished; output folded. Wakes are no-ops.
+    const DONE: u8 = 4;
+
+    /// How long a shard about to park tolerates zero global progress
+    /// (no poll and no unpark anywhere) before calling the run a
+    /// protocol deadlock. Pre-PR-6 the detector measured message-level
+    /// progress with the sweep-sleep backoff baked into its patience;
+    /// deriving it from polls + unparks means condvar parking on
+    /// genuinely-pending cross-shard traffic can never trip it — a true
+    /// deadlock stops all sends, hence all wakes, hence all polls.
+    const STALL_LIMIT: std::time::Duration = std::time::Duration::from_secs(30);
+
+    /// Condvar wait slice while parked: bounds the window in which a
+    /// termination/abort notify can be missed and paces the stall check.
+    const PARK_TICK: std::time::Duration = std::time::Duration::from_millis(1);
+
+    /// Lock ignoring poisoning: shard queues hold plain indices and no
+    /// panic can occur mid-mutation, so a sibling shard's unwind (which
+    /// poisons mutexes it held) must not cascade into lock panics here —
+    /// the shared abort flag already propagates the failure.
+    fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+        m.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// One rank task's scheduling cell.
+    struct Slot {
+        state: AtomicU8,
+        /// Shard whose queues wakes for this task route to. Moves only
+        /// when a thief pops the slot from a victim's deque — the slot is
+        /// then in no queue and `QUEUED`, so no waker is concurrently
+        /// reading a half-updated owner.
+        owner: AtomicUsize,
+        task: Mutex<Option<RankTask>>,
+        steals: AtomicU64,
+        injected_wakes: AtomicU64,
+        parks: AtomicU64,
+    }
+
+    /// One host thread's queues: the deque it owns (owner end = back,
+    /// thief end = front), the injector cross-shard wakes land in, and
+    /// the condvar it parks on when both are empty.
+    struct Shard {
+        deque: Mutex<VecDeque<usize>>,
+        inject: Mutex<Vec<usize>>,
+        cv: Condvar,
+    }
+
+    struct Pool {
+        slots: Vec<Slot>,
+        shards: Vec<Shard>,
+        /// Wake destinations are ranks; the queues hold slot indices.
+        slot_of: std::collections::HashMap<usize, usize>,
+        remaining: AtomicUsize,
+        abort: AtomicBool,
+        /// Polls + unparks, everywhere — the stall detector's food.
+        progress: AtomicU64,
+        steal: bool,
+    }
+
+    /// Run `tasks` over `threads` shards; `steal` enables work stealing
+    /// (off = the pinned `event:N` pool). Panics propagate to the caller
+    /// (first panicking shard wins) after all shards unwind.
+    pub(super) fn run_pool(
+        mut tasks: Vec<RankTask>,
+        threads: usize,
+        steal: bool,
+    ) -> Vec<WorkerOutput> {
+        let p = tasks.len();
+        let nt = threads.clamp(1, p.max(1));
+        for t in &mut tasks {
+            t.enable_wake_log();
+        }
+        let slot_of = tasks.iter().enumerate().map(|(i, t)| (t.rank(), i)).collect();
+        let slots: Vec<Slot> = tasks
+            .into_iter()
+            .enumerate()
+            .map(|(i, t)| Slot {
+                state: AtomicU8::new(QUEUED),
+                owner: AtomicUsize::new(i % nt),
+                task: Mutex::new(Some(t)),
+                steals: AtomicU64::new(0),
+                injected_wakes: AtomicU64::new(0),
+                parks: AtomicU64::new(0),
+            })
+            .collect();
+        let shards: Vec<Shard> = (0..nt)
+            .map(|_| Shard {
+                deque: Mutex::new(VecDeque::new()),
+                inject: Mutex::new(Vec::new()),
+                cv: Condvar::new(),
+            })
+            .collect();
+        // Seed shard s with slots s, s+nt, … (rank r starts on shard
+        // r % nt — keeps rank 0, the distributor, and the low ranks, the
+        // binomial-tree roots, spread out).
+        for i in 0..p {
+            plock(&shards[i % nt].deque).push_back(i);
+        }
+        let pool = Pool {
+            slots,
+            shards,
+            slot_of,
+            remaining: AtomicUsize::new(p),
+            abort: AtomicBool::new(false),
+            progress: AtomicU64::new(0),
+            steal,
+        };
+        let mut outputs: Vec<WorkerOutput> = Vec::with_capacity(p);
+        let mut first_err: Option<Box<dyn std::any::Any + Send>> = None;
+        std::thread::scope(|scope| {
+            let pool = &pool;
+            let handles: Vec<_> =
+                (0..nt).map(|me| scope.spawn(move || shard_main(pool, me))).collect();
+            for h in handles {
+                match h.join() {
+                    Ok(outs) => outputs.extend(outs),
+                    Err(e) => {
+                        first_err.get_or_insert(e);
+                    }
+                }
+            }
+        });
+        if let Some(e) = first_err {
+            std::panic::resume_unwind(e);
+        }
+        outputs
+    }
+
+    /// Flip the shared abort flag and wake every parked shard if this
+    /// shard unwinds, so siblings stop waiting for messages that will
+    /// never come and the panic resurfaces from the scope join.
+    struct AbortOnPanic<'a>(&'a Pool);
+    impl Drop for AbortOnPanic<'_> {
+        fn drop(&mut self) {
+            if std::thread::panicking() {
+                self.0.abort.store(true, Ordering::SeqCst);
+                notify_all_shards(self.0);
+            }
+        }
+    }
+
+    /// Notify every shard's condvar under its injector lock — pairs with
+    /// the park-side recheck-under-lock so the wakeup cannot be missed.
+    fn notify_all_shards(pool: &Pool) {
+        for sh in &pool.shards {
+            let _g = plock(&sh.inject);
+            sh.cv.notify_all();
+        }
+    }
+
+    /// One host thread: drain the injector, pop own work from the bottom
+    /// of the deque, steal from a victim's top when dry (steal mode), or
+    /// park on the condvar.
+    fn shard_main(pool: &Pool, me: usize) -> Vec<WorkerOutput> {
+        let _guard = AbortOnPanic(pool);
+        // Victim-scan randomization is host-only state: it chooses which
+        // runnable task runs next on which thread, never what the task
+        // does, so any seed preserves the observables.
+        let mut rng = Rng::new(0x57EA1 ^ me as u64);
+        let nt = pool.shards.len();
+        let mut outputs: Vec<WorkerOutput> = Vec::new();
+        let mut wakes: Vec<usize> = Vec::new();
+        let mut stall = (pool.progress.load(Ordering::Relaxed), std::time::Instant::now());
+        loop {
+            if pool.remaining.load(Ordering::SeqCst) == 0 {
+                return outputs;
+            }
+            if pool.abort.load(Ordering::SeqCst) {
+                panic!("event pool shard aborted: a sibling shard panicked");
+            }
+            // Cross-shard wakes land in the injector; fold them into the
+            // owner end of the deque.
+            {
+                let mut inj = plock(&pool.shards[me].inject);
+                if !inj.is_empty() {
+                    let mut dq = plock(&pool.shards[me].deque);
+                    dq.extend(inj.drain(..));
+                }
+            }
+            let mut picked = plock(&pool.shards[me].deque).pop_back().map(|s| (s, false));
+            if picked.is_none() && pool.steal && nt > 1 {
+                let start = rng.below(nt);
+                for k in 0..nt {
+                    let v = (start + k) % nt;
+                    if v == me {
+                        continue;
+                    }
+                    if let Some(s) = plock(&pool.shards[v].deque).pop_front() {
+                        // Ownership moves with the task: wakes issued
+                        // from now on route to this shard.
+                        pool.slots[s].owner.store(me, Ordering::SeqCst);
+                        pool.slots[s].steals.fetch_add(1, Ordering::Relaxed);
+                        picked = Some((s, true));
+                        break;
+                    }
+                }
+            }
+            match picked {
+                Some((slot, stolen)) => run_slot(pool, me, slot, stolen, &mut outputs, &mut wakes),
+                None => park(pool, me, &mut stall),
+            }
+        }
+    }
+
+    /// Poll one queued task; resolve its state, then deliver its wakes.
+    fn run_slot(
+        pool: &Pool,
+        me: usize,
+        slot: usize,
+        stolen: bool,
+        outputs: &mut Vec<WorkerOutput>,
+        wakes: &mut Vec<usize>,
+    ) {
+        let sl = &pool.slots[slot];
+        let prev = sl.state.swap(RUNNING, Ordering::SeqCst);
+        debug_assert_eq!(prev, QUEUED, "dequeued slot must be QUEUED");
+        let mut task = plock(&sl.task).take().expect("queued slot holds its task");
+        if stolen {
+            task.charge_host(HostOp::Steal);
+        }
+        task.charge_host(HostOp::Poll);
+        let res = task.poll();
+        pool.progress.fetch_add(1, Ordering::Relaxed);
+        // Drain the wake log while the task is in hand (deliver below,
+        // after this slot's own state is settled).
+        task.drain_wakes_into(wakes);
+        match res {
+            Poll::Complete => {
+                let mut out = task.take_output().expect("Complete poll leaves an output");
+                sl.state.store(DONE, Ordering::SeqCst);
+                // All counter updates for this slot happened-before its
+                // final dequeue (queue locks), so plain loads are exact.
+                out.steals = sl.steals.load(Ordering::Relaxed);
+                out.injected_wakes = sl.injected_wakes.load(Ordering::Relaxed);
+                out.parks = sl.parks.load(Ordering::Relaxed);
+                outputs.push(out);
+                if pool.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
+                    notify_all_shards(pool);
+                }
+            }
+            Poll::Pending { .. } => {
+                sl.parks.fetch_add(1, Ordering::Relaxed);
+                task.charge_host(HostOp::ParkUnpark);
+                // Task back in the cell BEFORE the state release: a waker
+                // that sees PARKED must find the task ready to enqueue.
+                *plock(&sl.task) = Some(task);
+                let parked = sl
+                    .state
+                    .compare_exchange(RUNNING, PARKED, Ordering::SeqCst, Ordering::SeqCst)
+                    .is_ok();
+                if !parked {
+                    // NOTIFIED: a message arrived mid-poll. Requeue here
+                    // (this shard owns the slot until someone steals it).
+                    sl.state.store(QUEUED, Ordering::SeqCst);
+                    plock(&pool.shards[me].deque).push_back(slot);
+                }
+            }
+        }
+        for dst in wakes.drain(..) {
+            if let Some(&s) = pool.slot_of.get(&dst) {
+                wake(pool, me, s);
+            }
+        }
+    }
+
+    /// Wake a task after sending it a message: `PARKED` tasks are
+    /// enqueued on the shard that currently owns them (same shard → own
+    /// deque; other shard → its injector + a condvar notify), a task
+    /// `RUNNING` elsewhere is flagged `NOTIFIED` so its shard requeues it
+    /// instead of parking, and `QUEUED`/`NOTIFIED`/`DONE` need nothing.
+    fn wake(pool: &Pool, from_shard: usize, slot: usize) {
+        let sl = &pool.slots[slot];
+        loop {
+            match sl.state.load(Ordering::SeqCst) {
+                PARKED => {
+                    if sl
+                        .state
+                        .compare_exchange(PARKED, QUEUED, Ordering::SeqCst, Ordering::SeqCst)
+                        .is_ok()
+                    {
+                        // An unpark is progress for the stall detector.
+                        pool.progress.fetch_add(1, Ordering::Relaxed);
+                        let owner = sl.owner.load(Ordering::SeqCst);
+                        if owner == from_shard {
+                            plock(&pool.shards[owner].deque).push_back(slot);
+                        } else {
+                            sl.injected_wakes.fetch_add(1, Ordering::Relaxed);
+                            let sh = &pool.shards[owner];
+                            let mut inj = plock(&sh.inject);
+                            inj.push(slot);
+                            // Notify under the injector lock: pairs with
+                            // the park-side recheck so no wake is lost.
+                            sh.cv.notify_one();
+                            drop(inj);
+                        }
+                        return;
+                    }
+                }
+                RUNNING => {
+                    if sl
+                        .state
+                        .compare_exchange(RUNNING, NOTIFIED, Ordering::SeqCst, Ordering::SeqCst)
+                        .is_ok()
+                    {
+                        return;
+                    }
+                }
+                // QUEUED | NOTIFIED | DONE: already scheduled (or over).
+                _ => return,
+            }
+        }
+    }
+
+    /// Park this shard until a cross-shard wake (or termination/abort)
+    /// arrives. The injector is rechecked under its lock before waiting,
+    /// so a notify between check and wait cannot be lost. Also hosts the
+    /// stall detector: a shard about to sleep with zero global progress
+    /// (polls + unparks) for [`STALL_LIMIT`] reports a protocol deadlock
+    /// — checked lock-free *before* taking the injector lock so the
+    /// panic never poisons it.
+    fn park(pool: &Pool, me: usize, stall: &mut (u64, std::time::Instant)) {
+        let seen = pool.progress.load(Ordering::Relaxed);
+        if seen != stall.0 {
+            *stall = (seen, std::time::Instant::now());
+        } else if stall.1.elapsed() > STALL_LIMIT {
+            panic!(
+                "event pool deadlock: no poll or unpark anywhere in {STALL_LIMIT:?}; \
+                 pending: {}",
+                parked_diag(pool)
+            );
+        }
+        let sh = &pool.shards[me];
+        let inj = plock(&sh.inject);
+        if !inj.is_empty()
+            || pool.remaining.load(Ordering::SeqCst) == 0
+            || pool.abort.load(Ordering::SeqCst)
+        {
+            return;
+        }
+        let (_g, _timeout) = sh
+            .cv
+            .wait_timeout(inj, PARK_TICK)
+            .unwrap_or_else(|e| e.into_inner());
+    }
+
+    /// Describe every unfinished task for the deadlock panic (try_lock —
+    /// a cell mid-poll on another shard is reported as such).
+    fn parked_diag(pool: &Pool) -> String {
+        let lines: Vec<String> = pool
+            .slots
+            .iter()
+            .filter(|sl| sl.state.load(Ordering::SeqCst) != DONE)
+            .map(|sl| match sl.task.try_lock() {
+                Ok(cell) => match cell.as_ref() {
+                    Some(t) => format!("rank {} in {}", t.rank(), t.step().name()),
+                    None => "a task mid-poll".into(),
+                },
+                Err(_) => "a task cell busy".into(),
+            })
+            .collect();
+        lines.join("; ")
+    }
 }
 
 #[cfg(test)]
@@ -364,8 +686,21 @@ mod tests {
     }
 
     #[test]
+    fn steal_runtime_parses() {
+        assert_eq!("steal:4".parse::<Runtime>().unwrap(), Runtime::Steal(4));
+        // steal:1 has no victim — it is the single-threaded scheduler.
+        assert_eq!("steal:1".parse::<Runtime>().unwrap(), Runtime::Event);
+        assert!("steal:0".parse::<Runtime>().is_err());
+        assert!("steal:x".parse::<Runtime>().is_err());
+        assert!("steal".parse::<Runtime>().is_err());
+        // The rejected pseudo-alias: event:N! must point at steal:N.
+        let err = "event:4!".parse::<Runtime>().unwrap_err().to_string();
+        assert!(err.contains("steal:4"), "{err}");
+    }
+
+    #[test]
     fn runtime_labels_round_trip() {
-        for rt in [Runtime::Threads, Runtime::Event, Runtime::EventPool(3)] {
+        for rt in [Runtime::Threads, Runtime::Event, Runtime::EventPool(3), Runtime::Steal(3)] {
             assert_eq!(rt.label().parse::<Runtime>().unwrap(), rt);
             assert_eq!(format!("{rt}"), rt.label());
         }

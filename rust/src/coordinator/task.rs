@@ -34,11 +34,22 @@
 //!    and by arrival stamps that are themselves deterministic functions
 //!    of the sender's clock.
 //!
+//! Work stealing (PR 6) adds a fourth: a task may *migrate* between host
+//! threads between polls, but the task owns all of its state (`st`,
+//! endpoint, clock), so migration moves the whole machine — invariant 1
+//! is untouched, and the steal order can only permute host execution,
+//! never message content or match order. The opt-in host cost model
+//! ([`HostCostModel`]) deliberately relaxes invariant 3 by also charging
+//! scheduler overhead ([`RankTask::charge_host`]) and the realized
+//! maintenance waves; it is deterministic under `--runtime event` only
+//! and is never asserted across substrates.
+//!
 //! [`Endpoint::park_until_message`]: crate::comm::Endpoint::park_until_message
 
 use std::sync::Arc;
 
 use crate::comm::{global_min, Collectives, Endpoint};
+use crate::coordinator::costmodel_host::{HostCostModel, HostOp, HOST_COSTS};
 use crate::coordinator::protocol::{tag, Phase, ProtoMsg, DIST_TAG};
 use crate::coordinator::source::{DistSource, SourceKind};
 use crate::coordinator::worker::{
@@ -219,6 +230,23 @@ impl RankTask {
         self.ep.take_wakes()
     }
 
+    /// Drain the wake log into a caller-owned buffer (appends; the
+    /// schedulers reuse one buffer across polls instead of allocating a
+    /// `Vec` per send batch).
+    pub fn drain_wakes_into(&mut self, out: &mut Vec<usize>) {
+        self.ep.drain_wakes_into(out);
+    }
+
+    /// Charge one scheduler-level operation to the virtual clock under
+    /// the opt-in host cost model — a no-op under the canonical model,
+    /// which keeps the clock a pure function of the protocol (the
+    /// cross-substrate equivalence anchor).
+    pub fn charge_host(&mut self, op: HostOp) {
+        if self.ctx.host == HostCostModel::Host {
+            self.ep.clock.advance(HOST_COSTS.of(op));
+        }
+    }
+
     /// Take the finished output (present after a `Complete` poll).
     pub fn take_output(&mut self) -> Option<WorkerOutput> {
         self.output.take()
@@ -227,12 +255,20 @@ impl RankTask {
     /// Drive the machine on the current thread, parking on the mailbox
     /// whenever it blocks — the thread-per-rank runtime.
     pub fn run_blocking(mut self) -> WorkerOutput {
+        let mut parks = 0u64;
         loop {
+            self.charge_host(HostOp::Poll);
             match self.poll() {
                 Poll::Complete => {
-                    return self.take_output().expect("Complete poll leaves an output")
+                    let mut out = self.take_output().expect("Complete poll leaves an output");
+                    out.parks = parks;
+                    return out;
                 }
-                Poll::Pending { .. } => self.ep.park_until_message(),
+                Poll::Pending { .. } => {
+                    parks += 1;
+                    self.charge_host(HostOp::ParkUnpark);
+                    self.ep.park_until_message();
+                }
             }
         }
     }
@@ -723,17 +759,28 @@ impl RankTask {
             }
         }
         // The iteration's write set is complete: close it with one repair
-        // wave, then charge the canonical maintenance cost (leaf writes ×
-        // root-path length — identical across policies, so eager and
-        // batched replay the same virtual time) to the clock. The Indexed
-        // strategy is not free: it trades the O(m/p) rescan for this.
+        // wave, then charge the maintenance cost to the clock. Canonical:
+        // leaf writes × root-path length — identical across policies, so
+        // eager and batched replay the same virtual time (the Indexed
+        // strategy is not free: it trades the O(m/p) rescan for this).
+        // Host: the *realized* wave-shaped op count, so batched
+        // maintenance's savings finally reach the clock.
         let maint = {
             let st = self.st.as_mut().expect("state exists");
             st.shard.flush();
             st.shard.take_maintenance()
         };
-        if maint.charge > 0 {
-            self.ep.compute(maint.charge as usize);
+        match self.ctx.host {
+            HostCostModel::Canonical => {
+                if maint.charge > 0 {
+                    self.ep.compute(maint.charge as usize);
+                }
+            }
+            HostCostModel::Host => {
+                if maint.ops > 0 {
+                    self.ep.clock.advance(maint.ops as f64 * HOST_COSTS.index_op_s);
+                }
+            }
         }
         let now = self.ep.clock.now();
         let finished = {
@@ -781,6 +828,11 @@ impl RankTask {
             idx_waves: st.idx_waves,
             alive_visited: st.alive_visited,
             shard_cells: st.shard_cells,
+            // Host-schedule counters: the task doesn't know how it was
+            // driven; whichever scheduler ran it fills these in.
+            steals: 0,
+            injected_wakes: 0,
+            parks: 0,
         });
     }
 

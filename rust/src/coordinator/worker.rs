@@ -24,6 +24,7 @@
 //! the other ranks contribute only an FNV digest for the agreement check.
 
 use crate::comm::{Collectives, Endpoint};
+use crate::coordinator::costmodel_host::HostCostModel;
 use crate::coordinator::protocol::ProtoMsg;
 use crate::coordinator::source::DistSource;
 use crate::coordinator::{AliveWalk, ScanStrategy};
@@ -66,6 +67,16 @@ pub struct WorkerOutput {
     pub alive_visited: u64,
     /// Cells resident in this rank's shard.
     pub shard_cells: usize,
+    /// Times this task was stolen by an idle shard (`steal:N` only).
+    /// Host-schedule dependent — varies across substrates and runs, so
+    /// excluded from the equivalence suites (as are the next two).
+    pub steals: u64,
+    /// Wakes for this task that crossed shards through an injector queue
+    /// (pool runtimes only).
+    pub injected_wakes: u64,
+    /// Blocking points: polls that returned `Pending` (deterministic
+    /// under `event`; schedule-dependent elsewhere).
+    pub parks: u64,
 }
 
 /// Worker configuration (shared, cheap to clone).
@@ -84,6 +95,9 @@ pub struct WorkerCtx {
     /// Tree-repair policy for the indexed scan: per-write eager walks or
     /// one batched wave per iteration (ISSUE-5; inert under `Full`).
     pub maintenance: MaintenancePolicy,
+    /// Whether the virtual clock also charges scheduler overhead and the
+    /// realized maintenance waves (`--cost-model host`; PR 6).
+    pub host: HostCostModel,
 }
 
 /// One owned `(k,j)` cell on the step-6a send side: read it, route the

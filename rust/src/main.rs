@@ -14,7 +14,9 @@ use std::path::PathBuf;
 
 use lancew::baselines::serial_lw::{serial_lw_cluster, verify_against_definition};
 use lancew::comm::{Collectives, CostModel};
-use lancew::coordinator::{AliveWalk, ClusterConfig, DistSource, Engine, Runtime, ScanStrategy};
+use lancew::coordinator::{
+    AliveWalk, ClusterConfig, DistSource, Engine, HostCostModel, Runtime, ScanStrategy,
+};
 use lancew::data::{euclidean_matrix, io, rmsd_matrix, EnsembleSpec, GaussianSpec};
 use lancew::linkage::Scheme;
 use lancew::matrix::{MaintenancePolicy, PartitionKind};
@@ -49,13 +51,19 @@ fn print_help() {
          USAGE: lancew <cluster|validate|fig2|gen|info> [flags]\n\
          \n\
          cluster  --n 200 | --matrix file.bin | --conformations\n\
-         \x20        --scheme complete --p 8 --partition paper --cost-model nehalem\n\
+         \x20        --scheme complete --p 8 --partition paper\n\
+         \x20        --cost-model nehalem|gbe|zero[+canonical|+host] (network preset,\n\
+         \x20          optionally + the host axis: `host` also charges scheduler\n\
+         \x20          overhead and realized maintenance waves to the virtual clock;\n\
+         \x20          default canonical — bitwise identical across runtimes)\n\
          \x20        --cut 5 --scan full|indexed --engine scalar|xla --seed 42\n\
          \x20        --index-maintenance eager|batched (tree repair for --scan indexed;\n\
          \x20          default batched — one bottom-up wave per iteration instead of a\n\
          \x20          root-ward walk per write; results bitwise identical either way)\n\
-         \x20        --runtime threads|event|event:N (rank substrate; default event —\n\
-         \x20          one scheduler drives all p ranks, so p can reach the thousands)\n\
+         \x20        --runtime threads|event|event:N|steal:N (rank substrate; default\n\
+         \x20          event — one scheduler drives all p ranks, so p can reach the\n\
+         \x20          thousands; steal:N shards it over N host threads with work\n\
+         \x20          stealing for skewed late-run iterations)\n\
          \x20        --collectives naive|tree (min exchange/broadcast; tree for big p)\n\
          \x20        --alive-walk full|incremental (step-6a routing; default incremental,\n\
          \x20          closed-form k-intervals for every partition kind incl. cyclic)\n\
@@ -153,10 +161,38 @@ fn make_maintenance(args: &Args, scan: &ScanStrategy) -> anyhow::Result<Maintena
 
 /// `--runtime event` (default: the ISSUE-3 event scheduler — all ranks in
 /// one process), `--runtime event:N` (scheduler sharded over N host
-/// threads), or `--runtime threads` (one OS thread per rank). Results are
-/// bitwise identical; only host resources differ.
+/// threads, pinned ownership), `--runtime steal:N` (sharded with work
+/// stealing — PR 6), or `--runtime threads` (one OS thread per rank).
+/// Results are bitwise identical; only host resources differ.
 fn make_runtime(args: &Args) -> anyhow::Result<Runtime> {
     args.get("runtime").unwrap_or("event").parse()
+}
+
+/// `--cost-model <network>[+<host>]`: a network preset (`nehalem`
+/// (default) | `gbe` | `zero`) combined with the host axis (`canonical`
+/// (default) | `host`) in either order, '+'-separated — e.g.
+/// `--cost-model gbe+host` or bare `--cost-model host`.
+fn make_cost_model(args: &Args) -> anyhow::Result<(CostModel, HostCostModel)> {
+    let spec = args.get("cost-model").unwrap_or("nehalem");
+    let mut network: Option<CostModel> = None;
+    let mut host = HostCostModel::default();
+    for part in spec.split('+').map(str::trim).filter(|s| !s.is_empty()) {
+        match part {
+            "canonical" | "host" => host = part.parse()?,
+            other => {
+                anyhow::ensure!(
+                    network.is_none(),
+                    "--cost-model {spec:?} names more than one network preset"
+                );
+                network = Some(
+                    other
+                        .parse()
+                        .map_err(|e| anyhow::anyhow!("bad --cost-model part {other:?}: {e}"))?,
+                );
+            }
+        }
+    }
+    Ok((network.unwrap_or_else(CostModel::nehalem_cluster), host))
 }
 
 /// `--collectives naive` (default: the paper's O(p) fan-outs) or
@@ -171,7 +207,7 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     let scheme: Scheme = args.get("scheme").unwrap_or("complete").parse()?;
     let p: usize = args.parse_or("p", 4usize)?;
     let partition: PartitionKind = args.get("partition").unwrap_or("paper").parse()?;
-    let cost_model: CostModel = args.get("cost-model").unwrap_or("nehalem").parse()?;
+    let (cost_model, host_costs) = make_cost_model(args)?;
     let scan = make_scan(args)?;
     let maintenance = make_maintenance(args, &scan)?;
     let walk = make_walk(args)?;
@@ -186,6 +222,7 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     let run = ClusterConfig::new(scheme, p)
         .with_partition(partition)
         .with_cost_model(cost_model)
+        .with_host_costs(host_costs)
         .with_scan(scan)
         .with_maintenance(maintenance)
         .with_alive_walk(walk)

@@ -80,12 +80,26 @@ pub struct RunStats {
     /// plus O(1) expected-sender probes (O(n) aggregate) — see
     /// EXPERIMENTS.md §Alive-walk A/B.
     pub alive_visited: u64,
+    /// Rank tasks taken by an idle shard from another shard's deque (all
+    /// ranks; nonzero only under `steal:N`). Host-schedule counter: it
+    /// describes how the host threads divided the work, so — unlike every
+    /// counter above — it varies across substrates and runs and is
+    /// excluded from the equivalence suites (as are the next two).
+    pub steals: u64,
+    /// Wakes that crossed shards through an injector queue (pool
+    /// runtimes only; host-schedule-dependent).
+    pub injected_wakes: u64,
+    /// Blocking points: polls that returned `Pending` (deterministic
+    /// under the single-threaded `event` runtime, schedule-dependent
+    /// elsewhere).
+    pub parks: u64,
     /// Max cells resident on any single rank (§5.4 storage claim).
     pub peak_shard_cells: usize,
-    /// Execution substrate label (`"threads"`, `"event"`, `"event:N"`) —
-    /// which runtime drove the rank tasks (ISSUE-3). Informational: every
-    /// other field in this struct is identical across runtimes except
-    /// `wall_s` (host time) — that A/B is `benches/scaling_p.rs`.
+    /// Execution substrate label (`"threads"`, `"event"`, `"event:N"`,
+    /// `"steal:N"`) — which runtime drove the rank tasks (ISSUE-3).
+    /// Informational: every other field in this struct is identical
+    /// across runtimes except `wall_s` (host time) and the three
+    /// host-schedule counters above — that A/B is `benches/scaling_p.rs`.
     pub runtime: String,
     /// Ranks used — with the event runtime all of them are resident in
     /// one process, so this is also the peak concurrent rank-task count.
@@ -106,7 +120,7 @@ impl RunStats {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "n={} p={} runtime={} wall={:.3}s virt={:.6}s msgs={} ({:.1}/iter) bytes={} peak_shard={} cells scanned={} idx_ops={} idx_waves={} alive_visited={}",
+            "n={} p={} runtime={} wall={:.3}s virt={:.6}s msgs={} ({:.1}/iter) bytes={} peak_shard={} cells scanned={} idx_ops={} idx_waves={} alive_visited={} steals={} inj_wakes={} parks={}",
             self.n,
             self.p,
             if self.runtime.is_empty() { "?" } else { self.runtime.as_str() },
@@ -120,6 +134,9 @@ impl RunStats {
             self.index_ops,
             self.idx_waves,
             self.alive_visited,
+            self.steals,
+            self.injected_wakes,
+            self.parks,
         )
     }
 }

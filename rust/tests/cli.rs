@@ -39,7 +39,8 @@ fn help_documents_runtime_walk_and_maintenance_flags() {
     // has a closed stride form now (Partition::k_intervals rustdoc).
     let (ok, text) = lancew(&[]);
     assert!(ok);
-    assert!(text.contains("--runtime threads|event|event:N"), "{text}");
+    assert!(text.contains("--runtime threads|event|event:N|steal:N"), "{text}");
+    assert!(text.contains("--cost-model nehalem|gbe|zero[+canonical|+host]"), "{text}");
     assert!(text.contains("--alive-walk full|incremental"), "{text}");
     assert!(text.contains("--collectives naive|tree"), "{text}");
     assert!(text.contains("--index-maintenance eager|batched"), "{text}");
@@ -62,17 +63,63 @@ fn cluster_runtime_toggle() {
     };
     let threads = run("threads");
     let event = run("event");
+    let steal = run("steal:2");
     let grab = |t: &str, key: &str| {
         t.split(key).nth(1).and_then(|s| s.split_whitespace().next()).map(String::from)
     };
     assert_eq!(grab(&threads, "virt="), grab(&event, "virt="));
     assert_eq!(grab(&threads, "msgs="), grab(&event, "msgs="));
+    assert_eq!(grab(&event, "virt="), grab(&steal, "virt="));
+    assert_eq!(grab(&event, "msgs="), grab(&steal, "msgs="));
     let sizes = |t: &str| t.lines().find(|l| l.contains("cluster sizes")).map(String::from);
     assert_eq!(sizes(&threads), sizes(&event));
+    assert_eq!(sizes(&event), sizes(&steal));
 
     let (ok_bad, text) = lancew(&["cluster", "--n", "10", "--runtime", "fibers"]);
     assert!(!ok_bad);
     assert!(text.contains("runtime"), "{text}");
+
+    // The rejected pseudo-alias: event:N! points the user at steal:N.
+    let (ok_bang, text) = lancew(&["cluster", "--n", "10", "--runtime", "event:4!"]);
+    assert!(!ok_bang);
+    assert!(text.contains("steal:4"), "{text}");
+}
+
+#[test]
+fn cluster_cost_model_host_toggle() {
+    // PR 6: the host axis must keep the clustering and traffic and move
+    // only the clock (scheduler overhead + realized maintenance waves).
+    let run = |cm: &str| {
+        let (ok, text) = lancew(&[
+            "cluster", "--n", "50", "--p", "6", "--cost-model", cm, "--cut", "3", "--seed", "5",
+        ]);
+        assert!(ok, "{text}");
+        text
+    };
+    let canonical = run("nehalem+canonical");
+    let host = run("host"); // bare host = nehalem network + host axis
+    let grab = |t: &str, key: &str| {
+        t.split(key).nth(1).and_then(|s| s.split_whitespace().next()).map(String::from)
+    };
+    assert_eq!(grab(&canonical, "msgs="), grab(&host, "msgs="));
+    assert_ne!(grab(&canonical, "virt="), grab(&host, "virt="));
+    let sizes = |t: &str| t.lines().find(|l| l.contains("cluster sizes")).map(String::from);
+    assert_eq!(sizes(&canonical), sizes(&host));
+    // parks are reported (and deterministic under the default event
+    // runtime); p=6 must block at least once.
+    let parks: u64 = grab(&host, "parks=").and_then(|s| s.parse().ok()).unwrap_or(0);
+    assert!(parks > 0, "{host}");
+
+    // Combined spelling with a non-default network preset.
+    let combined = run("gbe+host");
+    assert_eq!(sizes(&canonical), sizes(&combined));
+
+    let (ok_bad, text) = lancew(&["cluster", "--n", "10", "--cost-model", "warp"]);
+    assert!(!ok_bad);
+    assert!(text.contains("cost-model"), "{text}");
+    let (ok_two, text) = lancew(&["cluster", "--n", "10", "--cost-model", "gbe+zero"]);
+    assert!(!ok_two);
+    assert!(text.contains("network preset"), "{text}");
 }
 
 #[test]

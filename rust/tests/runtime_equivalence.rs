@@ -1,8 +1,11 @@
-//! ISSUE-3 acceptance suite: `runtime=event ≡ runtime=threads ≡ serial`.
+//! ISSUE-3 / PR 6 acceptance suite:
+//! `runtime=steal:N ≡ event:N ≡ event ≡ threads ≡ serial`.
 //!
-//! The event scheduler may only change *who drives the polls* — never
-//! what a rank does. So for every linkage scheme × partition kind ×
-//! rank count (up to p in the thousands) the suites pin:
+//! A scheduler may only change *who drives the polls* — never what a
+//! rank does; work stealing adds task migration between host threads,
+//! which must be equally invisible. So for every linkage scheme ×
+//! partition kind × rank count (up to p in the thousands) the suites
+//! pin:
 //!
 //! * **bitwise-identical dendrograms** across both runtimes and the
 //!   serial baseline (`dendrograms_equal` with tolerance 0.0);
@@ -61,6 +64,8 @@ fn event_equals_threads_equals_serial_full_sweep() {
                 let event = run(Runtime::Event);
                 let threads = run(Runtime::Threads);
                 assert_identical(&event, &threads, &ctx);
+                let steal = run(Runtime::Steal(4));
+                assert_identical(&event, &steal, &ctx);
                 dendrograms_equal(&serial, &event.dendrogram, 0.0)
                     .unwrap_or_else(|e| panic!("{ctx} vs serial: {e}"));
             }
@@ -88,6 +93,8 @@ fn event_equals_threads_at_p1024() {
     assert_eq!(event.stats.p, 1024);
     let threads = run(Runtime::Threads);
     assert_identical(&event, &threads, "p=1024");
+    let steal = run(Runtime::Steal(4));
+    assert_identical(&event, &steal, "p=1024 steal");
     dendrograms_equal(&serial, &event.dendrogram, 0.0).unwrap();
 }
 
@@ -128,6 +135,8 @@ fn event_pool_equals_event() {
     for threads in [2usize, 5] {
         let pool = run(Runtime::EventPool(threads));
         assert_identical(&single, &pool, &format!("pool:{threads}"));
+        let steal = run(Runtime::Steal(threads));
+        assert_identical(&single, &steal, &format!("steal:{threads}"));
     }
 }
 
@@ -160,11 +169,71 @@ fn runtime_equivalence_covers_scan_walk_collective_and_maintenance_toggles() {
                     let event = run(Runtime::Event);
                     let threads = run(Runtime::Threads);
                     assert_identical(&event, &threads, &ctx);
+                    let steal = run(Runtime::Steal(3));
+                    assert_identical(&event, &steal, &ctx);
                     dendrograms_equal(&serial, &event.dendrogram, 0.0)
                         .unwrap_or_else(|e| panic!("{ctx} vs serial: {e}"));
                 }
             }
         }
+    }
+}
+
+#[test]
+fn steal_skew_stress_keeps_results_bitwise_and_actually_steals() {
+    // The PR 6 acceptance skew test: WholeRows at large p gives the
+    // low ranks big early rows and leaves most ranks nearly idle late in
+    // the run — exactly the imbalance work stealing exists for. The
+    // steal schedule must (a) change nothing observable and (b) actually
+    // migrate tasks. Steals depend on the host interleaving, so (b) is
+    // asserted over a few attempts (the initial seeding alone — 4 shards
+    // dealt 12 tasks each, drained at different speeds — makes a
+    // steal-free run vanishingly rare; retries de-flake slow CI hosts).
+    let m = gaussian_matrix(64, 39);
+    let serial = serial_lw_cluster(Scheme::Complete, &m);
+    let run = |rt: Runtime| {
+        ClusterConfig::new(Scheme::Complete, 48)
+            .with_partition(PartitionKind::WholeRows)
+            .with_collectives(Collectives::Tree)
+            .with_scan(ScanStrategy::Indexed)
+            .with_runtime(rt)
+            .run(&m)
+            .unwrap()
+    };
+    let event = run(Runtime::Event);
+    dendrograms_equal(&serial, &event.dendrogram, 0.0).unwrap();
+    let mut max_steals = 0u64;
+    for attempt in 0..5 {
+        let steal = run(Runtime::Steal(4));
+        assert_identical(&event, &steal, &format!("skew attempt {attempt}"));
+        max_steals = max_steals.max(steal.stats.steals);
+        if max_steals > 0 {
+            break;
+        }
+    }
+    assert!(max_steals > 0, "no attempt migrated a single task");
+}
+
+#[test]
+fn pool_parks_on_pending_cross_shard_traffic_without_stall_abort() {
+    // Regression for the PR 6 stall-detector re-derivation: at p=2 over
+    // 2 shards every rank 0 ↔ rank 1 message is cross-shard, so each
+    // shard repeatedly condvar-parks on genuinely-pending traffic from
+    // the other. The old message-progress detector with sweep-sleep
+    // patience could misread that as a stalled scheduler; the
+    // polls+unparks detector must let the run complete (far inside its
+    // 30 s patience) with everything bitwise equal. parks > 0 holds on
+    // every substrate: rank 0's very first poll blocks on rank 1's min.
+    let m = gaussian_matrix(32, 41);
+    let run = |rt: Runtime| {
+        ClusterConfig::new(Scheme::Average, 2).with_runtime(rt).run(&m).unwrap()
+    };
+    let event = run(Runtime::Event);
+    assert!(event.stats.parks > 0, "p=2 must block at least once");
+    for rt in [Runtime::EventPool(2), Runtime::Steal(2)] {
+        let pool = run(rt);
+        assert_identical(&event, &pool, &format!("{rt}"));
+        assert!(pool.stats.parks > 0, "{rt}: parks");
     }
 }
 
