@@ -8,7 +8,8 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test verify bench bench-smoke artifacts clean
+.PHONY: build test verify bench bench-smoke artifacts clean \
+        loom loom-mutation lint-determinism
 
 build:
 	$(CARGO) build --release
@@ -34,6 +35,30 @@ bench:
 # BENCH_scaling_p.json with measured wall-clock columns.
 bench-smoke:
 	$(CARGO) bench --bench scaling_p -- --smoke
+
+# ISSUE 7: exhaustive model checking of the pool wake protocol. Runs the
+# vendored explorer's own suite first, then the lancew `loom_` tests with
+# the util::sync shim switched to the model (`--cfg loom`). Separate
+# target dir: the cfg changes every crate's fingerprint, so sharing
+# target/ with normal builds would thrash both caches.
+loom:
+	$(CARGO) test -q -p loom
+	CARGO_TARGET_DIR=target/loom RUSTFLAGS="--cfg loom" $(CARGO) test -q --lib loom_
+
+# Mutation analysis: `--cfg loom_mutation` injects the task-cell refill
+# reorder in sched.rs, and `loom_mutation_is_caught` asserts the loom
+# suite FAILS on it — this lane is green exactly while the model suite
+# has teeth. The default-bound scenarios must still pass alongside.
+loom-mutation:
+	CARGO_TARGET_DIR=target/loom-mut RUSTFLAGS="--cfg loom --cfg loom_mutation" \
+		$(CARGO) test -q --lib loom_
+
+# The determinism lint (xtask/src/main.rs): denies wall clocks, hash
+# collections, ambient randomness, and thread-identity branching in
+# non-test library code, outside the justified allowlist; also
+# brace-balances every .rs file in the repo.
+lint-determinism:
+	$(CARGO) xtask lint
 
 # AOT-lower the Pallas/JAX kernels to artifacts/*.hlo.txt + manifest.txt.
 # Requires jax in the Python environment (not vendored; the rust side

@@ -1,0 +1,330 @@
+"""Differential harness for the xtask determinism lint (ISSUE 7).
+
+Transliterates ``xtask/src/main.rs`` — the comment/string-stripping
+lexer, the ``#[cfg(test)]`` region masking, the brace-balance check, and
+the deny-pattern scan — and then runs the *real* repo through it,
+asserting exactly what `cargo xtask lint` asserts:
+
+* every ``.rs`` file in the repo is brace/paren/bracket balanced,
+* every deny-pattern hit in non-test library code is covered by an
+  ``xtask/lint_allowlist.txt`` entry,
+* every allowlist entry matches at least one hit (no rot) and carries a
+  non-empty reason.
+
+The container has no Rust toolchain, so this transliteration is the gate
+that runs here; CI runs both and they must agree — a semantic drift
+between the two shows up as one of them going red.
+
+Run ``python3 python/tests/test_xtask_lint.py`` directly to dump the
+current hit list (handy when editing the allowlist).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[2]
+
+DENY = [
+    "Instant::now",
+    "SystemTime",
+    "HashMap",
+    "HashSet",
+    "RandomState",
+    "thread_rng",
+    "thread::current",
+    "available_parallelism",
+    "Rng::new",
+]
+
+BALANCE_ROOTS = ["rust/src", "rust/tests", "benches", "examples", "xtask/src", "vendor"]
+LINT_ROOT = "rust/src"
+ALLOWLIST = "xtask/lint_allowlist.txt"
+
+OPEN = {")": "(", "}": "{", "]": "["}
+
+
+def strip_comments_and_strings(src: str) -> str:
+    """Blank comments and string/char literals (newlines kept)."""
+    b = src
+    n = len(b)
+    out: list[str] = []
+
+    def blank(seg: str) -> None:
+        out.append("".join("\n" if c == "\n" else " " for c in seg))
+
+    i = 0
+    while i < n:
+        c = b[i]
+        if c == "/" and b[i + 1 : i + 2] == "/":
+            end = b.find("\n", i)
+            end = n if end == -1 else end
+            blank(b[i:end])
+            i = end
+        elif c == "/" and b[i + 1 : i + 2] == "*":
+            depth, j = 1, i + 2
+            while j < n and depth:
+                if b[j : j + 2] == "/*":
+                    depth, j = depth + 1, j + 2
+                elif b[j : j + 2] == "*/":
+                    depth, j = depth - 1, j + 2
+                else:
+                    j += 1
+            blank(b[i:j])
+            i = j
+        elif (c == "r" or (c == "b" and b[i + 1 : i + 2] == "r")) and (
+            (end := raw_string_end(b, i)) is not None
+        ):
+            blank(b[i:end])
+            i = end
+        elif c == '"' or (c == "b" and b[i + 1 : i + 2] == '"'):
+            j = i + (1 if c == '"' else 2)
+            while j < n:
+                if b[j] == "\\":
+                    j += 2
+                elif b[j] == '"':
+                    j += 1
+                    break
+                else:
+                    j += 1
+            j = min(j, n)
+            blank(b[i:j])
+            i = j
+        elif c == "'":
+            end = char_literal_end(b, i)
+            if end is None:
+                out.append(c)
+                i += 1
+            else:
+                blank(b[i:end])
+                i = end
+        else:
+            out.append(c)
+            i += 1
+    return "".join(out)
+
+
+def raw_string_end(b: str, i: int) -> int | None:
+    j = i + (2 if b[i] == "b" else 1)
+    if b[j - 1 : j] != "r":
+        return None
+    hashes = 0
+    while b[j : j + 1] == "#":
+        hashes += 1
+        j += 1
+    if b[j : j + 1] != '"':
+        return None
+    j += 1
+    close = '"' + "#" * hashes
+    at = b.find(close, j)
+    return len(b) if at == -1 else at + len(close)
+
+
+def char_literal_end(b: str, i: int) -> int | None:
+    nxt = b[i + 1 : i + 2]
+    if nxt == "\\":
+        j = i + 2
+        while j < len(b) and b[j] != "'":
+            j += 1
+        return min(j + 1, len(b))
+    if nxt and b[i + 2 : i + 3] == "'":
+        return i + 3
+    return None
+
+
+def check_balance(code: str) -> str | None:
+    """Return an error message, or None when balanced."""
+    stack: list[tuple[str, int]] = []
+    line = 1
+    for c in code:
+        if c == "\n":
+            line += 1
+        elif c in "({[":
+            stack.append((c, line))
+        elif c in ")}]":
+            if not stack:
+                return f"line {line}: unmatched `{c}`"
+            o, l = stack.pop()
+            if o != OPEN[c]:
+                return f"line {line}: `{c}` closes `{o}` opened at line {l}"
+    if stack:
+        o, l = stack[-1]
+        return f"unclosed `{o}` opened at line {l}"
+    return None
+
+
+def _next_nonspace(b: str, i: int) -> int | None:
+    while i < len(b):
+        if not b[i].isspace():
+            return i
+        i += 1
+    return None
+
+
+def _scan_brackets(b: str, open_at: int) -> tuple[int, str]:
+    depth, j = 0, open_at
+    while j < len(b):
+        if b[j] == "[":
+            depth += 1
+        elif b[j] == "]":
+            depth -= 1
+            if depth == 0:
+                j += 1
+                break
+        j += 1
+    return j, b[open_at:j]
+
+
+def mask_test_regions(code: str) -> str:
+    b = list(code)
+    n = len(b)
+    i = 0
+    while i < n:
+        if b[i] != "#":
+            i += 1
+            continue
+        open_at = _next_nonspace(code, i + 1)
+        if open_at is None or code[open_at] != "[":
+            i += 1
+            continue
+        # NB: scan over the *current* masked text so nested attrs inside
+        # an already-blanked region are gone; code==''.join(b) only ahead
+        # of i, which is all these helpers look at.
+        cur = "".join(b)
+        attr_start = i
+        attr_end, attr = _scan_brackets(cur, open_at)
+        norm = "".join(ch for ch in attr if not ch.isspace())
+        gated = norm == "[test]" or (
+            norm.startswith("[cfg(") and "test" in norm and "not(" not in norm
+        )
+        if not gated:
+            i = attr_end
+            continue
+        j = attr_end
+        while True:
+            nj = _next_nonspace(cur, j)
+            if nj is not None and cur[nj] == "#":
+                o = _next_nonspace(cur, nj + 1)
+                if o is not None and cur[o] == "[":
+                    j = _scan_brackets(cur, o)[0]
+                    continue
+            break
+        depth = 0
+        body_open = None
+        while j < n:
+            c = cur[j]
+            if c in "([":
+                depth += 1
+            elif c in ")]":
+                depth -= 1
+            elif c == "{" and depth == 0:
+                body_open = j
+                break
+            elif c == ";" and depth == 0:
+                break
+            j += 1
+        if body_open is not None:
+            bd, k = 0, body_open
+            while k < n:
+                if cur[k] == "{":
+                    bd += 1
+                elif cur[k] == "}":
+                    bd -= 1
+                    if bd == 0:
+                        break
+                k += 1
+            region_end = min(k + 1, n)
+        else:
+            region_end = min(j + 1, n)
+        for k in range(attr_start, region_end):
+            if b[k] != "\n":
+                b[k] = " "
+        i = region_end
+    return "".join(b)
+
+
+def rs_files(root: Path) -> list[Path]:
+    return sorted(
+        p
+        for p in root.rglob("*.rs")
+        if "target" not in p.relative_to(root).parts
+    )
+
+
+def collect_hits() -> list[tuple[str, int, str]]:
+    """(relpath, 1-based line, pattern) for non-test library code."""
+    hits = []
+    for f in rs_files(REPO / LINT_ROOT):
+        rel = f.relative_to(REPO).as_posix()
+        code = mask_test_regions(strip_comments_and_strings(f.read_text()))
+        for lineno, line in enumerate(code.split("\n"), start=1):
+            for pat in DENY:
+                if pat in line:
+                    hits.append((rel, lineno, pat))
+    return hits
+
+
+def load_allowlist() -> list[tuple[str, str, str]]:
+    entries = []
+    for raw in (REPO / ALLOWLIST).read_text().splitlines():
+        line = raw.strip()
+        if not line or line.startswith("#"):
+            continue
+        parts = [p.strip() for p in line.split("|", 2)]
+        assert len(parts) == 3, f"malformed allowlist line: {raw!r}"
+        file, pattern, reason = parts
+        assert reason, f"allowlist entry without a reason: {raw!r}"
+        assert pattern in DENY, f"allowlist names a non-denied pattern: {raw!r}"
+        entries.append((file, pattern, reason))
+    return entries
+
+
+# ---------------------------------------------------------------- tests
+
+
+def test_all_rs_files_balanced():
+    checked = 0
+    for root in BALANCE_ROOTS:
+        for f in rs_files(REPO / root):
+            code = strip_comments_and_strings(f.read_text())
+            err = check_balance(code)
+            assert err is None, f"{f.relative_to(REPO)}: {err}"
+            checked += 1
+    assert checked > 20, "walked the real repo, not an empty dir"
+
+
+def test_deny_hits_exactly_match_allowlist():
+    hits = collect_hits()
+    entries = load_allowlist()
+    covered = {(f, p) for f, p, _ in entries}
+    uncovered = [h for h in hits if (h[0], h[2]) not in covered]
+    assert not uncovered, f"deny hits without allowlist justification: {uncovered}"
+    hit_keys = {(f, p) for f, _, p in hits}
+    stale = [(f, p) for f, p, _ in entries if (f, p) not in hit_keys]
+    assert not stale, f"stale allowlist entries (match nothing): {stale}"
+
+
+def test_masking_keeps_not_test_code():
+    src = (
+        "#[cfg(test)]\nmod tests { fn a() { HashMap::new(); } }\n"
+        "#[cfg(not(test))]\nfn live() { HashSet::new(); }\n"
+        "#[cfg(all(loom, test))]\nmod lt { fn b() { thread_rng(); } }\n"
+    )
+    code = mask_test_regions(strip_comments_and_strings(src))
+    assert "HashMap" not in code
+    assert "thread_rng" not in code
+    assert "HashSet" in code
+
+
+def test_lexer_line_stability():
+    src = 'let a = "x\ny"; /* c\nc */ let b = 1; // t\n'
+    code = strip_comments_and_strings(src)
+    assert code.count("\n") == src.count("\n")
+    assert "let b = 1;" in code
+
+
+if __name__ == "__main__":
+    for rel, lineno, pat in collect_hits():
+        print(f"{rel}:{lineno}: {pat}")

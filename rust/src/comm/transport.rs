@@ -19,8 +19,14 @@
 //! host-arrival order and the first `(source, tag)` match wins — and
 //! since tags are unique per (iteration, phase) and each peer sends at
 //! most one message per tag, matching never depends on host timing.
+//!
+//! The channel is [`crate::util::sync::channel`], not `std::sync::mpsc`:
+//! same API subset, but built on the `util::sync` shim so `--cfg loom`
+//! builds can model-check the blocking-recv park/notify handoff (and the
+//! Miri/TSan lanes check plain safe code instead of std's lock-free
+//! internals).
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use crate::util::sync::channel::{channel, Receiver, Sender};
 
 use super::clock::VirtualClock;
 use super::costmodel::CostModel;
@@ -424,6 +430,26 @@ mod tests {
         assert_eq!(buf, vec![9, 1, 2]);
         a.drain_wakes_into(&mut buf);
         assert_eq!(buf, vec![9, 1, 2], "log cleared by the drain");
+    }
+
+    /// Model-check the endpoint handoff end to end: every interleaving
+    /// of a cross-thread `send` against a blocking `recv` must deliver
+    /// (the model's condvar wait never times out and never wakes
+    /// spuriously, so a lost channel notify would deadlock the model).
+    #[cfg(loom)]
+    #[test]
+    fn loom_endpoint_recv_never_misses_a_send() {
+        loom::model(|| {
+            let mut eps = Network::with_ranks::<u32>(2, CostModel::zero_comm());
+            let mut b = eps.pop().unwrap();
+            let mut a = eps.pop().unwrap();
+            let t = loom::thread::spawn(move || {
+                a.send(1, 7, 42);
+                a
+            });
+            assert_eq!(b.recv(0, 7), 42);
+            t.join().unwrap();
+        });
     }
 
     #[test]

@@ -34,8 +34,6 @@
 //! across runs) and are excluded from the equivalence suites.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 use crate::comm::Endpoint;
 use crate::coordinator::costmodel_host::HostOp;
@@ -44,6 +42,12 @@ use crate::coordinator::source::DistSource;
 use crate::coordinator::task::{Poll, RankTask, Step};
 use crate::coordinator::worker::{WorkerCtx, WorkerOutput};
 use crate::util::rng::Rng;
+// All synchronization goes through the util::sync shim (ISSUE 7): plain
+// std::sync in normal builds, the vendored loom explorer's model-aware
+// drop-ins under `--cfg loom`, so the pool's wake protocol can be
+// exhaustively model-checked (see `loom_tests` below).
+use crate::util::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use crate::util::sync::{thread, Arc, Condvar, Mutex, MutexGuard};
 
 /// Which substrate drives the `p` rank tasks.
 ///
@@ -162,7 +166,7 @@ pub(crate) fn run_ranks(
     ctx: &WorkerCtx,
     source: &Arc<DistSource>,
 ) -> anyhow::Result<Vec<WorkerOutput>> {
-    let tasks: Vec<RankTask> = endpoints
+    let mut tasks: Vec<RankTask> = endpoints
         .into_iter()
         .map(|ep| {
             let src = (ep.rank() == 0).then(|| source.clone());
@@ -185,6 +189,9 @@ pub(crate) fn run_ranks(
         }
         Runtime::EventPool(threads) => {
             let nt = clamp_pool_width(threads);
+            for t in &mut tasks {
+                t.enable_wake_log();
+            }
             std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 pool::run_pool(tasks, nt, false)
             }))
@@ -192,6 +199,9 @@ pub(crate) fn run_ranks(
         }
         Runtime::Steal(threads) => {
             let nt = clamp_pool_width(threads);
+            for t in &mut tasks {
+                t.enable_wake_log();
+            }
             std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 pool::run_pool(tasks, nt, true)
             }))
@@ -206,7 +216,7 @@ pub(crate) fn run_ranks(
 fn run_threads(tasks: Vec<RankTask>) -> anyhow::Result<Vec<WorkerOutput>> {
     let handles: Vec<_> = tasks
         .into_iter()
-        .map(|t| std::thread::spawn(move || t.run_blocking()))
+        .map(|t| thread::spawn(move || t.run_blocking()))
         .collect();
     handles
         .into_iter()
@@ -291,8 +301,73 @@ fn run_event(mut tasks: Vec<RankTask>) -> Vec<WorkerOutput> {
 /// [`Runtime::Steal`] (work stealing): per-shard deques + injector queues
 /// + condvar parking, with a per-task atomic wake protocol instead of the
 /// pre-PR-6 sweep-everything fallback.
+///
+/// The pool is generic over [`PoolTask`] so the same scheduler binary
+/// drives both the production [`RankTask`] protocol and the scripted
+/// tasks the model-checking and Miri suites use (ISSUE 7): the loom
+/// tests exercise *this exact code*, not a transliteration.
+///
+/// ### Atomic-ordering policy (ISSUE 7, loom-normalized)
+///
+/// Two tiers, nothing in between:
+///
+/// * **Protocol-bearing sites** (`Slot::state`, `Slot::owner`,
+///   `Pool::remaining`, `Pool::abort`) use `SeqCst`. This is deliberate
+///   and load-bearing: the vendored loom explorer verifies the wake
+///   protocol under *sequentially consistent* interleavings only, so
+///   `SeqCst` at every protocol site is exactly the contract the model
+///   proves. Weakening any of them to acquire/release would step
+///   outside what the model checks (the TSan lane would be the only
+///   guard), and buys nothing measurable: every one of these sites sits
+///   within a few instructions of a queue-mutex acquire/release that
+///   already pays a full fence on the architectures we target.
+/// * **Counter/heuristic sites** (`Slot::{steals, injected_wakes,
+///   parks}`, `Pool::progress`) use `Relaxed`. The counters are proven
+///   exact by happens-before through the queue locks (each site's
+///   comment states the edge); `progress` feeds only the stall
+///   detector, which needs eventual visibility on a 30-second horizon,
+///   not ordering.
 mod pool {
     use super::*;
+
+    /// A task the pool can drive: the production [`RankTask`] protocol,
+    /// or a scripted stand-in for the scheduler test suites. A task is
+    /// identified by [`rank`](PoolTask::rank), polls to `Pending` or
+    /// `Complete`, and reports the ranks it messaged so the scheduler
+    /// can wake exactly those tasks.
+    pub(super) trait PoolTask: Send + 'static {
+        /// What a completed task folds into (rank outputs for the
+        /// production protocol).
+        type Out: Send + 'static;
+        /// Stable wake address: must match the destinations this task
+        /// reports through [`drain_wakes_into`](PoolTask::drain_wakes_into).
+        fn rank(&self) -> usize;
+        /// Advance to the next blocking point or to completion.
+        fn poll_task(&mut self) -> Poll;
+        /// Account one host-side scheduler operation (no-op outside the
+        /// opt-in host cost model).
+        fn charge_host(&mut self, op: HostOp);
+        /// Append the wake destinations recorded since the last drain.
+        fn drain_wakes_into(&mut self, out: &mut Vec<usize>);
+        /// Consume the completed task, folding in the scheduler
+        /// counters.
+        fn finish(self, counters: SchedCounters) -> Self::Out;
+        /// One-line description for the deadlock diagnostic.
+        fn describe(&self) -> String;
+    }
+
+    /// Host-schedule counters folded into a task's output on completion.
+    /// They describe the host schedule itself, so they vary across
+    /// substrates and runs — excluded from the equivalence suites.
+    #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+    pub(super) struct SchedCounters {
+        /// Times this task was taken from a victim shard's deque.
+        pub(super) steals: u64,
+        /// Wakes that crossed shards through an injector queue.
+        pub(super) injected_wakes: u64,
+        /// Times the task parked on `Pending`.
+        pub(super) parks: u64,
+    }
 
     /// Task is waiting for a message; not in any queue. A waker moves it
     /// to `QUEUED` and enqueues it on its owner shard.
@@ -329,15 +404,15 @@ mod pool {
         m.lock().unwrap_or_else(|e| e.into_inner())
     }
 
-    /// One rank task's scheduling cell.
-    struct Slot {
+    /// One task's scheduling cell.
+    struct Slot<T> {
         state: AtomicU8,
         /// Shard whose queues wakes for this task route to. Moves only
         /// when a thief pops the slot from a victim's deque — the slot is
         /// then in no queue and `QUEUED`, so no waker is concurrently
         /// reading a half-updated owner.
         owner: AtomicUsize,
-        task: Mutex<Option<RankTask>>,
+        task: Mutex<Option<T>>,
         steals: AtomicU64,
         injected_wakes: AtomicU64,
         parks: AtomicU64,
@@ -352,10 +427,12 @@ mod pool {
         cv: Condvar,
     }
 
-    struct Pool {
-        slots: Vec<Slot>,
+    struct Pool<T> {
+        slots: Vec<Slot<T>>,
         shards: Vec<Shard>,
         /// Wake destinations are ranks; the queues hold slot indices.
+        /// Keyed lookup only — never iterated, so the unordered map
+        /// cannot leak host nondeterminism into observables.
         slot_of: std::collections::HashMap<usize, usize>,
         remaining: AtomicUsize,
         abort: AtomicBool,
@@ -367,18 +444,17 @@ mod pool {
     /// Run `tasks` over `threads` shards; `steal` enables work stealing
     /// (off = the pinned `event:N` pool). Panics propagate to the caller
     /// (first panicking shard wins) after all shards unwind.
-    pub(super) fn run_pool(
-        mut tasks: Vec<RankTask>,
-        threads: usize,
-        steal: bool,
-    ) -> Vec<WorkerOutput> {
+    ///
+    /// The shards are plain `thread::spawn` threads sharing the pool by
+    /// `Arc` rather than `std::thread::scope` borrows: the spawn/join
+    /// pair is the API subset the loom shim models, which is what lets
+    /// the `loom_tests` below run this function — unchanged — inside
+    /// `loom::model`.
+    pub(super) fn run_pool<T: PoolTask>(tasks: Vec<T>, threads: usize, steal: bool) -> Vec<T::Out> {
         let p = tasks.len();
         let nt = threads.clamp(1, p.max(1));
-        for t in &mut tasks {
-            t.enable_wake_log();
-        }
         let slot_of = tasks.iter().enumerate().map(|(i, t)| (t.rank(), i)).collect();
-        let slots: Vec<Slot> = tasks
+        let slots: Vec<Slot<T>> = tasks
             .into_iter()
             .enumerate()
             .map(|(i, t)| Slot {
@@ -403,7 +479,7 @@ mod pool {
         for i in 0..p {
             plock(&shards[i % nt].deque).push_back(i);
         }
-        let pool = Pool {
+        let pool = Arc::new(Pool {
             slots,
             shards,
             slot_of,
@@ -411,22 +487,23 @@ mod pool {
             abort: AtomicBool::new(false),
             progress: AtomicU64::new(0),
             steal,
-        };
-        let mut outputs: Vec<WorkerOutput> = Vec::with_capacity(p);
+        });
+        let mut outputs: Vec<T::Out> = Vec::with_capacity(p);
         let mut first_err: Option<Box<dyn std::any::Any + Send>> = None;
-        std::thread::scope(|scope| {
-            let pool = &pool;
-            let handles: Vec<_> =
-                (0..nt).map(|me| scope.spawn(move || shard_main(pool, me))).collect();
-            for h in handles {
-                match h.join() {
-                    Ok(outs) => outputs.extend(outs),
-                    Err(e) => {
-                        first_err.get_or_insert(e);
-                    }
+        let handles: Vec<_> = (0..nt)
+            .map(|me| {
+                let pool = Arc::clone(&pool);
+                thread::spawn(move || shard_main(&pool, me))
+            })
+            .collect();
+        for h in handles {
+            match h.join() {
+                Ok(outs) => outputs.extend(outs),
+                Err(e) => {
+                    first_err.get_or_insert(e);
                 }
             }
-        });
+        }
         if let Some(e) = first_err {
             std::panic::resume_unwind(e);
         }
@@ -435,11 +512,14 @@ mod pool {
 
     /// Flip the shared abort flag and wake every parked shard if this
     /// shard unwinds, so siblings stop waiting for messages that will
-    /// never come and the panic resurfaces from the scope join.
-    struct AbortOnPanic<'a>(&'a Pool);
-    impl Drop for AbortOnPanic<'_> {
+    /// never come and the panic resurfaces from the join loop.
+    struct AbortOnPanic<'a, T: PoolTask>(&'a Pool<T>);
+    impl<T: PoolTask> Drop for AbortOnPanic<'_, T> {
         fn drop(&mut self) {
             if std::thread::panicking() {
+                // SeqCst (protocol): the flag must be globally ordered
+                // before the notify so an unparked sibling's SeqCst load
+                // observes it.
                 self.0.abort.store(true, Ordering::SeqCst);
                 notify_all_shards(self.0);
             }
@@ -448,7 +528,7 @@ mod pool {
 
     /// Notify every shard's condvar under its injector lock — pairs with
     /// the park-side recheck-under-lock so the wakeup cannot be missed.
-    fn notify_all_shards(pool: &Pool) {
+    fn notify_all_shards<T: PoolTask>(pool: &Pool<T>) {
         for sh in &pool.shards {
             let _g = plock(&sh.inject);
             sh.cv.notify_all();
@@ -458,20 +538,25 @@ mod pool {
     /// One host thread: drain the injector, pop own work from the bottom
     /// of the deque, steal from a victim's top when dry (steal mode), or
     /// park on the condvar.
-    fn shard_main(pool: &Pool, me: usize) -> Vec<WorkerOutput> {
+    fn shard_main<T: PoolTask>(pool: &Pool<T>, me: usize) -> Vec<T::Out> {
         let _guard = AbortOnPanic(pool);
         // Victim-scan randomization is host-only state: it chooses which
         // runnable task runs next on which thread, never what the task
         // does, so any seed preserves the observables.
         let mut rng = Rng::new(0x57EA1 ^ me as u64);
         let nt = pool.shards.len();
-        let mut outputs: Vec<WorkerOutput> = Vec::new();
+        let mut outputs: Vec<T::Out> = Vec::new();
         let mut wakes: Vec<usize> = Vec::new();
         let mut stall = (pool.progress.load(Ordering::Relaxed), std::time::Instant::now());
         loop {
+            // SeqCst (protocol): pairs with the `fetch_sub` in `run_slot`
+            // — the shard that retires the last task is globally ordered
+            // before every later check here, so no shard spins past
+            // termination.
             if pool.remaining.load(Ordering::SeqCst) == 0 {
                 return outputs;
             }
+            // SeqCst (protocol): pairs with the store in `AbortOnPanic`.
             if pool.abort.load(Ordering::SeqCst) {
                 panic!("event pool shard aborted: a sibling shard panicked");
             }
@@ -494,8 +579,17 @@ mod pool {
                     }
                     if let Some(s) = plock(&pool.shards[v].deque).pop_front() {
                         // Ownership moves with the task: wakes issued
-                        // from now on route to this shard.
+                        // from now on route to this shard. SeqCst
+                        // (protocol): a waker's `owner` load after its
+                        // PARKED→QUEUED CAS must see either the old or
+                        // the new owner, never a stale value reordered
+                        // past the state transition — the loom
+                        // `steal_ownership_move` scenario checks exactly
+                        // this edge.
                         pool.slots[s].owner.store(me, Ordering::SeqCst);
+                        // Relaxed (counter): only this thief touches the
+                        // slot until it is requeued; the final read in
+                        // `run_slot` is ordered by the queue locks.
                         pool.slots[s].steals.fetch_add(1, Ordering::Relaxed);
                         picked = Some((s, true));
                         break;
@@ -510,15 +604,18 @@ mod pool {
     }
 
     /// Poll one queued task; resolve its state, then deliver its wakes.
-    fn run_slot(
-        pool: &Pool,
+    fn run_slot<T: PoolTask>(
+        pool: &Pool<T>,
         me: usize,
         slot: usize,
         stolen: bool,
-        outputs: &mut Vec<WorkerOutput>,
+        outputs: &mut Vec<T::Out>,
         wakes: &mut Vec<usize>,
     ) {
         let sl = &pool.slots[slot];
+        // SeqCst (protocol): QUEUED→RUNNING opens the NOTIFIED window —
+        // a waker's CAS from RUNNING must be globally ordered against
+        // this swap and the parking CAS below.
         let prev = sl.state.swap(RUNNING, Ordering::SeqCst);
         debug_assert_eq!(prev, QUEUED, "dequeued slot must be QUEUED");
         let mut task = plock(&sl.task).take().expect("queued slot holds its task");
@@ -526,31 +623,53 @@ mod pool {
             task.charge_host(HostOp::Steal);
         }
         task.charge_host(HostOp::Poll);
-        let res = task.poll();
+        let res = task.poll_task();
+        // Relaxed (heuristic): feeds only the stall detector, which
+        // needs eventual visibility on a 30-second horizon, not order.
         pool.progress.fetch_add(1, Ordering::Relaxed);
         // Drain the wake log while the task is in hand (deliver below,
         // after this slot's own state is settled).
         task.drain_wakes_into(wakes);
         match res {
             Poll::Complete => {
-                let mut out = task.take_output().expect("Complete poll leaves an output");
-                sl.state.store(DONE, Ordering::SeqCst);
                 // All counter updates for this slot happened-before its
-                // final dequeue (queue locks), so plain loads are exact.
-                out.steals = sl.steals.load(Ordering::Relaxed);
-                out.injected_wakes = sl.injected_wakes.load(Ordering::Relaxed);
-                out.parks = sl.parks.load(Ordering::Relaxed);
-                outputs.push(out);
+                // final dequeue (queue locks), so relaxed loads are exact.
+                let counters = SchedCounters {
+                    steals: sl.steals.load(Ordering::Relaxed),
+                    injected_wakes: sl.injected_wakes.load(Ordering::Relaxed),
+                    parks: sl.parks.load(Ordering::Relaxed),
+                };
+                // SeqCst (protocol): DONE turns late wakes into no-ops;
+                // must not sink below the `remaining` release.
+                sl.state.store(DONE, Ordering::SeqCst);
+                outputs.push(task.finish(counters));
+                // SeqCst (protocol): the termination edge — pairs with
+                // the `remaining` load at the top of `shard_main` and
+                // the recheck inside `park`.
                 if pool.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
                     notify_all_shards(pool);
                 }
             }
             Poll::Pending { .. } => {
+                // Relaxed (counter): only the polling shard increments,
+                // and the completing poll's read is program-ordered after.
                 sl.parks.fetch_add(1, Ordering::Relaxed);
                 task.charge_host(HostOp::ParkUnpark);
                 // Task back in the cell BEFORE the state release: a waker
-                // that sees PARKED must find the task ready to enqueue.
-                *plock(&sl.task) = Some(task);
+                // that sees PARKED must find the task ready to enqueue,
+                // and a thief that pops the requeued slot must find it
+                // ready to take. The `loom_mutation` build moves the
+                // refill to *after* the transition, and the loom suite
+                // must catch the resulting stolen-empty-cell window
+                // (`loom_mutation_is_caught`).
+                #[cfg(not(loom_mutation))]
+                {
+                    *plock(&sl.task) = Some(task);
+                }
+                // SeqCst (protocol): the lost-wake guard. A waker that
+                // CASes RUNNING→NOTIFIED forces the failure arm here; a
+                // successful park is globally ordered so a later waker
+                // sees PARKED and enqueues.
                 let parked = sl
                     .state
                     .compare_exchange(RUNNING, PARKED, Ordering::SeqCst, Ordering::SeqCst)
@@ -560,6 +679,13 @@ mod pool {
                     // (this shard owns the slot until someone steals it).
                     sl.state.store(QUEUED, Ordering::SeqCst);
                     plock(&pool.shards[me].deque).push_back(slot);
+                }
+                // Injected fault (ISSUE 7 mutation test): refilling the
+                // cell only after the slot is visible as QUEUED lets a
+                // thief pop it and find the cell empty.
+                #[cfg(loom_mutation)]
+                {
+                    *plock(&sl.task) = Some(task);
                 }
             }
         }
@@ -575,22 +701,34 @@ mod pool {
     /// deque; other shard → its injector + a condvar notify), a task
     /// `RUNNING` elsewhere is flagged `NOTIFIED` so its shard requeues it
     /// instead of parking, and `QUEUED`/`NOTIFIED`/`DONE` need nothing.
-    fn wake(pool: &Pool, from_shard: usize, slot: usize) {
+    fn wake<T: PoolTask>(pool: &Pool<T>, from_shard: usize, slot: usize) {
         let sl = &pool.slots[slot];
         loop {
+            // SeqCst (protocol): every arm below is a CAS on the same
+            // cell; the load only picks the arm, the CAS decides.
             match sl.state.load(Ordering::SeqCst) {
                 PARKED => {
+                    // SeqCst (protocol): winning PARKED→QUEUED grants
+                    // this waker sole enqueue rights for the slot.
                     if sl
                         .state
                         .compare_exchange(PARKED, QUEUED, Ordering::SeqCst, Ordering::SeqCst)
                         .is_ok()
                     {
                         // An unpark is progress for the stall detector.
+                        // Relaxed (heuristic), as at the poll site.
                         pool.progress.fetch_add(1, Ordering::Relaxed);
+                        // SeqCst (protocol): ordered after the CAS, so a
+                        // concurrent steal's owner store (which requires
+                        // the slot QUEUED-in-a-deque, impossible here)
+                        // can never interleave — we read a stable owner.
                         let owner = sl.owner.load(Ordering::SeqCst);
                         if owner == from_shard {
                             plock(&pool.shards[owner].deque).push_back(slot);
                         } else {
+                            // Relaxed (counter): exact because only
+                            // CAS-winning wakers increment, and each is
+                            // ordered by the injector lock it then takes.
                             sl.injected_wakes.fetch_add(1, Ordering::Relaxed);
                             let sh = &pool.shards[owner];
                             let mut inj = plock(&sh.inject);
@@ -604,6 +742,11 @@ mod pool {
                     }
                 }
                 RUNNING => {
+                    // SeqCst (protocol): RUNNING→NOTIFIED races the
+                    // poller's RUNNING→PARKED CAS; exactly one wins, and
+                    // the loser's arm (requeue here, retry there) closes
+                    // the lost-wake window. This is the edge the loom
+                    // suite exercises hardest.
                     if sl
                         .state
                         .compare_exchange(RUNNING, NOTIFIED, Ordering::SeqCst, Ordering::SeqCst)
@@ -625,7 +768,7 @@ mod pool {
     /// (polls + unparks) for [`STALL_LIMIT`] reports a protocol deadlock
     /// — checked lock-free *before* taking the injector lock so the
     /// panic never poisons it.
-    fn park(pool: &Pool, me: usize, stall: &mut (u64, std::time::Instant)) {
+    fn park<T: PoolTask>(pool: &Pool<T>, me: usize, stall: &mut (u64, std::time::Instant)) {
         let seen = pool.progress.load(Ordering::Relaxed);
         if seen != stall.0 {
             *stall = (seen, std::time::Instant::now());
@@ -638,6 +781,10 @@ mod pool {
         }
         let sh = &pool.shards[me];
         let inj = plock(&sh.inject);
+        // Recheck under the injector lock: a waker/terminator holds this
+        // lock when it notifies, so either its update is visible here or
+        // its notify lands after we wait — never a lost wake. (SeqCst on
+        // the two loads: the protocol tier, same pairing as shard_main.)
         if !inj.is_empty()
             || pool.remaining.load(Ordering::SeqCst) == 0
             || pool.abort.load(Ordering::SeqCst)
@@ -652,20 +799,273 @@ mod pool {
 
     /// Describe every unfinished task for the deadlock panic (try_lock —
     /// a cell mid-poll on another shard is reported as such).
-    fn parked_diag(pool: &Pool) -> String {
+    fn parked_diag<T: PoolTask>(pool: &Pool<T>) -> String {
         let lines: Vec<String> = pool
             .slots
             .iter()
             .filter(|sl| sl.state.load(Ordering::SeqCst) != DONE)
             .map(|sl| match sl.task.try_lock() {
                 Ok(cell) => match cell.as_ref() {
-                    Some(t) => format!("rank {} in {}", t.rank(), t.step().name()),
+                    Some(t) => t.describe(),
                     None => "a task mid-poll".into(),
                 },
                 Err(_) => "a task cell busy".into(),
             })
             .collect();
         lines.join("; ")
+    }
+}
+
+/// The production protocol task, plugged into the generic pool.
+impl pool::PoolTask for RankTask {
+    type Out = WorkerOutput;
+
+    fn rank(&self) -> usize {
+        RankTask::rank(self)
+    }
+
+    fn poll_task(&mut self) -> Poll {
+        self.poll()
+    }
+
+    fn charge_host(&mut self, op: HostOp) {
+        RankTask::charge_host(self, op);
+    }
+
+    fn drain_wakes_into(&mut self, out: &mut Vec<usize>) {
+        RankTask::drain_wakes_into(self, out);
+    }
+
+    fn finish(mut self, counters: pool::SchedCounters) -> WorkerOutput {
+        let mut out = self.take_output().expect("Complete poll leaves an output");
+        out.steals = counters.steals;
+        out.injected_wakes = counters.injected_wakes;
+        out.parks = counters.parks;
+        out
+    }
+
+    fn describe(&self) -> String {
+        format!("rank {} in {}", RankTask::rank(self), self.step().name())
+    }
+}
+
+/// Scripted stand-in tasks for the scheduler suites (ISSUE 7): a
+/// deterministic send/recv script over plain shared mailboxes, so the
+/// loom model checker and the Miri/TSan lanes can drive [`pool::run_pool`]
+/// — the exact production scheduler — without the full LW protocol.
+#[cfg(test)]
+mod script {
+    use super::pool::{PoolTask, SchedCounters};
+    use super::*;
+
+    /// One scripted action: deliver `(self.rank, tag)` into `dst`'s
+    /// mailbox, or block until `(src, tag)` is in ours.
+    #[derive(Clone, Copy, Debug)]
+    pub(super) enum Act {
+        Send(usize, u64),
+        Recv(usize, u64),
+    }
+
+    /// Per-rank mailboxes. Deliberately plain `std::sync` (not the shim):
+    /// under loom only one thread runs at a time, so these locks never
+    /// contend, add no scheduling points, and keep the explored state
+    /// space focused on the *scheduler's* atomics — the thing under test.
+    pub(super) type Mail = std::sync::Arc<Vec<std::sync::Mutex<Vec<(usize, u64)>>>>;
+
+    pub(super) struct ScriptTask {
+        rank: usize,
+        script: VecDeque<Act>,
+        mail: Mail,
+        wakes: Vec<usize>,
+    }
+
+    impl ScriptTask {
+        fn new(rank: usize, script: Vec<Act>, mail: Mail) -> Self {
+            ScriptTask { rank, script: script.into(), mail, wakes: Vec::new() }
+        }
+    }
+
+    impl PoolTask for ScriptTask {
+        type Out = (usize, SchedCounters);
+
+        fn rank(&self) -> usize {
+            self.rank
+        }
+
+        fn poll_task(&mut self) -> Poll {
+            while let Some(&act) = self.script.front() {
+                match act {
+                    Act::Send(dst, tag) => {
+                        self.script.pop_front();
+                        self.mail[dst].lock().unwrap().push((self.rank, tag));
+                        if dst != self.rank {
+                            self.wakes.push(dst);
+                        }
+                    }
+                    Act::Recv(src, tag) => {
+                        let mut mb = self.mail[self.rank].lock().unwrap();
+                        match mb.iter().position(|&m| m == (src, tag)) {
+                            Some(at) => {
+                                mb.remove(at);
+                                drop(mb);
+                                self.script.pop_front();
+                            }
+                            // Parks exactly like a RankTask awaiting a
+                            // protocol message.
+                            None => return Poll::Pending { src, tag },
+                        }
+                    }
+                }
+            }
+            Poll::Complete
+        }
+
+        fn charge_host(&mut self, _op: HostOp) {}
+
+        fn drain_wakes_into(&mut self, out: &mut Vec<usize>) {
+            out.append(&mut self.wakes);
+        }
+
+        fn finish(self, counters: SchedCounters) -> (usize, SchedCounters) {
+            assert!(self.script.is_empty(), "finished task has no pending acts");
+            (self.rank, counters)
+        }
+
+        fn describe(&self) -> String {
+            format!("script rank {} ({} act(s) left)", self.rank, self.script.len())
+        }
+    }
+
+    /// Build the tasks for `specs`, run them on the pool, and assert the
+    /// invariants every correct schedule must satisfy: each rank
+    /// completes exactly once and every sent message was consumed.
+    pub(super) fn run_scenario(specs: &[(usize, &[Act])], threads: usize, steal: bool) {
+        let p = specs.len();
+        let mail: Mail =
+            std::sync::Arc::new((0..p).map(|_| std::sync::Mutex::new(Vec::new())).collect());
+        let tasks: Vec<ScriptTask> = specs
+            .iter()
+            .map(|&(rank, script)| ScriptTask::new(rank, script.to_vec(), mail.clone()))
+            .collect();
+        let outs = pool::run_pool(tasks, threads, steal);
+        let mut ranks: Vec<usize> = outs.iter().map(|&(r, _)| r).collect();
+        ranks.sort_unstable();
+        assert_eq!(ranks, (0..p).collect::<Vec<_>>(), "every rank completed exactly once");
+        for (r, mb) in mail.iter().enumerate() {
+            assert!(mb.lock().unwrap().is_empty(), "rank {r}: mailbox not drained");
+        }
+    }
+
+    /// The lost-wake gauntlet: rank 0 parks awaiting a message rank 1
+    /// sends from the other shard. Every interleaving must thread the
+    /// RUNNING→PARKED / RUNNING→NOTIFIED race correctly or rank 0 sleeps
+    /// forever (which the model reports as a deadlock — its condvar
+    /// waits never time out).
+    pub(super) const PARK_WAKE: &[(usize, &[Act])] =
+        &[(0, &[Act::Recv(1, 1)]), (1, &[Act::Send(0, 1)])];
+
+    /// Ownership moves with a steal: rank 1's shard goes dry immediately
+    /// and steals; the rank-0 → rank-2 wake must route to whichever
+    /// shard owns rank 2 *at wake time* (the `owner` load ordering).
+    pub(super) const STEAL_MOVE: &[(usize, &[Act])] =
+        &[(0, &[Act::Send(2, 5)]), (1, &[]), (2, &[Act::Recv(0, 5)])];
+}
+
+/// The scripted scenarios on real unmodeled threads: the targets the
+/// Miri lane drives (test filter `sched::`), and a cheap native smoke
+/// for the same schedules the loom suite explores exhaustively.
+#[cfg(test)]
+mod pool_tests {
+    use super::script::{run_scenario, Act, PARK_WAKE, STEAL_MOVE};
+
+    #[test]
+    fn pool_park_wake_pinned() {
+        run_scenario(PARK_WAKE, 2, false);
+    }
+
+    #[test]
+    fn pool_park_wake_steal() {
+        run_scenario(PARK_WAKE, 2, true);
+    }
+
+    #[test]
+    fn pool_steal_ownership_move() {
+        run_scenario(STEAL_MOVE, 2, true);
+    }
+
+    #[test]
+    fn pool_message_ring() {
+        // Each rank sends to its successor, then receives from its
+        // predecessor — enough cross-shard traffic to exercise the
+        // injector path from every shard.
+        let p = 4;
+        let scripts: Vec<Vec<Act>> = (0..p)
+            .map(|i| {
+                let prev = (i + p - 1) % p;
+                vec![Act::Send((i + 1) % p, i as u64), Act::Recv(prev, prev as u64)]
+            })
+            .collect();
+        let specs: Vec<(usize, &[Act])> =
+            scripts.iter().enumerate().map(|(i, s)| (i, s.as_slice())).collect();
+        run_scenario(&specs, 2, true);
+    }
+}
+
+/// Exhaustive model checking of the pool's wake protocol (ISSUE 7
+/// tentpole). Compiled only under `--cfg loom` (`make loom`); each test
+/// runs its scenario under every thread interleaving the vendored
+/// explorer generates within its preemption bound.
+#[cfg(all(loom, test))]
+mod loom_tests {
+    use super::script::{run_scenario, PARK_WAKE, STEAL_MOVE};
+
+    /// Lost-wake CAS protocol + injector wakeup + NOTIFIED requeue +
+    /// termination notify on the pinned pool (default preemption
+    /// bound 2).
+    #[test]
+    fn loom_park_wake_protocol_pinned() {
+        loom::model(|| run_scenario(PARK_WAKE, 2, false));
+    }
+
+    /// A steal moves ownership mid-run; the wake must route to the
+    /// thief's shard (or the victim's, if it lands before the move) —
+    /// never into a queue nobody drains.
+    #[test]
+    fn loom_steal_ownership_move() {
+        loom::model(|| run_scenario(STEAL_MOVE, 2, true));
+    }
+
+    /// The park/wake race with stealing on, at preemption bound 3: the
+    /// budget a schedule needs to line up a wake-while-RUNNING, the
+    /// failed park CAS's requeue, and a thief hitting the requeued slot
+    /// before the owner's thread moves on. Bound 3 is where the
+    /// `loom_mutation` refill reorder becomes observable, so the
+    /// correct-code build must prove itself clean at the same bound.
+    #[cfg(not(loom_mutation))]
+    #[test]
+    fn loom_refill_order_steal_bound3() {
+        let mut b = loom::model::Builder::new();
+        b.preemption_bound = Some(3);
+        b.check(|| run_scenario(PARK_WAKE, 2, true));
+    }
+
+    /// Mutation run (`make loom-mutation`): with the task-cell refill
+    /// moved after the QUEUED transition, the bound-3 exploration must
+    /// find the thief-sees-empty-cell schedule and fail. Asserting the
+    /// failure *positively* keeps this lane green exactly while the
+    /// loom suite has teeth.
+    #[cfg(loom_mutation)]
+    #[test]
+    fn loom_mutation_is_caught() {
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let mut b = loom::model::Builder::new();
+            b.preemption_bound = Some(3);
+            b.check(|| run_scenario(PARK_WAKE, 2, true));
+        }));
+        assert!(
+            caught.is_err(),
+            "loom failed to catch the injected refill-order fault — the suite lost its teeth"
+        );
     }
 }
 

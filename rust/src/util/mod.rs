@@ -8,10 +8,13 @@
 //! * [`cli`] — a small `--flag value` argument parser,
 //! * [`proptest`] — a seeded property-testing harness with shrinking,
 //! * [`stats`] — summary statistics + simple regression for the benches,
-//! * [`fnv`] — FNV-1a 64-bit hashing for cheap agreement checks.
+//! * [`fnv`] — FNV-1a 64-bit hashing for cheap agreement checks,
+//! * [`sync`] — `std::sync` normally, the vendored `loom` explorer under
+//!   `--cfg loom`, plus the shim-based MPSC channel (ISSUE 7).
 
 pub mod cli;
 pub mod fnv;
 pub mod proptest;
 pub mod rng;
 pub mod stats;
+pub(crate) mod sync;

@@ -1,0 +1,244 @@
+//! Substrate-switchable synchronization primitives (ISSUE 7).
+//!
+//! Everything concurrency-bearing in the scheduler ([`coordinator::sched`])
+//! and transport ([`comm::transport`]) imports its primitives from here
+//! instead of `std::sync`:
+//!
+//! * normal builds re-export `std::sync` — zero-cost, identical types;
+//! * `--cfg loom` builds re-export the vendored `loom` explorer's
+//!   drop-ins, whose every atomic/lock/condvar operation is a scheduling
+//!   point, so `loom::model` can exhaustively enumerate interleavings of
+//!   the wake protocol (bounded by preemption count; see
+//!   `vendor/loom/src/lib.rs` and DESIGN.md §Verification).
+//!
+//! [`channel`] is the one primitive built *on top of* the shim rather
+//! than re-exported: a Mutex+Condvar MPSC queue with the `std::sync::mpsc`
+//! API subset the transport uses. `std`'s channel cannot be model-checked
+//! (loom has no stand-in for it) and its internal `UnsafeCell` park
+//! protocol is exactly the kind of code Miri/TSan lanes should not have
+//! to vouch for on our behalf — this queue is plain safe code over the
+//! shim's own lock and condvar.
+//!
+//! [`coordinator::sched`]: crate::coordinator::sched
+//! [`comm::transport`]: crate::comm::transport
+
+#[cfg(loom)]
+pub(crate) use loom::sync::{atomic, Arc, Condvar, Mutex, MutexGuard};
+#[cfg(loom)]
+pub(crate) use loom::thread;
+
+#[cfg(not(loom))]
+pub(crate) use std::sync::{atomic, Arc, Condvar, Mutex, MutexGuard};
+#[cfg(not(loom))]
+pub(crate) use std::thread;
+
+pub(crate) mod channel {
+    //! Unbounded MPSC channel over the shim mutex + condvar.
+    //!
+    //! API-compatible with the `std::sync::mpsc` subset the transport
+    //! layer uses: `send` fails once the receiver is gone, a blocking
+    //! `recv` fails once every sender is gone and the queue is drained,
+    //! and `try_recv` distinguishes Empty from Disconnected.
+
+    use super::{Arc, Condvar, Mutex};
+    use std::collections::VecDeque;
+
+    struct ChanState<T> {
+        queue: VecDeque<T>,
+        senders: usize,
+        receiver_alive: bool,
+    }
+
+    struct Chan<T> {
+        state: Mutex<ChanState<T>>,
+        cv: Condvar,
+    }
+
+    /// Sending half; clonable (sender count tracks disconnection).
+    pub(crate) struct Sender<T>(Arc<Chan<T>>);
+
+    /// Receiving half; unique.
+    pub(crate) struct Receiver<T>(Arc<Chan<T>>);
+
+    /// The receiver was dropped; the message comes back to the caller.
+    #[derive(Debug)]
+    pub(crate) struct SendError<T>(pub(crate) T);
+
+    /// Every sender was dropped and the queue is drained.
+    #[derive(Debug, PartialEq, Eq)]
+    pub(crate) struct RecvError;
+
+    /// Why `try_recv` returned nothing.
+    #[derive(Debug, PartialEq, Eq)]
+    pub(crate) enum TryRecvError {
+        /// No message is currently queued (senders may still produce).
+        Empty,
+        /// Every sender was dropped and the queue is drained.
+        Disconnected,
+    }
+
+    /// Create a connected (sender, receiver) pair.
+    pub(crate) fn channel<T>() -> (Sender<T>, Receiver<T>) {
+        let chan = Arc::new(Chan {
+            state: Mutex::new(ChanState {
+                queue: VecDeque::new(),
+                senders: 1,
+                receiver_alive: true,
+            }),
+            cv: Condvar::new(),
+        });
+        (Sender(chan.clone()), Receiver(chan))
+    }
+
+    /// Poison-ignoring lock: a panicking user thread must not cascade
+    /// into channel lock panics on other threads (the transport layer
+    /// already propagates failures through its own expects).
+    fn lock<T>(m: &Mutex<T>) -> super::MutexGuard<'_, T> {
+        m.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    impl<T> Sender<T> {
+        /// Queue `v` and wake a blocked receiver. Fails (returning the
+        /// message) once the receiver is gone.
+        pub(crate) fn send(&self, v: T) -> Result<(), SendError<T>> {
+            let mut st = lock(&self.0.state);
+            if !st.receiver_alive {
+                return Err(SendError(v));
+            }
+            st.queue.push_back(v);
+            drop(st);
+            // Notify after releasing the lock: the woken receiver re-locks
+            // immediately, and its wait-loop recheck makes the
+            // notify-before-wait race benign (state was written under the
+            // lock before the wait could have observed it empty).
+            self.0.cv.notify_one();
+            Ok(())
+        }
+    }
+
+    impl<T> Clone for Sender<T> {
+        fn clone(&self) -> Self {
+            lock(&self.0.state).senders += 1;
+            Sender(self.0.clone())
+        }
+    }
+
+    impl<T> Drop for Sender<T> {
+        fn drop(&mut self) {
+            let mut st = lock(&self.0.state);
+            st.senders -= 1;
+            let disconnected = st.senders == 0;
+            drop(st);
+            if disconnected {
+                // A receiver blocked in `recv` must wake to observe the
+                // disconnect and return `RecvError`.
+                self.0.cv.notify_all();
+            }
+        }
+    }
+
+    impl<T> Receiver<T> {
+        /// Block until a message is queued (or every sender is gone).
+        pub(crate) fn recv(&self) -> Result<T, RecvError> {
+            let mut st = lock(&self.0.state);
+            loop {
+                if let Some(v) = st.queue.pop_front() {
+                    return Ok(v);
+                }
+                if st.senders == 0 {
+                    return Err(RecvError);
+                }
+                st = self.0.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+
+        /// Take a queued message without blocking.
+        pub(crate) fn try_recv(&self) -> Result<T, TryRecvError> {
+            let mut st = lock(&self.0.state);
+            match st.queue.pop_front() {
+                Some(v) => Ok(v),
+                None if st.senders == 0 => Err(TryRecvError::Disconnected),
+                None => Err(TryRecvError::Empty),
+            }
+        }
+    }
+
+    impl<T> Drop for Receiver<T> {
+        fn drop(&mut self) {
+            lock(&self.0.state).receiver_alive = false;
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn send_recv_fifo() {
+            let (tx, rx) = channel::<u32>();
+            tx.send(1).unwrap();
+            tx.send(2).unwrap();
+            assert_eq!(rx.recv(), Ok(1));
+            assert_eq!(rx.try_recv(), Ok(2));
+            assert_eq!(rx.try_recv(), Err(TryRecvError::Empty));
+        }
+
+        #[test]
+        fn disconnects_both_ways() {
+            let (tx, rx) = channel::<u32>();
+            let tx2 = tx.clone();
+            drop(tx);
+            tx2.send(7).unwrap();
+            drop(tx2);
+            assert_eq!(rx.recv(), Ok(7), "queued before disconnect still delivered");
+            assert_eq!(rx.recv(), Err(RecvError));
+            assert_eq!(rx.try_recv(), Err(TryRecvError::Disconnected));
+            let (tx, rx) = channel::<u32>();
+            drop(rx);
+            assert!(tx.send(9).is_err(), "receiver gone");
+        }
+
+        #[test]
+        fn blocking_recv_wakes_on_cross_thread_send() {
+            let (tx, rx) = channel::<u32>();
+            let t = std::thread::spawn(move || {
+                tx.send(42).unwrap();
+            });
+            assert_eq!(rx.recv(), Ok(42));
+            t.join().unwrap();
+        }
+
+        /// Exhaustively model the park/notify handoff: the receiver must
+        /// never sleep through a send, under every interleaving of the
+        /// sender thread against the blocking `recv` (a lost notify would
+        /// surface as a model deadlock — the model's `wait` never times
+        /// out and never wakes spuriously).
+        #[cfg(loom)]
+        #[test]
+        fn loom_recv_never_misses_a_send() {
+            loom::model(|| {
+                let (tx, rx) = channel::<u32>();
+                let t = loom::thread::spawn(move || {
+                    tx.send(5).unwrap();
+                });
+                assert_eq!(rx.recv(), Ok(5));
+                t.join().unwrap();
+            });
+        }
+
+        /// Disconnect handoff: a receiver blocked mid-`recv` must be
+        /// woken by the last sender's drop in every interleaving.
+        #[cfg(loom)]
+        #[test]
+        fn loom_recv_observes_disconnect() {
+            loom::model(|| {
+                let (tx, rx) = channel::<u32>();
+                let t = loom::thread::spawn(move || {
+                    drop(tx);
+                });
+                assert_eq!(rx.recv(), Err(RecvError));
+                t.join().unwrap();
+            });
+        }
+    }
+}

@@ -1,0 +1,1069 @@
+//! Offline stand-in for the `loom` model checker (the API subset lancew
+//! uses), implemented as a **bounded-exhaustive interleaving explorer**.
+//!
+//! Real loom could not be vendored into this offline build (it pulls a
+//! dependency tree and models the full C11 memory order). This crate
+//! keeps loom's *shape* — `loom::model(|| …)` re-runs a closure under
+//! every schedule the bound admits, with `loom::sync` / `loom::thread`
+//! drop-in types — but explores a simpler space:
+//!
+//! * **Sequential consistency only.** Every atomic op executes `SeqCst`
+//!   regardless of the ordering argument. The explorer therefore proves
+//!   protocol-level properties (lost wakeups, use-before-publish,
+//!   deadlock, double-run) under SC; weaker-ordering races are the
+//!   ThreadSanitizer lane's job (see DESIGN.md §Verification).
+//! * **Preemption bounding.** Each sync operation is a scheduling point.
+//!   Within one execution, switching away from a *runnable* thread costs
+//!   one preemption; switching on a blocked/finished thread is free. The
+//!   DFS enumerates every schedule with at most
+//!   [`model::Builder::preemption_bound`] preemptions (default 2 — the
+//!   classic CHESS result: almost all real concurrency bugs need ≤2).
+//!   `None` means truly exhaustive; only viable for micro-models.
+//!
+//! Mechanics: model threads are real OS threads gated by a scheduler
+//! lock so exactly one runs at a time. At every scheduling point the
+//! running thread records (or replays) a choice of which thread runs
+//! next; after the execution finishes, the explorer backtracks to the
+//! last choice with an untried alternative and re-runs. Executions must
+//! be deterministic modulo these choices — a divergent replay aborts the
+//! model with a "nondeterministic execution" panic.
+//!
+//! Blocking is strict: `Condvar::wait_timeout` inside a model **never
+//! times out**. A protocol that relies on a safety-net tick to make
+//! progress therefore shows up as a detected deadlock — which is exactly
+//! the property the lancew scheduler tests want pinned.
+//!
+//! Outside [`model`] (no scheduler registered on the current thread) the
+//! primitives degrade to their `std::sync` behavior, so a `--cfg loom`
+//! build still runs its ordinary tests correctly.
+
+use std::sync::atomic::AtomicUsize as StdAtomicUsize;
+use std::sync::atomic::Ordering as StdOrdering;
+
+/// Fresh identity for every model-aware `Mutex`/`Condvar`.
+static NEXT_OBJ: StdAtomicUsize = StdAtomicUsize::new(1);
+
+fn next_obj() -> usize {
+    NEXT_OBJ.fetch_add(1, StdOrdering::Relaxed)
+}
+
+pub(crate) mod rt {
+    //! The scheduler: one instance per model execution.
+
+    use std::cell::RefCell;
+    use std::collections::HashMap;
+    use std::sync::{Arc, Condvar as StdCondvar, Mutex as StdMutex, MutexGuard as StdGuard};
+
+    /// Hard per-execution cap on scheduling steps (livelock guard; any
+    /// legitimate model run is orders of magnitude smaller).
+    const MAX_STEPS_PER_RUN: u64 = 1_000_000;
+
+    /// One recorded scheduling decision: the runnable options at that
+    /// point (current thread first when it was runnable) and which
+    /// index the current execution takes.
+    #[derive(Clone, Debug, PartialEq, Eq)]
+    pub(crate) struct Choice {
+        pub(crate) options: Vec<usize>,
+        pub(crate) taken: usize,
+    }
+
+    #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+    pub(crate) enum TState {
+        Runnable,
+        BlockedMutex(usize),
+        BlockedCv(usize),
+        BlockedJoin(usize),
+        Finished,
+    }
+
+    struct MutexRec {
+        held_by: Option<usize>,
+        queue: Vec<usize>,
+    }
+
+    struct State {
+        threads: Vec<TState>,
+        active: usize,
+        path: Vec<Choice>,
+        depth: usize,
+        preemptions: usize,
+        bound: Option<usize>,
+        steps: u64,
+        failed: bool,
+        mutexes: HashMap<usize, MutexRec>,
+        /// Condvar obj → FIFO of (waiting thread, mutex obj to reacquire).
+        cvs: HashMap<usize, Vec<(usize, usize)>>,
+    }
+
+    pub(crate) struct Rt {
+        mu: StdMutex<State>,
+        cv: StdCondvar,
+    }
+
+    thread_local! {
+        static CTX: RefCell<Option<(Arc<Rt>, usize)>> = RefCell::new(None);
+    }
+
+    pub(crate) fn set_ctx(rt: Arc<Rt>, me: usize) {
+        CTX.with(|c| *c.borrow_mut() = Some((rt, me)));
+    }
+
+    pub(crate) fn clear_ctx() {
+        CTX.with(|c| *c.borrow_mut() = None);
+    }
+
+    /// The scheduler driving the current thread, if it is a model thread.
+    pub(crate) fn cur() -> Option<(Arc<Rt>, usize)> {
+        CTX.with(|c| c.borrow().clone())
+    }
+
+    /// A scheduling point for the current thread (no-op outside a model).
+    pub(crate) fn yield_point() {
+        if let Some((rt, me)) = cur() {
+            rt.reschedule(me, None);
+        }
+    }
+
+    fn diag(st: &State) -> String {
+        st.threads
+            .iter()
+            .enumerate()
+            .map(|(i, t)| format!("t{i}:{t:?}"))
+            .collect::<Vec<_>>()
+            .join(", ")
+    }
+
+    impl Rt {
+        pub(crate) fn new(prefix: Vec<Choice>, bound: Option<usize>) -> Self {
+            Rt {
+                mu: StdMutex::new(State {
+                    threads: vec![TState::Runnable],
+                    active: 0,
+                    path: prefix,
+                    depth: 0,
+                    preemptions: 0,
+                    bound,
+                    steps: 0,
+                    failed: false,
+                    mutexes: HashMap::new(),
+                    cvs: HashMap::new(),
+                }),
+                cv: StdCondvar::new(),
+            }
+        }
+
+        fn lock_state(&self) -> StdGuard<'_, State> {
+            self.mu.lock().unwrap_or_else(|e| e.into_inner())
+        }
+
+        /// Pick who runs next (record or replay one [`Choice`]). Called
+        /// with the state lock held; panics (marking the model failed)
+        /// on deadlock, divergent replay, or step-cap overflow.
+        fn pick_next(&self, st: &mut State, me: usize) {
+            st.steps += 1;
+            if st.steps > MAX_STEPS_PER_RUN {
+                st.failed = true;
+                self.cv.notify_all();
+                panic!("loom: execution exceeded {MAX_STEPS_PER_RUN} scheduling steps (livelock?)");
+            }
+            let runnable: Vec<usize> = st
+                .threads
+                .iter()
+                .enumerate()
+                .filter_map(|(i, t)| (*t == TState::Runnable).then_some(i))
+                .collect();
+            if runnable.is_empty() {
+                if st.threads.iter().all(|t| *t == TState::Finished) {
+                    // Execution over; nothing left to schedule.
+                    st.active = usize::MAX;
+                    self.cv.notify_all();
+                    return;
+                }
+                st.failed = true;
+                let d = diag(st);
+                self.cv.notify_all();
+                panic!("loom: deadlock — every live thread is blocked: {d}");
+            }
+            let cur_runnable = st.threads.get(me).is_some_and(|t| *t == TState::Runnable);
+            let mut options: Vec<usize> = Vec::new();
+            if cur_runnable {
+                // Continuing the current thread is the free default;
+                // alternatives cost a preemption.
+                options.push(me);
+                if st.bound.is_none_or(|b| st.preemptions < b) {
+                    options.extend(runnable.iter().copied().filter(|&t| t != me));
+                }
+            } else {
+                options = runnable;
+            }
+            let taken = if st.depth < st.path.len() {
+                if st.path[st.depth].options != options {
+                    st.failed = true;
+                    let (want, got) = (st.path[st.depth].options.clone(), options);
+                    let depth = st.depth;
+                    self.cv.notify_all();
+                    panic!(
+                        "loom: nondeterministic execution — replay diverged at step {depth} \
+                         (recorded options {want:?}, recomputed {got:?})"
+                    );
+                }
+                st.path[st.depth].taken
+            } else {
+                st.path.push(Choice { options: options.clone(), taken: 0 });
+                0
+            };
+            let chosen = st.path[st.depth].options[taken];
+            st.depth += 1;
+            if cur_runnable && chosen != me {
+                st.preemptions += 1;
+            }
+            st.active = chosen;
+            self.cv.notify_all();
+        }
+
+        /// Whether this model has failed (a thread panicked, a deadlock
+        /// was detected, or replay diverged).
+        pub(crate) fn is_failed(&self) -> bool {
+            self.lock_state().failed
+        }
+
+        /// Failure-teardown policy, applied at every scheduling entry
+        /// point once the model has failed: a thread that is not yet
+        /// unwinding panics (propagating the abort so it reaches its
+        /// own FinishGuard); a thread that IS unwinding free-runs — no
+        /// scheduling, so its drop code can finish without a panic
+        /// inside a panic. Mutual exclusion during free-running is
+        /// carried by the real `std` locks inside each primitive.
+        /// Returns true when the caller must skip the model protocol.
+        fn bail_if_failed(st: &State) -> bool {
+            if !st.failed {
+                return false;
+            }
+            if std::thread::panicking() {
+                return true;
+            }
+            panic!("loom: model aborted by a sibling failure");
+        }
+
+        /// Block until this thread is scheduled (active + runnable),
+        /// applying the failure policy while waiting.
+        fn wait_until_scheduled<'a>(
+            &'a self,
+            mut st: StdGuard<'a, State>,
+            me: usize,
+        ) -> StdGuard<'a, State> {
+            loop {
+                if Self::bail_if_failed(&st) {
+                    return st;
+                }
+                if st.active == me && st.threads[me] == TState::Runnable {
+                    return st;
+                }
+                st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+
+        /// One scheduling point: optionally move `me` into a blocked
+        /// state, pick the next thread, and wait to be scheduled again.
+        pub(crate) fn reschedule(&self, me: usize, block: Option<TState>) {
+            let mut st = self.lock_state();
+            if Self::bail_if_failed(&st) {
+                return;
+            }
+            if let Some(b) = block {
+                st.threads[me] = b;
+            }
+            self.pick_next(&mut st, me);
+            let st = self.wait_until_scheduled(st, me);
+            drop(st);
+        }
+
+        pub(crate) fn register_thread(&self) -> usize {
+            let mut st = self.lock_state();
+            st.threads.push(TState::Runnable);
+            st.threads.len() - 1
+        }
+
+        /// First gate of a spawned thread: wait until first scheduled.
+        pub(crate) fn wait_first(&self, me: usize) {
+            let st = self.lock_state();
+            let st = self.wait_until_scheduled(st, me);
+            drop(st);
+        }
+
+        fn wake_joiners(st: &mut State, target: usize) {
+            for t in st.threads.iter_mut() {
+                if *t == TState::BlockedJoin(target) {
+                    *t = TState::Runnable;
+                }
+            }
+        }
+
+        /// Normal thread completion: hand the schedule to someone else.
+        pub(crate) fn finish_thread(&self, me: usize) {
+            let mut st = self.lock_state();
+            st.threads[me] = TState::Finished;
+            Self::wake_joiners(&mut st, me);
+            if st.failed {
+                // Teardown: no scheduling, just let waiters re-check.
+                self.cv.notify_all();
+                return;
+            }
+            self.pick_next(&mut st, me);
+        }
+
+        /// Panic-path completion: mark the model failed so every other
+        /// thread bails out of its wait loop.
+        pub(crate) fn mark_failed(&self, me: usize) {
+            let mut st = self.lock_state();
+            st.failed = true;
+            st.threads[me] = TState::Finished;
+            Self::wake_joiners(&mut st, me);
+            self.cv.notify_all();
+        }
+
+        /// Main-thread panic path: flag the failure and detach.
+        pub(crate) fn abort_everything(&self) {
+            let mut st = self.lock_state();
+            st.failed = true;
+            st.threads[0] = TState::Finished;
+            self.cv.notify_all();
+        }
+
+        /// Wait until every model thread has finished (normally or via
+        /// its failure guard); returns whether the model failed.
+        pub(crate) fn wait_all_finished(&self) -> bool {
+            let mut st = self.lock_state();
+            while !st.threads.iter().all(|t| *t == TState::Finished) {
+                st = self.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+            st.failed
+        }
+
+        pub(crate) fn take_path(&self) -> Vec<Choice> {
+            self.lock_state().path.clone()
+        }
+
+        pub(crate) fn join_wait(&self, me: usize, target: usize) {
+            let mut st = self.lock_state();
+            if Self::bail_if_failed(&st) {
+                return; // the guards guarantee the target finishes
+            }
+            if st.threads[target] == TState::Finished {
+                return;
+            }
+            st.threads[me] = TState::BlockedJoin(target);
+            self.pick_next(&mut st, me);
+            let st = self.wait_until_scheduled(st, me);
+            drop(st);
+        }
+
+        // ---- Mutex protocol ------------------------------------------
+
+        pub(crate) fn acquire_mutex(&self, me: usize, obj: usize) {
+            // The visible decision point sits before the acquisition.
+            self.reschedule(me, None);
+            let mut st = self.lock_state();
+            if Self::bail_if_failed(&st) {
+                return; // caller's grab_inner falls back to a real lock
+            }
+            let rec = st
+                .mutexes
+                .entry(obj)
+                .or_insert(MutexRec { held_by: None, queue: Vec::new() });
+            if rec.held_by.is_none() {
+                rec.held_by = Some(me);
+                return;
+            }
+            rec.queue.push(me);
+            st.threads[me] = TState::BlockedMutex(obj);
+            self.pick_next(&mut st, me);
+            let st = self.wait_until_scheduled(st, me);
+            debug_assert!(
+                st.failed || st.mutexes.get(&obj).and_then(|r| r.held_by) == Some(me),
+                "scheduled after a mutex block without the grant"
+            );
+            drop(st);
+        }
+
+        pub(crate) fn try_acquire_mutex(&self, me: usize, obj: usize) -> bool {
+            self.reschedule(me, None);
+            let mut st = self.lock_state();
+            if Self::bail_if_failed(&st) {
+                return false; // teardown: refuse rather than block
+            }
+            let rec = st
+                .mutexes
+                .entry(obj)
+                .or_insert(MutexRec { held_by: None, queue: Vec::new() });
+            if rec.held_by.is_none() {
+                rec.held_by = Some(me);
+                true
+            } else {
+                false
+            }
+        }
+
+        /// Release with direct handoff: ownership transfers to the first
+        /// queued waiter, which becomes runnable already holding the lock.
+        /// Tolerant of unknown objects: during failure teardown, guards
+        /// acquired through the degraded path release objects the model
+        /// never tracked.
+        fn release_locked(st: &mut State, obj: usize) {
+            let Some(rec) = st.mutexes.get_mut(&obj) else {
+                return;
+            };
+            rec.held_by = None;
+            if !rec.queue.is_empty() {
+                let nxt = rec.queue.remove(0);
+                rec.held_by = Some(nxt);
+                st.threads[nxt] = TState::Runnable;
+            }
+        }
+
+        pub(crate) fn release_mutex(&self, _me: usize, obj: usize) {
+            let mut st = self.lock_state();
+            Self::release_locked(&mut st, obj);
+        }
+
+        // ---- Condvar protocol ----------------------------------------
+
+        /// Register as a waiter, release the mutex, block until notified
+        /// AND re-granted the mutex. Strict semantics: no spurious
+        /// wakeups, no timeouts — a lost notify is a detected deadlock.
+        pub(crate) fn cv_wait_release(&self, me: usize, cv_obj: usize, mx_obj: usize) {
+            let mut st = self.lock_state();
+            if Self::bail_if_failed(&st) {
+                return;
+            }
+            st.cvs.entry(cv_obj).or_default().push((me, mx_obj));
+            Self::release_locked(&mut st, mx_obj);
+            st.threads[me] = TState::BlockedCv(cv_obj);
+            self.pick_next(&mut st, me);
+            let st = self.wait_until_scheduled(st, me);
+            debug_assert!(
+                st.failed || st.mutexes.get(&mx_obj).and_then(|r| r.held_by) == Some(me),
+                "condvar waiter scheduled without the mutex re-grant"
+            );
+            drop(st);
+        }
+
+        /// FIFO notify: woken waiters move to the mutex (granted at once
+        /// if it is free, queued otherwise).
+        pub(crate) fn cv_notify(&self, _me: usize, cv_obj: usize, all: bool) {
+            let mut st = self.lock_state();
+            if Self::bail_if_failed(&st) {
+                return;
+            }
+            let woken: Vec<(usize, usize)> = {
+                let w = st.cvs.entry(cv_obj).or_default();
+                let n = if all { w.len() } else { w.len().min(1) };
+                w.drain(..n).collect()
+            };
+            for (tid, mx) in woken {
+                let rec = st
+                    .mutexes
+                    .entry(mx)
+                    .or_insert(MutexRec { held_by: None, queue: Vec::new() });
+                if rec.held_by.is_none() {
+                    rec.held_by = Some(tid);
+                    st.threads[tid] = TState::Runnable;
+                } else {
+                    rec.queue.push(tid);
+                    st.threads[tid] = TState::BlockedMutex(mx);
+                }
+            }
+        }
+    }
+}
+
+pub mod model {
+    //! Exploration driver: re-run a closure under every admitted schedule.
+
+    use super::rt::{self, Choice, Rt};
+    use std::sync::{Arc, Mutex as StdMutex};
+
+    /// Serializes models process-wide (`cargo test` may run model tests
+    /// on several harness threads; the thread-local scheduler context
+    /// must never interleave two explorations).
+    static MODEL_SERIAL: StdMutex<()> = StdMutex::new(());
+
+    /// Exploration configuration.
+    ///
+    /// ```
+    /// let mut b = loom::model::Builder::new();
+    /// b.preemption_bound = Some(3);
+    /// b.check(|| { /* model body */ });
+    /// ```
+    #[derive(Clone, Debug)]
+    pub struct Builder {
+        /// Max context switches away from a runnable thread per
+        /// execution (`None` = unbounded/exhaustive). Default 2.
+        pub preemption_bound: Option<usize>,
+        /// Cap on explored executions; exceeding it fails the model
+        /// loudly instead of hanging CI. Default 2 million.
+        pub max_iterations: u64,
+    }
+
+    impl Default for Builder {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+
+    impl Builder {
+        /// Defaults: preemption bound 2, 2M iteration cap.
+        pub fn new() -> Self {
+            Builder { preemption_bound: Some(2), max_iterations: 2_000_000 }
+        }
+
+        /// Explore every admitted schedule of `f`, panicking on the
+        /// first failing one (assertion, deadlock, or sibling panic).
+        pub fn check<F: Fn()>(&self, f: F) {
+            let _serial = MODEL_SERIAL.lock().unwrap_or_else(|e| e.into_inner());
+            let mut prefix: Vec<Choice> = Vec::new();
+            let mut iterations: u64 = 0;
+            loop {
+                iterations += 1;
+                assert!(
+                    iterations <= self.max_iterations,
+                    "loom: exceeded max_iterations ({})",
+                    self.max_iterations
+                );
+                let rt = Arc::new(Rt::new(prefix, self.preemption_bound));
+                rt::set_ctx(rt.clone(), 0);
+                let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(&f));
+                match res {
+                    Err(e) => {
+                        rt.abort_everything();
+                        rt.wait_all_finished();
+                        rt::clear_ctx();
+                        eprintln!("loom: failing schedule found on iteration {iterations}");
+                        std::panic::resume_unwind(e);
+                    }
+                    Ok(()) => {
+                        rt.finish_thread(0);
+                        let failed = rt.wait_all_finished();
+                        rt::clear_ctx();
+                        assert!(
+                            !failed,
+                            "loom: a spawned model thread failed on iteration {iterations}"
+                        );
+                    }
+                }
+                prefix = rt.take_path();
+                if !advance(&mut prefix) {
+                    break;
+                }
+            }
+            eprintln!("loom: {iterations} interleaving(s) explored, all passed");
+        }
+    }
+
+    /// Backtrack to the deepest choice with an untried alternative.
+    fn advance(path: &mut Vec<Choice>) -> bool {
+        while let Some(last) = path.last_mut() {
+            if last.taken + 1 < last.options.len() {
+                last.taken += 1;
+                return true;
+            }
+            path.pop();
+        }
+        false
+    }
+}
+
+/// Explore `f` under the default [`model::Builder`] bounds.
+pub fn model<F: Fn()>(f: F) {
+    model::Builder::new().check(f)
+}
+
+pub mod sync {
+    //! Model-aware drop-ins for `std::sync` types.
+
+    use super::{next_obj, rt};
+    use std::ops::{Deref, DerefMut};
+    use std::sync::{Condvar as StdCondvar, Mutex as StdMutex, MutexGuard as StdGuard};
+    use std::sync::{LockResult, TryLockError, TryLockResult};
+    use std::time::Duration;
+
+    pub use std::sync::Arc;
+
+    /// Mutex whose blocking goes through the model scheduler (plain
+    /// `std::sync::Mutex` behavior outside a model). Poisoning is
+    /// swallowed: `lock` always returns `Ok`.
+    pub struct Mutex<T> {
+        obj: usize,
+        data: StdMutex<T>,
+    }
+
+    /// Guard for [`Mutex`]; releases the model-level ownership on drop.
+    pub struct MutexGuard<'a, T> {
+        inner: Option<StdGuard<'a, T>>,
+        lock: &'a Mutex<T>,
+    }
+
+    impl<T> Mutex<T> {
+        /// Wrap a value (allocates a model identity).
+        pub fn new(t: T) -> Self {
+            Mutex { obj: next_obj(), data: StdMutex::new(t) }
+        }
+
+        fn grab_inner(&self) -> StdGuard<'_, T> {
+            // The model granted us ownership, so the std lock is free
+            // (the previous guard's inner is dropped before release) —
+            // except during failure teardown, when threads free-run and
+            // the real lock carries the mutual exclusion instead.
+            match self.data.try_lock() {
+                Ok(g) => g,
+                Err(TryLockError::Poisoned(p)) => p.into_inner(),
+                Err(TryLockError::WouldBlock) => match rt::cur() {
+                    Some((sched, _)) if sched.is_failed() => {
+                        self.data.lock().unwrap_or_else(|e| e.into_inner())
+                    }
+                    _ => unreachable!("loom: granted mutex still std-locked"),
+                },
+            }
+        }
+
+        /// Lock (a scheduling point inside a model). Never returns `Err`.
+        pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+            match rt::cur() {
+                Some((sched, me)) if !sched.is_failed() => {
+                    sched.acquire_mutex(me, self.obj);
+                    Ok(MutexGuard { inner: Some(self.grab_inner()), lock: self })
+                }
+                _ => {
+                    let g = self.data.lock().unwrap_or_else(|e| e.into_inner());
+                    Ok(MutexGuard { inner: Some(g), lock: self })
+                }
+            }
+        }
+
+        /// Non-blocking lock attempt (a scheduling point in a model).
+        pub fn try_lock(&self) -> TryLockResult<MutexGuard<'_, T>> {
+            match rt::cur() {
+                Some((sched, me)) if !sched.is_failed() => {
+                    if sched.try_acquire_mutex(me, self.obj) {
+                        Ok(MutexGuard { inner: Some(self.grab_inner()), lock: self })
+                    } else {
+                        Err(TryLockError::WouldBlock)
+                    }
+                }
+                _ => match self.data.try_lock() {
+                    Ok(g) => Ok(MutexGuard { inner: Some(g), lock: self }),
+                    Err(TryLockError::Poisoned(p)) => {
+                        Ok(MutexGuard { inner: Some(p.into_inner()), lock: self })
+                    }
+                    Err(TryLockError::WouldBlock) => Err(TryLockError::WouldBlock),
+                },
+            }
+        }
+    }
+
+    impl<T> Deref for MutexGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            self.inner.as_ref().expect("guard data moved")
+        }
+    }
+
+    impl<T> DerefMut for MutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            self.inner.as_mut().expect("guard data moved")
+        }
+    }
+
+    impl<T> Drop for MutexGuard<'_, T> {
+        fn drop(&mut self) {
+            // `inner == None` means the guard was consumed by a condvar
+            // wait, which released the model ownership itself.
+            if self.inner.take().is_some() {
+                if let Some((sched, me)) = rt::cur() {
+                    sched.release_mutex(me, self.lock.obj);
+                }
+            }
+        }
+    }
+
+    /// Result of [`Condvar::wait_timeout`]. Inside a model a wait never
+    /// times out (see the crate docs); outside it reflects `std`.
+    pub struct WaitTimeoutResult(bool);
+
+    impl WaitTimeoutResult {
+        /// Whether the wait ended by timeout rather than notify.
+        pub fn timed_out(&self) -> bool {
+            self.0
+        }
+    }
+
+    /// Condvar whose waits/notifies go through the model scheduler.
+    pub struct Condvar {
+        obj: usize,
+        fallback: StdCondvar,
+    }
+
+    impl Default for Condvar {
+        fn default() -> Self {
+            Self::new()
+        }
+    }
+
+    impl Condvar {
+        /// New condvar (allocates a model identity).
+        pub fn new() -> Self {
+            Condvar { obj: next_obj(), fallback: StdCondvar::new() }
+        }
+
+        /// Release the guard's mutex and block until notified (strict:
+        /// no spurious wakes, no timeout inside a model).
+        pub fn wait<'a, T>(&self, mut guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+            let lock = guard.lock;
+            match rt::cur() {
+                Some((sched, me)) if !sched.is_failed() => {
+                    guard.inner.take(); // drop the std guard; model releases below
+                    drop(guard);
+                    sched.cv_wait_release(me, self.obj, lock.obj);
+                    Ok(MutexGuard { inner: Some(lock.grab_inner()), lock })
+                }
+                _ => {
+                    let inner = guard.inner.take().expect("guard data moved");
+                    drop(guard);
+                    let inner = self.fallback.wait(inner).unwrap_or_else(|e| e.into_inner());
+                    Ok(MutexGuard { inner: Some(inner), lock })
+                }
+            }
+        }
+
+        /// Like [`Condvar::wait`]; inside a model the timeout NEVER
+        /// fires, so code that needs the tick to progress deadlocks the
+        /// model — by design.
+        pub fn wait_timeout<'a, T>(
+            &self,
+            guard: MutexGuard<'a, T>,
+            dur: Duration,
+        ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+            match rt::cur() {
+                Some((sched, _)) if !sched.is_failed() => {
+                    self.wait(guard).map(|g| (g, WaitTimeoutResult(false)))
+                }
+                _ => {
+                    let lock = guard.lock;
+                    let mut guard = guard;
+                    let inner = guard.inner.take().expect("guard data moved");
+                    drop(guard);
+                    let (inner, out) = self
+                        .fallback
+                        .wait_timeout(inner, dur)
+                        .unwrap_or_else(|e| e.into_inner());
+                    Ok((
+                        MutexGuard { inner: Some(inner), lock },
+                        WaitTimeoutResult(out.timed_out()),
+                    ))
+                }
+            }
+        }
+
+        /// Wake one waiter (FIFO inside a model).
+        pub fn notify_one(&self) {
+            match rt::cur() {
+                Some((sched, me)) => sched.cv_notify(me, self.obj, false),
+                None => self.fallback.notify_one(),
+            }
+        }
+
+        /// Wake every waiter.
+        pub fn notify_all(&self) {
+            match rt::cur() {
+                Some((sched, me)) => sched.cv_notify(me, self.obj, true),
+                None => self.fallback.notify_all(),
+            }
+        }
+
+        // (notify entry points bail internally once the model failed —
+        // cv_notify's first check — so no is_failed gate is needed here.)
+    }
+
+    pub mod atomic {
+        //! Atomics whose every operation is a scheduling point.
+        //!
+        //! Ordering arguments are accepted for API compatibility but the
+        //! explorer executes everything `SeqCst` (see the crate docs).
+
+        use super::super::rt::yield_point;
+        pub use std::sync::atomic::Ordering;
+        use std::sync::atomic::Ordering::SeqCst;
+
+        macro_rules! model_atomic {
+            ($(#[$doc:meta])* $name:ident, $std:ty, $prim:ty, arith = $arith:tt) => {
+                $(#[$doc])*
+                #[derive(Debug, Default)]
+                pub struct $name(pub(crate) $std);
+
+                impl $name {
+                    /// Wrap an initial value.
+                    pub const fn new(v: $prim) -> Self {
+                        Self(<$std>::new(v))
+                    }
+
+                    /// Model-scheduled load (executed `SeqCst`).
+                    pub fn load(&self, _o: Ordering) -> $prim {
+                        yield_point();
+                        self.0.load(SeqCst)
+                    }
+
+                    /// Model-scheduled store (executed `SeqCst`).
+                    pub fn store(&self, v: $prim, _o: Ordering) {
+                        yield_point();
+                        self.0.store(v, SeqCst)
+                    }
+
+                    /// Model-scheduled swap (executed `SeqCst`).
+                    pub fn swap(&self, v: $prim, _o: Ordering) -> $prim {
+                        yield_point();
+                        self.0.swap(v, SeqCst)
+                    }
+
+                    /// Model-scheduled CAS (executed `SeqCst`).
+                    pub fn compare_exchange(
+                        &self,
+                        cur: $prim,
+                        new: $prim,
+                        _s: Ordering,
+                        _f: Ordering,
+                    ) -> Result<$prim, $prim> {
+                        yield_point();
+                        self.0.compare_exchange(cur, new, SeqCst, SeqCst)
+                    }
+
+                    model_atomic!(@arith $arith, $prim);
+                }
+            };
+            (@arith true, $prim:ty) => {
+                /// Model-scheduled add (executed `SeqCst`).
+                pub fn fetch_add(&self, v: $prim, _o: Ordering) -> $prim {
+                    yield_point();
+                    self.0.fetch_add(v, SeqCst)
+                }
+
+                /// Model-scheduled sub (executed `SeqCst`).
+                pub fn fetch_sub(&self, v: $prim, _o: Ordering) -> $prim {
+                    yield_point();
+                    self.0.fetch_sub(v, SeqCst)
+                }
+            };
+            (@arith false, $prim:ty) => {};
+        }
+
+        model_atomic!(
+            /// Model-aware `AtomicU8`.
+            AtomicU8, std::sync::atomic::AtomicU8, u8, arith = true
+        );
+        model_atomic!(
+            /// Model-aware `AtomicU64`.
+            AtomicU64, std::sync::atomic::AtomicU64, u64, arith = true
+        );
+        model_atomic!(
+            /// Model-aware `AtomicUsize`.
+            AtomicUsize, std::sync::atomic::AtomicUsize, usize, arith = true
+        );
+        model_atomic!(
+            /// Model-aware `AtomicBool`.
+            AtomicBool, std::sync::atomic::AtomicBool, bool, arith = false
+        );
+    }
+}
+
+pub mod thread {
+    //! Model-gated thread spawn/join.
+
+    use super::rt;
+    use std::cell::Cell;
+    use std::sync::Arc;
+
+    /// Handle to a model thread (wraps the real OS thread handle).
+    /// `tid == usize::MAX` marks a plain thread spawned outside a model.
+    pub struct JoinHandle<T> {
+        tid: usize,
+        inner: std::thread::JoinHandle<T>,
+    }
+
+    impl<T> JoinHandle<T> {
+        /// Join through the scheduler: blocks (as a model state) until
+        /// the target thread finishes, then reaps the OS thread.
+        pub fn join(self) -> std::thread::Result<T> {
+            if self.tid != usize::MAX {
+                if let Some((sched, me)) = rt::cur() {
+                    sched.join_wait(me, self.tid);
+                }
+            }
+            self.inner.join()
+        }
+    }
+
+    /// Marks the thread finished even when `f` panics, so the explorer
+    /// (and any joiner) never waits on a corpse; the failure flag makes
+    /// every sibling bail out of its wait loop.
+    struct FinishGuard {
+        sched: Arc<rt::Rt>,
+        tid: usize,
+        armed: Cell<bool>,
+    }
+
+    impl Drop for FinishGuard {
+        fn drop(&mut self) {
+            if self.armed.get() {
+                self.sched.mark_failed(self.tid);
+            }
+        }
+    }
+
+    /// Spawn a model thread: it does not run until the scheduler picks
+    /// it at some later decision point. Outside a model this is a plain
+    /// `std::thread::spawn`.
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        let Some((sched, _me)) = rt::cur() else {
+            return JoinHandle { tid: usize::MAX, inner: std::thread::spawn(f) };
+        };
+        let tid = sched.register_thread();
+        let sched2 = Arc::clone(&sched);
+        let inner = std::thread::spawn(move || {
+            rt::set_ctx(Arc::clone(&sched2), tid);
+            let guard = FinishGuard { sched: Arc::clone(&sched2), tid, armed: Cell::new(true) };
+            sched2.wait_first(tid);
+            let out = f();
+            guard.armed.set(false);
+            sched2.finish_thread(tid);
+            out
+        });
+        JoinHandle { tid, inner }
+    }
+
+    /// Voluntary scheduling point.
+    pub fn yield_now() {
+        rt::yield_point();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::sync::atomic::{AtomicUsize, Ordering};
+    use super::sync::{Arc, Condvar, Mutex};
+    use super::{model, thread};
+
+    #[test]
+    fn explores_and_finds_a_lost_update() {
+        // Non-atomic read-modify-write: some interleaving must lose one
+        // increment — proving the DFS really interleaves threads.
+        let res = std::panic::catch_unwind(|| {
+            super::model(|| {
+                let c = Arc::new(AtomicUsize::new(0));
+                let hs: Vec<_> = (0..2)
+                    .map(|_| {
+                        let c = Arc::clone(&c);
+                        thread::spawn(move || {
+                            let v = c.load(Ordering::SeqCst);
+                            c.store(v + 1, Ordering::SeqCst);
+                        })
+                    })
+                    .collect();
+                for h in hs {
+                    h.join().unwrap();
+                }
+                assert_eq!(c.load(Ordering::SeqCst), 2, "lost update");
+            });
+        });
+        assert!(res.is_err(), "the explorer missed the textbook lost update");
+    }
+
+    #[test]
+    fn atomic_rmw_is_always_exact() {
+        super::model(|| {
+            let c = Arc::new(AtomicUsize::new(0));
+            let hs: Vec<_> = (0..2)
+                .map(|_| {
+                    let c = Arc::clone(&c);
+                    thread::spawn(move || {
+                        c.fetch_add(1, Ordering::SeqCst);
+                    })
+                })
+                .collect();
+            for h in hs {
+                h.join().unwrap();
+            }
+            assert_eq!(c.load(Ordering::SeqCst), 2);
+        });
+    }
+
+    #[test]
+    fn mutex_excludes_and_condvar_hands_off() {
+        super::model(|| {
+            let pair = Arc::new((Mutex::new(false), Condvar::new()));
+            let p2 = Arc::clone(&pair);
+            let h = thread::spawn(move || {
+                let (mx, cv) = &*p2;
+                let mut ready = mx.lock().unwrap();
+                while !*ready {
+                    ready = cv.wait(ready).unwrap();
+                }
+            });
+            {
+                let (mx, cv) = &*pair;
+                let mut ready = mx.lock().unwrap();
+                *ready = true;
+                cv.notify_one();
+            }
+            h.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn detects_lost_notify_as_deadlock() {
+        // Check-then-wait WITHOUT holding the mutex across the check:
+        // the notify can land in the gap, and the waiter sleeps forever.
+        // The strict condvar model must report it as a deadlock.
+        let res = std::panic::catch_unwind(|| {
+            let mut b = model::Builder::new();
+            b.preemption_bound = Some(2);
+            b.check(|| {
+                let pair = Arc::new((Mutex::new(false), Condvar::new()));
+                let p2 = Arc::clone(&pair);
+                let h = thread::spawn(move || {
+                    let (mx, cv) = &*p2;
+                    let ready = { *mx.lock().unwrap() }; // racy pre-check
+                    if !ready {
+                        let g = mx.lock().unwrap();
+                        let _g = cv.wait(g).unwrap(); // may wait after the notify
+                    }
+                });
+                {
+                    let (mx, cv) = &*pair;
+                    *mx.lock().unwrap() = true;
+                    cv.notify_one();
+                }
+                h.join().unwrap();
+            });
+        });
+        assert!(res.is_err(), "the lost-notify deadlock went undetected");
+    }
+
+    #[test]
+    fn try_lock_contends_without_blocking() {
+        super::model(|| {
+            let mx = Arc::new(Mutex::new(0u32));
+            let m2 = Arc::clone(&mx);
+            let h = thread::spawn(move || {
+                let _g = m2.lock().unwrap();
+            });
+            // Either we get it or the child holds it — never a hang.
+            if let Ok(mut g) = mx.try_lock() {
+                *g += 1;
+            }
+            h.join().unwrap();
+        });
+    }
+}

@@ -1,0 +1,554 @@
+//! Repo automation, invoked as `cargo xtask <command>` (the alias lives
+//! in `.cargo/config.toml`).
+//!
+//! The one command so far is `lint` — the determinism lint (ISSUE 7):
+//! the repo's core claim is that every runtime produces bitwise-identical
+//! observables, so non-test library code must not read wall clocks,
+//! iterate unordered collections, consult ambient randomness, or branch
+//! on thread identity / host shape. The lint walks `rust/src`, strips
+//! comments and string literals with a small character-level lexer,
+//! masks `#[cfg(test)]`-gated regions, and denies a fixed pattern list
+//! everywhere else. Sites that are deliberately nondeterministic (the
+//! stall detector's wall clock, the victim-scan PRNG, seeded data
+//! generators) are enumerated in `xtask/lint_allowlist.txt`, where every
+//! entry carries a mandatory one-line justification and an entry that no
+//! longer matches anything is itself an error — the allowlist can only
+//! shrink-to-fit, never rot.
+//!
+//! The same lexer powers a brace/paren/bracket balance check over every
+//! `.rs` file in the repo (absorbing the standalone verify-skill check):
+//! an imbalance is always a merge artifact or truncated write, and
+//! catching it here is cheaper than a cold `cargo build`.
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+/// Substrings denied in non-test library code, with why they threaten
+/// run-to-run determinism. Plain substrings, matched against lexed
+/// (comment- and string-free) source.
+const DENY: &[(&str, &str)] = &[
+    ("Instant::now", "wall-clock read: output depends on when the run happens"),
+    ("SystemTime", "wall-clock read: output depends on when the run happens"),
+    ("HashMap", "unordered iteration can leak the random hasher state into observables"),
+    ("HashSet", "unordered iteration can leak the random hasher state into observables"),
+    ("RandomState", "per-process random hasher seed"),
+    ("thread_rng", "ambient OS-seeded randomness"),
+    ("thread::current", "thread-identity branching breaks schedule independence"),
+    ("available_parallelism", "host-core-count branching"),
+    ("Rng::new", "every PRNG must be built from a fixed or config-derived seed"),
+];
+
+/// Directories whose `.rs` files get the brace-balance check (everything
+/// compilable in the repo). The determinism deny-list applies only to
+/// the first entry — library code; tests, benches, and the vendored
+/// shims may freely use clocks and hash maps.
+const BALANCE_ROOTS: &[&str] =
+    &["rust/src", "rust/tests", "benches", "examples", "xtask/src", "vendor"];
+
+const LINT_ROOT: &str = "rust/src";
+const ALLOWLIST: &str = "xtask/lint_allowlist.txt";
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => {
+            // xtask/ sits directly under the repo root.
+            let root = Path::new(env!("CARGO_MANIFEST_DIR"))
+                .parent()
+                .expect("xtask has a parent directory")
+                .to_path_buf();
+            if lint(&root) {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            }
+        }
+        _ => {
+            eprintln!("usage: cargo xtask lint");
+            ExitCode::from(2)
+        }
+    }
+}
+
+/// Run the full lint; returns true when clean. All findings are printed
+/// before returning so one run surfaces every problem.
+fn lint(root: &Path) -> bool {
+    let mut errors: Vec<String> = Vec::new();
+
+    // Pass 1: brace balance over every compilable tree.
+    let mut balanced_files = 0usize;
+    for dir in BALANCE_ROOTS {
+        for file in rs_files(&root.join(dir)) {
+            let src = match std::fs::read_to_string(&file) {
+                Ok(s) => s,
+                Err(e) => {
+                    errors.push(format!("{}: unreadable: {e}", rel(&file, root)));
+                    continue;
+                }
+            };
+            let code = strip_comments_and_strings(&src);
+            if let Err(msg) = check_balance(&code) {
+                errors.push(format!("{}: {msg}", rel(&file, root)));
+            }
+            balanced_files += 1;
+        }
+    }
+
+    // Pass 2: determinism deny-list over non-test library code.
+    let allow = match load_allowlist(&root.join(ALLOWLIST)) {
+        Ok(a) => a,
+        Err(e) => {
+            errors.push(e);
+            Vec::new()
+        }
+    };
+    let mut used = vec![false; allow.len()];
+    let mut hits = 0usize;
+    for file in rs_files(&root.join(LINT_ROOT)) {
+        let relpath = rel(&file, root);
+        let src = match std::fs::read_to_string(&file) {
+            Ok(s) => s,
+            Err(_) => continue, // already reported by pass 1
+        };
+        let mut code = strip_comments_and_strings(&src);
+        mask_test_regions(&mut code);
+        for (lineno, line) in code.split('\n').enumerate() {
+            for &(pat, why) in DENY {
+                if !line.contains(pat) {
+                    continue;
+                }
+                hits += 1;
+                let covered = allow.iter().enumerate().find_map(|(i, e)| {
+                    (e.file == relpath && e.pattern == pat).then_some(i)
+                });
+                match covered {
+                    Some(i) => used[i] = true,
+                    None => errors.push(format!(
+                        "{relpath}:{}: denied pattern `{pat}` ({why}); justify it in \
+                         {ALLOWLIST} or remove the use",
+                        lineno + 1
+                    )),
+                }
+            }
+        }
+    }
+    for (entry, used) in allow.iter().zip(&used) {
+        if !used {
+            errors.push(format!(
+                "{ALLOWLIST}: stale entry `{} | {}` matches nothing — delete it",
+                entry.file, entry.pattern
+            ));
+        }
+    }
+
+    if errors.is_empty() {
+        println!(
+            "xtask lint: clean ({balanced_files} files balanced, {hits} deny-pattern \
+             site(s), all justified in {ALLOWLIST})"
+        );
+        true
+    } else {
+        for e in &errors {
+            eprintln!("error: {e}");
+        }
+        eprintln!("xtask lint: {} error(s)", errors.len());
+        false
+    }
+}
+
+/// One allowlist line: `file | pattern | reason`.
+struct AllowEntry {
+    file: String,
+    pattern: String,
+}
+
+/// Parse the allowlist. A missing file, a malformed line, an unknown
+/// pattern, or an empty reason is an error — the justification column is
+/// the point of the file.
+fn load_allowlist(path: &Path) -> Result<Vec<AllowEntry>, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("{}: unreadable allowlist: {e}", path.display()))?;
+    let mut entries = Vec::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = line.splitn(3, '|').map(str::trim).collect();
+        let [file, pattern, reason] = parts.as_slice() else {
+            return Err(format!(
+                "{ALLOWLIST}:{}: expected `file | pattern | reason`",
+                lineno + 1
+            ));
+        };
+        if reason.is_empty() {
+            return Err(format!(
+                "{ALLOWLIST}:{}: entry for `{pattern}` in {file} has no reason — every \
+                 allowlisted site must justify itself",
+                lineno + 1
+            ));
+        }
+        if !DENY.iter().any(|&(p, _)| p == *pattern) {
+            return Err(format!(
+                "{ALLOWLIST}:{}: `{pattern}` is not a denied pattern",
+                lineno + 1
+            ));
+        }
+        entries.push(AllowEntry { file: file.to_string(), pattern: pattern.to_string() });
+    }
+    Ok(entries)
+}
+
+/// Recursively collect `.rs` files, sorted for stable output.
+fn rs_files(dir: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    let mut stack = vec![dir.to_path_buf()];
+    while let Some(d) = stack.pop() {
+        let Ok(rd) = std::fs::read_dir(&d) else { continue };
+        for entry in rd.flatten() {
+            let p = entry.path();
+            if p.is_dir() {
+                if p.file_name().is_some_and(|n| n != "target") {
+                    stack.push(p);
+                }
+            } else if p.extension().is_some_and(|e| e == "rs") {
+                out.push(p);
+            }
+        }
+    }
+    out.sort();
+    out
+}
+
+fn rel(path: &Path, root: &Path) -> String {
+    path.strip_prefix(root).unwrap_or(path).display().to_string().replace('\\', "/")
+}
+
+/// Blank comments and string/char literals with spaces (newlines kept),
+/// so later passes see only code with stable line numbers. Handles line
+/// and nested block comments, plain/byte strings with escapes, raw
+/// strings `r#"…"#`, and char literals vs lifetimes.
+fn strip_comments_and_strings(src: &str) -> String {
+    let b = src.as_bytes();
+    let mut out: Vec<u8> = Vec::with_capacity(b.len());
+    let blank = |out: &mut Vec<u8>, bytes: &[u8]| {
+        out.extend(bytes.iter().map(|&c| if c == b'\n' { b'\n' } else { b' ' }));
+    };
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        // Line comment.
+        if c == b'/' && b.get(i + 1) == Some(&b'/') {
+            let end = b[i..].iter().position(|&x| x == b'\n').map_or(b.len(), |p| i + p);
+            blank(&mut out, &b[i..end]);
+            i = end;
+        // Block comment (nesting, as in Rust).
+        } else if c == b'/' && b.get(i + 1) == Some(&b'*') {
+            let mut depth = 1;
+            let mut j = i + 2;
+            while j < b.len() && depth > 0 {
+                if b[j] == b'/' && b.get(j + 1) == Some(&b'*') {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && b.get(j + 1) == Some(&b'/') {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, &b[i..j]);
+            i = j;
+        // Raw string (optionally byte): r"…", r#"…"#, br#"…"#.
+        } else if (c == b'r' || (c == b'b' && b.get(i + 1) == Some(&b'r')))
+            && raw_string_end(b, i).is_some()
+        {
+            let end = raw_string_end(b, i).unwrap();
+            blank(&mut out, &b[i..end]);
+            i = end;
+        // Plain or byte string.
+        } else if c == b'"' || (c == b'b' && b.get(i + 1) == Some(&b'"')) {
+            let mut j = i + if c == b'"' { 1 } else { 2 };
+            while j < b.len() {
+                if b[j] == b'\\' {
+                    j += 2;
+                } else if b[j] == b'"' {
+                    j += 1;
+                    break;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, &b[i..j.min(b.len())]);
+            i = j.min(b.len());
+        // Char literal vs lifetime: 'x' / '\n' are literals, 'a (no
+        // closing quote nearby) is a lifetime and passes through.
+        } else if c == b'\'' {
+            let lit_end = char_literal_end(b, i);
+            match lit_end {
+                Some(j) => {
+                    blank(&mut out, &b[i..j]);
+                    i = j;
+                }
+                None => {
+                    out.push(c);
+                    i += 1;
+                }
+            }
+        } else {
+            out.push(c);
+            i += 1;
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// If `i` starts a raw string literal, return the index one past its
+/// closing quote+hashes.
+fn raw_string_end(b: &[u8], i: usize) -> Option<usize> {
+    let mut j = i + if b[i] == b'b' { 2 } else { 1 }; // skip b? r
+    if b.get(j.wrapping_sub(1)) != Some(&b'r') {
+        return None;
+    }
+    let mut hashes = 0;
+    while b.get(j) == Some(&b'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if b.get(j) != Some(&b'"') {
+        return None;
+    }
+    j += 1;
+    while j < b.len() {
+        if b[j] == b'"' && b[j + 1..].iter().take(hashes).filter(|&&x| x == b'#').count() == hashes
+        {
+            return Some(j + 1 + hashes);
+        }
+        j += 1;
+    }
+    Some(b.len())
+}
+
+/// If `i` starts a char literal, return the index one past its closing
+/// quote; `None` means it is a lifetime.
+fn char_literal_end(b: &[u8], i: usize) -> Option<usize> {
+    match b.get(i + 1) {
+        Some(b'\\') => {
+            // Escape: scan to the closing quote.
+            let mut j = i + 2;
+            while j < b.len() && b[j] != b'\'' {
+                j += 1;
+            }
+            Some((j + 1).min(b.len()))
+        }
+        Some(_) if b.get(i + 2) == Some(&b'\'') => Some(i + 3),
+        _ => None,
+    }
+}
+
+/// Verify (){}[] balance on lexed code.
+fn check_balance(code: &str) -> Result<(), String> {
+    let mut stack: Vec<(u8, usize)> = Vec::new();
+    let mut line = 1usize;
+    for &c in code.as_bytes() {
+        match c {
+            b'\n' => line += 1,
+            b'(' | b'{' | b'[' => stack.push((c, line)),
+            b')' | b'}' | b']' => {
+                let open = match c {
+                    b')' => b'(',
+                    b'}' => b'{',
+                    _ => b'[',
+                };
+                match stack.pop() {
+                    Some((o, _)) if o == open => {}
+                    Some((o, l)) => {
+                        return Err(format!(
+                            "line {line}: `{}` closes `{}` opened at line {l}",
+                            c as char, o as char
+                        ));
+                    }
+                    None => return Err(format!("line {line}: unmatched `{}`", c as char)),
+                }
+            }
+            _ => {}
+        }
+    }
+    match stack.last() {
+        Some(&(o, l)) => Err(format!("unclosed `{}` opened at line {l}", o as char)),
+        None => Ok(()),
+    }
+}
+
+/// Blank every item gated behind a test cfg — `#[test]`, `#[cfg(test)]`,
+/// `#[cfg(all(loom, test))]`, … — so the deny pass only sees code that
+/// ships in the library. `not(test)` gates are NOT masked. Operates on
+/// lexed code (no comment/string false positives), preserving newlines.
+fn mask_test_regions(code: &mut String) {
+    let mut bytes = std::mem::take(code).into_bytes();
+    let b = &mut bytes[..];
+    let mut i = 0;
+    while i < b.len() {
+        if b[i] != b'#' || next_nonspace(b, i + 1) != Some(b'[') {
+            i += 1;
+            continue;
+        }
+        let attr_start = i;
+        let open = idx_of_next_nonspace(b, i + 1).unwrap();
+        let (attr_end, attr_text) = scan_brackets(b, open);
+        let norm: String =
+            attr_text.chars().filter(|c| !c.is_whitespace()).collect::<String>();
+        let gated = norm == "[test]"
+            || (norm.starts_with("[cfg(") && norm.contains("test") && !norm.contains("not("));
+        if !gated {
+            i = attr_end;
+            continue;
+        }
+        // Skip any further attributes on the same item.
+        let mut j = attr_end;
+        loop {
+            let Some(nj) = idx_of_next_nonspace(b, j) else { break };
+            if b[nj] == b'#' && next_nonspace(b, nj + 1) == Some(b'[') {
+                let o = idx_of_next_nonspace(b, nj + 1).unwrap();
+                j = scan_brackets(b, o).0;
+            } else {
+                break;
+            }
+        }
+        // Find the item's body `{…}` (or a terminating `;` for bodyless
+        // items), tracking paren/bracket depth so `fn f(x: [u8; 3])`
+        // doesn't stop at the array-length semicolon.
+        let mut depth = 0i32;
+        let mut body_open = None;
+        while j < b.len() {
+            match b[j] {
+                b'(' | b'[' => depth += 1,
+                b')' | b']' => depth -= 1,
+                b'{' if depth == 0 => {
+                    body_open = Some(j);
+                    break;
+                }
+                b';' if depth == 0 => break,
+                _ => {}
+            }
+            j += 1;
+        }
+        let region_end = match body_open {
+            Some(o) => {
+                let mut bd = 0i32;
+                let mut k = o;
+                while k < b.len() {
+                    match b[k] {
+                        b'{' => bd += 1,
+                        b'}' => {
+                            bd -= 1;
+                            if bd == 0 {
+                                break;
+                            }
+                        }
+                        _ => {}
+                    }
+                    k += 1;
+                }
+                (k + 1).min(b.len())
+            }
+            None => (j + 1).min(b.len()),
+        };
+        for k in attr_start..region_end {
+            if b[k] != b'\n' {
+                b[k] = b' ';
+            }
+        }
+        i = region_end;
+    }
+    // Gated regions are blanked wholesale (never split mid-character),
+    // so the bytes are still valid UTF-8.
+    *code = String::from_utf8(bytes).expect("masking preserves UTF-8");
+}
+
+fn next_nonspace(b: &[u8], from: usize) -> Option<u8> {
+    idx_of_next_nonspace(b, from).map(|i| b[i])
+}
+
+fn idx_of_next_nonspace(b: &[u8], from: usize) -> Option<usize> {
+    (from..b.len()).find(|&i| !b[i].is_ascii_whitespace())
+}
+
+/// From an opening `[`, return (index one past the matching `]`, the
+/// bracketed text including both brackets).
+fn scan_brackets(b: &[u8], open: usize) -> (usize, String) {
+    let mut depth = 0i32;
+    let mut j = open;
+    while j < b.len() {
+        match b[j] {
+            b'[' => depth += 1,
+            b']' => {
+                depth -= 1;
+                if depth == 0 {
+                    j += 1;
+                    break;
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    (j, String::from_utf8_lossy(&b[open..j]).into_owned())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexer_blanks_comments_and_strings() {
+        let src = "let x = \"Instant::now\"; // Instant::now\n/* HashMap */ let y = 1;";
+        let code = strip_comments_and_strings(src);
+        assert!(!code.contains("Instant::now"));
+        assert!(!code.contains("HashMap"));
+        assert!(code.contains("let x ="));
+        assert!(code.contains("let y = 1;"));
+        assert_eq!(code.matches('\n').count(), src.matches('\n').count());
+    }
+
+    #[test]
+    fn lexer_handles_raw_strings_and_lifetimes() {
+        let src = "fn f<'a>(x: &'a str) { let s = r#\"HashMap \"#; let c = '\\n'; }";
+        let code = strip_comments_and_strings(src);
+        assert!(!code.contains("HashMap"));
+        assert!(code.contains("fn f<'a>(x: &'a str)"));
+        check_balance(&code).unwrap();
+    }
+
+    #[test]
+    fn balance_catches_truncation() {
+        assert!(check_balance("fn f() { if x { }").is_err());
+        assert!(check_balance("fn f() { (] }").is_err());
+        check_balance("fn f(x: [u8; 3]) -> (u8, u8) { ([1, 2], 3); }").unwrap();
+    }
+
+    #[test]
+    fn test_regions_are_masked() {
+        let src = "use std::time::Instant;\n\
+                   fn live() { let t = Instant::now(); }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n    fn t() { let m = HashMap::new(); }\n}\n\
+                   #[cfg(not(test))]\n\
+                   fn shipped() { let s = HashSet::new(); }\n";
+        let mut code = strip_comments_and_strings(src);
+        mask_test_regions(&mut code);
+        assert!(code.contains("Instant::now"), "live code kept");
+        assert!(!code.contains("HashMap"), "cfg(test) module masked");
+        assert!(code.contains("HashSet"), "not(test) is NOT a test gate");
+    }
+
+    #[test]
+    fn loom_test_gate_is_masked() {
+        let src = "#[cfg(all(loom, test))]\nmod loom_tests { fn t() { thread_rng(); } }\n\
+                   fn live() {}\n";
+        let mut code = strip_comments_and_strings(src);
+        mask_test_regions(&mut code);
+        assert!(!code.contains("thread_rng"));
+        assert!(code.contains("fn live()"));
+    }
+}
