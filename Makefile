@@ -32,9 +32,14 @@ bench:
 # CI shape of the P1 rank-scaling bench (PR 6): reduced P1a sweep plus
 # the full n=5000 p=1024 acceptance row (threads vs event vs steal:4,
 # all bitwise-equal, steal expected >= event throughput), regenerating
-# BENCH_scaling_p.json with measured wall-clock columns.
+# BENCH_scaling_p.json with measured wall-clock columns. The R1 row
+# (ISSUE 8) is the batch A/B: J batched-interleaved jobs vs J sequential
+# solo runs, every job asserted bitwise-solo, batch virtual jobs/sec
+# asserted >= 2x sequential with one shared matrix build — regenerating
+# BENCH_scaling_runs.json.
 bench-smoke:
 	$(CARGO) bench --bench scaling_p -- --smoke
+	$(CARGO) bench --bench scaling_runs -- --smoke
 
 # ISSUE 7: exhaustive model checking of the pool wake protocol. Runs the
 # vendored explorer's own suite first, then the lancew `loom_` tests with

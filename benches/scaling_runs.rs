@@ -1,0 +1,189 @@
+//! BENCH R1 (ISSUE 8) — multi-run throughput: batched-interleaved vs
+//! sequential-solo execution of J identical clustering jobs.
+//!
+//! The batch service's pitch is operational, not per-job: J jobs on one
+//! scheduler share a single §5.1 matrix build, recycle rank state
+//! through the `StatePool`, and hide each other's blocking points — so
+//! the *batch* finishes sooner and allocates less, while every job stays
+//! bitwise the solo run (asserted here, job by job). Two columns per J:
+//!
+//!   (a) sequential solo: J back-to-back `run_source` calls (the
+//!       pre-batch workflow) — J matrix builds, J·p fresh rank states,
+//!       batch virtual time = Σ per-job virtual times;
+//!   (b) batched: one `RunBatch` (window 4) on event and on steal:4 —
+//!       1 matrix build, window·p fresh states (the rest recycled), and
+//!       a modelled batch virtual time = 4-slot list-schedule makespan.
+//!
+//! Acceptance (ISSUE 8): virtual-time jobs/sec of the batch ≥ 2× the
+//! sequential column with `matrix_builds == 1` per shared-dataset batch
+//! — with identical jobs and window 4 the makespan model gives exactly
+//! 4×, so the 2× bar has real slack; both are asserted, not just
+//! reported, because the virtual clocks are deterministic.
+//!
+//! Modes: default = full (J ∈ {8, 32} at n=500, p=8); `--quick` = J=8
+//! at n=200; `--smoke` = CI shape (`make bench-smoke`): J ∈ {8, 32} at
+//! n=300, regenerating BENCH_scaling_runs.json with measured wall-clock
+//! columns.
+//!
+//! Writes BENCH_scaling_runs.json at the repo root (provenance-marked
+//! like BENCH_scaling_p.json; EXPERIMENTS.md §Batch A/B).
+
+use lancew::comm::Collectives;
+use lancew::metrics::Timer;
+use lancew::prelude::*;
+
+/// Host threads for the steal column; fixed for reproducibility (the
+/// scheduler clamps to the actual core count at runtime).
+const STEAL_WIDTH: usize = 4;
+/// Ranks per job and the batch admission window.
+const P: usize = 8;
+const WINDOW: usize = 4;
+
+fn scalable_config() -> ClusterConfig {
+    ClusterConfig::new(Scheme::Complete, P)
+        .with_collectives(Collectives::Tree)
+        .with_scan(ScanStrategy::Indexed)
+        .with_alive_walk(AliveWalk::Incremental)
+}
+
+fn run_batch(rt: Runtime, j: usize, src: &DistSource) -> anyhow::Result<(f64, BatchRun)> {
+    let mut batch = RunBatch::new(rt).with_max_inflight(WINDOW);
+    batch.push_shape(BatchShape::Repeat(j), &scalable_config(), src);
+    let t = Timer::start();
+    let out = batch.run()?;
+    Ok((t.elapsed_s(), out))
+}
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mode = if quick {
+        "--quick"
+    } else if smoke {
+        "--smoke"
+    } else {
+        ""
+    };
+    let n = if quick {
+        200
+    } else if smoke {
+        300
+    } else {
+        500
+    };
+    let js: Vec<usize> = if quick { vec![8] } else { vec![8, 32] };
+    let mut rows: Vec<String> = Vec::new();
+
+    println!(
+        "# R1: sequential solo vs batched (window={WINDOW}) — J jobs of \
+         n={n} p={P} (tree/indexed/incremental, raw-points dataset)"
+    );
+    println!(
+        "{:>4} {:>12} {:>12} {:>12} {:>12} {:>12} {:>8} {:>14} {:>14}",
+        "J",
+        "seq_wall_s",
+        "ev_wall_s",
+        "steal_wall_s",
+        "seq_virt_s",
+        "batch_virt_s",
+        "virt_x",
+        "builds_seq/b",
+        "fresh_seq/b"
+    );
+    let lp = GaussianSpec { n, d: 5, k: 6, ..Default::default() }.generate(88);
+    let src = DistSource::Points(lp.points);
+    for &j in &js {
+        // ---- (a) sequential solo: the pre-batch workflow --------------
+        let t = Timer::start();
+        let mut solos = Vec::with_capacity(j);
+        for _ in 0..j {
+            solos.push(scalable_config().run_source(src.clone())?);
+        }
+        let seq_wall = t.elapsed_s();
+        let seq_virtual: f64 = solos.iter().map(|r| r.stats.virtual_s).sum();
+        let builds_seq: u64 = solos.iter().map(|r| r.stats.matrix_builds).sum();
+        assert_eq!(builds_seq, j as u64, "J={j}: each solo run builds once");
+
+        // ---- (b) batched: event and steal columns ---------------------
+        let (event_wall, event_batch) = run_batch(Runtime::Event, j, &src)?;
+        let (steal_wall, steal_batch) = run_batch(Runtime::Steal(STEAL_WIDTH), j, &src)?;
+
+        // Every job bitwise the solo run, on both substrates — the batch
+        // invariant IS the bench's license to compare the columns.
+        for (b, label) in [(&event_batch, "event"), (&steal_batch, "steal")] {
+            for (i, job) in b.jobs.iter().enumerate() {
+                let run = job.as_ref().map_err(|e| anyhow::anyhow!("J={j} job {i}: {e}"))?;
+                lancew::validate::dendrograms_equal(&solos[0].dendrogram, &run.dendrogram, 0.0)
+                    .map_err(|e| anyhow::anyhow!("J={j} {label} job {i} diverged: {e}"))?;
+                assert_eq!(
+                    run.stats.virtual_s, solos[0].stats.virtual_s,
+                    "J={j} {label} job {i}: virtual time"
+                );
+                assert_eq!(
+                    run.stats.msgs_sent, solos[0].stats.msgs_sent,
+                    "J={j} {label} job {i}: messages"
+                );
+            }
+            // The sharing ledger: one build for the whole batch, only the
+            // admission window's worth of fresh rank states.
+            assert_eq!(b.stats.matrix_builds, 1, "J={j} {label}: one shared build");
+            assert_eq!(b.stats.pool_misses, (WINDOW * P) as u64, "J={j} {label}: fresh states");
+            assert_eq!(
+                b.stats.pool_hits,
+                ((j - WINDOW) * P) as u64,
+                "J={j} {label}: recycled states"
+            );
+            assert_eq!(b.stats.virtual_s, event_batch.stats.virtual_s, "J={j}: batch makespan");
+        }
+        let batch_virtual = event_batch.stats.virtual_s;
+        let speedup = seq_virtual / batch_virtual;
+        // The ISSUE 8 acceptance bar, deterministic in virtual time.
+        assert!(
+            speedup >= 2.0,
+            "J={j}: batched jobs/sec {speedup:.2}x sequential — acceptance needs >= 2x"
+        );
+        println!(
+            "{:>4} {:>12.3} {:>12.3} {:>12.3} {:>12.6} {:>12.6} {:>7.2}x {:>14} {:>14}",
+            j,
+            seq_wall,
+            event_wall,
+            steal_wall,
+            seq_virtual,
+            batch_virtual,
+            speedup,
+            format!("{}/{}", builds_seq, event_batch.stats.matrix_builds),
+            format!("{}/{}", j * P, event_batch.stats.pool_misses),
+        );
+        rows.push(format!(
+            "{{\"jobs\": {j}, \"n\": {n}, \"p\": {P}, \"window\": {WINDOW}, \
+             \"seq_wall_s\": {seq_wall:.3}, \"batch_event_wall_s\": {event_wall:.3}, \
+             \"batch_steal_wall_s\": {steal_wall:.3}, \"seq_virtual_s\": {seq_virtual:.6}, \
+             \"batch_virtual_s\": {batch_virtual:.6}, \"virtual_speedup\": {speedup:.2}, \
+             \"jobs_per_virtual_s_seq\": {:.1}, \"jobs_per_virtual_s_batch\": {:.1}, \
+             \"matrix_builds_seq\": {builds_seq}, \"matrix_builds_batch\": {}, \
+             \"fresh_states_seq\": {}, \"fresh_states_batch\": {}, \
+             \"recycled_states\": {}, \"bitwise_solo\": true}}",
+            j as f64 / seq_virtual,
+            j as f64 / batch_virtual,
+            event_batch.stats.matrix_builds,
+            j * P,
+            event_batch.stats.pool_misses,
+            event_batch.stats.pool_hits,
+        ));
+    }
+
+    let path = "BENCH_scaling_runs.json";
+    std::fs::write(
+        path,
+        format!(
+            "{{\n  \"bench\": \"scaling_runs\",\n  \"provenance\": \"measured (cargo bench --bench scaling_runs{}{})\",\n  \
+             \"config\": \"scheme=complete collectives=tree scan=indexed alive-walk=incremental n={n} p={P} window={WINDOW} steal_width={STEAL_WIDTH} dataset=points\",\n  \
+             \"r1_batch_ab\": {{\n    \"rows\": [\n      {}\n    ]\n  }}\n}}\n",
+            if mode.is_empty() { "" } else { " -- " },
+            mode,
+            rows.join(",\n      "),
+        ),
+    )?;
+    println!("# json: {path}");
+    Ok(())
+}

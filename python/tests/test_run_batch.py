@@ -1,0 +1,174 @@
+"""Differential test for the ISSUE 8 multi-run batch service.
+
+Transliterates the job-interleaving core of
+`rust/src/coordinator/batch.rs`: J independent clustering jobs, each
+with its own mailbox array (tag namespacing — a job's messages cannot
+reach another job by construction) and a disjoint global rank-id range
+``base_j .. base_j + p_j`` used for wake routing, all driven by ONE
+event scheduler with an admission window (jobs beyond the window park
+at an admission gate; the completer of a job's last rank admits the
+next queued job and wakes its whole rank range).
+
+Asserted, for batches mixing partition kinds × schemes × p ∈ {2, 7},
+under the FIFO event order AND many seeded random host orders
+(steal-style schedules):
+
+1. every job's merge sequence is identical to a solo ``run_event_sim``
+   of the same configuration;
+2. every rank's final virtual clock, message/byte counters, and phase
+   breakdown are *exactly* equal to the solo run — interleaving J jobs
+   on one scheduler perturbs nothing;
+3. the admission window changes host execution order only: window=1
+   (fully serialized) through window=J (fully concurrent) all match.
+
+This is the container-side stand-in for `rust/tests/batch_service.rs`
+(no Rust toolchain here); the Rust suite pins the same invariants in CI
+plus the shared-build / state-pool ledger the Python model omits.
+"""
+
+import random
+from collections import deque
+
+from test_event_runtime import (
+    Endpoint,
+    Model,
+    Partition,
+    RankTask,
+    random_matrix,
+    run_event_sim,
+    serial_lw,
+)
+
+
+def run_batch_event_sim(jobs, model, window=4, order_seed=None):
+    """batch.rs run() transliterated.
+
+    ``jobs`` is a list of (kind, scheme, collectives, matrix, n, p).
+    Each job gets its own boxes + endpoints (the per-job Network) and a
+    disjoint global rank range; one ready queue drives every task.
+    ``order_seed=None`` is the FIFO event order; a seed picks random
+    ready entries each step, modelling an arbitrary steal-style host
+    schedule.  Returns per-job lists of rank results.
+    """
+    tasks = []  # global id -> (job index, RankTask, Endpoint, base)
+    bases = []
+    remaining = []
+    for spec in jobs:
+        kind, scheme, collectives, matrix, n, p = spec
+        boxes = [[] for _ in range(p)]
+        part = Partition(kind, n, p)
+        eps = [Endpoint(r, p, model, boxes) for r in range(p)]
+        base = len(tasks)
+        bases.append(base)
+        remaining.append(p)
+        for r in range(p):
+            eps[r].wakes = []
+            tasks.append((len(bases) - 1, RankTask(eps[r], part, scheme,
+                                                   collectives, matrix), eps[r], base))
+    total = len(tasks)
+    admitted = min(max(window, 1), len(jobs))
+    ready = deque(range(total))
+    queued = [True] * total
+    settled = [False] * total
+    results = [[None] * spec[5] for spec in jobs]
+    rng = random.Random(order_seed) if order_seed is not None else None
+    done = 0
+    while done < total:
+        assert ready, "batch sim deadlocked"
+        if rng is None:
+            g = ready.popleft()
+        else:
+            k = rng.randrange(len(ready))  # arbitrary host schedule
+            ready.rotate(-k)
+            g = ready.popleft()
+            ready.rotate(k)
+        queued[g] = False
+        j, task, ep, base = tasks[g]
+        if j >= admitted:
+            # Parked at the admission gate; woken by the admission fanout.
+            continue
+        pending = task.poll()
+        wakes = [base + dst for dst in ep.wakes]  # rank_base namespacing
+        ep.wakes = []
+        if pending is None and not settled[g]:
+            settled[g] = True
+            results[j][g - base] = task.out
+            done += 1
+            remaining[j] -= 1
+            if remaining[j] == 0:
+                nxt = admitted
+                admitted += 1
+                if nxt < len(jobs):  # wake the admitted job's whole range
+                    wakes.extend(range(bases[nxt], bases[nxt] + jobs[nxt][5]))
+        for dst in wakes:
+            if not queued[dst] and not settled[dst]:
+                queued[dst] = True
+                ready.append(dst)
+    return results
+
+
+def assert_job_matches_solo(batch_ranks, spec, ctx):
+    kind, scheme, collectives, matrix, n, p = spec
+    solo = run_event_sim(kind, scheme, collectives, matrix, n, p, Model())
+    for r in range(p):
+        b, s = batch_ranks[r], solo[r]
+        assert b["merges"] == s["merges"], f"{ctx}: rank {r} merges diverge"
+        assert b["clock"] == s["clock"], \
+            f"{ctx}: rank {r} clock {b['clock']} != {s['clock']}"
+        assert b["msgs"] == s["msgs"], f"{ctx}: rank {r} msgs"
+        assert b["bytes"] == s["bytes"], f"{ctx}: rank {r} bytes"
+        assert b["phases"] == s["phases"], f"{ctx}: rank {r} phases"
+    assert batch_ranks[0]["merges"] == serial_lw(scheme, matrix, n), \
+        f"{ctx}: diverges from serial oracle"
+
+
+def sweep_jobs():
+    """A mixed batch: schemes × kinds × p ∈ {2, 7} over two datasets."""
+    m_a = random_matrix(20, 300)
+    m_b = random_matrix(16, 301)
+    return [
+        ("balanced", "complete", "naive", m_a, 20, 2),
+        ("rows", "complete", "tree", m_a, 20, 7),
+        ("cyclic", "average", "naive", m_b, 16, 7),
+        ("balanced", "ward", "tree", m_b, 16, 2),
+        ("balanced", "average", "tree", m_a, 20, 7),
+        ("cyclic", "complete", "tree", m_b, 16, 2),
+    ]
+
+
+def test_batch_matches_solo_fifo_order():
+    jobs = sweep_jobs()
+    for window in [1, 2, 4, len(jobs)]:
+        out = run_batch_event_sim(jobs, Model(), window=window)
+        for j, spec in enumerate(jobs):
+            assert_job_matches_solo(out[j], spec, f"fifo window={window} job {j}")
+
+
+def test_batch_matches_solo_random_host_orders():
+    # Steal-style schedules: the interleaving of jobs (and of ranks
+    # within a job) is arbitrary; every observable must survive it.
+    jobs = sweep_jobs()
+    for seed in range(5):
+        out = run_batch_event_sim(jobs, Model(), window=3, order_seed=seed)
+        for j, spec in enumerate(jobs):
+            assert_job_matches_solo(out[j], spec, f"seed={seed} job {j}")
+
+
+def test_repeat_batch_every_copy_identical():
+    # The repeated per-user-request shape: 8 copies of one job; each
+    # must be bitwise the solo run (and hence bitwise each other).
+    m = random_matrix(18, 302)
+    spec = ("balanced", "complete", "tree", m, 18, 7)
+    jobs = [spec] * 8
+    out = run_batch_event_sim(jobs, Model(), window=4)
+    for j in range(8):
+        assert_job_matches_solo(out[j], spec, f"repeat job {j}")
+    for j in range(1, 8):
+        assert out[j] == out[0], f"repeat job {j} != job 0"
+
+
+if __name__ == "__main__":
+    test_batch_matches_solo_fifo_order()
+    test_batch_matches_solo_random_host_orders()
+    test_repeat_batch_every_copy_identical()
+    print("batched ≡ solo: all windows, orders, and shapes OK")

@@ -117,6 +117,12 @@ pub struct Endpoint<T> {
     ///
     /// [`take_wakes`]: Endpoint::take_wakes
     wake_log: Option<Vec<usize>>,
+    /// Offset added to every logged wake destination. Solo runs leave it
+    /// at 0; a batch scheduler gives each job's network a disjoint base
+    /// so interleaved wake logs never cross jobs (the batch tag-namespace
+    /// invariant — see `coordinator::batch`). Protocol-level addressing
+    /// (`send`/`recv` destinations, `rank()`, `p()`) stays job-local.
+    rank_base: usize,
     /// This rank's simulated clock (advanced by sends/receives/compute).
     pub clock: VirtualClock,
     /// The cost model pricing every send, receive, and compute call.
@@ -149,6 +155,7 @@ impl Network {
                 receiver,
                 stash: Vec::new(),
                 wake_log: None,
+                rank_base: 0,
                 clock: VirtualClock::new(),
                 model,
                 traffic: TrafficStats::default(),
@@ -168,6 +175,22 @@ impl<T: Wire> Endpoint<T> {
         self.p
     }
 
+    /// Namespace this endpoint's wake log: logged destinations become
+    /// `base + dst`. Called once per job by the batch front-end before
+    /// the job's tasks enter a shared scheduler; solo runs never call it.
+    pub fn set_rank_base(&mut self, base: usize) {
+        self.rank_base = base;
+    }
+
+    /// Scheduler-global rank id: `rank_base + rank`. Equal to [`rank`]
+    /// outside a batch (base 0) — the address event/steal schedulers key
+    /// their wake routing on.
+    ///
+    /// [`rank`]: Endpoint::rank
+    pub fn global_rank(&self) -> usize {
+        self.rank_base + self.rank
+    }
+
     /// Send `payload` to `dst` under `tag`. Sender pays overhead + β·m of
     /// virtual time; the message is stamped to arrive `latency` later.
     /// Self-sends are allowed (loopback, no network cost).
@@ -184,7 +207,7 @@ impl<T: Wire> Endpoint<T> {
         self.traffic.bytes_sent += bytes as u64;
         if dst != self.rank {
             if let Some(log) = &mut self.wake_log {
-                log.push(dst);
+                log.push(self.rank_base + dst);
             }
         }
         let env = Envelope {
@@ -414,6 +437,21 @@ mod tests {
         a.send(0, 0, 3); // self-send: no wake needed, goes to own stash
         assert_eq!(a.take_wakes(), vec![1, 2]);
         assert_eq!(a.take_wakes(), Vec::<usize>::new(), "drained");
+    }
+
+    #[test]
+    fn rank_base_namespaces_wake_log() {
+        let mut eps = Network::with_ranks::<u32>(3, CostModel::zero_comm());
+        let mut a = eps.remove(0);
+        assert_eq!(a.global_rank(), 0, "base defaults to 0");
+        a.set_rank_base(10);
+        assert_eq!(a.global_rank(), 10);
+        assert_eq!(a.rank(), 0, "protocol-local rank unchanged");
+        a.enable_wake_log();
+        a.send(1, 0, 1);
+        a.send(2, 0, 2);
+        a.send(0, 0, 3); // self-send: never logged, base or not
+        assert_eq!(a.take_wakes(), vec![11, 12]);
     }
 
     #[test]

@@ -1,0 +1,635 @@
+//! Multi-run batch service: many clustering jobs interleaved on ONE
+//! event/steal scheduler (ISSUE 8 tentpole).
+//!
+//! A [`RunBatch`] accepts a queue of jobs — a parameter sweep over
+//! [`Scheme::all`], bootstrap resamples of one dataset, or the same
+//! request repeated per user — assigns each job a **disjoint global
+//! rank-id space** (`rank_base..rank_base + p`), and hands every job's
+//! [`RankTask`]s to a single scheduler. Independent jobs hide each
+//! other's blocking points: while job A's ranks sit parked in a
+//! gather, job B's ranks poll — the schedulers never idle while any
+//! admitted job has runnable work.
+//!
+//! Three sharing mechanisms ride on top, none of which may perturb a
+//! single observable bit:
+//!
+//! * **Tag namespacing** — each job runs on its own [`Network`] (its
+//!   mailboxes cannot cross jobs by construction) and its endpoints
+//!   carry the job's `rank_base`, so the *wake log* the schedulers
+//!   route on is globally disjoint too
+//!   ([`Endpoint::set_rank_base`](crate::comm::Endpoint::set_rank_base)).
+//!   Protocol-level addressing stays job-local: the wire traffic is
+//!   byte-for-byte the solo run's.
+//! * **Shared §5.1 build** — jobs on the same dataset share one
+//!   [`SharedBuild`]: the first rank to need the distance cells
+//!   materializes all of them from the f32-quantized wire form (bitwise
+//!   what each rank would have computed itself), later ranks copy their
+//!   shard out of the cache. Each rank still *charges* its own build
+//!   cost, so per-job virtual clocks match solo runs exactly; only
+//!   redundant host work disappears (`RunStats::matrix_builds`).
+//! * **State recycling** — shard stores, alive sets, and op buffers
+//!   are checked into a batch-global [`StatePool`] when a job's rank
+//!   finishes and checked out by the next admitted job's ranks
+//!   (`RunStats::{pool_hits, pool_misses}`); the rebuild/reset hygiene
+//!   is pinned by the `matrix::shard` fuzz suite.
+//!
+//! **Invariant** (the batch-equivalence suite,
+//! `rust/tests/batch_service.rs`): every job's dendrogram, virtual
+//! clock, and message counts are bitwise identical to running that job
+//! alone on the same configuration.
+//!
+//! Failure isolation: a worker panic inside one job is caught at the
+//! batch-task boundary, recorded against that job only, and fanned out
+//! to the job's remaining ranks so they cancel; the job's handle comes
+//! back `Err("worker panicked: …")` while every other job completes
+//! normally (the per-job scoping bugfix — without the catch, the
+//! sharded pool's abort flag would take the whole batch down).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::comm::Network;
+use crate::coordinator::costmodel_host::HostOp;
+use crate::coordinator::protocol::ProtoMsg;
+use crate::coordinator::sched::{self, PoolTask, SchedCounters};
+use crate::coordinator::source::SharedBuild;
+use crate::coordinator::task::{Poll, RankTask};
+use crate::coordinator::worker::WorkerOutput;
+use crate::coordinator::{assemble_run, ClusterConfig, ClusterRun, DistSource, Runtime};
+use crate::linkage::Scheme;
+use crate::matrix::{CondensedMatrix, StatePool};
+use crate::metrics::{RunStats, Timer};
+
+/// Handle to a dataset registered with [`RunBatch::add_dataset`]. Jobs
+/// referencing the same id share one §5.1 matrix build.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DatasetId(usize);
+
+/// The canned batch shapes the CLI exposes (`--batch
+/// sweep|bootstrap:K|repeat:K`); [`RunBatch::push_shape`] expands one
+/// into jobs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchShape {
+    /// One job per Lance-Williams [`Scheme`] on one shared dataset.
+    Sweep,
+    /// K bootstrap resamples (with replacement, deterministic seeds) of
+    /// the input — K distinct datasets, one job each.
+    Bootstrap(usize),
+    /// The same job K times on one shared dataset (the repeated
+    /// per-user-request workload; maximal sharing).
+    Repeat(usize),
+}
+
+impl std::str::FromStr for BatchShape {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        if s == "sweep" {
+            return Ok(Self::Sweep);
+        }
+        let parse_k = |k: &str, what: &str| -> anyhow::Result<usize> {
+            let k: usize =
+                k.parse().map_err(|e| anyhow::anyhow!("bad {what} count {k:?}: {e}"))?;
+            anyhow::ensure!(k >= 1, "{what} batch needs at least 1 job");
+            Ok(k)
+        };
+        if let Some(k) = s.strip_prefix("bootstrap:") {
+            return Ok(Self::Bootstrap(parse_k(k, "bootstrap")?));
+        }
+        if let Some(k) = s.strip_prefix("repeat:") {
+            return Ok(Self::Repeat(parse_k(k, "repeat")?));
+        }
+        anyhow::bail!("unknown batch shape {s:?} (sweep|bootstrap:K|repeat:K)")
+    }
+}
+
+/// One queued job: a solo-equivalent configuration over a registered
+/// dataset. The config's own `runtime` field is ignored — the batch's
+/// scheduler drives every job.
+#[derive(Clone)]
+struct Job {
+    cfg: ClusterConfig,
+    dataset: DatasetId,
+}
+
+/// The batch front-end: queue jobs, then [`run`](RunBatch::run) them
+/// interleaved on one scheduler.
+///
+/// ```
+/// use lancew::prelude::*;
+///
+/// let m = CondensedMatrix::from_fn(12, |i, j| ((i * 31 + j * 17) % 23) as f32);
+/// let mut batch = RunBatch::new(Runtime::Event);
+/// let data = batch.add_dataset(DistSource::Matrix(m.clone()));
+/// batch.push_job(ClusterConfig::new(Scheme::Single, 4), data);
+/// batch.push_job(ClusterConfig::new(Scheme::Complete, 4), data);
+/// let out = batch.run().unwrap();
+/// assert_eq!(out.jobs.len(), 2);
+/// // Each job is bitwise what a solo run produces.
+/// let solo = ClusterConfig::new(Scheme::Single, 4).run(&m).unwrap();
+/// let job0 = out.jobs[0].as_ref().unwrap();
+/// assert_eq!(job0.dendrogram.merges(), solo.dendrogram.merges());
+/// ```
+pub struct RunBatch {
+    runtime: Runtime,
+    max_inflight: usize,
+    datasets: Vec<DistSource>,
+    jobs: Vec<Job>,
+}
+
+/// What [`RunBatch::run`] returns: one handle per job (push order) plus
+/// batch-aggregate statistics.
+pub struct BatchRun {
+    /// Per-job results in push order. A job whose worker panicked is an
+    /// `Err` here; every other job completes regardless.
+    pub jobs: Vec<anyhow::Result<ClusterRun>>,
+    /// Aggregate statistics: summed traffic/work counters, the shared
+    /// build and pool counters, and a `virtual_s` that models the batch
+    /// makespan as a `max_inflight`-slot list schedule over the per-job
+    /// virtual times (job clocks are independent — that independence IS
+    /// the equivalence invariant — so the batch clock is a model, not a
+    /// measurement).
+    pub stats: RunStats,
+}
+
+impl RunBatch {
+    /// A new empty batch on the given scheduler. `Runtime::Threads`
+    /// cannot interleave jobs (each rank owns an OS thread) and is
+    /// rejected by [`run`](RunBatch::run).
+    pub fn new(runtime: Runtime) -> Self {
+        Self { runtime, max_inflight: 4, datasets: Vec::new(), jobs: Vec::new() }
+    }
+
+    /// Cap on concurrently admitted jobs (default 4). Jobs beyond the
+    /// window park at an admission gate and start — recycling the
+    /// finished job's allocations — as earlier jobs complete.
+    pub fn with_max_inflight(mut self, window: usize) -> Self {
+        self.max_inflight = window.max(1);
+        self
+    }
+
+    /// Register a dataset. Jobs pushed against the same id share one
+    /// §5.1 distance-matrix materialization.
+    pub fn add_dataset(&mut self, source: DistSource) -> DatasetId {
+        self.datasets.push(source);
+        DatasetId(self.datasets.len() - 1)
+    }
+
+    /// Queue one job; returns its index into [`BatchRun::jobs`]. The
+    /// config's `runtime` field is ignored (the batch scheduler drives
+    /// all jobs).
+    pub fn push_job(&mut self, cfg: ClusterConfig, dataset: DatasetId) -> usize {
+        assert!(dataset.0 < self.datasets.len(), "unknown dataset id");
+        self.jobs.push(Job { cfg, dataset });
+        self.jobs.len() - 1
+    }
+
+    /// Expand a canned [`BatchShape`] over `source` into queued jobs;
+    /// returns their indices.
+    pub fn push_shape(
+        &mut self,
+        shape: BatchShape,
+        cfg: &ClusterConfig,
+        source: &DistSource,
+    ) -> Vec<usize> {
+        match shape {
+            BatchShape::Sweep => {
+                let d = self.add_dataset(source.clone());
+                Scheme::all()
+                    .iter()
+                    .map(|&scheme| {
+                        let mut c = cfg.clone();
+                        c.scheme = scheme;
+                        self.push_job(c, d)
+                    })
+                    .collect()
+            }
+            BatchShape::Repeat(k) => {
+                let d = self.add_dataset(source.clone());
+                (0..k).map(|_| self.push_job(cfg.clone(), d)).collect()
+            }
+            BatchShape::Bootstrap(k) => (0..k)
+                .map(|i| {
+                    let d = self.add_dataset(bootstrap_source(source, i as u64));
+                    self.push_job(cfg.clone(), d)
+                })
+                .collect(),
+        }
+    }
+
+    /// Number of queued jobs.
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    /// Whether the queue is empty.
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Run every queued job to completion, interleaved on the batch's
+    /// scheduler. Per-job failures (worker panics) come back as `Err`
+    /// in their slot of [`BatchRun::jobs`]; `run` itself errs only on
+    /// batch-level misuse (empty queue, `Runtime::Threads`) or a
+    /// scheduler-level fault.
+    pub fn run(self) -> anyhow::Result<BatchRun> {
+        anyhow::ensure!(!self.jobs.is_empty(), "empty batch: push at least one job");
+        anyhow::ensure!(
+            self.runtime != Runtime::Threads,
+            "batch requires an interleaving scheduler (event|event:N|steal:N); \
+             threads dedicates an OS thread per rank and cannot overlap jobs"
+        );
+        for (j, job) in self.jobs.iter().enumerate() {
+            let n = self.datasets[job.dataset.0].n();
+            anyhow::ensure!(n >= 2, "job {j}: need at least 2 items");
+            anyhow::ensure!(job.cfg.p >= 1, "job {j}: need at least 1 rank");
+        }
+        let timer = Timer::start();
+        let shared: Vec<Arc<SharedBuild>> =
+            self.datasets.iter().map(|_| Arc::new(SharedBuild::new())).collect();
+        let dataset_arcs: Vec<Arc<DistSource>> =
+            self.datasets.iter().map(|d| Arc::new(d.clone())).collect();
+        let pool = Arc::new(Mutex::new(StatePool::new()));
+
+        // Disjoint global rank-id spaces: job j owns base_j..base_j+p_j.
+        let mut base = 0usize;
+        let job_shared: Vec<Arc<JobShared>> = self
+            .jobs
+            .iter()
+            .enumerate()
+            .map(|(index, job)| {
+                let p = job.cfg.effective_p(self.datasets[job.dataset.0].n());
+                let js = Arc::new(JobShared {
+                    index,
+                    base,
+                    p,
+                    remaining: AtomicUsize::new(p),
+                    failed: Mutex::new(None),
+                });
+                base += p;
+                js
+            })
+            .collect();
+        let window = self.max_inflight.min(self.jobs.len());
+        let batch_shared =
+            Arc::new(BatchShared { admitted: AtomicUsize::new(window), jobs: job_shared.clone() });
+
+        let mut tasks: Vec<BatchTask> = Vec::with_capacity(base);
+        for (job, js) in self.jobs.iter().zip(&job_shared) {
+            let n = self.datasets[job.dataset.0].n();
+            let ctx = job.cfg.worker_ctx(n, js.p);
+            for mut ep in Network::with_ranks::<ProtoMsg>(js.p, job.cfg.cost_model) {
+                let local = ep.rank();
+                ep.set_rank_base(js.base);
+                let src = (local == 0).then(|| dataset_arcs[job.dataset.0].clone());
+                let mut inner = RankTask::new(ep, ctx.clone(), src);
+                inner.share_batch_state(Some(shared[job.dataset.0].clone()), Some(pool.clone()));
+                inner.enable_wake_log();
+                tasks.push(BatchTask {
+                    inner: Some(inner),
+                    job: js.clone(),
+                    batch: batch_shared.clone(),
+                    global_rank: js.base + local,
+                    extra_wakes: Vec::new(),
+                    result: None,
+                });
+            }
+        }
+
+        // Job-level panics never unwind out of BatchTask::poll_task, so
+        // this catch guards only scheduler-level faults (deadlock
+        // diagnostics) — those fail the whole batch, as they should.
+        let caught = |f: Box<dyn std::any::Any + Send>| {
+            let msg = f
+                .downcast_ref::<&str>()
+                .map(|s| s.to_string())
+                .or_else(|| f.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "non-string panic payload".into());
+            anyhow::anyhow!("batch scheduler panicked: {msg}")
+        };
+        let outs: Vec<(usize, Result<WorkerOutput, String>)> = match self.runtime {
+            Runtime::Threads => unreachable!("rejected above"),
+            Runtime::Event => catch_unwind(AssertUnwindSafe(|| sched::run_event(tasks)))
+                .map_err(caught)?,
+            Runtime::EventPool(threads) => {
+                let nt = sched::clamp_pool_width(threads);
+                catch_unwind(AssertUnwindSafe(|| sched::run_pool(tasks, nt, false)))
+                    .map_err(caught)?
+            }
+            Runtime::Steal(threads) => {
+                let nt = sched::clamp_pool_width(threads);
+                catch_unwind(AssertUnwindSafe(|| sched::run_pool(tasks, nt, true)))
+                    .map_err(caught)?
+            }
+        };
+        let wall_s = timer.elapsed_s();
+
+        // Regroup rank outputs by job; a job is failed if any rank is.
+        let mut per_job: Vec<Vec<WorkerOutput>> = (0..self.jobs.len()).map(|_| Vec::new()).collect();
+        let mut failures: Vec<Option<String>> = vec![None; self.jobs.len()];
+        for (j, res) in outs {
+            match res {
+                Ok(o) => per_job[j].push(o),
+                Err(msg) => {
+                    failures[j].get_or_insert(msg);
+                }
+            }
+        }
+        let mut job_runs: Vec<anyhow::Result<ClusterRun>> = Vec::with_capacity(self.jobs.len());
+        for (j, job) in self.jobs.iter().enumerate() {
+            if let Some(msg) = failures[j].take() {
+                job_runs.push(Err(anyhow::anyhow!("job {j}: worker panicked: {msg}")));
+                continue;
+            }
+            let mut ranks = std::mem::take(&mut per_job[j]);
+            ranks.sort_by_key(|o| o.rank);
+            let source = &self.datasets[job.dataset.0];
+            // Per-job stats mirror the solo formula (assembled by the
+            // solo code path); the shared-build reality is the batch
+            // aggregate's matrix_builds below.
+            let builds = if matches!(source, DistSource::Matrix(_)) { 0 } else { 1 };
+            job_runs.push(assemble_run(source.n(), builds, self.runtime.label(), wall_s, ranks));
+        }
+
+        let ok: Vec<&ClusterRun> = job_runs.iter().filter_map(|r| r.as_ref().ok()).collect();
+        let stats = RunStats {
+            wall_s,
+            virtual_s: makespan(&ok.iter().map(|r| r.stats.virtual_s).collect::<Vec<_>>(), window),
+            rank_virtual_s: ok.iter().flat_map(|r| r.stats.rank_virtual_s.clone()).collect(),
+            phases: ok.iter().flat_map(|r| r.stats.phases.clone()).collect(),
+            msgs_sent: ok.iter().map(|r| r.stats.msgs_sent).sum(),
+            bytes_sent: ok.iter().map(|r| r.stats.bytes_sent).sum(),
+            cells_scanned: ok.iter().map(|r| r.stats.cells_scanned).sum(),
+            cells_updated: ok.iter().map(|r| r.stats.cells_updated).sum(),
+            index_ops: ok.iter().map(|r| r.stats.index_ops).sum(),
+            idx_waves: ok.iter().map(|r| r.stats.idx_waves).sum(),
+            alive_visited: ok.iter().map(|r| r.stats.alive_visited).sum(),
+            steals: ok.iter().map(|r| r.stats.steals).sum(),
+            injected_wakes: ok.iter().map(|r| r.stats.injected_wakes).sum(),
+            parks: ok.iter().map(|r| r.stats.parks).sum(),
+            peak_shard_cells: ok.iter().map(|r| r.stats.peak_shard_cells).max().unwrap_or(0),
+            jobs: self.jobs.len() as u64,
+            matrix_builds: shared.iter().map(|s| s.builds()).sum(),
+            pool_hits: plock(&pool).hits(),
+            pool_misses: plock(&pool).misses(),
+            runtime: self.runtime.label(),
+            p: base,
+            n: self.datasets.iter().map(|d| d.n()).max().unwrap_or(0),
+        };
+        Ok(BatchRun { jobs: job_runs, stats })
+    }
+}
+
+/// Deterministic bootstrap resample of `source` (with replacement):
+/// item i of the resample is item `picks[i]` of the input, with picks
+/// drawn from a splitmix64 stream keyed on `seed`. Matrix sources
+/// resample rows/columns of the condensed matrix (duplicate picks meet
+/// at distance 0); raw sources resample their items and rebuild cells
+/// through the normal §5.1 path.
+pub fn bootstrap_source(source: &DistSource, seed: u64) -> DistSource {
+    let n = source.n();
+    let mut state = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15).wrapping_add(0x1905_2A77);
+    let picks: Vec<usize> =
+        (0..n).map(|_| (splitmix64(&mut state) % n as u64) as usize).collect();
+    match source {
+        DistSource::Matrix(m) => DistSource::Matrix(CondensedMatrix::from_fn(n, |i, j| {
+            m.get(picks[i], picks[j])
+        })),
+        DistSource::Points(pts) => {
+            DistSource::Points(picks.iter().map(|&i| pts[i].clone()).collect())
+        }
+        DistSource::Ensemble(e) => {
+            DistSource::Ensemble(picks.iter().map(|&i| e[i].clone()).collect())
+        }
+    }
+}
+
+/// The splitmix64 step — a self-contained deterministic stream (the
+/// repo's no-ambient-randomness rule bans library RNG constructors in
+/// non-test code).
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// Batch virtual-time model: list-schedule the per-job virtual times
+/// onto `window` slots in admission (push) order — each job goes to the
+/// earliest-free slot, the makespan is the fullest slot. With window ≥ 2
+/// this is what "independent runs hide each other's blocking points"
+/// buys over running the jobs back to back (Σ job times), and it is the
+/// A/B `benches/scaling_runs.rs` measures.
+fn makespan(job_virtual_s: &[f64], window: usize) -> f64 {
+    let mut slots = vec![0.0f64; window.max(1)];
+    for &t in job_virtual_s {
+        let min = slots
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).expect("virtual times are finite"))
+            .map(|(i, _)| i)
+            .expect("at least one slot");
+        slots[min] += t;
+    }
+    slots.into_iter().fold(0.0, f64::max)
+}
+
+/// Lock ignoring poisoning: a panicking batch task cannot poison batch
+/// bookkeeping mid-mutation (the guarded sections are plain field
+/// writes), and the failure already propagates through `JobShared::failed`.
+fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Pseudo wake tag a not-yet-admitted task reports as its blocking
+/// point (diagnostic only — admission wakes are addressed by rank).
+const ADMIT_TAG: u64 = u64::MAX;
+
+/// Per-job shared bookkeeping.
+struct JobShared {
+    /// Queue position (admission order, result slot).
+    index: usize,
+    /// First global rank id of this job's disjoint range.
+    base: usize,
+    /// Ranks in this job (after the empty-shard cap).
+    p: usize,
+    /// Ranks not yet complete; the completer that hits 0 admits the
+    /// next queued job.
+    remaining: AtomicUsize,
+    /// First panic message of this job, if any — set once, read by the
+    /// job's surviving ranks to cancel themselves.
+    failed: Mutex<Option<String>>,
+}
+
+/// Batch-wide shared bookkeeping.
+struct BatchShared {
+    /// Jobs 0..admitted may run; the rest park at the admission gate.
+    admitted: AtomicUsize,
+    /// Every job's metadata, for rank-range wake fanout on admission.
+    jobs: Vec<Arc<JobShared>>,
+}
+
+/// One rank of one job, wrapped for the shared scheduler: adds the
+/// admission gate, the per-job panic boundary, and the cancellation /
+/// admission wake fanout around the inner [`RankTask`].
+struct BatchTask {
+    /// The protocol task; `None` once completed, cancelled, or panicked.
+    inner: Option<RankTask>,
+    job: Arc<JobShared>,
+    batch: Arc<BatchShared>,
+    global_rank: usize,
+    /// Wakes this wrapper injects beyond the inner task's sends:
+    /// admission fanout and cancellation fanout.
+    extra_wakes: Vec<usize>,
+    result: Option<Result<WorkerOutput, String>>,
+}
+
+impl BatchTask {
+    /// Mark this rank complete; if it was the job's last, admit the
+    /// next queued job and wake its whole rank range.
+    fn complete_one(&mut self) {
+        if self.job.remaining.fetch_sub(1, Ordering::SeqCst) == 1 {
+            // This rank's pool check-in (and, transitively, every
+            // sibling's — their decrements happened-before ours) is
+            // visible to the admitted job's check-outs.
+            let next = self.batch.admitted.fetch_add(1, Ordering::SeqCst);
+            if let Some(job) = self.batch.jobs.get(next) {
+                self.extra_wakes.extend(job.base..job.base + job.p);
+            }
+        }
+    }
+}
+
+impl PoolTask for BatchTask {
+    type Out = (usize, Result<WorkerOutput, String>);
+
+    fn rank(&self) -> usize {
+        self.global_rank
+    }
+
+    fn poll_task(&mut self) -> Poll {
+        if self.job.index >= self.batch.admitted.load(Ordering::SeqCst) {
+            // Parked at the admission gate; the completer that admits
+            // this job wakes the whole rank range.
+            return Poll::Pending { src: self.global_rank, tag: ADMIT_TAG };
+        }
+        if let Some(msg) = plock(&self.job.failed).clone() {
+            // A sibling rank panicked: cancel. The partially-run state
+            // is dropped, NOT pooled — only clean job-boundary state is
+            // checked in.
+            self.inner = None;
+            self.result = Some(Err(msg));
+            self.complete_one();
+            return Poll::Complete;
+        }
+        let inner = self.inner.as_mut().expect("live batch task holds its rank task");
+        match catch_unwind(AssertUnwindSafe(|| inner.poll())) {
+            Ok(Poll::Complete) => {
+                let out = inner.take_output().expect("Complete poll leaves an output");
+                // The inner finish() already checked the rank's scratch
+                // into the StatePool; drain its last wakes via the
+                // normal drain path before dropping it.
+                let mut tail = Vec::new();
+                inner.drain_wakes_into(&mut tail);
+                self.extra_wakes.extend(tail);
+                self.inner = None;
+                self.result = Some(Ok(out));
+                self.complete_one();
+                Poll::Complete
+            }
+            Ok(pending) => pending,
+            Err(payload) => {
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".into());
+                let first = {
+                    let mut failed = plock(&self.job.failed);
+                    failed.get_or_insert_with(|| msg.clone()).clone()
+                };
+                // Fan a wake across the job's whole rank range so every
+                // parked sibling re-polls, observes the failure, and
+                // cancels (self and finished ranks are no-ops).
+                self.extra_wakes.extend(self.job.base..self.job.base + self.job.p);
+                self.inner = None;
+                self.result = Some(Err(first));
+                self.complete_one();
+                Poll::Complete
+            }
+        }
+    }
+
+    fn charge_host(&mut self, op: HostOp) {
+        if let Some(inner) = self.inner.as_mut() {
+            inner.charge_host(op);
+        }
+    }
+
+    fn drain_wakes_into(&mut self, out: &mut Vec<usize>) {
+        if let Some(inner) = self.inner.as_mut() {
+            inner.drain_wakes_into(out);
+        }
+        out.append(&mut self.extra_wakes);
+    }
+
+    fn finish(mut self, counters: SchedCounters) -> (usize, Result<WorkerOutput, String>) {
+        let mut res = self.result.take().expect("Complete poll leaves a result");
+        if let Ok(out) = &mut res {
+            out.steals = counters.steals;
+            out.injected_wakes = counters.injected_wakes;
+            out.parks = counters.parks;
+        }
+        (self.job.index, res)
+    }
+
+    fn describe(&self) -> String {
+        let local = self.global_rank - self.job.base;
+        match &self.inner {
+            Some(inner) => format!("job {} rank {} in {}", self.job.index, local, inner.step().name()),
+            None => format!("job {} rank {} (settled)", self.job.index, local),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_shape_parses() {
+        assert_eq!("sweep".parse::<BatchShape>().unwrap(), BatchShape::Sweep);
+        assert_eq!("bootstrap:5".parse::<BatchShape>().unwrap(), BatchShape::Bootstrap(5));
+        assert_eq!("repeat:8".parse::<BatchShape>().unwrap(), BatchShape::Repeat(8));
+        assert!("bootstrap:0".parse::<BatchShape>().is_err());
+        assert!("repeat:x".parse::<BatchShape>().is_err());
+        assert!("sweeps".parse::<BatchShape>().is_err());
+    }
+
+    #[test]
+    fn makespan_is_list_schedule() {
+        // One slot: sequential sum.
+        assert_eq!(makespan(&[3.0, 1.0, 2.0], 1), 6.0);
+        // Two slots, in order: {3}, {1,2} → 3.
+        assert_eq!(makespan(&[3.0, 1.0, 2.0], 2), 3.0);
+        // More slots than jobs: the longest job.
+        assert_eq!(makespan(&[3.0, 1.0, 2.0], 8), 3.0);
+        assert_eq!(makespan(&[], 4), 0.0);
+    }
+
+    #[test]
+    fn bootstrap_resample_is_deterministic_and_seed_sensitive() {
+        let m = CondensedMatrix::from_fn(9, |i, j| (i * 13 + j * 7) as f32);
+        let src = DistSource::Matrix(m);
+        let (a, b, c) =
+            (bootstrap_source(&src, 0), bootstrap_source(&src, 0), bootstrap_source(&src, 1));
+        let cells = |s: &DistSource| match s {
+            DistSource::Matrix(m) => m.cells().to_vec(),
+            _ => unreachable!(),
+        };
+        assert_eq!(cells(&a), cells(&b), "same seed, same resample");
+        assert_ne!(cells(&a), cells(&c), "different seed, different resample");
+        assert_eq!(a.n(), 9);
+    }
+}

@@ -12,6 +12,7 @@
 //! ranks in one process ([`Runtime::Event`], the default). Results are
 //! bitwise identical either way (DESIGN.md §Runtime).
 
+pub mod batch;
 pub mod costmodel_host;
 pub mod protocol;
 pub mod sched;
@@ -19,6 +20,7 @@ pub mod source;
 pub mod task;
 pub mod worker;
 
+pub use batch::{BatchRun, BatchShape, DatasetId, RunBatch};
 pub use costmodel_host::HostCostModel;
 pub use sched::Runtime;
 pub use source::DistSource;
@@ -334,65 +336,97 @@ impl ClusterConfig {
         let n = source.n();
         anyhow::ensure!(n >= 2, "need at least 2 items");
         anyhow::ensure!(self.p >= 1, "need at least 1 rank");
-        // More ranks than cells leaves ranks with empty shards — legal but
-        // pointless; cap like an MPI launcher would.
-        let p = self.p.min(crate::matrix::condensed_len(n));
+        let p = self.effective_p(n);
 
-        let partition = Partition::new(self.partition, n, p);
         let timer = Timer::start();
         let endpoints = Network::with_ranks::<ProtoMsg>(p, self.cost_model);
+        // §5.1 accounting: a prebuilt matrix ships shards (0 distance
+        // builds), a raw source computes its cells once (1 build).
+        let matrix_builds = if matches!(source, DistSource::Matrix(_)) { 0 } else { 1 };
         let source = Arc::new(source);
-        let ctx = WorkerCtx {
+        let ctx = self.worker_ctx(n, p);
+        let outputs = sched::run_ranks(self.runtime, endpoints, &ctx, &source)?;
+        let wall_s = timer.elapsed_s();
+        assemble_run(n, matrix_builds, self.runtime.label(), wall_s, outputs)
+    }
+
+    /// Ranks actually used for an n-item input. More ranks than condensed
+    /// cells leaves ranks with empty shards — legal but pointless; cap
+    /// like an MPI launcher would.
+    pub(crate) fn effective_p(&self, n: usize) -> usize {
+        self.p.min(crate::matrix::condensed_len(n))
+    }
+
+    /// The per-rank worker context for an n-item run at `p` ranks —
+    /// shared by the solo path and the batch front-end so a batched job
+    /// runs under exactly the configuration a solo run would.
+    pub(crate) fn worker_ctx(&self, n: usize, p: usize) -> WorkerCtx {
+        WorkerCtx {
             scheme: self.scheme,
-            partition,
+            partition: Partition::new(self.partition, n, p),
             scan: self.scan.clone(),
             maintenance: self.maintenance,
             walk: self.walk,
             collectives: self.collectives,
             host: self.host_costs,
-        };
-        let mut outputs = sched::run_ranks(self.runtime, endpoints, &ctx, &source)?;
-        let wall_s = timer.elapsed_s();
-
-        // Every rank derived the same merge sequence; each folded it into
-        // an FNV-1a digest as it went, so agreement is a p-way u64 compare
-        // — no per-rank merge lists are materialized or cloned. Only rank
-        // 0 carries the actual list, moved (not copied) into the result.
-        let digest0 = outputs[0].merge_digest;
-        for o in &outputs[1..] {
-            anyhow::ensure!(
-                o.merge_digest == digest0,
-                "rank {} diverged from rank 0 merge sequence \
-                 (digest {:#018x} != {digest0:#018x})",
-                o.rank,
-                o.merge_digest,
-            );
         }
-        let merges = std::mem::take(&mut outputs[0].merges);
-        let dendrogram = Dendrogram::new(n, merges);
-
-        let stats = RunStats {
-            wall_s,
-            virtual_s: outputs.iter().map(|o| o.virtual_s).fold(0.0, f64::max),
-            rank_virtual_s: outputs.iter().map(|o| o.virtual_s).collect(),
-            phases: outputs.iter().map(|o| o.phases).collect(),
-            msgs_sent: outputs.iter().map(|o| o.msgs_sent).sum(),
-            bytes_sent: outputs.iter().map(|o| o.bytes_sent).sum(),
-            cells_scanned: outputs.iter().map(|o| o.cells_scanned).sum(),
-            cells_updated: outputs.iter().map(|o| o.cells_updated).sum(),
-            index_ops: outputs.iter().map(|o| o.index_ops).sum(),
-            idx_waves: outputs.iter().map(|o| o.idx_waves).sum(),
-            alive_visited: outputs.iter().map(|o| o.alive_visited).sum(),
-            steals: outputs.iter().map(|o| o.steals).sum(),
-            injected_wakes: outputs.iter().map(|o| o.injected_wakes).sum(),
-            parks: outputs.iter().map(|o| o.parks).sum(),
-            peak_shard_cells: outputs.iter().map(|o| o.shard_cells).max().unwrap_or(0),
-            runtime: self.runtime.label(),
-            p,
-            n,
-        };
-        Ok(ClusterRun { dendrogram, stats })
     }
+}
+
+/// Fold rank-ordered [`WorkerOutput`]s into a [`ClusterRun`]: verify the
+/// p-way merge-digest agreement, take rank 0's merge list, aggregate the
+/// counters. Shared by [`ClusterConfig::run_source`] and
+/// [`batch::RunBatch`], so a batch job's per-job result is assembled by
+/// exactly the solo code path (the bitwise-equivalence anchor).
+pub(crate) fn assemble_run(
+    n: usize,
+    matrix_builds: u64,
+    runtime: String,
+    wall_s: f64,
+    mut outputs: Vec<worker::WorkerOutput>,
+) -> anyhow::Result<ClusterRun> {
+    // Every rank derived the same merge sequence; each folded it into
+    // an FNV-1a digest as it went, so agreement is a p-way u64 compare
+    // — no per-rank merge lists are materialized or cloned. Only rank
+    // 0 carries the actual list, moved (not copied) into the result.
+    let digest0 = outputs[0].merge_digest;
+    for o in &outputs[1..] {
+        anyhow::ensure!(
+            o.merge_digest == digest0,
+            "rank {} diverged from rank 0 merge sequence \
+             (digest {:#018x} != {digest0:#018x})",
+            o.rank,
+            o.merge_digest,
+        );
+    }
+    let merges = std::mem::take(&mut outputs[0].merges);
+    let dendrogram = Dendrogram::new(n, merges);
+
+    let stats = RunStats {
+        wall_s,
+        virtual_s: outputs.iter().map(|o| o.virtual_s).fold(0.0, f64::max),
+        rank_virtual_s: outputs.iter().map(|o| o.virtual_s).collect(),
+        phases: outputs.iter().map(|o| o.phases).collect(),
+        msgs_sent: outputs.iter().map(|o| o.msgs_sent).sum(),
+        bytes_sent: outputs.iter().map(|o| o.bytes_sent).sum(),
+        cells_scanned: outputs.iter().map(|o| o.cells_scanned).sum(),
+        cells_updated: outputs.iter().map(|o| o.cells_updated).sum(),
+        index_ops: outputs.iter().map(|o| o.index_ops).sum(),
+        idx_waves: outputs.iter().map(|o| o.idx_waves).sum(),
+        alive_visited: outputs.iter().map(|o| o.alive_visited).sum(),
+        steals: outputs.iter().map(|o| o.steals).sum(),
+        injected_wakes: outputs.iter().map(|o| o.injected_wakes).sum(),
+        parks: outputs.iter().map(|o| o.parks).sum(),
+        peak_shard_cells: outputs.iter().map(|o| o.shard_cells).max().unwrap_or(0),
+        jobs: 1,
+        matrix_builds,
+        pool_hits: 0,
+        pool_misses: 0,
+        runtime,
+        p: outputs.len(),
+        n,
+    };
+    Ok(ClusterRun { dendrogram, stats })
 }
 
 /// Result of a distributed run.

@@ -39,7 +39,7 @@ use crate::comm::Endpoint;
 use crate::coordinator::costmodel_host::HostOp;
 use crate::coordinator::protocol::ProtoMsg;
 use crate::coordinator::source::DistSource;
-use crate::coordinator::task::{Poll, RankTask, Step};
+use crate::coordinator::task::{Poll, RankTask};
 use crate::coordinator::worker::{WorkerCtx, WorkerOutput};
 use crate::util::rng::Rng;
 // All synchronization goes through the util::sync shim (ISSUE 7): plain
@@ -131,13 +131,18 @@ impl std::str::FromStr for Runtime {
     }
 }
 
+// The batch front-end (`coordinator::batch`) drives the same two event
+// schedulers with its own task type, so the generic surface is crate
+// visible: the task trait, the counters it folds in, and both drivers.
+pub(crate) use pool::{run_pool, PoolTask, SchedCounters};
+
 /// Cap a requested pool width at the host's available parallelism (with
 /// a floor of 2 so the cross-shard machinery — and any `steals > 0`
 /// expectation — survives single-core containers). Oversubscribing an
 /// event pool only adds context-switch churn; warn instead of silently
 /// doing it. Observables are unaffected: the label keeps the requested
 /// width and the schedule equivalence holds at any width.
-fn clamp_pool_width(requested: usize) -> usize {
+pub(crate) fn clamp_pool_width(requested: usize) -> usize {
     let avail = std::thread::available_parallelism().map(|v| v.get()).unwrap_or(1);
     if requested > avail {
         let eff = avail.max(2);
@@ -184,6 +189,9 @@ pub(crate) fn run_ranks(
     let mut outputs = match runtime {
         Runtime::Threads => run_threads(tasks)?,
         Runtime::Event => {
+            for t in &mut tasks {
+                t.enable_wake_log();
+            }
             std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| run_event(tasks)))
                 .map_err(caught)?
         }
@@ -224,7 +232,7 @@ fn run_threads(tasks: Vec<RankTask>) -> anyhow::Result<Vec<WorkerOutput>> {
         .collect()
 }
 
-/// Single-threaded event scheduler over all ranks.
+/// Single-threaded event scheduler over all tasks.
 ///
 /// Run-to-next-block polling with precise wakeups: a task leaves the
 /// ready queue only when its poll returns `Pending`, and re-enters when a
@@ -232,19 +240,21 @@ fn run_threads(tasks: Vec<RankTask>) -> anyhow::Result<Vec<WorkerOutput>> {
 /// loop owns every rank, so an empty ready queue with unfinished tasks is
 /// a protocol bug — reported immediately with every parked task's phase
 /// and awaited (source, tag); nothing can arrive later.
-fn run_event(mut tasks: Vec<RankTask>) -> Vec<WorkerOutput> {
+///
+/// Generic over [`PoolTask`] like the sharded pool, so the batch
+/// front-end can interleave many jobs' tasks through this exact loop
+/// (wake addresses are the tasks' global ranks — disjoint per job).
+pub(crate) fn run_event<T: PoolTask>(tasks: Vec<T>) -> Vec<T::Out> {
     let n = tasks.len();
-    for t in &mut tasks {
-        t.enable_wake_log();
-    }
-    // Wake destinations are ranks; the queue holds local slots.
+    // Wake destinations are (global) ranks; the queue holds local slots.
     let slot_of: std::collections::HashMap<usize, usize> =
         tasks.iter().enumerate().map(|(i, t)| (t.rank(), i)).collect();
+    let mut tasks: Vec<Option<T>> = tasks.into_iter().map(Some).collect();
     let mut ready: VecDeque<usize> = (0..n).collect();
     let mut queued = vec![true; n];
-    let mut parked_at: Vec<Option<(Step, usize, u64)>> = vec![None; n];
+    let mut parked_at: Vec<Option<(usize, u64)>> = vec![None; n];
     let mut parks = vec![0u64; n];
-    let mut outputs: Vec<Option<WorkerOutput>> = (0..n).map(|_| None).collect();
+    let mut outputs: Vec<Option<T::Out>> = (0..n).map(|_| None).collect();
     let mut wakes: Vec<usize> = Vec::new();
     let mut done = 0usize;
     while done < n {
@@ -254,10 +264,11 @@ fn run_event(mut tasks: Vec<RankTask>) -> Vec<WorkerOutput> {
                 let parked = (0..n)
                     .filter(|&s| outputs[s].is_none())
                     .map(|s| {
-                        let (src, tag) = parked_at[s]
-                            .map_or((usize::MAX, u64::MAX), |(_, src, tag)| (src, tag));
-                        let (rank, step) = (tasks[s].rank(), tasks[s].step().name());
-                        format!("rank {rank} in {step} awaiting (src {src}, tag {tag:#x})")
+                        let (src, tag) = parked_at[s].map_or((usize::MAX, u64::MAX), |st| st);
+                        let who = tasks[s]
+                            .as_ref()
+                            .map_or_else(|| "a finished task".into(), |t| t.describe());
+                        format!("{who} awaiting (src {src}, tag {tag:#x})")
                     })
                     .collect::<Vec<_>>()
                     .join("; ");
@@ -265,26 +276,31 @@ fn run_event(mut tasks: Vec<RankTask>) -> Vec<WorkerOutput> {
             }
         };
         queued[slot] = false;
-        tasks[slot].charge_host(HostOp::Poll);
-        match tasks[slot].poll() {
+        let task = tasks[slot].as_mut().expect("queued slot holds its task");
+        task.charge_host(HostOp::Poll);
+        let res = task.poll_task();
+        // Drain the wake log while the task is in hand — `finish`
+        // consumes it on Complete, and a completing task's sends (batch
+        // admission, cancellation fanout) must still wake their
+        // receivers. Spurious wakes (message for a later phase) cost one
+        // no-progress poll and are harmless; missed wakes are impossible
+        // within a loop — every message was sent by some poll, and its
+        // wake is drained here.
+        task.drain_wakes_into(&mut wakes);
+        match res {
             Poll::Complete => {
-                let mut out = tasks[slot].take_output().expect("Complete poll leaves an output");
-                out.parks = parks[slot];
-                outputs[slot] = Some(out);
+                let task = tasks[slot].take().expect("queued slot holds its task");
+                let counters = SchedCounters { parks: parks[slot], ..Default::default() };
+                outputs[slot] = Some(task.finish(counters));
                 parked_at[slot] = None;
                 done += 1;
             }
             Poll::Pending { src, tag } => {
-                parked_at[slot] = Some((tasks[slot].step(), src, tag));
+                parked_at[slot] = Some((src, tag));
                 parks[slot] += 1;
-                tasks[slot].charge_host(HostOp::ParkUnpark);
+                tasks[slot].as_mut().expect("pending task stays").charge_host(HostOp::ParkUnpark);
             }
         }
-        // Wake the receivers of everything this poll sent. Spurious wakes
-        // (message for a later phase) cost one no-progress poll and are
-        // harmless; missed wakes are impossible within a loop — every
-        // message was sent by some poll, and its wake is drained here.
-        tasks[slot].drain_wakes_into(&mut wakes);
         for dst in wakes.drain(..) {
             if let Some(&s) = slot_of.get(&dst) {
                 if !queued[s] && outputs[s].is_none() {
@@ -335,7 +351,7 @@ mod pool {
     /// identified by [`rank`](PoolTask::rank), polls to `Pending` or
     /// `Complete`, and reports the ranks it messaged so the scheduler
     /// can wake exactly those tasks.
-    pub(super) trait PoolTask: Send + 'static {
+    pub(crate) trait PoolTask: Send + 'static {
         /// What a completed task folds into (rank outputs for the
         /// production protocol).
         type Out: Send + 'static;
@@ -360,13 +376,13 @@ mod pool {
     /// They describe the host schedule itself, so they vary across
     /// substrates and runs — excluded from the equivalence suites.
     #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-    pub(super) struct SchedCounters {
+    pub(crate) struct SchedCounters {
         /// Times this task was taken from a victim shard's deque.
-        pub(super) steals: u64,
+        pub(crate) steals: u64,
         /// Wakes that crossed shards through an injector queue.
-        pub(super) injected_wakes: u64,
+        pub(crate) injected_wakes: u64,
         /// Times the task parked on `Pending`.
-        pub(super) parks: u64,
+        pub(crate) parks: u64,
     }
 
     /// Task is waiting for a message; not in any queue. A waker moves it
@@ -450,7 +466,7 @@ mod pool {
     /// pair is the API subset the loom shim models, which is what lets
     /// the `loom_tests` below run this function — unchanged — inside
     /// `loom::model`.
-    pub(super) fn run_pool<T: PoolTask>(tasks: Vec<T>, threads: usize, steal: bool) -> Vec<T::Out> {
+    pub(crate) fn run_pool<T: PoolTask>(tasks: Vec<T>, threads: usize, steal: bool) -> Vec<T::Out> {
         let p = tasks.len();
         let nt = threads.clamp(1, p.max(1));
         let slot_of = tasks.iter().enumerate().map(|(i, t)| (t.rank(), i)).collect();
@@ -820,8 +836,12 @@ mod pool {
 impl pool::PoolTask for RankTask {
     type Out = WorkerOutput;
 
+    // The wake address is the *global* rank (`rank_base + rank`): equal
+    // to the local rank in a solo run (base 0), disjoint across jobs in
+    // a batch — which is what keeps interleaved wake logs from crossing
+    // jobs (the transport namespaces its log with the same base).
     fn rank(&self) -> usize {
-        RankTask::rank(self)
+        RankTask::global_rank(self)
     }
 
     fn poll_task(&mut self) -> Poll {
@@ -845,7 +865,7 @@ impl pool::PoolTask for RankTask {
     }
 
     fn describe(&self) -> String {
-        format!("rank {} in {}", RankTask::rank(self), self.step().name())
+        format!("rank {} in {}", RankTask::global_rank(self), self.step().name())
     }
 }
 

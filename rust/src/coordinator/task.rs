@@ -46,19 +46,21 @@
 //!
 //! [`Endpoint::park_until_message`]: crate::comm::Endpoint::park_until_message
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::comm::{global_min, Collectives, Endpoint};
 use crate::coordinator::costmodel_host::{HostCostModel, HostOp, HOST_COSTS};
 use crate::coordinator::protocol::{tag, Phase, ProtoMsg, DIST_TAG};
-use crate::coordinator::source::{DistSource, SourceKind};
+use crate::coordinator::source::{DistSource, SharedBuild, SourceKind};
 use crate::coordinator::worker::{
-    build_shard, route_full, route_incremental, WorkerCtx, WorkerOutput,
+    build_shard, build_shard_cached, route_full, route_incremental, WorkerCtx, WorkerOutput,
 };
 use crate::coordinator::{AliveWalk, ScanStrategy};
 use crate::dendrogram::Merge;
 use crate::linkage::lw_update;
-use crate::matrix::{condensed_index, condensed_pair, AliveSet, ShardOp, ShardStore};
+use crate::matrix::{
+    condensed_index, condensed_pair, AliveSet, RankScratch, ShardOp, ShardStore, StatePool,
+};
 use crate::metrics::PhaseBreakdown;
 use crate::util::fnv::Fnv64;
 
@@ -201,18 +203,46 @@ pub struct RankTask {
     step: Step,
     st: Option<RankState>,
     output: Option<WorkerOutput>,
+    /// Batch-mode dataset build cache (`coordinator::batch`): when set,
+    /// the §5.1 cells come from the shared per-dataset materialization
+    /// instead of being recomputed per job. None on solo runs.
+    shared: Option<Arc<SharedBuild>>,
+    /// Batch-mode allocation pool: shard/alive/op-buffer storage is
+    /// checked out here at Distribute and checked back in at finish.
+    /// None on solo runs.
+    pool: Option<Arc<Mutex<StatePool>>>,
 }
 
 impl RankTask {
     /// Wrap one endpoint + worker configuration into a pollable task.
     /// `source` must be `Some` exactly on rank 0 (the distributor).
     pub fn new(ep: Endpoint<ProtoMsg>, ctx: WorkerCtx, source: Option<Arc<DistSource>>) -> Self {
-        Self { ep, ctx, source, step: Step::Distribute, st: None, output: None }
+        Self { ep, ctx, source, step: Step::Distribute, st: None, output: None, shared: None, pool: None }
+    }
+
+    /// Attach the batch-sharing hooks (`coordinator::batch`): the
+    /// per-dataset §5.1 build cache and the cross-job allocation pool.
+    /// Neither changes any protocol message or virtual-clock charge, so
+    /// outputs stay bitwise identical to a solo run.
+    pub(crate) fn share_batch_state(
+        &mut self,
+        shared: Option<Arc<SharedBuild>>,
+        pool: Option<Arc<Mutex<StatePool>>>,
+    ) {
+        self.shared = shared;
+        self.pool = pool;
     }
 
     /// This task's rank.
     pub fn rank(&self) -> usize {
         self.ep.rank()
+    }
+
+    /// Scheduler-global rank (`rank_base + rank`) — equal to
+    /// [`rank`](Self::rank) outside a batch, offset by the job's base
+    /// inside one so interleaved wake logs never cross jobs.
+    pub fn global_rank(&self) -> usize {
+        self.ep.global_rank()
     }
 
     /// The protocol phase the machine is currently in.
@@ -332,7 +362,13 @@ impl RankTask {
                         self.ep
                             .send(dst, DIST_TAG, ProtoMsg::Dataset(kind, rows, cols, flat.clone()));
                     }
-                    build_shard(&mut self.ep, part, me, &src.quantized())
+                    match self.shared.clone() {
+                        Some(cache) => {
+                            let full = cache.cells(&src);
+                            build_shard_cached(&mut self.ep, part, me, &src, &full)
+                        }
+                        None => build_shard(&mut self.ep, part, me, &src.quantized()),
+                    }
                 }
             }
         } else {
@@ -342,7 +378,13 @@ impl RankTask {
                 Some(ProtoMsg::Dataset(kind, rows, cols, flat)) => {
                     let kind = if kind == 0 { SourceKind::Points } else { SourceKind::Ensemble };
                     let src = DistSource::from_wire(kind, &flat, rows, cols);
-                    build_shard(&mut self.ep, part, me, &src)
+                    match self.shared.clone() {
+                        Some(cache) => {
+                            let full = cache.cells(&src);
+                            build_shard_cached(&mut self.ep, part, me, &src, &full)
+                        }
+                        None => build_shard(&mut self.ep, part, me, &src),
+                    }
                 }
                 Some(other) => panic!("protocol error: expected Shard|Dataset, got {other:?}"),
             }
@@ -350,19 +392,39 @@ impl RankTask {
         // The store owns the cells from here on; every read and write — the
         // step-1 scan, the 6a retires, the 6b LW updates — goes through it.
         // Building the index costs O(m/p) once, charged like a shard pass.
-        let shard = ShardStore::new(cells, self.ctx.scan.wants_index(), self.ctx.maintenance);
+        // In a batch the storage is recycled through the StatePool; the
+        // rebuilt/reset state is indistinguishable from fresh (pinned by
+        // the shard.rs hygiene fuzz), so the protocol cannot tell.
+        let n = part.n();
+        let indexed = self.ctx.scan.wants_index();
+        let recycled = self
+            .pool
+            .as_ref()
+            .and_then(|pool| pool.lock().unwrap_or_else(|e| e.into_inner()).check_out());
+        let (shard, alive, ops) = match recycled {
+            Some(mut scratch) => {
+                scratch.store.rebuild(cells, indexed, self.ctx.maintenance);
+                scratch.alive.reset(n);
+                scratch.ops.clear();
+                (scratch.store, scratch.alive, scratch.ops)
+            }
+            None => (
+                ShardStore::new(cells, indexed, self.ctx.maintenance),
+                AliveSet::new(n),
+                Vec::new(),
+            ),
+        };
         let shard_cells = shard.len();
         if shard.is_indexed() {
             self.ep.compute(shard_cells);
         }
         let phases = PhaseBreakdown { build: self.ep.clock.now() - t_build, ..Default::default() };
-        let n = part.n();
         self.st = Some(RankState {
             shard,
             shard_cells,
             my_cell0: part.cells_of(me).collect(),
             sizes: vec![1.0f32; n],
-            alive: AliveSet::new(n),
+            alive,
             merges: if me == 0 { Vec::with_capacity(n - 1) } else { Vec::new() },
             merge_digest: Fnv64::new(),
             phases,
@@ -382,7 +444,7 @@ impl RankTask {
             outbound: vec![Vec::new(); p],
             expect_from: vec![false; p],
             local_dkj: Vec::new(),
-            ops: Vec::new(),
+            ops,
         });
         self.step = Step::SendMin;
         None
@@ -810,8 +872,9 @@ impl RankTask {
         None
     }
 
-    /// Assemble the [`WorkerOutput`] and drop the per-rank state (the
-    /// shard memory is released here, not at scheduler teardown).
+    /// Assemble the [`WorkerOutput`] and release the per-rank state —
+    /// dropped solo, or checked back into the batch [`StatePool`] for the
+    /// next job (the check-in-at-job-boundary contract).
     fn finish(&mut self) {
         let st = self.st.take().expect("state exists");
         self.output = Some(WorkerOutput {
@@ -834,6 +897,13 @@ impl RankTask {
             injected_wakes: 0,
             parks: 0,
         });
+        if let Some(pool) = &self.pool {
+            pool.lock().unwrap_or_else(|e| e.into_inner()).check_in(RankScratch {
+                store: st.shard,
+                alive: st.alive,
+                ops: st.ops,
+            });
+        }
     }
 
     /// The send half of a binomial-tree broadcast rooted at `root`: fan

@@ -453,6 +453,26 @@ pub(crate) fn build_shard(
     shard
 }
 
+/// [`build_shard`] served from a batch's shared full-matrix cache
+/// (`SharedBuild`): slice the cells this rank owns out of `full` instead
+/// of recomputing them. `src` prices the virtual-clock charge — the same
+/// `cells × cell_cost_units` a solo rank pays for computing the cells
+/// itself, so per-job clocks stay bitwise identical; the cached values
+/// are bitwise identical too because the cache is built from the same
+/// quantized coordinates every rank holds (see `SharedBuild::cells`).
+pub(crate) fn build_shard_cached(
+    ep: &mut Endpoint<ProtoMsg>,
+    part: &Partition,
+    me: usize,
+    src: &DistSource,
+    full: &[f32],
+) -> Vec<f32> {
+    let unit = src.cell_cost_units();
+    let shard: Vec<f32> = part.cells_of(me).map(|idx| full[idx]).collect();
+    ep.compute(shard.len() * unit);
+    shard
+}
+
 #[cfg(test)]
 mod tests {
     // The worker is exercised end-to-end through `coordinator::run` —

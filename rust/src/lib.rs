@@ -61,8 +61,8 @@ pub mod prelude {
     pub use crate::baselines::serial_lw::serial_lw_cluster;
     pub use crate::comm::CostModel;
     pub use crate::coordinator::{
-        AliveWalk, ClusterConfig, ClusterRun, DistSource, Engine, HostCostModel, Runtime,
-        ScanStrategy,
+        AliveWalk, BatchRun, BatchShape, ClusterConfig, ClusterRun, DatasetId, DistSource, Engine,
+        HostCostModel, RunBatch, Runtime, ScanStrategy,
     };
     pub use crate::data::{euclidean_matrix, rmsd_matrix, EnsembleSpec, GaussianSpec};
     pub use crate::dendrogram::{Dendrogram, Merge};

@@ -15,7 +15,8 @@ use std::path::PathBuf;
 use lancew::baselines::serial_lw::{serial_lw_cluster, verify_against_definition};
 use lancew::comm::{Collectives, CostModel};
 use lancew::coordinator::{
-    AliveWalk, ClusterConfig, DistSource, Engine, HostCostModel, Runtime, ScanStrategy,
+    AliveWalk, BatchShape, ClusterConfig, DistSource, Engine, HostCostModel, RunBatch, Runtime,
+    ScanStrategy,
 };
 use lancew::data::{euclidean_matrix, io, rmsd_matrix, EnsembleSpec, GaussianSpec};
 use lancew::linkage::Scheme;
@@ -67,6 +68,11 @@ fn print_help() {
          \x20        --collectives naive|tree (min exchange/broadcast; tree for big p)\n\
          \x20        --alive-walk full|incremental (step-6a routing; default incremental,\n\
          \x20          closed-form k-intervals for every partition kind incl. cyclic)\n\
+         \x20        --batch sweep|bootstrap:K|repeat:K (multi-run batch service: the\n\
+         \x20          jobs interleave on ONE event/steal scheduler, share the §5.1\n\
+         \x20          matrix build per dataset, and recycle state through a pool;\n\
+         \x20          every job is bitwise identical to running it alone)\n\
+         \x20        --batch-window W (max concurrently admitted jobs; default 4)\n\
          \x20        --newick out.nwk --ascii --linkage z.csv (scipy linkage matrix)\n\
          validate --n 60 --trials 5 --seed 1\n\
          fig2     --n 512 --ps 1,2,4,8,16,24 --scheme complete --runtime event\n\
@@ -213,13 +219,15 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     let walk = make_walk(args)?;
     let runtime = make_runtime(args)?;
     let collectives = make_collectives(args)?;
+    let batch: Option<BatchShape> = args.parse_opt("batch")?;
+    let batch_window: usize = args.parse_or("batch-window", 4usize)?;
     let cut: usize = args.parse_or("cut", 0usize)?;
     let newick = args.get("newick").map(PathBuf::from);
     let linkage_out = args.get("linkage").map(PathBuf::from);
     let ascii = args.has("ascii");
     args.reject_unknown()?;
 
-    let run = ClusterConfig::new(scheme, p)
+    let cfg = ClusterConfig::new(scheme, p)
         .with_partition(partition)
         .with_cost_model(cost_model)
         .with_host_costs(host_costs)
@@ -227,8 +235,27 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         .with_maintenance(maintenance)
         .with_alive_walk(walk)
         .with_runtime(runtime)
-        .with_collectives(collectives)
-        .run_source(source.clone())?;
+        .with_collectives(collectives);
+
+    if let Some(shape) = batch {
+        anyhow::ensure!(
+            cut == 0 && newick.is_none() && linkage_out.is_none() && !ascii,
+            "--batch reports per-job summaries; drop --cut/--newick/--linkage/--ascii"
+        );
+        let mut b = RunBatch::new(runtime).with_max_inflight(batch_window);
+        b.push_shape(shape, &cfg, &source);
+        let out = b.run()?;
+        for (j, job) in out.jobs.iter().enumerate() {
+            match job {
+                Ok(r) => println!("job {j}: {}", r.stats.summary()),
+                Err(e) => println!("job {j}: FAILED: {e:#}"),
+            }
+        }
+        println!("batch: {}", out.stats.summary());
+        return Ok(());
+    }
+
+    let run = cfg.run_source(source.clone())?;
 
     println!("{}", run.stats.summary());
     println!(

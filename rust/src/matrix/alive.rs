@@ -43,21 +43,39 @@ pub struct AliveSet {
 impl AliveSet {
     /// The full set `{0, 1, …, n−1}`.
     pub fn new(n: usize) -> Self {
+        let mut s = Self {
+            n: 0,
+            len: 0,
+            head: 0,
+            next: Vec::new(),
+            prev: Vec::new(),
+            alive: Vec::new(),
+        };
+        s.reset(n);
+        s
+    }
+
+    /// Reinitialize in place to the full set `{0, 1, …, n−1}`, keeping
+    /// the three backing allocations. A recycled set is field-for-field
+    /// identical to `AliveSet::new(n)` — `new` itself routes through
+    /// here, and the `StatePool` hygiene suite pins it — so pooled reuse
+    /// (`matrix::StatePool`) can never leak one job's retirements into
+    /// the next.
+    pub fn reset(&mut self, n: usize) {
         assert!(n >= 1, "empty universe");
         assert!(
             n < u32::MAX as usize,
             "universe of {n} exceeds the u32 index range"
         );
-        Self {
-            n,
-            len: n,
-            head: 0,
-            next: (1..=n as u32).collect(),
-            prev: std::iter::once(n as u32)
-                .chain(0..n as u32 - 1)
-                .collect(),
-            alive: vec![true; n],
-        }
+        self.n = n;
+        self.len = n;
+        self.head = 0;
+        self.next.clear();
+        self.next.extend(1..=n as u32);
+        self.prev.clear();
+        self.prev.extend(std::iter::once(n as u32).chain(0..n as u32 - 1));
+        self.alive.clear();
+        self.alive.resize(n, true);
     }
 
     /// Universe size (alive + removed).
@@ -236,6 +254,38 @@ mod tests {
         s.remove(7);
         assert_eq!(s.seek(3), 9); // hints retighten past the new dead node
         assert_eq!(s.seek(6), 9);
+    }
+
+    /// Pool-hygiene anchor: a set that went through removals (including
+    /// all-retired) and compressed seeks, then `reset`, is
+    /// field-for-field identical to a fresh one — same list links, same
+    /// hints, same head/len — at the same and at a different n.
+    #[test]
+    fn reset_equals_fresh_field_for_field() {
+        let assert_same = |a: &AliveSet, b: &AliveSet| {
+            assert_eq!(a.n, b.n);
+            assert_eq!(a.len, b.len);
+            assert_eq!(a.head, b.head);
+            assert_eq!(a.next, b.next);
+            assert_eq!(a.prev, b.prev);
+            assert_eq!(a.alive, b.alive);
+        };
+        let mut s = AliveSet::new(9);
+        for k in [4, 2, 7, 0] {
+            s.remove(k);
+        }
+        s.seek(0); // compress hints so reset has stale state to erase
+        s.reset(9);
+        assert_same(&s, &AliveSet::new(9));
+        // All-retired corner, then reset to a *different* universe size.
+        for k in 0..9 {
+            s.remove(k);
+        }
+        assert!(s.is_empty());
+        s.reset(3);
+        assert_same(&s, &AliveSet::new(3));
+        s.reset(12); // grow past the original allocation
+        assert_same(&s, &AliveSet::new(12));
     }
 
     #[test]

@@ -9,4 +9,4 @@ mod shard;
 pub use alive::AliveSet;
 pub use condensed::{CondensedMatrix, condensed_index, condensed_len, condensed_pair};
 pub use partition::{BelowPattern, KIntervals, OwnerCursor, Partition, PartitionKind};
-pub use shard::{Maintenance, MaintenancePolicy, ShardOp, ShardStore};
+pub use shard::{Maintenance, MaintenancePolicy, RankScratch, ShardOp, ShardStore, StatePool};

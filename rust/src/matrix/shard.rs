@@ -50,6 +50,8 @@
 //!
 //! [`PartitionKind`]: super::PartitionKind
 
+use super::alive::AliveSet;
+
 /// How an indexed [`ShardStore`] repairs its tournament tree after
 /// writes (CLI `--index-maintenance eager|batched`; inert without the
 /// index, i.e. under `--scan full`).
@@ -165,6 +167,32 @@ impl ShardStore {
     /// tree in O(m); unindexed stores are plain vectors with a live count
     /// (the `Full` scan strategies) and `policy` is inert.
     pub fn new(cells: Vec<f32>, indexed: bool, policy: MaintenancePolicy) -> Self {
+        let mut s = Self {
+            cells: Vec::new(),
+            live: 0,
+            indexed: false,
+            tree: Vec::new(),
+            leaf_base: 0,
+            path_len: 0,
+            policy,
+            pending: Vec::new(),
+            wave: Vec::new(),
+            writes: 0,
+            index_ops: 0,
+            waves: 0,
+        };
+        s.rebuild(cells, indexed, policy);
+        s
+    }
+
+    /// Reinitialize in place around a new cell vector, keeping the tree
+    /// and scratch allocations. A recycled store is indistinguishable
+    /// from `ShardStore::new(cells, indexed, policy)` — `new` itself
+    /// routes through here, and the `StatePool` hygiene suite pins the
+    /// equality node for node — so pooled reuse across batch jobs
+    /// (`matrix::StatePool`) can never leak one job's state into the
+    /// next.
+    pub fn rebuild(&mut self, cells: Vec<f32>, indexed: bool, policy: MaintenancePolicy) {
         let m = cells.len();
         // Leaf offsets are u32 with u32::MAX as the padding sentinel; fail
         // loudly rather than silently truncating on ≥2³²-cell shards.
@@ -172,33 +200,30 @@ impl ShardStore {
             m < u32::MAX as usize,
             "shard of {m} cells exceeds the u32 offset range of the min index"
         );
-        let live = m as u64;
-        let (tree, leaf_base, path_len) = if indexed && m > 0 {
+        self.cells = cells;
+        self.live = m as u64;
+        self.indexed = indexed;
+        self.policy = policy;
+        self.pending.clear();
+        self.wave.clear();
+        self.writes = 0;
+        self.index_ops = 0;
+        self.waves = 0;
+        self.tree.clear();
+        if indexed && m > 0 {
             let size = m.next_power_of_two();
-            let mut tree = vec![(f32::INFINITY, u32::MAX); 2 * size];
-            for (off, &v) in cells.iter().enumerate() {
-                tree[size + off] = (v, off as u32);
+            self.tree.resize(2 * size, (f32::INFINITY, u32::MAX));
+            for (off, &v) in self.cells.iter().enumerate() {
+                self.tree[size + off] = (v, off as u32);
             }
             for i in (1..size).rev() {
-                tree[i] = better(tree[2 * i], tree[2 * i + 1]);
+                self.tree[i] = better(self.tree[2 * i], self.tree[2 * i + 1]);
             }
-            (tree, size, size.trailing_zeros() as u64 + 1)
+            self.leaf_base = size;
+            self.path_len = size.trailing_zeros() as u64 + 1;
         } else {
-            (Vec::new(), 0, 0)
-        };
-        Self {
-            cells,
-            live,
-            indexed,
-            tree,
-            leaf_base,
-            path_len,
-            policy,
-            pending: Vec::new(),
-            wave: Vec::new(),
-            writes: 0,
-            index_ops: 0,
-            waves: 0,
+            self.leaf_base = 0;
+            self.path_len = 0;
         }
     }
 
@@ -400,6 +425,81 @@ impl ShardStore {
             self.tree[i] = better(self.tree[2 * i], self.tree[2 * i + 1]);
         }
         self.index_ops += self.path_len;
+    }
+}
+
+/// One rank's recyclable allocations: the shard store (tree + scratch
+/// vectors), the alive set (three O(n) vectors), and the §6 op buffer.
+/// What a finishing batch job checks into the [`StatePool`] and the next
+/// job's rank checks out — each piece reinitialized in place
+/// ([`ShardStore::rebuild`], [`AliveSet::reset`], `Vec::clear`) so
+/// recycled state is indistinguishable from fresh (the hygiene suite
+/// below pins this node for node).
+pub struct RankScratch {
+    /// Shard cells + tournament tree, reusable via [`ShardStore::rebuild`].
+    pub store: ShardStore,
+    /// Alive-cluster list, reusable via [`AliveSet::reset`].
+    pub alive: AliveSet,
+    /// Deferred §6 write-set buffer (cleared between jobs, capacity kept).
+    pub ops: Vec<ShardOp>,
+}
+
+/// Free list of [`RankScratch`] allocations shared across the jobs of a
+/// batch (`coordinator::batch`), with hit/miss counters feeding
+/// `RunStats::{pool_hits, pool_misses}`.
+///
+/// The contract is *check in at job boundaries, check out at rank
+/// start*: a scratch enters the pool only after its job's protocol
+/// finished (so nothing aliases it), and a check-out transfers sole
+/// ownership to the new rank, which must reinitialize every piece before
+/// use. LIFO order — the most recently retired allocations are the
+/// warmest.
+#[derive(Default)]
+pub struct StatePool {
+    free: Vec<RankScratch>,
+    hits: u64,
+    misses: u64,
+}
+
+impl StatePool {
+    /// An empty pool (first check-outs all miss).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Take a recycled scratch if one is free (counted as a hit), or
+    /// `None` (counted as a miss — the caller allocates fresh).
+    pub fn check_out(&mut self) -> Option<RankScratch> {
+        match self.free.pop() {
+            Some(s) => {
+                self.hits += 1;
+                Some(s)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Return a finished rank's allocations to the free list.
+    pub fn check_in(&mut self, scratch: RankScratch) {
+        self.free.push(scratch);
+    }
+
+    /// Check-outs served from the free list.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Check-outs that found the free list empty.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    /// Scratches currently parked in the free list.
+    pub fn pooled(&self) -> usize {
+        self.free.len()
     }
 }
 
@@ -616,6 +716,122 @@ mod tests {
             assert_eq!(store.live(), 2);
             assert_eq!(store.cells(), &[0.5, 3.0, f32::INFINITY, f32::INFINITY]);
         }
+    }
+
+    /// Every field of two stores, tree node for node — the recycled-vs-
+    /// fresh oracle for the pool hygiene suite. Private-field access is
+    /// the point: public observables could hide a stale pending log or a
+    /// leftover counter.
+    fn assert_store_identical(a: &ShardStore, b: &ShardStore, ctx: &str) {
+        assert_eq!(a.cells, b.cells, "{ctx}: cells");
+        assert_eq!(a.live, b.live, "{ctx}: live");
+        assert_eq!(a.indexed, b.indexed, "{ctx}: indexed");
+        assert_eq!(a.tree, b.tree, "{ctx}: tree (node for node)");
+        assert_eq!(a.leaf_base, b.leaf_base, "{ctx}: leaf_base");
+        assert_eq!(a.path_len, b.path_len, "{ctx}: path_len");
+        assert_eq!(a.policy, b.policy, "{ctx}: policy");
+        assert_eq!(a.pending, b.pending, "{ctx}: pending log");
+        assert_eq!(a.writes, b.writes, "{ctx}: writes");
+        assert_eq!(a.index_ops, b.index_ops, "{ctx}: index_ops");
+        assert_eq!(a.waves, b.waves, "{ctx}: waves");
+    }
+
+    #[test]
+    fn state_pool_counts_hits_and_misses() {
+        let mut pool = StatePool::new();
+        assert!(pool.check_out().is_none(), "empty pool misses");
+        pool.check_in(RankScratch {
+            store: ShardStore::new(vec![1.0], true, MaintenancePolicy::Batched),
+            alive: crate::matrix::AliveSet::new(2),
+            ops: vec![ShardOp::Retire(0)],
+        });
+        assert_eq!(pool.pooled(), 1);
+        assert!(pool.check_out().is_some(), "recycled scratch hits");
+        assert!(pool.check_out().is_none());
+        assert_eq!((pool.hits(), pool.misses()), (1, 2));
+        assert_eq!(pool.pooled(), 0);
+    }
+
+    /// ISSUE-8 satellite: `StatePool` hygiene fuzz. Random
+    /// check-in/check-out sequences with interleaved ops (sets, retires,
+    /// partial flushes, drained and *undrained* maintenance counters,
+    /// alive removals with compressed seeks) must leave a recycled
+    /// `ShardStore`/`AliveSet`/op-buffer indistinguishable from freshly
+    /// constructed ones — tree node for node, alive list order, empty op
+    /// buffer — including the all-retired and heavy-ties corners.
+    #[test]
+    fn property_pool_recycled_state_indistinguishable_from_fresh() {
+        run(Config::cases(30), |rng| {
+            let mut pool = StatePool::new();
+            for round in 0..8 {
+                // Heavy ties: 2 distinct values (sometimes 1) over a
+                // random shard size, occasionally the empty shard.
+                let m = rng.below(33);
+                let vals = [2.0f32, 2.0, 5.0];
+                let cells: Vec<f32> = (0..m).map(|_| vals[rng.below(3)]).collect();
+                let n = rng.range(1, 20);
+                let indexed = rng.below(4) != 0;
+                let policy = POLICIES[rng.below(2)];
+
+                // Check out (or allocate) and reinitialize every piece —
+                // the exact sequence a batch job's rank runs.
+                let mut scratch = match pool.check_out() {
+                    Some(mut s) => {
+                        s.store.rebuild(cells.clone(), indexed, policy);
+                        s.alive.reset(n);
+                        s.ops.clear();
+                        s
+                    }
+                    None => RankScratch {
+                        store: ShardStore::new(cells.clone(), indexed, policy),
+                        alive: crate::matrix::AliveSet::new(n),
+                        ops: Vec::new(),
+                    },
+                };
+                let fresh_store = ShardStore::new(cells, indexed, policy);
+                let fresh_alive = crate::matrix::AliveSet::new(n);
+                let ctx = format!("round {round} m={m} n={n} {policy}");
+                assert_store_identical(&scratch.store, &fresh_store, &ctx);
+                assert!(scratch.ops.is_empty(), "{ctx}: op buffer");
+                assert_eq!(
+                    scratch.alive.iter().collect::<Vec<_>>(),
+                    fresh_alive.iter().collect::<Vec<_>>(),
+                    "{ctx}: alive order"
+                );
+
+                // Dirty everything: interleaved ops with random flush
+                // points, sometimes retiring *every* cell / removing
+                // every alive index (the all-retired corner), sometimes
+                // leaving maintenance counters undrained and the pending
+                // log half-flushed — reinit must erase it all.
+                let retire_all = rng.below(3) == 0;
+                for off in 0..m {
+                    if rng.below(2) == 0 {
+                        scratch.store.set(off, 7.5);
+                        scratch.ops.push(ShardOp::Set(off as u32, 7.5));
+                    }
+                    if retire_all || rng.below(2) == 0 {
+                        scratch.store.retire(off);
+                        scratch.ops.push(ShardOp::Retire(off as u32));
+                    }
+                    if rng.below(4) == 0 {
+                        scratch.store.flush();
+                    }
+                }
+                if rng.below(2) == 0 {
+                    scratch.store.flush();
+                    let _ = scratch.store.take_maintenance();
+                }
+                let kill = if retire_all { n } else { rng.below(n + 1) };
+                for k in 0..kill {
+                    scratch.alive.remove(k);
+                }
+                let _ = scratch.alive.seek(0); // compress dead-run hints
+                pool.check_in(scratch);
+            }
+            assert_eq!(pool.hits() + pool.misses(), 8);
+            assert!(pool.misses() >= 1, "first round always misses");
+        });
     }
 
     #[test]

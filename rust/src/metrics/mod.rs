@@ -95,6 +95,21 @@ pub struct RunStats {
     pub parks: u64,
     /// Max cells resident on any single rank (§5.4 storage claim).
     pub peak_shard_cells: usize,
+    /// Clustering jobs this stats object covers: 1 for a solo run, the
+    /// queue length for a [`RunBatch`](crate::coordinator::batch::RunBatch)
+    /// aggregate.
+    pub jobs: u64,
+    /// §5.1 distance-computation builds performed (0 for prebuilt
+    /// `Matrix` sources, 1 per raw dataset). A shared-dataset batch keeps
+    /// this at 1 no matter how many jobs cluster the dataset — the
+    /// build-once discipline the batch-equivalence suite asserts.
+    pub matrix_builds: u64,
+    /// Batch allocation-pool check-outs that reused recycled state
+    /// (0 solo; a warm batch hits on every rank after the first window).
+    pub pool_hits: u64,
+    /// Batch allocation-pool check-outs that had to allocate fresh state
+    /// (0 solo; equals the peak concurrently-admitted rank count).
+    pub pool_misses: u64,
     /// Execution substrate label (`"threads"`, `"event"`, `"event:N"`,
     /// `"steal:N"`) — which runtime drove the rank tasks (ISSUE-3).
     /// Informational: every other field in this struct is identical
@@ -120,7 +135,7 @@ impl RunStats {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "n={} p={} runtime={} wall={:.3}s virt={:.6}s msgs={} ({:.1}/iter) bytes={} peak_shard={} cells scanned={} idx_ops={} idx_waves={} alive_visited={} steals={} inj_wakes={} parks={}",
+            "n={} p={} runtime={} wall={:.3}s virt={:.6}s msgs={} ({:.1}/iter) bytes={} peak_shard={} cells scanned={} idx_ops={} idx_waves={} alive_visited={} steals={} inj_wakes={} parks={} jobs={} builds={} pool={}h/{}m",
             self.n,
             self.p,
             if self.runtime.is_empty() { "?" } else { self.runtime.as_str() },
@@ -137,6 +152,10 @@ impl RunStats {
             self.steals,
             self.injected_wakes,
             self.parks,
+            self.jobs,
+            self.matrix_builds,
+            self.pool_hits,
+            self.pool_misses,
         )
     }
 }

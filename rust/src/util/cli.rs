@@ -84,6 +84,22 @@ impl Args {
         }
     }
 
+    /// Typed optional flag: `Ok(None)` when absent, parsed when present
+    /// (for modes with no meaningful default, e.g. `--batch`).
+    pub fn parse_opt<T: std::str::FromStr>(&self, key: &str) -> anyhow::Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some("") => anyhow::bail!("flag --{key} needs a value"),
+            Some(s) => s
+                .parse()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("bad value for --{key}: {e}")),
+        }
+    }
+
     /// Boolean presence flag.
     pub fn has(&self, key: &str) -> bool {
         self.note(key);
@@ -155,6 +171,17 @@ mod tests {
         let a = args("--n 100");
         assert_eq!(a.parse_or("n", 5usize).unwrap(), 100);
         assert_eq!(a.parse_or("p", 7usize).unwrap(), 7);
+    }
+
+    #[test]
+    fn optional_typed_flag() {
+        let a = args("--batch-window 8");
+        assert_eq!(a.parse_opt::<usize>("batch-window").unwrap(), Some(8));
+        assert_eq!(a.parse_opt::<usize>("batch").unwrap(), None);
+        let bad = args("--batch-window x");
+        assert!(bad.parse_opt::<usize>("batch-window").is_err());
+        let empty = args("--batch-window --other 1");
+        assert!(empty.parse_opt::<usize>("batch-window").is_err());
     }
 
     #[test]

@@ -1,0 +1,212 @@
+//! ISSUE 8 acceptance suite: the multi-run batch service.
+//!
+//! The batch invariant is absolute: interleaving J jobs on one
+//! scheduler — with tag namespacing, a shared §5.1 build, and state
+//! recycling through the `StatePool` — may not perturb a single
+//! observable bit of any job. For every batch shape × runtime ×
+//! partition kind here, each job's dendrogram, virtual clock (makespan
+//! AND per-rank), and traffic/work counters are compared against a solo
+//! run of the identical configuration with tolerance 0.0.
+//!
+//! Host-schedule counters (`steals`, `injected_wakes`, `parks`) and
+//! wall time are excluded, exactly as in `runtime_equivalence.rs`: they
+//! describe who drove the polls, not what the ranks did.
+
+use lancew::coordinator::batch::bootstrap_source;
+use lancew::prelude::*;
+use lancew::validate::dendrograms_equal;
+
+fn gaussian_matrix(n: usize, seed: u64) -> CondensedMatrix {
+    let lp = GaussianSpec { n, d: 5, k: 4, ..Default::default() }.generate(seed);
+    euclidean_matrix(&lp.points)
+}
+
+/// Assert a batched job is observationally identical to its solo run.
+fn assert_identical(a: &ClusterRun, b: &ClusterRun, ctx: &str) {
+    dendrograms_equal(&a.dendrogram, &b.dendrogram, 0.0).unwrap_or_else(|e| panic!("{ctx}: {e}"));
+    assert_eq!(a.stats.virtual_s, b.stats.virtual_s, "{ctx}: virtual makespan");
+    assert_eq!(a.stats.rank_virtual_s, b.stats.rank_virtual_s, "{ctx}: per-rank clocks");
+    assert_eq!(a.stats.msgs_sent, b.stats.msgs_sent, "{ctx}: messages");
+    assert_eq!(a.stats.bytes_sent, b.stats.bytes_sent, "{ctx}: bytes");
+    assert_eq!(a.stats.cells_scanned, b.stats.cells_scanned, "{ctx}: cells_scanned");
+    assert_eq!(a.stats.cells_updated, b.stats.cells_updated, "{ctx}: cells_updated");
+    assert_eq!(a.stats.index_ops, b.stats.index_ops, "{ctx}: index_ops");
+    assert_eq!(a.stats.idx_waves, b.stats.idx_waves, "{ctx}: idx_waves");
+    assert_eq!(a.stats.alive_visited, b.stats.alive_visited, "{ctx}: alive_visited");
+}
+
+/// The schedulers a batch may interleave on (threads is rejected —
+/// covered by `batch_rejects_threads_runtime`).
+const RUNTIMES: [Runtime; 3] = [Runtime::Event, Runtime::EventPool(4), Runtime::Steal(4)];
+
+#[test]
+fn sweep_batch_matches_solo_bitwise() {
+    // The parameter-sweep workload: one job per linkage scheme on one
+    // shared dataset. 7 jobs against the default window of 4, so the
+    // admission gate is exercised on every runtime; each job must be
+    // bitwise the solo run of that scheme.
+    let m = gaussian_matrix(24, 81);
+    let src = DistSource::Matrix(m.clone());
+    for rt in RUNTIMES {
+        for kind in
+            [PartitionKind::BalancedCells, PartitionKind::WholeRows, PartitionKind::Cyclic]
+        {
+            let cfg = ClusterConfig::new(Scheme::Single, 5).with_partition(kind);
+            let mut batch = RunBatch::new(rt);
+            let ids = batch.push_shape(BatchShape::Sweep, &cfg, &src);
+            assert_eq!(ids.len(), Scheme::all().len());
+            let out = batch.run().unwrap();
+            assert_eq!(out.stats.jobs, Scheme::all().len() as u64, "{rt} {kind:?}");
+            for (job, &scheme) in out.jobs.iter().zip(Scheme::all()) {
+                let ctx = format!("{rt} {kind:?} {scheme}");
+                let batched = job.as_ref().unwrap_or_else(|e| panic!("{ctx}: {e}"));
+                let solo = ClusterConfig::new(scheme, 5)
+                    .with_partition(kind)
+                    .with_runtime(rt)
+                    .run(&m)
+                    .unwrap();
+                assert_identical(batched, &solo, &ctx);
+            }
+        }
+    }
+}
+
+#[test]
+fn bootstrap_batch_matches_solo_bitwise() {
+    // The bootstrap workload: 5 deterministic resamples, each its own
+    // dataset. Job i must match a solo run over `bootstrap_source(src, i)`
+    // — same seeds, same resample, same everything.
+    let m = gaussian_matrix(22, 82);
+    let src = DistSource::Matrix(m);
+    for rt in [Runtime::Event, Runtime::Steal(4)] {
+        let cfg = ClusterConfig::new(Scheme::Average, 4);
+        let mut batch = RunBatch::new(rt);
+        batch.push_shape(BatchShape::Bootstrap(5), &cfg, &src);
+        let out = batch.run().unwrap();
+        assert_eq!(out.stats.jobs, 5, "{rt}");
+        for (i, job) in out.jobs.iter().enumerate() {
+            let ctx = format!("{rt} bootstrap {i}");
+            let batched = job.as_ref().unwrap_or_else(|e| panic!("{ctx}: {e}"));
+            let solo = ClusterConfig::new(Scheme::Average, 4)
+                .with_runtime(rt)
+                .run_source(bootstrap_source(&src, i as u64))
+                .unwrap();
+            assert_identical(batched, &solo, &ctx);
+        }
+    }
+}
+
+#[test]
+fn repeat_batch_shares_one_build_and_recycles() {
+    // The repeated per-user-request workload on a raw-points dataset:
+    // maximal sharing. 8 identical jobs, window 4, p=6 — so exactly one
+    // §5.1 materialization serves all 8 jobs, the first 4 admitted jobs
+    // build their rank state fresh (pool empty → 4·6 misses) and the 4
+    // late-admitted jobs recycle it (4·6 hits). The hit/miss split is
+    // deterministic under ANY host schedule: admission happens-after the
+    // completing job's last pool check-in.
+    let lp = GaussianSpec { n: 40, d: 4, k: 4, ..Default::default() }.generate(83);
+    let src = DistSource::Points(lp.points);
+    for rt in RUNTIMES {
+        let cfg = ClusterConfig::new(Scheme::Complete, 6);
+        let mut batch = RunBatch::new(rt);
+        batch.push_shape(BatchShape::Repeat(8), &cfg, &src);
+        let out = batch.run().unwrap();
+        let solo = ClusterConfig::new(Scheme::Complete, 6)
+            .with_runtime(rt)
+            .run_source(src.clone())
+            .unwrap();
+        assert_eq!(solo.stats.matrix_builds, 1, "{rt}: solo builds once");
+        for (i, job) in out.jobs.iter().enumerate() {
+            let ctx = format!("{rt} repeat {i}");
+            let batched = job.as_ref().unwrap_or_else(|e| panic!("{ctx}: {e}"));
+            assert_identical(batched, &solo, &ctx);
+        }
+        // The sharing ledger: one build for 8 jobs, half the rank states
+        // recycled.
+        assert_eq!(out.stats.jobs, 8, "{rt}");
+        assert_eq!(out.stats.matrix_builds, 1, "{rt}: one shared build");
+        assert_eq!(out.stats.pool_misses, 4 * 6, "{rt}: window fills fresh");
+        assert_eq!(out.stats.pool_hits, 4 * 6, "{rt}: late jobs recycle");
+        assert!(out.stats.pool_hits > 0, "{rt}: recycling must engage");
+    }
+}
+
+#[test]
+fn shuffled_job_order_is_deterministic() {
+    // Queue order is part of the batch schedule (admission order, rank
+    // bases) but must not leak into any job's result: pushing the same
+    // sweep in reverse yields bitwise-identical per-scheme runs.
+    let m = gaussian_matrix(20, 84);
+    let src = DistSource::Matrix(m);
+    for rt in [Runtime::Event, Runtime::Steal(4)] {
+        let run_order = |schemes: &[Scheme]| -> Vec<ClusterRun> {
+            let mut batch = RunBatch::new(rt).with_max_inflight(3);
+            let data = batch.add_dataset(src.clone());
+            for &s in schemes {
+                batch.push_job(ClusterConfig::new(s, 4), data);
+            }
+            batch.run().unwrap().jobs.into_iter().map(|j| j.unwrap()).collect()
+        };
+        let forward = run_order(Scheme::all());
+        let mut reversed_schemes = Scheme::all().to_vec();
+        reversed_schemes.reverse();
+        let backward = run_order(&reversed_schemes);
+        for (i, scheme) in Scheme::all().iter().enumerate() {
+            let j = backward.len() - 1 - i;
+            assert_identical(&forward[i], &backward[j], &format!("{rt} {scheme} order"));
+        }
+    }
+}
+
+#[test]
+fn panic_in_one_job_spares_the_rest() {
+    // The per-job failure-scoping bugfix: an all-infinite matrix makes
+    // every merge candidate non-finite, which the workers treat as a
+    // protocol-fatal panic (see coordinator::mod's solo panic test). In
+    // a batch, that panic must fail ONLY its job — `Err` in its slot,
+    // message intact — while the neighbouring jobs complete bitwise
+    // clean. Without the batch-task catch boundary the sharded pool's
+    // sibling-abort would take the whole batch down.
+    let healthy = gaussian_matrix(18, 85);
+    let poison = CondensedMatrix::from_fn(4, |_, _| f32::INFINITY);
+    for rt in [Runtime::Event, Runtime::Steal(4)] {
+        let mut batch = RunBatch::new(rt).with_max_inflight(2);
+        let good = batch.add_dataset(DistSource::Matrix(healthy.clone()));
+        let bad = batch.add_dataset(DistSource::Matrix(poison.clone()));
+        batch.push_job(ClusterConfig::new(Scheme::Single, 4), good);
+        batch.push_job(ClusterConfig::new(Scheme::Complete, 2), bad);
+        batch.push_job(ClusterConfig::new(Scheme::Average, 4), good);
+        let out = batch.run().unwrap_or_else(|e| panic!("{rt}: batch itself failed: {e}"));
+        assert_eq!(out.jobs.len(), 3, "{rt}");
+        // (ClusterRun carries no Debug impl, so no unwrap_err here.)
+        let err = out.jobs[1].as_ref().err().unwrap_or_else(|| panic!("{rt}: poison job must fail"));
+        let msg = format!("{err:#}");
+        assert!(msg.contains("worker panicked"), "{rt}: got {msg:?}");
+        assert!(msg.contains("job 1"), "{rt}: failure names its job: {msg:?}");
+        for (j, scheme) in [(0usize, Scheme::Single), (2, Scheme::Average)] {
+            let ctx = format!("{rt} survivor job {j}");
+            let batched = out.jobs[j].as_ref().unwrap_or_else(|e| panic!("{ctx}: {e}"));
+            let solo = ClusterConfig::new(scheme, 4)
+                .with_runtime(rt)
+                .run(&healthy)
+                .unwrap();
+            assert_identical(batched, &solo, &ctx);
+        }
+    }
+}
+
+#[test]
+fn batch_rejects_threads_runtime_and_empty_queue() {
+    let m = gaussian_matrix(12, 86);
+    let mut batch = RunBatch::new(Runtime::Threads);
+    let data = batch.add_dataset(DistSource::Matrix(m));
+    batch.push_job(ClusterConfig::new(Scheme::Single, 2), data);
+    let err = batch.run().err().unwrap_or_else(|| panic!("threads cannot interleave"));
+    assert!(format!("{err:#}").contains("interleaving scheduler"));
+
+    let empty = RunBatch::new(Runtime::Event);
+    assert!(empty.is_empty());
+    let err = empty.run().err().unwrap_or_else(|| panic!("empty batch must fail"));
+    assert!(format!("{err:#}").contains("empty batch"));
+}
