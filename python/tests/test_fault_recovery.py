@@ -1,0 +1,518 @@
+"""Differential test for the ISSUE-9 fault-injection + recovery layer.
+
+Transliterates the Rust fault/recovery stack into Python on top of the
+``RankTask`` replica from ``test_event_runtime.py``:
+
+* ``Rng`` — xoshiro256++ seeded via splitmix64 (``util/rng.rs``), bit
+  exact with 64-bit wrapping arithmetic;
+* ``FaultPlan`` — the seeded adversary (``comm/fault.rs``): a pure
+  function from ``(src, dst, tag)`` to drop/dup/delay via disjoint 8%
+  windows of a per-message roll, plus a single crash site and the
+  bounded ``extra_drops`` stream;
+* ``FaultyEndpoint`` — the hardened transport (``comm/transport.rs``):
+  per-(src,dst) sequence numbers, receiver-side dedup, ack replies for
+  held messages, retry timers with exponential backoff that fire only
+  at scheduler idleness;
+* ``FaultyRankTask`` — ``task.rs`` hooks: injected crash at the top of
+  ``send_min``, checkpoint snapshots at the end of ``retire_update``
+  (wave = the iteration about to start), and the ``ack_wait``
+  completion hold;
+* ``run_event_faulty`` — ``sched.rs`` + ``batch.rs``: the wake-log
+  event scheduler with idle-time timer firing and the respawn loop
+  (crash-once disarm, restore from the latest complete checkpoint wave,
+  from scratch when the cadence is off).
+
+Asserted, for 3 partition kinds × {drop, dup, crash} × 5 seeds: the
+faulted run's per-rank merge sequences, virtual clocks, and traffic
+counters are EXACTLY the fault-free run's — recovery is invisible.
+This is the container-side stand-in for `rust/tests/fault_recovery.rs`
+(no Rust toolchain here); the Rust suite pins the same invariants in CI.
+"""
+
+from collections import deque
+
+from test_event_runtime import (
+    Endpoint,
+    Model,
+    Partition,
+    RankTask,
+    nbytes,
+    random_matrix,
+    run_event_sim,
+)
+
+MASK = (1 << 64) - 1
+
+# ---------------------------------------------------------------------------
+# util/rng.rs: splitmix64-seeded xoshiro256++
+# ---------------------------------------------------------------------------
+
+
+def _splitmix64(state):
+    state = (state + 0x9E3779B97F4A7C15) & MASK
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return state, z ^ (z >> 31)
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Rng:
+    def __init__(self, seed):
+        s = seed & MASK
+        self.s = []
+        for _ in range(4):
+            s, v = _splitmix64(s)
+            self.s.append(v)
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[0] + s[3]) & MASK, 23) + s[0]) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def below(self, n):
+        return (self.next_u64() * n) >> 64
+
+
+# ---------------------------------------------------------------------------
+# comm/fault.rs: the seeded adversary
+# ---------------------------------------------------------------------------
+
+MIX_SRC = 0x9E3779B97F4A7C15
+MIX_DST = 0xC2B2AE3D27D4EB4F
+MIX_TAG = 0x165667B19E3779F9
+MIX_EXTRA = 0xD6E8FEB86659FD93
+
+
+def message_key(src, dst, tag):
+    return (
+        ((src * MIX_SRC) & MASK)
+        ^ ((dst * MIX_DST) & MASK)
+        ^ (((tag & MASK) * MIX_TAG) & MASK)
+    )
+
+
+class FaultPlan:
+    def __init__(self, seed, drop=False, dup=False, delay=False, crash=None):
+        self.seed = seed & MASK
+        self.drop, self.dup, self.delay = drop, dup, delay
+        self.crash = crash  # (job, rank, iter) or None
+
+    def disarm_crash(self):
+        return FaultPlan(self.seed, self.drop, self.dup, self.delay, None)
+
+    def should_crash(self, job, rank, it):
+        return self.crash == (job, rank, it)
+
+    def action(self, src, dst, tag):
+        if src == dst:
+            return "deliver"
+        roll = Rng(self.seed ^ message_key(src, dst, tag)).below(100)
+        if roll <= 7 and self.drop:
+            return "drop"
+        if 8 <= roll <= 15 and self.dup:
+            return "dup"
+        if 16 <= roll <= 23 and self.delay:
+            return "delay"
+        return "deliver"
+
+    def extra_drops(self, src, dst, tag):
+        rng = Rng(self.seed ^ message_key(src, dst, tag) ^ MIX_EXTRA)
+        return 1 if rng.below(4) == 0 else 0
+
+
+class InjectedCrash(Exception):
+    pass
+
+
+class DeliveryFailure(Exception):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# comm/transport.rs: hardened endpoint (seq/ack/dedup/hold + retry timers)
+# ---------------------------------------------------------------------------
+
+RETRY_MAX = 4
+RETRY_TIMEOUT = 1e-4
+
+# Envelopes grow to [src, tag, arrival, payload, seq, wants_ack]; acks are
+# envelopes with payload None. Base-class consumers only index [0..3].
+
+
+class FaultyEndpoint(Endpoint):
+    def __init__(self, rank, p, model, boxes, plan):
+        super().__init__(rank, p, model, boxes)
+        self.plan = plan
+        self.next_seq = [0] * p
+        self.seen = [set() for _ in range(p)]
+        self.unacked = []  # [dst, env, due, attempt, drops_left]
+        self.faults_injected = 0
+        self.retries_sent = 0
+        self.failed = None
+
+    def send(self, dst, tag, msg):
+        # Canonical accounting FIRST (clock, counters, arrival stamp) —
+        # the adversary's verdict must not move a single canonical bit.
+        b = nbytes(msg)
+        if dst == self.rank:
+            arrival = self.clock
+        else:
+            self.clock += self.model.send_overhead + b * self.model.per_byte
+            arrival = self.clock + self.model.latency
+        self.msgs += 1
+        self.bytes += b
+        if dst == self.rank:
+            self.stash.append((self.rank, tag, arrival, msg))
+            return
+        seq = self.next_seq[dst]
+        self.next_seq[dst] += 1
+        action = self.plan.action(self.rank, dst, tag)
+        if action != "deliver":
+            self.faults_injected += 1
+        env = [self.rank, tag, arrival, msg, seq, False]
+        if action == "deliver":
+            self._deliver(dst, env)
+        elif action == "dup":
+            self._deliver(dst, list(env))
+            self._deliver(dst, env)
+        else:  # drop / delay: held sender-side, ack required
+            env[5] = True
+            drops = self.plan.extra_drops(self.rank, dst, tag) if action == "drop" else 0
+            self.unacked.append([dst, env, self.clock + RETRY_TIMEOUT, 0, drops])
+
+    def _deliver(self, dst, env):
+        if self.wakes is not None:
+            self.wakes.append(dst)
+        self.boxes[dst].append(env)
+
+    def _admit(self, env):
+        if len(env) == 6 and env[3] is None:
+            # Ack from env[0] for our held seq env[4].
+            self.unacked = [
+                h for h in self.unacked if not (h[0] == env[0] and h[1][4] == env[4])
+            ]
+            return
+        dupe = False
+        if len(env) == 6 and env[0] != self.rank:
+            if env[4] in self.seen[env[0]]:
+                dupe = True
+            else:
+                self.seen[env[0]].add(env[4])
+        if len(env) == 6 and env[5]:
+            # Ack every wants_ack copy, duplicates included (idempotent).
+            self._deliver(env[0], [self.rank, 0, 0.0, None, env[4], False])
+        if not dupe:
+            self.stash.append(env)
+
+    def pump(self):
+        box = self.boxes[self.rank]
+        pending = list(box)
+        box.clear()
+        for env in pending:
+            self._admit(env)
+
+    def try_recv(self, src, tag):
+        self.pump()
+        for i, e in enumerate(self.stash):
+            if e[0] == src and e[1] == tag:
+                return self._finish(self.stash.pop(i))
+        return None
+
+    def armed_due(self):
+        return min((h[2] for h in self.unacked), default=None)
+
+    def fire_earliest(self):
+        if not self.unacked:
+            return
+        at = min(range(len(self.unacked)), key=lambda i: self.unacked[i][2])
+        held = self.unacked[at]
+        if held[3] >= RETRY_MAX:
+            self.failed = (held[0], held[1][1])
+            self.unacked.pop(at)
+            if self.wakes is not None:
+                self.wakes.append(self.rank)
+            return
+        held[3] += 1
+        self.retries_sent += 1
+        held[2] += RETRY_TIMEOUT * (1 << min(held[3], 20))
+        if held[4] > 0:
+            held[4] -= 1  # this retransmission is lost in flight too
+            return
+        self._deliver(held[0], list(held[1]))
+
+
+# ---------------------------------------------------------------------------
+# task.rs hooks: crash, checkpoint wave, ack-wait hold, snapshot restore
+# ---------------------------------------------------------------------------
+
+ACK_WAIT = -2
+
+
+class FaultyRankTask(RankTask):
+    def __init__(self, ep, part, scheme, collectives, matrix, plan,
+                 ckpt_every=None, store=None, job=0):
+        super().__init__(ep, part, scheme, collectives, matrix)
+        self.plan, self.job = plan, job
+        self.ckpt_every, self.store = ckpt_every, store
+
+    def poll(self):
+        if self.ep.failed is not None:
+            dst, t = self.ep.failed
+            self.ep.failed = None
+            raise DeliveryFailure(f"no ack from rank {dst} for tag {t}")
+        return super().poll()
+
+    def do_send_min(self):
+        # Crash fires BEFORE this iteration's LocalMin goes out, so no
+        # sibling can pass the gather — the whole job is still alive at
+        # the crash, which is what makes the respawn barrier sound.
+        if self.plan.should_crash(self.job, self.ep.rank, self.iter):
+            raise InjectedCrash(
+                f"injected crash: job {self.job} rank {self.ep.rank} iter {self.iter}"
+            )
+        return super().do_send_min()
+
+    def do_retire_update(self, next_src):
+        r = super().do_retire_update(next_src)
+        if r is not None:
+            return r
+        if self.step == ("done",):
+            # Completion hold: held envelopes die with the endpoint, so
+            # stay pending until every one is acked.
+            self.step = ("ack_wait",)
+        elif (
+            self.ckpt_every
+            and self.store is not None
+            and self.iter % self.ckpt_every == 0
+        ):
+            self.store[self.ep.rank][self.iter] = self.snapshot()
+        return None
+
+    def do_ack_wait(self):
+        self.ep.pump()
+        if self.ep.unacked:
+            return (self.ep.rank, ACK_WAIT)
+        self.step = ("done",)
+        return None
+
+    def snapshot(self):
+        ep = self.ep
+        return {
+            "wave": self.iter,
+            "cells": list(self.cells),
+            "sizes": list(self.sizes),
+            "alive": list(self.alive),
+            "merges": list(self.merges),
+            "phases": list(self.phases),
+            "clock": ep.clock,
+            "msgs": ep.msgs,
+            "bytes": ep.bytes,
+        }
+
+    def restore(self, snap):
+        # Restoration charges nothing: clock and traffic are assigned,
+        # not recomputed (the original charges live inside the snapshot).
+        ep = self.ep
+        self.cells = list(snap["cells"])
+        self.sizes = list(snap["sizes"])
+        self.alive = list(snap["alive"])
+        self.merges = list(snap["merges"])
+        self.phases = list(snap["phases"])
+        self.iter = snap["wave"]
+        self.my_cell0 = self.part.cells_of(ep.rank)
+        self.t_mark = 0.0
+        self.pairs, self.acc, self.win = [], [], None
+        ep.clock = snap["clock"]
+        ep.msgs = snap["msgs"]
+        ep.bytes = snap["bytes"]
+        self.step = ("send_min",)
+
+
+# ---------------------------------------------------------------------------
+# sched.rs + batch.rs: event scheduler with idle timers + respawn loop
+# ---------------------------------------------------------------------------
+
+
+def run_event_faulty(kind, scheme, collectives, matrix, n, p, model, plan,
+                     ckpt_every=None, retries=1):
+    part = Partition(kind, n, p)
+    store = {r: {} for r in range(p)}
+    attempt_plan = plan
+    attempts_left = retries
+    restarts = 0
+    while True:
+        # Fresh network per attempt: stale in-flight envelopes of a dead
+        # attempt never leak into the replay.
+        boxes = [[] for _ in range(p)]
+        eps = [FaultyEndpoint(r, p, model, boxes, attempt_plan) for r in range(p)]
+        for ep in eps:
+            ep.wakes = []
+        tasks = [
+            FaultyRankTask(eps[r], part, scheme, collectives, matrix,
+                           attempt_plan, ckpt_every, store)
+            for r in range(p)
+        ]
+        if restarts > 0 and all(store[r] for r in range(p)):
+            # Latest complete wave: every rank holds every K-multiple up
+            # to its progress, so the min over per-rank maxima is held
+            # by all p ranks — a consistent whole-wave cut.
+            wave = min(max(store[r]) for r in range(p))
+            for r in range(p):
+                tasks[r].restore(store[r][wave])
+        try:
+            return _drive(eps, tasks, p), restarts
+        except InjectedCrash:
+            if attempts_left == 0:
+                raise
+            attempts_left -= 1
+            restarts += 1
+            attempt_plan = attempt_plan.disarm_crash()  # crash-once
+
+
+def _drive(eps, tasks, p):
+    """run_event with timers: fire the earliest armed retry timer only
+    when the ready queue is empty — the idleness contract."""
+    ready = deque(range(p))
+    queued = [True] * p
+    results = [None] * p
+    done = 0
+    spins = 0
+    while done < p:
+        if not ready:
+            cand = [
+                (eps[i].armed_due(), i)
+                for i in range(p)
+                if eps[i].armed_due() is not None
+            ]
+            assert cand, "faulty event sim deadlocked with no armed timers"
+            _, i = min(cand)
+            eps[i].fire_earliest()
+            wakes, eps[i].wakes = eps[i].wakes, []
+            for dst in wakes:
+                if not queued[dst] and results[dst] is None:
+                    queued[dst] = True
+                    ready.append(dst)
+            spins += 1
+            assert spins < 1_000_000, "timer livelock"
+            continue
+        r = ready.popleft()
+        queued[r] = False
+        pending = tasks[r].poll()
+        if pending is None and results[r] is None:
+            results[r] = tasks[r].out
+            done += 1
+        wakes, eps[r].wakes = eps[r].wakes, []
+        for dst in wakes:
+            if not queued[dst] and results[dst] is None:
+                queued[dst] = True
+                ready.append(dst)
+    return results
+
+
+# ---------------------------------------------------------------------------
+# the differential
+# ---------------------------------------------------------------------------
+
+
+def check_faulted_equals_clean(kind, fault_kind, seed, n=20, p=4):
+    matrix = random_matrix(n, seed)
+    model = Model()
+    scheme, collectives = "complete", "naive"
+    clean = run_event_sim(kind, scheme, collectives, matrix, n, p, model)
+    if fault_kind == "crash":
+        plan = FaultPlan(seed * 31 + 7, drop=True, dup=True, crash=(0, 1, 6))
+        ckpt, retries = 4, 2
+    else:
+        plan = FaultPlan(
+            seed * 31 + 7,
+            drop=(fault_kind == "drop"),
+            dup=(fault_kind == "dup"),
+        )
+        ckpt, retries = None, 0
+    faulted, restarts = run_event_faulty(
+        kind, scheme, collectives, matrix, n, p, model, plan,
+        ckpt_every=ckpt, retries=retries,
+    )
+    ctx = f"{kind}/{fault_kind} seed={seed}"
+    for r in range(p):
+        a, b = clean[r], faulted[r]
+        assert a["merges"] == b["merges"], f"{ctx}: rank {r} merges diverge"
+        assert a["clock"] == b["clock"], \
+            f"{ctx}: rank {r} clock {a['clock']} != {b['clock']}"
+        assert a["msgs"] == b["msgs"], f"{ctx}: rank {r} msgs"
+        assert a["bytes"] == b["bytes"], f"{ctx}: rank {r} bytes"
+        assert a["phases"] == b["phases"], f"{ctx}: rank {r} phases"
+    if fault_kind == "crash":
+        assert restarts == 1, f"{ctx}: expected exactly one restart, got {restarts}"
+
+
+def test_faulted_equals_fault_free_across_grid():
+    # 3 partition kinds × drop/dup/crash × 5 seeds: recovery must be
+    # invisible to merges, clocks, and traffic everywhere.
+    for kind in ["balanced", "rows", "cyclic"]:
+        for fault_kind in ["drop", "dup", "crash"]:
+            for seed in range(5):
+                check_faulted_equals_clean(kind, fault_kind, 200 + seed)
+
+
+def test_adversary_actually_fires():
+    # Guard against a vacuous differential: the drop+dup plan must
+    # tamper with a healthy fraction of messages (two 8% windows), and
+    # self-sends must always pass.
+    plan = FaultPlan(6207, drop=True, dup=True)
+    tally = 0
+    for t in range(200):
+        for s, d in [(0, 1), (1, 2), (2, 3), (3, 0)]:
+            assert plan.action(s, s, t) == "deliver", "self-send faulted"
+            if plan.action(s, d, t) != "deliver":
+                tally += 1
+    assert 800 * 0.08 < tally < 800 * 0.26, f"fault rate off: {tally}/800"
+
+
+def test_crash_without_checkpoint_replays_from_scratch():
+    # Cadence off: the respawn has no wave to restore and replays the
+    # whole job — still bitwise the clean run.
+    matrix = random_matrix(18, 321)
+    model = Model()
+    clean = run_event_sim("balanced", "complete", "naive", matrix, 18, 3, model)
+    plan = FaultPlan(99, crash=(0, 2, 5))
+    faulted, restarts = run_event_faulty(
+        "balanced", "complete", "naive", matrix, 18, 3, model, plan,
+        ckpt_every=None, retries=1,
+    )
+    assert restarts == 1
+    for r in range(3):
+        assert clean[r]["merges"] == faulted[r]["merges"]
+        assert clean[r]["clock"] == faulted[r]["clock"]
+
+
+def test_crash_budget_exhaustion_raises():
+    matrix = random_matrix(16, 5)
+    model = Model()
+    plan = FaultPlan(1, crash=(0, 0, 3))
+    try:
+        run_event_faulty("balanced", "complete", "naive", matrix, 16, 2, model,
+                         plan, ckpt_every=2, retries=0)
+    except InjectedCrash:
+        pass
+    else:
+        raise AssertionError("retries=0 must surface the injected crash")
+
+
+if __name__ == "__main__":
+    test_faulted_equals_fault_free_across_grid()
+    test_adversary_actually_fires()
+    test_crash_without_checkpoint_replays_from_scratch()
+    test_crash_budget_exhaustion_raises()
+    print("faulted ≡ fault-free: all combos OK")

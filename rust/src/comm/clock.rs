@@ -17,6 +17,15 @@ impl VirtualClock {
         Self { now: 0.0 }
     }
 
+    /// A clock restored to a checkpointed instant (ISSUE-9 recovery):
+    /// a rank resuming from a snapshot must re-enter the protocol at
+    /// exactly the virtual time the snapshot was cut, or the replayed
+    /// suffix would diverge from the uninterrupted run.
+    pub fn at(now: f64) -> Self {
+        debug_assert!(now >= 0.0, "negative restore time {now}");
+        Self { now }
+    }
+
     /// Current simulated time (seconds).
     #[inline]
     pub fn now(&self) -> f64 {

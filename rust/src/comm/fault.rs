@@ -1,0 +1,364 @@
+//! Seeded, deterministic fault injection for the transport (ISSUE-9).
+//!
+//! A [`FaultPlan`] answers one question per directed message — "what
+//! does the adversary do to (src → dst, tag)?" — by hashing the triple
+//! into a per-message xoshiro stream ([`crate::util::rng::Rng`],
+//! host-only state per the PR-6 pattern, justified in the xtask lint
+//! allowlist). Decisions are therefore:
+//!
+//! * **reproducible** — a pure function of `(--fault-seed, src, dst,
+//!   tag)`, independent of host schedule, runtime, retry timing, and of
+//!   every *other* message; replaying a message (a retransmission, or a
+//!   whole job restarted from a checkpoint) replays its fault verdict;
+//! * **enumerable** — tests can walk the tag space and know exactly
+//!   which messages a seed will drop before running anything.
+//!
+//! The plan is *host-only* state: faults and their recovery (acks,
+//! retransmissions, dedup — see `comm::transport`) charge nothing to
+//! the virtual clock and bump no canonical traffic counter, so a
+//! faulted run's observables are bitwise those of the fault-free run.
+//! The only new observable is the host-side `faults_injected` tally.
+//!
+//! Crash faults are separate from message faults: [`CrashSite`] names
+//! one (job, rank, iteration) where the worker panics at the top of its
+//! scan step. Recovery (checkpoint restore + job respawn) lives in
+//! `coordinator::{checkpoint, batch}`; a respawned job runs with the
+//! crash [`disarmed`](FaultPlan::disarm_crash) (crash-once semantics)
+//! while message faults stay armed — and are re-absorbed identically,
+//! because the verdicts are per-message hashes.
+
+use crate::util::rng::Rng;
+
+/// What the adversary does to one directed message.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// No fault: deliver normally.
+    Deliver,
+    /// Lose the message in flight; the sender's retry timer must
+    /// retransmit it. [`FaultPlan::extra_drops`] says how many of those
+    /// retransmissions are *also* lost (bounded, so a retry budget ≥ 2
+    /// always recovers).
+    Drop,
+    /// Deliver two copies back to back; receiver-side sequence-number
+    /// dedup must suppress the second.
+    Duplicate,
+    /// Hold the message at the sender; it is delivered (with its
+    /// original virtual arrival stamp) only when a retry timer fires.
+    Delay,
+}
+
+/// A single injected worker crash: rank `rank` of job `job` panics on
+/// entering the scan step of iteration `iter`. Solo runs are job 0.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CrashSite {
+    /// Batch job index (0 for solo runs).
+    pub job: usize,
+    /// Protocol-local rank to kill.
+    pub rank: usize,
+    /// Iteration (0-based) whose scan step panics.
+    pub iter: usize,
+}
+
+/// Which fault classes are armed. Parsed from `--faults`:
+/// `off`, or a `+`-separated combination of `drop`, `dup`, `delay`,
+/// `mix` (= all three), and `crash:R@I` (kill rank R at iteration I).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultSpec {
+    /// Arm message drops (~8% of cross-rank messages).
+    pub drop: bool,
+    /// Arm message duplication (~8%).
+    pub dup: bool,
+    /// Arm message delays (~8%).
+    pub delay: bool,
+    /// Arm one worker crash.
+    pub crash: Option<CrashSite>,
+}
+
+impl FaultSpec {
+    /// All three message-fault classes, no crash.
+    pub fn mix() -> Self {
+        Self { drop: true, dup: true, delay: true, crash: None }
+    }
+
+    /// True when no fault class is armed (the `off` spec).
+    pub fn is_off(&self) -> bool {
+        !self.drop && !self.dup && !self.delay && self.crash.is_none()
+    }
+}
+
+impl std::str::FromStr for FaultSpec {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        let mut spec = FaultSpec::default();
+        if s == "off" {
+            return Ok(spec);
+        }
+        for part in s.split('+') {
+            match part {
+                "drop" => spec.drop = true,
+                "dup" => spec.dup = true,
+                "delay" => spec.delay = true,
+                "mix" => {
+                    spec.drop = true;
+                    spec.dup = true;
+                    spec.delay = true;
+                }
+                _ => {
+                    let site = part.strip_prefix("crash:").and_then(|rest| {
+                        let (r, i) = rest.split_once('@')?;
+                        Some(CrashSite {
+                            job: 0,
+                            rank: r.parse().ok()?,
+                            iter: i.parse().ok()?,
+                        })
+                    });
+                    match site {
+                        Some(site) => spec.crash = Some(site),
+                        None => anyhow::bail!(
+                            "unknown fault class {part:?} (off|drop|dup|delay|mix|crash:R@I, +-separated)"
+                        ),
+                    }
+                }
+            }
+        }
+        Ok(spec)
+    }
+}
+
+impl std::fmt::Display for FaultSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.is_off() {
+            return f.write_str("off");
+        }
+        let mut parts = Vec::new();
+        if self.drop {
+            parts.push("drop".to_string());
+        }
+        if self.dup {
+            parts.push("dup".to_string());
+        }
+        if self.delay {
+            parts.push("delay".to_string());
+        }
+        if let Some(c) = self.crash {
+            parts.push(format!("crash:{}@{}", c.rank, c.iter));
+        }
+        f.write_str(&parts.join("+"))
+    }
+}
+
+/// Ack/retry knobs for the hardened transport. Parsed from `--retry`
+/// as `max:K,timeout:T` (either key optional, any order).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// Maximum retransmissions per message before the sender declares
+    /// the peer unreachable (which fails the job — recoverable via
+    /// `--on-failure retry:K`).
+    pub max: u32,
+    /// Base virtual-time retransmit timeout; attempt k waits
+    /// `timeout · 2^k` (exponential backoff). Timers fire only when the
+    /// scheduler is otherwise idle, so this is a tie-break scale, not a
+    /// latency floor.
+    pub timeout: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        // ~50× the nehalem per-hop latency: unambiguously "later than
+        // any in-flight arrival" without stretching virtual due-times.
+        Self { max: 4, timeout: 1e-4 }
+    }
+}
+
+impl std::str::FromStr for RetryPolicy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        let mut policy = RetryPolicy::default();
+        for part in s.split(',') {
+            if let Some(k) = part.strip_prefix("max:") {
+                policy.max = k.parse().map_err(|_| anyhow::anyhow!("bad retry max {k:?}"))?;
+            } else if let Some(t) = part.strip_prefix("timeout:") {
+                policy.timeout =
+                    t.parse().map_err(|_| anyhow::anyhow!("bad retry timeout {t:?}"))?;
+                anyhow::ensure!(policy.timeout > 0.0, "retry timeout must be positive");
+            } else {
+                anyhow::bail!("unknown retry field {part:?} (max:K,timeout:T)");
+            }
+        }
+        Ok(policy)
+    }
+}
+
+/// Odd multiplicative mixers (splitmix64 / xxhash finalizer constants):
+/// spread `(src, dst, tag)` into disjoint seed streams so adjacent
+/// triples land in unrelated xoshiro states.
+const MIX_SRC: u64 = 0x9E37_79B9_7F4A_7C15;
+const MIX_DST: u64 = 0xC2B2_AE3D_27D4_EB4F;
+const MIX_TAG: u64 = 0x1656_67B1_9E37_79F9;
+/// Stream separator between the action draw and the extra-drops draw.
+const MIX_EXTRA: u64 = 0xD6E8_FEB8_6659_FD93;
+
+fn message_key(src: usize, dst: usize, tag: u64) -> u64 {
+    (src as u64).wrapping_mul(MIX_SRC)
+        ^ (dst as u64).wrapping_mul(MIX_DST)
+        ^ tag.wrapping_mul(MIX_TAG)
+}
+
+/// The seeded adversary: a pure function from message identity to
+/// [`FaultAction`]. Cheap to copy into every endpoint.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    seed: u64,
+    spec: FaultSpec,
+}
+
+impl FaultPlan {
+    /// Build a plan for `--fault-seed seed` with the given classes armed.
+    pub fn new(seed: u64, spec: FaultSpec) -> Self {
+        Self { seed, spec }
+    }
+
+    /// The seed this plan replays.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// The armed fault classes.
+    pub fn spec(&self) -> FaultSpec {
+        self.spec
+    }
+
+    /// The same plan with the crash removed — what a respawned job runs
+    /// under (crash-once semantics; message faults stay armed).
+    pub fn disarm_crash(&self) -> Self {
+        let mut plan = *self;
+        plan.spec.crash = None;
+        plan
+    }
+
+    /// Should rank `rank` of job `job` panic entering iteration `iter`?
+    pub fn should_crash(&self, job: usize, rank: usize, iter: usize) -> bool {
+        self.spec.crash == Some(CrashSite { job, rank, iter })
+    }
+
+    /// The adversary's verdict on one directed message. Self-sends are
+    /// never faulted (they bypass the wire entirely). Each armed class
+    /// claims a disjoint 8% window of the per-message roll.
+    pub fn action(&self, src: usize, dst: usize, tag: u64) -> FaultAction {
+        if src == dst {
+            return FaultAction::Deliver;
+        }
+        let roll = Rng::new(self.seed ^ message_key(src, dst, tag)).below(100);
+        match roll {
+            0..=7 if self.spec.drop => FaultAction::Drop,
+            8..=15 if self.spec.dup => FaultAction::Duplicate,
+            16..=23 if self.spec.delay => FaultAction::Delay,
+            _ => FaultAction::Deliver,
+        }
+    }
+
+    /// For a [`Drop`](FaultAction::Drop) verdict: how many of the
+    /// sender's retransmissions are *also* lost. Bounded to 1 (~25% of
+    /// drops) so any retry budget ≥ 2 is guaranteed to get the message
+    /// through — the headline equivalence suite relies on that bound.
+    pub fn extra_drops(&self, src: usize, dst: usize, tag: u64) -> u32 {
+        let mut rng = Rng::new(self.seed ^ message_key(src, dst, tag) ^ MIX_EXTRA);
+        u32::from(rng.below(4) == 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn verdicts_are_deterministic_and_seed_sensitive() {
+        let plan = FaultPlan::new(42, FaultSpec::mix());
+        let mut differs = false;
+        for tag in 0..200u64 {
+            for (src, dst) in [(0, 1), (1, 2), (2, 0)] {
+                assert_eq!(plan.action(src, dst, tag), plan.action(src, dst, tag));
+                assert_eq!(plan.extra_drops(src, dst, tag), plan.extra_drops(src, dst, tag));
+                if plan.action(src, dst, tag) != FaultPlan::new(43, FaultSpec::mix()).action(src, dst, tag)
+                {
+                    differs = true;
+                }
+            }
+        }
+        assert!(differs, "seed must steer the verdicts");
+    }
+
+    #[test]
+    fn disarmed_classes_never_fire() {
+        let drop_only = FaultPlan::new(7, "drop".parse().unwrap());
+        let off = FaultPlan::new(7, "off".parse().unwrap());
+        let (mut drops, mut others) = (0u32, 0u32);
+        for tag in 0..500u64 {
+            match drop_only.action(0, 1, tag) {
+                FaultAction::Drop => drops += 1,
+                FaultAction::Deliver => {}
+                other => panic!("drop-only plan produced {other:?}"),
+            }
+            assert_eq!(off.action(0, 1, tag), FaultAction::Deliver);
+            if off.action(0, 1, tag) != FaultAction::Deliver {
+                others += 1;
+            }
+        }
+        assert!(drops > 10, "~8% of 500 should drop, got {drops}");
+        assert_eq!(others, 0);
+    }
+
+    #[test]
+    fn self_sends_bypass_faults() {
+        let plan = FaultPlan::new(1, FaultSpec::mix());
+        for tag in 0..100 {
+            assert_eq!(plan.action(3, 3, tag), FaultAction::Deliver);
+        }
+    }
+
+    #[test]
+    fn extra_drops_bounded_for_budget_argument() {
+        let plan = FaultPlan::new(99, FaultSpec::mix());
+        for tag in 0..1000u64 {
+            assert!(plan.extra_drops(0, 1, tag) <= 1, "retry-budget bound");
+        }
+    }
+
+    #[test]
+    fn spec_parses_and_displays() {
+        let spec: FaultSpec = "drop+dup".parse().unwrap();
+        assert!(spec.drop && spec.dup && !spec.delay);
+        assert_eq!(spec.to_string(), "drop+dup");
+        let mix: FaultSpec = "mix".parse().unwrap();
+        assert_eq!(mix, FaultSpec::mix());
+        let crash: FaultSpec = "crash:2@5".parse().unwrap();
+        assert_eq!(crash.crash, Some(CrashSite { job: 0, rank: 2, iter: 5 }));
+        assert_eq!(crash.to_string(), "crash:2@5");
+        let both: FaultSpec = "mix+crash:1@3".parse().unwrap();
+        assert!(both.drop && both.crash.is_some());
+        assert!("off".parse::<FaultSpec>().unwrap().is_off());
+        assert!("bogus".parse::<FaultSpec>().is_err());
+    }
+
+    #[test]
+    fn crash_site_matches_exactly() {
+        let plan = FaultPlan::new(0, "crash:1@4".parse().unwrap());
+        assert!(plan.should_crash(0, 1, 4));
+        assert!(!plan.should_crash(0, 1, 3));
+        assert!(!plan.should_crash(0, 2, 4));
+        assert!(!plan.should_crash(1, 1, 4), "crash is job-scoped");
+        assert!(!plan.disarm_crash().should_crash(0, 1, 4), "respawn disarms");
+    }
+
+    #[test]
+    fn retry_policy_parses() {
+        let p: RetryPolicy = "max:2,timeout:0.5".parse().unwrap();
+        assert_eq!(p.max, 2);
+        assert_eq!(p.timeout, 0.5);
+        let d: RetryPolicy = "max:9".parse().unwrap();
+        assert_eq!(d.max, 9);
+        assert_eq!(d.timeout, RetryPolicy::default().timeout);
+        assert!("timeout:0".parse::<RetryPolicy>().is_err());
+        assert!("nope:1".parse::<RetryPolicy>().is_err());
+    }
+}

@@ -20,11 +20,13 @@
 mod clock;
 mod collectives;
 mod costmodel;
+pub mod fault;
 mod topology;
 mod transport;
 
 pub use clock::VirtualClock;
 pub use collectives::{global_min, Collectives};
 pub use costmodel::CostModel;
+pub use fault::{CrashSite, FaultAction, FaultPlan, FaultSpec, RetryPolicy};
 pub use topology::Topology;
 pub use transport::{Endpoint, Network, TrafficStats, Wire};

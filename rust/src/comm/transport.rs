@@ -25,11 +25,40 @@
 //! builds can model-check the blocking-recv park/notify handoff (and the
 //! Miri/TSan lanes check plain safe code instead of std's lock-free
 //! internals).
+//!
+//! ## Fault hardening (ISSUE-9)
+//!
+//! With [`arm_recovery`](Endpoint::arm_recovery) the endpoint consults a
+//! seeded [`FaultPlan`] on every cross-rank send and survives its
+//! verdicts end to end:
+//!
+//! * every outgoing message carries a per-destination **sequence
+//!   number**; receivers keep a per-source seen-set and suppress
+//!   duplicates (acking them again — the first ack may have raced a
+//!   retransmission);
+//! * dropped/delayed messages are **held** sender-side and retransmitted
+//!   with exponential backoff when the scheduler fires the endpoint's
+//!   virtual-time retry timer ([`armed_due`](Endpoint::armed_due) /
+//!   [`fire_earliest`](Endpoint::fire_earliest)) — timers fire only when
+//!   the system is otherwise idle, the discrete-event reading of a
+//!   timeout;
+//! * delivered copies are **acked** (payload-less envelopes that never
+//!   touch the stash, the clock, or the traffic counters), clearing the
+//!   held entry; a retry budget exhausted raises a delivery failure the
+//!   worker turns into a panic (recoverable by the batch layer).
+//!
+//! Everything above is *host-only* machinery: retransmissions reuse the
+//! original virtual arrival stamp and charge no send cost, so the
+//! canonical observables of a faulted run are bitwise those of the
+//! fault-free run — the ISSUE-9 headline invariant. With recovery
+//! unarmed (every pre-existing caller), behavior is byte-for-byte the
+//! old transport.
 
 use crate::util::sync::channel::{channel, Receiver, Sender};
 
 use super::clock::VirtualClock;
 use super::costmodel::CostModel;
+use super::fault::{FaultAction, FaultPlan, RetryPolicy};
 
 /// Payloads must report their wire size for the cost model.
 pub trait Wire: Clone + Send + 'static {
@@ -85,11 +114,53 @@ impl<T: Wire> Wire for Option<T> {
     }
 }
 
+#[derive(Clone)]
 struct Envelope<T> {
     src: usize,
     tag: u64,
     arrival: f64,
-    payload: T,
+    /// Per-(src, dst) sequence number (0 while recovery is unarmed).
+    /// For an ack envelope this is the sequence being acknowledged.
+    seq: u64,
+    /// Receiver must reply with an ack (set only on retransmitted
+    /// copies of held messages).
+    wants_ack: bool,
+    /// `None` marks an ack: pure recovery-control traffic that never
+    /// reaches the stash, the clock, or the traffic counters.
+    payload: Option<T>,
+}
+
+/// A sent message the fault plan refused to deliver, held for
+/// virtual-time retransmission until the receiver's ack clears it.
+struct HeldMessage<T> {
+    dst: usize,
+    env: Envelope<T>,
+    /// Virtual due-time of the next retransmission (orders firing; fires
+    /// happen only at system idle, so this is not a latency floor).
+    due: f64,
+    /// Retransmissions fired so far.
+    attempt: u32,
+    /// Planned in-flight losses still ahead (the fault plan's
+    /// `extra_drops` bound): a fire burns one instead of delivering.
+    drops_left: u32,
+}
+
+/// Per-endpoint recovery state: armed only under fault injection, so
+/// the zero-fault hot path carries a single `Option` check.
+struct Recovery<T> {
+    plan: FaultPlan,
+    retry: RetryPolicy,
+    /// Next sequence number per destination rank.
+    next_seq: Vec<u64>,
+    /// Sorted sequence numbers already delivered, per source rank
+    /// (`Vec` + binary search: lint-clean, and message counts per peer
+    /// are protocol-bounded).
+    seen: Vec<Vec<u64>>,
+    unacked: Vec<HeldMessage<T>>,
+    faults_injected: u64,
+    retries_sent: u64,
+    /// Set when a held message exhausts its retry budget: `(dst, tag)`.
+    failed: Option<(usize, u64)>,
 }
 
 /// Cumulative traffic counters for one endpoint.
@@ -123,6 +194,9 @@ pub struct Endpoint<T> {
     /// invariant — see `coordinator::batch`). Protocol-level addressing
     /// (`send`/`recv` destinations, `rank()`, `p()`) stays job-local.
     rank_base: usize,
+    /// Fault-injection + ack/retry state (ISSUE-9); `None` — the
+    /// default — is the untouched zero-fault transport.
+    recovery: Option<Recovery<T>>,
     /// This rank's simulated clock (advanced by sends/receives/compute).
     pub clock: VirtualClock,
     /// The cost model pricing every send, receive, and compute call.
@@ -156,6 +230,7 @@ impl Network {
                 stash: Vec::new(),
                 wake_log: None,
                 rank_base: 0,
+                recovery: None,
                 clock: VirtualClock::new(),
                 model,
                 traffic: TrafficStats::default(),
@@ -194,6 +269,11 @@ impl<T: Wire> Endpoint<T> {
     /// Send `payload` to `dst` under `tag`. Sender pays overhead + β·m of
     /// virtual time; the message is stamped to arrive `latency` later.
     /// Self-sends are allowed (loopback, no network cost).
+    ///
+    /// Under an armed fault plan the canonical accounting (clock, traffic,
+    /// arrival stamp) is computed *before* the adversary acts, so a
+    /// dropped/delayed message, once recovered, is observationally the
+    /// message that was never faulted.
     pub fn send(&mut self, dst: usize, tag: u64, payload: T) {
         let bytes = payload.nbytes();
         let arrival = if dst == self.rank {
@@ -205,23 +285,104 @@ impl<T: Wire> Endpoint<T> {
         };
         self.traffic.msgs_sent += 1;
         self.traffic.bytes_sent += bytes as u64;
-        if dst != self.rank {
-            if let Some(log) = &mut self.wake_log {
-                log.push(self.rank_base + dst);
-            }
-        }
-        let env = Envelope {
+        let mut env = Envelope {
             src: self.rank,
             tag,
             arrival,
-            payload,
+            seq: 0,
+            wants_ack: false,
+            payload: Some(payload),
         };
         if dst == self.rank {
             self.stash.push(env);
-        } else {
-            // Receiver thread may have exited after its protocol finished;
-            // a dropped receiver is then expected, not an error.
-            let _ = self.senders[dst].send(env);
+            return;
+        }
+        // The adversary's verdict (Deliver unless recovery is armed).
+        let (action, drops) = match &mut self.recovery {
+            None => (FaultAction::Deliver, 0),
+            Some(rec) => {
+                env.seq = rec.next_seq[dst];
+                rec.next_seq[dst] += 1;
+                let action = rec.plan.action(self.rank, dst, tag);
+                if action != FaultAction::Deliver {
+                    rec.faults_injected += 1;
+                }
+                let drops = match action {
+                    FaultAction::Drop => rec.plan.extra_drops(self.rank, dst, tag),
+                    _ => 0,
+                };
+                (action, drops)
+            }
+        };
+        match action {
+            FaultAction::Deliver => self.deliver(dst, env),
+            FaultAction::Duplicate => {
+                // Two copies, one sequence number: the receiver's dedup
+                // must make this indistinguishable from one delivery.
+                self.deliver(dst, env.clone());
+                self.deliver(dst, env);
+            }
+            FaultAction::Drop | FaultAction::Delay => {
+                // Held sender-side; a retry-timer fire retransmits it
+                // with the ORIGINAL arrival stamp (and burns `drops`
+                // planned losses first, for Drop). Receiver must ack.
+                env.wants_ack = true;
+                let due = self.clock.now();
+                let rec = self.recovery.as_mut().expect("faulted send without recovery");
+                let due = due + rec.retry.timeout;
+                rec.unacked.push(HeldMessage { dst, env, due, attempt: 0, drops_left: drops });
+            }
+        }
+    }
+
+    /// Put one envelope on the wire to `dst` (≠ self), logging the wake.
+    fn deliver(&mut self, dst: usize, env: Envelope<T>) {
+        if let Some(log) = &mut self.wake_log {
+            log.push(self.rank_base + dst);
+        }
+        // Receiver thread may have exited after its protocol finished;
+        // a dropped receiver is then expected, not an error.
+        let _ = self.senders[dst].send(env);
+    }
+
+    /// Accept one envelope off the host channel: recovery-control
+    /// processing (ack handling, duplicate suppression, ack replies)
+    /// before anything reaches the stash. With recovery unarmed this is
+    /// a plain stash push.
+    fn admit(&mut self, env: Envelope<T>) {
+        let Some(rec) = &mut self.recovery else {
+            self.stash.push(env);
+            return;
+        };
+        if env.payload.is_none() {
+            // An ack from `env.src` for our held seq: clear the entry.
+            rec.unacked.retain(|h| !(h.dst == env.src && h.env.seq == env.seq));
+            return;
+        }
+        let mut duplicate = false;
+        if env.src != self.rank {
+            let seen = &mut rec.seen[env.src];
+            match seen.binary_search(&env.seq) {
+                Ok(_) => duplicate = true,
+                Err(at) => seen.insert(at, env.seq),
+            }
+        }
+        // Ack every wants_ack copy, duplicates included: an earlier ack
+        // may have crossed a retransmission in flight, and acking is
+        // idempotent (clearing an already-cleared entry is a no-op).
+        if env.wants_ack {
+            let ack = Envelope {
+                src: self.rank,
+                tag: 0,
+                arrival: 0.0,
+                seq: env.seq,
+                wants_ack: false,
+                payload: None,
+            };
+            self.deliver(env.src, ack);
+        }
+        if !duplicate {
+            self.stash.push(env);
         }
     }
 
@@ -243,22 +404,19 @@ impl<T: Wire> Endpoint<T> {
         self.clock.observe(env.arrival);
         self.clock.advance(self.model.recv_overhead);
         self.traffic.msgs_recv += 1;
-        env.payload
+        env.payload.expect("acks never reach the stash")
     }
 
     fn take_matching(&mut self, pred: impl Fn(&Envelope<T>) -> bool) -> Envelope<T> {
-        if let Some(pos) = self.stash.iter().position(&pred) {
-            return self.stash.remove(pos);
-        }
         loop {
+            if let Some(pos) = self.stash.iter().position(&pred) {
+                return self.stash.remove(pos);
+            }
             let env = self
                 .receiver
                 .recv()
                 .expect("peer endpoints dropped while a recv was pending");
-            if pred(&env) {
-                return env;
-            }
-            self.stash.push(env);
+            self.admit(env);
         }
     }
 
@@ -271,7 +429,7 @@ impl<T: Wire> Endpoint<T> {
     /// [`recv`]: Endpoint::recv
     pub fn try_recv(&mut self, src: usize, tag: u64) -> Option<T> {
         while let Ok(env) = self.receiver.try_recv() {
-            self.stash.push(env);
+            self.admit(env);
         }
         let pos = self.stash.iter().position(|e| e.src == src && e.tag == tag)?;
         let env = self.stash.remove(pos);
@@ -284,11 +442,17 @@ impl<T: Wire> Endpoint<T> {
     /// driver run the same poll loop as the event executor: poll, and on
     /// `Pending` park here instead of returning to a scheduler.
     pub fn park_until_message(&mut self) {
-        let env = self
-            .receiver
-            .recv()
-            .expect("peer endpoints dropped while a task was parked");
-        self.stash.push(env);
+        let before = self.stash.len();
+        loop {
+            let env = self
+                .receiver
+                .recv()
+                .expect("peer endpoints dropped while a task was parked");
+            self.admit(env);
+            if self.stash.len() > before {
+                return;
+            }
+        }
     }
 
     /// Start recording the destination rank of every outgoing message so
@@ -319,6 +483,103 @@ impl<T: Wire> Endpoint<T> {
     /// Account local compute over `cells` condensed cells.
     pub fn compute(&mut self, cells: usize) {
         self.clock.advance(self.model.compute_cost(cells));
+    }
+
+    // ---- fault injection + ack/retry recovery (ISSUE-9) ----
+
+    /// Arm fault injection and the ack/retry recovery protocol. Every
+    /// subsequent cross-rank send consults `plan`; held messages
+    /// retransmit per `retry` when the scheduler fires this endpoint's
+    /// timer. Called once per rank before the protocol starts (workers
+    /// arm in `RankTask::new`); unarmed endpoints are the byte-for-byte
+    /// old transport.
+    pub fn arm_recovery(&mut self, plan: FaultPlan, retry: RetryPolicy) {
+        self.recovery = Some(Recovery {
+            plan,
+            retry,
+            next_seq: vec![0; self.p],
+            seen: vec![Vec::new(); self.p],
+            unacked: Vec::new(),
+            faults_injected: 0,
+            retries_sent: 0,
+            failed: None,
+        });
+    }
+
+    /// Earliest virtual due-time among held (unacked) messages, if any:
+    /// the scheduler's "armed timer" for this endpoint. `None` when
+    /// recovery is unarmed or nothing is held.
+    pub fn armed_due(&self) -> Option<f64> {
+        let rec = self.recovery.as_ref()?;
+        rec.unacked.iter().map(|h| h.due).min_by(|a, b| a.total_cmp(b))
+    }
+
+    /// Fire the earliest-due retry timer: retransmit that held message
+    /// (or burn one of its planned in-flight losses) with exponential
+    /// backoff; on budget exhaustion flag a delivery failure and wake
+    /// ourselves so the next poll can surface it. No-op without a held
+    /// message — schedulers may call this opportunistically.
+    pub fn fire_earliest(&mut self) {
+        let Some(rec) = &mut self.recovery else { return };
+        let at = match (0..rec.unacked.len())
+            .min_by(|&a, &b| rec.unacked[a].due.total_cmp(&rec.unacked[b].due))
+        {
+            Some(at) => at,
+            None => return,
+        };
+        let held = &mut rec.unacked[at];
+        if held.attempt >= rec.retry.max {
+            rec.failed = Some((held.dst, held.env.tag));
+            rec.unacked.remove(at);
+            // Wake ourselves: the failure is raised from the task's own
+            // next poll, inside the batch layer's catch boundary.
+            let me = self.rank_base + self.rank;
+            if let Some(log) = &mut self.wake_log {
+                log.push(me);
+            }
+            return;
+        }
+        held.attempt += 1;
+        rec.retries_sent += 1;
+        held.due += rec.retry.timeout * f64::from(1u32 << held.attempt.min(20));
+        if held.drops_left > 0 {
+            held.drops_left -= 1; // this retransmission is lost in flight too
+            return;
+        }
+        let (dst, env) = (held.dst, held.env.clone());
+        self.deliver(dst, env);
+    }
+
+    /// True while held messages await acks — a finished worker must keep
+    /// polling (not complete) until this clears, or its held messages
+    /// would be lost with the endpoint.
+    pub fn recovery_busy(&self) -> bool {
+        self.recovery.as_ref().is_some_and(|rec| !rec.unacked.is_empty())
+    }
+
+    /// Drain whatever reached the host channel (processing acks and
+    /// dedup) without receiving anything: lets a worker waiting only on
+    /// acks make progress.
+    pub fn pump_recovery(&mut self) {
+        while let Ok(env) = self.receiver.try_recv() {
+            self.admit(env);
+        }
+    }
+
+    /// Take the pending delivery failure `(dst, tag)`, if a held message
+    /// exhausted its retry budget.
+    pub fn take_delivery_failure(&mut self) -> Option<(usize, u64)> {
+        self.recovery.as_mut().and_then(|rec| rec.failed.take())
+    }
+
+    /// Cross-rank sends the fault plan tampered with (host-side tally).
+    pub fn faults_injected(&self) -> u64 {
+        self.recovery.as_ref().map_or(0, |rec| rec.faults_injected)
+    }
+
+    /// Retry-timer retransmissions fired (host-side tally).
+    pub fn retries_sent(&self) -> u64 {
+        self.recovery.as_ref().map_or(0, |rec| rec.retries_sent)
     }
 }
 
@@ -488,6 +749,130 @@ mod tests {
             assert_eq!(b.recv(0, 7), 42);
             t.join().unwrap();
         });
+    }
+
+    use super::super::fault::FaultSpec;
+
+    /// First tag whose (0 → 1) verdict under `plan` is `action`.
+    fn tag_with(plan: &FaultPlan, action: FaultAction) -> u64 {
+        (0..10_000)
+            .find(|&t| plan.action(0, 1, t) == action)
+            .expect("verdict windows are ~8% — a hit exists well below 10k tags")
+    }
+
+    #[test]
+    fn dropped_message_recovers_with_original_observables() {
+        let plan = FaultPlan::new(11, "drop".parse().unwrap());
+        let model = CostModel::nehalem_cluster();
+        let mk = || {
+            let mut eps = Network::with_ranks::<u32>(2, model);
+            let b = eps.pop().unwrap();
+            let a = eps.pop().unwrap();
+            (a, b)
+        };
+        let (mut fa, mut fb) = mk(); // faulted pair
+        let (mut ca, mut cb) = mk(); // fault-free control
+        fa.arm_recovery(plan, RetryPolicy::default());
+        fb.arm_recovery(plan, RetryPolicy::default());
+        let tag = tag_with(&plan, FaultAction::Drop);
+        fa.send(1, tag, 77);
+        ca.send(1, tag, 77);
+        assert_eq!(fb.try_recv(0, tag), None, "the wire ate it");
+        assert!(fa.recovery_busy());
+        assert_eq!(fa.faults_injected(), 1);
+        // Fire retries until the copy lands (≤ 1 planned extra loss).
+        let mut fired = 0u64;
+        while fb.try_recv(0, tag).is_none() {
+            assert!(fa.armed_due().is_some(), "held message must arm a timer");
+            fa.fire_earliest();
+            fired += 1;
+            assert!(fired <= 2, "extra_drops ≤ 1 bounds recovery at two fires");
+        }
+        assert_eq!(fa.retries_sent(), fired);
+        // The receiver acked; pumping clears the held entry.
+        fa.pump_recovery();
+        assert!(!fa.recovery_busy());
+        assert_eq!(fa.armed_due(), None);
+        // Canonical observables bitwise equal to the fault-free twin.
+        let _ = cb.try_recv(0, tag).unwrap();
+        assert_eq!(fa.clock.now(), ca.clock.now(), "sender clock");
+        assert_eq!(fb.clock.now(), cb.clock.now(), "receiver clock (original arrival)");
+        assert_eq!(fa.traffic, ca.traffic, "sender traffic");
+        assert_eq!(fb.traffic, cb.traffic, "receiver traffic");
+    }
+
+    #[test]
+    fn duplicate_is_suppressed_by_seq_dedup() {
+        let plan = FaultPlan::new(5, "dup".parse().unwrap());
+        let mut eps = Network::with_ranks::<u32>(2, CostModel::zero_comm());
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.arm_recovery(plan, RetryPolicy::default());
+        b.arm_recovery(plan, RetryPolicy::default());
+        let tag = tag_with(&plan, FaultAction::Duplicate);
+        a.send(1, tag, 9);
+        assert_eq!(a.faults_injected(), 1);
+        assert!(!a.recovery_busy(), "duplicates are not held");
+        assert_eq!(b.try_recv(0, tag), Some(9));
+        assert_eq!(b.try_recv(0, tag), None, "second copy suppressed");
+        assert_eq!(b.traffic.msgs_recv, 1, "exactly-once per (src, tag)");
+    }
+
+    #[test]
+    fn delayed_message_waits_for_the_timer() {
+        let plan = FaultPlan::new(3, "delay".parse().unwrap());
+        let mut eps = Network::with_ranks::<u32>(2, CostModel::nehalem_cluster());
+        let mut b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.arm_recovery(plan, RetryPolicy::default());
+        b.arm_recovery(plan, RetryPolicy::default());
+        let tag = tag_with(&plan, FaultAction::Delay);
+        a.send(1, tag, 4);
+        let stamped = a.clock.now(); // arrival stamp is ≥ this − ε
+        assert_eq!(b.try_recv(0, tag), None);
+        a.fire_earliest(); // delays have no extra losses: one fire lands it
+        assert_eq!(b.try_recv(0, tag), Some(4));
+        assert!(b.clock.now() >= stamped, "original virtual arrival preserved");
+    }
+
+    #[test]
+    fn exhausted_retry_budget_raises_delivery_failure() {
+        let plan = FaultPlan::new(11, "drop".parse().unwrap());
+        let mut eps = Network::with_ranks::<u32>(2, CostModel::zero_comm());
+        let _b = eps.pop().unwrap();
+        let mut a = eps.pop().unwrap();
+        a.arm_recovery(plan, "max:0".parse().unwrap());
+        a.enable_wake_log();
+        let tag = tag_with(&plan, FaultAction::Drop);
+        a.send(1, tag, 1);
+        assert!(a.take_delivery_failure().is_none());
+        a.fire_earliest(); // budget 0: immediately exhausted
+        assert_eq!(a.take_delivery_failure(), Some((1, tag)));
+        assert!(a.take_delivery_failure().is_none(), "taken once");
+        assert!(!a.recovery_busy(), "failed entry dropped");
+        assert_eq!(a.take_wakes(), vec![0], "self-wake so the poll can panic");
+    }
+
+    #[test]
+    fn off_spec_recovery_is_observably_inert() {
+        // Armed recovery with every class off: seqs flow, nothing else.
+        let plan = FaultPlan::new(1, FaultSpec::default());
+        let model = CostModel::nehalem_cluster();
+        let run = |armed: bool| {
+            let mut eps = Network::with_ranks::<u32>(2, model);
+            let mut b = eps.pop().unwrap();
+            let mut a = eps.pop().unwrap();
+            if armed {
+                a.arm_recovery(plan, RetryPolicy::default());
+                b.arm_recovery(plan, RetryPolicy::default());
+            }
+            for t in 0..16 {
+                a.send(1, t, t as u32);
+            }
+            let got: Vec<_> = (0..16).map(|t| b.try_recv(0, t).unwrap()).collect();
+            (got, a.clock.now(), b.clock.now(), a.traffic, b.traffic)
+        };
+        assert_eq!(run(true), run(false));
     }
 
     #[test]

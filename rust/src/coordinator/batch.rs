@@ -49,13 +49,14 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 
-use crate::comm::Network;
+use crate::comm::{CostModel, Network};
+use crate::coordinator::checkpoint::CheckpointStore;
 use crate::coordinator::costmodel_host::HostOp;
 use crate::coordinator::protocol::ProtoMsg;
 use crate::coordinator::sched::{self, PoolTask, SchedCounters};
 use crate::coordinator::source::SharedBuild;
 use crate::coordinator::task::{Poll, RankTask};
-use crate::coordinator::worker::WorkerOutput;
+use crate::coordinator::worker::{WorkerCtx, WorkerOutput};
 use crate::coordinator::{assemble_run, ClusterConfig, ClusterRun, DistSource, Runtime};
 use crate::linkage::Scheme;
 use crate::matrix::{CondensedMatrix, StatePool};
@@ -103,6 +104,49 @@ impl std::str::FromStr for BatchShape {
     }
 }
 
+/// What the batch does when a rank of a job dies mid-run (an injected
+/// crash, or any worker panic): give up on that job, or respawn it —
+/// from its last complete checkpoint wave when `--checkpoint every:K`
+/// recorded one, from scratch otherwise (ISSUE-9 tentpole c).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum OnFailure {
+    /// The job's slot comes back `Err`; every other job completes
+    /// normally (the pre-ISSUE-9 behaviour).
+    #[default]
+    Fail,
+    /// Restart the failed job up to K times before declaring it failed.
+    /// Restarted attempts run with the crash fault disarmed
+    /// (crash-once) but message faults still armed, so the replay
+    /// exercises the same recovery paths — and, by the headline
+    /// invariant, lands on the bitwise-identical dendrogram.
+    Retry(usize),
+}
+
+impl std::str::FromStr for OnFailure {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        if s == "fail" {
+            return Ok(Self::Fail);
+        }
+        if let Some(k) = s.strip_prefix("retry:") {
+            let k: usize =
+                k.parse().map_err(|e| anyhow::anyhow!("bad retry count {k:?}: {e}"))?;
+            anyhow::ensure!(k >= 1, "retry needs at least 1 attempt");
+            return Ok(Self::Retry(k));
+        }
+        anyhow::bail!("unknown on-failure policy {s:?} (fail|retry:K)")
+    }
+}
+
+impl std::fmt::Display for OnFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            OnFailure::Fail => write!(f, "fail"),
+            OnFailure::Retry(k) => write!(f, "retry:{k}"),
+        }
+    }
+}
+
 /// One queued job: a solo-equivalent configuration over a registered
 /// dataset. The config's own `runtime` field is ignored — the batch's
 /// scheduler drives every job.
@@ -133,6 +177,7 @@ struct Job {
 pub struct RunBatch {
     runtime: Runtime,
     max_inflight: usize,
+    on_failure: OnFailure,
     datasets: Vec<DistSource>,
     jobs: Vec<Job>,
 }
@@ -157,7 +202,13 @@ impl RunBatch {
     /// cannot interleave jobs (each rank owns an OS thread) and is
     /// rejected by [`run`](RunBatch::run).
     pub fn new(runtime: Runtime) -> Self {
-        Self { runtime, max_inflight: 4, datasets: Vec::new(), jobs: Vec::new() }
+        Self {
+            runtime,
+            max_inflight: 4,
+            on_failure: OnFailure::Fail,
+            datasets: Vec::new(),
+            jobs: Vec::new(),
+        }
     }
 
     /// Cap on concurrently admitted jobs (default 4). Jobs beyond the
@@ -165,6 +216,15 @@ impl RunBatch {
     /// finished job's allocations — as earlier jobs complete.
     pub fn with_max_inflight(mut self, window: usize) -> Self {
         self.max_inflight = window.max(1);
+        self
+    }
+
+    /// Rank-death policy (`--on-failure fail|retry:K`, default fail).
+    /// Under [`OnFailure::Retry`] a dead job is respawned from its last
+    /// complete checkpoint wave (from scratch with `--checkpoint off`)
+    /// instead of surfacing `Err`.
+    pub fn with_on_failure(mut self, policy: OnFailure) -> Self {
+        self.on_failure = policy;
         self
     }
 
@@ -258,13 +318,36 @@ impl RunBatch {
             .iter()
             .enumerate()
             .map(|(index, job)| {
-                let p = job.cfg.effective_p(self.datasets[job.dataset.0].n());
+                let n = self.datasets[job.dataset.0].n();
+                let p = job.cfg.effective_p(n);
+                let retrying = self.on_failure != OnFailure::Fail;
+                let rebuild = retrying.then(|| {
+                    let mut ctx = job.cfg.worker_ctx(n, p);
+                    ctx.job = index;
+                    RebuildKit {
+                        ctx,
+                        cost_model: job.cfg.cost_model,
+                        source: dataset_arcs[job.dataset.0].clone(),
+                        shared: shared[job.dataset.0].clone(),
+                    }
+                });
+                let ckpts = (retrying && job.cfg.checkpoint.cadence().is_some())
+                    .then(|| Arc::new(CheckpointStore::new(p)));
+                let attempts = match self.on_failure {
+                    OnFailure::Fail => 0,
+                    OnFailure::Retry(k) => k,
+                };
                 let js = Arc::new(JobShared {
                     index,
                     base,
                     p,
                     remaining: AtomicUsize::new(p),
                     failed: Mutex::new(None),
+                    attempts: AtomicUsize::new(attempts),
+                    restarts: AtomicUsize::new(0),
+                    respawn: Mutex::new(RespawnState::default()),
+                    rebuild,
+                    ckpts,
                 });
                 base += p;
                 js
@@ -277,7 +360,8 @@ impl RunBatch {
         let mut tasks: Vec<BatchTask> = Vec::with_capacity(base);
         for (job, js) in self.jobs.iter().zip(&job_shared) {
             let n = self.datasets[job.dataset.0].n();
-            let ctx = job.cfg.worker_ctx(n, js.p);
+            let mut ctx = job.cfg.worker_ctx(n, js.p);
+            ctx.job = js.index;
             for mut ep in Network::with_ranks::<ProtoMsg>(js.p, job.cfg.cost_model) {
                 let local = ep.rank();
                 ep.set_rank_base(js.base);
@@ -285,11 +369,15 @@ impl RunBatch {
                 let mut inner = RankTask::new(ep, ctx.clone(), src);
                 inner.share_batch_state(Some(shared[job.dataset.0].clone()), Some(pool.clone()));
                 inner.enable_wake_log();
+                if let Some(ckpts) = &js.ckpts {
+                    inner.attach_checkpoints(ckpts.clone());
+                }
                 tasks.push(BatchTask {
                     inner: Some(inner),
                     job: js.clone(),
                     batch: batch_shared.clone(),
                     global_rank: js.base + local,
+                    acked_epoch: 0,
                     extra_wakes: Vec::new(),
                     result: None,
                 });
@@ -367,6 +455,10 @@ impl RunBatch {
             steals: ok.iter().map(|r| r.stats.steals).sum(),
             injected_wakes: ok.iter().map(|r| r.stats.injected_wakes).sum(),
             parks: ok.iter().map(|r| r.stats.parks).sum(),
+            faults_injected: ok.iter().map(|r| r.stats.faults_injected).sum(),
+            retries_sent: ok.iter().map(|r| r.stats.retries_sent).sum(),
+            restarts: ok.iter().map(|r| r.stats.restarts).sum(),
+            checkpoint_bytes: ok.iter().map(|r| r.stats.checkpoint_bytes).sum(),
             peak_shard_cells: ok.iter().map(|r| r.stats.peak_shard_cells).max().unwrap_or(0),
             jobs: self.jobs.len() as u64,
             matrix_builds: shared.iter().map(|s| s.builds()).sum(),
@@ -446,6 +538,48 @@ fn plock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
 /// point (diagnostic only — admission wakes are addressed by rank).
 const ADMIT_TAG: u64 = u64::MAX;
 
+/// Pseudo wake tag a rank reports while its job is mid-respawn: the old
+/// attempt's tasks are being dropped and fresh ones built, so the rank
+/// has nothing to poll but is not done (diagnostic only — respawn wakes
+/// are addressed by rank-range fanout).
+const RESPAWN_TAG: u64 = u64::MAX - 2;
+
+/// The respawn barrier one job's ranks rendezvous at after a rank dies
+/// under [`OnFailure::Retry`] (guarded by `JobShared::respawn`).
+///
+/// Protocol: the dying rank *arms* (epoch += 1, `arming`), fans a wake
+/// over the job's rank range, and every rank — including the dying one —
+/// *acks* the new epoch exactly once, dropping its stale `RankTask` (the
+/// dead attempt's in-flight envelopes die with the old per-job
+/// [`Network`]). The last acker rebuilds all p tasks from the
+/// [`RebuildKit`] — restored from the last complete checkpoint wave when
+/// one exists — and clears `arming`; each rank then picks its fresh task
+/// out of `fresh` on its next poll.
+#[derive(Default)]
+struct RespawnState {
+    /// Attempt number; bumped once per arm. Ranks compare their
+    /// `acked_epoch` against it to ack exactly once per respawn.
+    epoch: usize,
+    /// True from arm until the last ack rebuilds the attempt.
+    arming: bool,
+    /// Ranks that have acked `epoch` so far (p triggers the rebuild).
+    acked: usize,
+    /// The rebuilt attempt's tasks, indexed by local rank; each slot is
+    /// taken exactly once.
+    fresh: Vec<Option<RankTask>>,
+}
+
+/// Everything needed to rebuild a job's rank tasks for a retry attempt.
+/// Present only under [`OnFailure::Retry`].
+struct RebuildKit {
+    /// The job's worker context (with its job index stamped in). Retry
+    /// attempts run it with the crash disarmed — crash-once semantics.
+    ctx: WorkerCtx,
+    cost_model: CostModel,
+    source: Arc<DistSource>,
+    shared: Arc<SharedBuild>,
+}
+
 /// Per-job shared bookkeeping.
 struct JobShared {
     /// Queue position (admission order, result slot).
@@ -460,6 +594,18 @@ struct JobShared {
     /// First panic message of this job, if any — set once, read by the
     /// job's surviving ranks to cancel themselves.
     failed: Mutex<Option<String>>,
+    /// Respawn budget left (K under `retry:K`, 0 under `fail`); a dying
+    /// rank decrements it to claim a restart.
+    attempts: AtomicUsize,
+    /// Restarts actually performed (the `RunStats::restarts` counter).
+    restarts: AtomicUsize,
+    /// The respawn barrier (see [`RespawnState`]).
+    respawn: Mutex<RespawnState>,
+    /// Task-rebuild ingredients; `Some` iff the batch retries failures.
+    rebuild: Option<RebuildKit>,
+    /// Checkpoint store the job's ranks snapshot into; `Some` iff the
+    /// batch retries failures AND the job's cadence is on.
+    ckpts: Option<Arc<CheckpointStore>>,
 }
 
 /// Batch-wide shared bookkeeping.
@@ -474,13 +620,17 @@ struct BatchShared {
 /// admission gate, the per-job panic boundary, and the cancellation /
 /// admission wake fanout around the inner [`RankTask`].
 struct BatchTask {
-    /// The protocol task; `None` once completed, cancelled, or panicked.
+    /// The protocol task; `None` once completed, cancelled, panicked,
+    /// or dropped at a respawn barrier (see [`RespawnState`]).
     inner: Option<RankTask>,
     job: Arc<JobShared>,
     batch: Arc<BatchShared>,
     global_rank: usize,
+    /// Highest respawn epoch this rank has acked (0 = the initial
+    /// attempt; see [`RespawnState::epoch`]).
+    acked_epoch: usize,
     /// Wakes this wrapper injects beyond the inner task's sends:
-    /// admission fanout and cancellation fanout.
+    /// admission, cancellation, and respawn fanout.
     extra_wakes: Vec<usize>,
     result: Option<Result<WorkerOutput, String>>,
 }
@@ -499,6 +649,110 @@ impl BatchTask {
             }
         }
     }
+
+    /// A rank of this job just died: claim a restart if the batch
+    /// retries, the respawn budget allows, and every sibling is still
+    /// alive. The last condition is guaranteed for injected crashes —
+    /// the crash fires before the rank's iteration-I `LocalMin` send,
+    /// so no sibling can have passed iteration I's gather, let alone
+    /// finished — and guards the barrier against exotic late panics
+    /// (a completed rank would never ack, deadlocking the job).
+    fn try_arm_respawn(&mut self) -> bool {
+        if self.job.rebuild.is_none() {
+            return false;
+        }
+        if self.job.remaining.load(Ordering::SeqCst) != self.job.p {
+            return false;
+        }
+        if self
+            .job
+            .attempts
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |a| a.checked_sub(1))
+            .is_err()
+        {
+            return false;
+        }
+        {
+            let mut rs = plock(&self.job.respawn);
+            rs.epoch += 1;
+            rs.arming = true;
+            rs.acked = 0;
+            rs.fresh.clear();
+            rs.fresh.resize_with(self.job.p, || None);
+        }
+        // Fan a wake over the job's rank range (self included) so every
+        // sibling re-polls and acks the new epoch.
+        self.extra_wakes.extend(self.job.base..self.job.base + self.job.p);
+        true
+    }
+
+    /// Rendezvous at the respawn barrier. Returns `Some(Pending)` while
+    /// this job is mid-respawn (the caller must return it), `None` when
+    /// the rank holds a live task and normal polling should proceed.
+    fn join_respawn(&mut self) -> Option<Poll> {
+        self.job.rebuild.as_ref()?;
+        let local = self.global_rank - self.job.base;
+        let mut rs = plock(&self.job.respawn);
+        if !rs.arming {
+            if self.inner.is_none() {
+                // A respawn completed since we last ran: pick up the
+                // fresh attempt's task for this rank.
+                self.inner = rs.fresh.get_mut(local).and_then(Option::take);
+            }
+            return None;
+        }
+        if self.acked_epoch < rs.epoch {
+            self.acked_epoch = rs.epoch;
+            // Drop the dead attempt's task — its in-flight envelopes
+            // die with the old per-job Network, and its partially-run
+            // state is never pooled.
+            self.inner = None;
+            rs.acked += 1;
+            if rs.acked == self.job.p {
+                let kit = self.job.rebuild.as_ref().expect("checked above");
+                rs.fresh = rebuild_tasks(kit, &self.job);
+                rs.arming = false;
+                self.job.restarts.fetch_add(1, Ordering::SeqCst);
+                drop(rs);
+                self.extra_wakes.extend(self.job.base..self.job.base + self.job.p);
+                return Some(Poll::Pending { src: self.global_rank, tag: RESPAWN_TAG });
+            }
+        }
+        Some(Poll::Pending { src: self.global_rank, tag: RESPAWN_TAG })
+    }
+}
+
+/// Build a retry attempt's rank tasks: a fresh per-job [`Network`]
+/// (same disjoint rank-id base), the crash disarmed (crash-once),
+/// message faults still armed, and — when a complete checkpoint wave
+/// exists — every rank restored from it so the replay starts at the top
+/// of that wave instead of from scratch.
+fn rebuild_tasks(kit: &RebuildKit, job: &JobShared) -> Vec<Option<RankTask>> {
+    let restore_wave = job.ckpts.as_ref().and_then(|c| c.latest_complete_wave());
+    let mut ctx = kit.ctx.clone();
+    ctx.faults = ctx.faults.as_ref().map(|p| p.disarm_crash());
+    let mut fresh = Vec::with_capacity(job.p);
+    for mut ep in Network::with_ranks::<ProtoMsg>(job.p, kit.cost_model) {
+        let local = ep.rank();
+        ep.set_rank_base(job.base);
+        let src = (local == 0).then(|| kit.source.clone());
+        let mut task = RankTask::new(ep, ctx.clone(), src);
+        // Shared build yes (a from-scratch restart re-reads the cached
+        // cells); state pool no — respawned ranks allocate fresh, and
+        // the pool counters stay a clean-job-boundary story.
+        task.share_batch_state(Some(kit.shared.clone()), None);
+        task.enable_wake_log();
+        if let Some(ckpts) = &job.ckpts {
+            task.attach_checkpoints(ckpts.clone());
+            if let Some(wave) = restore_wave {
+                task.restore_from(
+                    ckpts.get(local, wave).expect("complete wave has every rank"),
+                );
+            }
+        }
+        fresh.push(Some(task));
+    }
+    fresh
 }
 
 impl PoolTask for BatchTask {
@@ -515,13 +769,16 @@ impl PoolTask for BatchTask {
             return Poll::Pending { src: self.global_rank, tag: ADMIT_TAG };
         }
         if let Some(msg) = plock(&self.job.failed).clone() {
-            // A sibling rank panicked: cancel. The partially-run state
-            // is dropped, NOT pooled — only clean job-boundary state is
-            // checked in.
+            // A sibling rank panicked terminally (no retry budget):
+            // cancel. The partially-run state is dropped, NOT pooled —
+            // only clean job-boundary state is checked in.
             self.inner = None;
             self.result = Some(Err(msg));
             self.complete_one();
             return Poll::Complete;
+        }
+        if let Some(hold) = self.join_respawn() {
+            return hold;
         }
         let inner = self.inner.as_mut().expect("live batch task holds its rank task");
         match catch_unwind(AssertUnwindSafe(|| inner.poll())) {
@@ -545,6 +802,15 @@ impl PoolTask for BatchTask {
                     .map(|s| s.to_string())
                     .or_else(|| payload.downcast_ref::<String>().cloned())
                     .unwrap_or_else(|| "non-string panic payload".into());
+                if self.try_arm_respawn() {
+                    // This rank claimed a restart: the job respawns
+                    // instead of failing. Drop the dead task and join
+                    // the barrier we just armed.
+                    self.inner = None;
+                    return self
+                        .join_respawn()
+                        .unwrap_or(Poll::Pending { src: self.global_rank, tag: RESPAWN_TAG });
+                }
                 let first = {
                     let mut failed = plock(&self.job.failed);
                     failed.get_or_insert_with(|| msg.clone()).clone()
@@ -574,12 +840,27 @@ impl PoolTask for BatchTask {
         out.append(&mut self.extra_wakes);
     }
 
+    fn armed_timer(&self) -> Option<f64> {
+        self.inner.as_ref().and_then(|inner| inner.armed_timer())
+    }
+
+    fn fire_timer(&mut self) {
+        if let Some(inner) = self.inner.as_mut() {
+            inner.fire_timer();
+        }
+    }
+
     fn finish(mut self, counters: SchedCounters) -> (usize, Result<WorkerOutput, String>) {
         let mut res = self.result.take().expect("Complete poll leaves a result");
         if let Ok(out) = &mut res {
             out.steals = counters.steals;
             out.injected_wakes = counters.injected_wakes;
             out.parks = counters.parks;
+            if self.global_rank == self.job.base {
+                // Restarts are a job-level count; charge them to the
+                // job's first rank so the per-job sum is exact.
+                out.restarts = self.job.restarts.load(Ordering::SeqCst) as u64;
+            }
         }
         (self.job.index, res)
     }
@@ -605,6 +886,16 @@ mod tests {
         assert!("bootstrap:0".parse::<BatchShape>().is_err());
         assert!("repeat:x".parse::<BatchShape>().is_err());
         assert!("sweeps".parse::<BatchShape>().is_err());
+    }
+
+    #[test]
+    fn on_failure_parses_and_displays() {
+        assert_eq!("fail".parse::<OnFailure>().unwrap(), OnFailure::Fail);
+        assert_eq!("retry:3".parse::<OnFailure>().unwrap(), OnFailure::Retry(3));
+        assert!("retry:0".parse::<OnFailure>().is_err());
+        assert!("never".parse::<OnFailure>().is_err());
+        assert_eq!(OnFailure::Fail.to_string(), "fail");
+        assert_eq!(OnFailure::Retry(2).to_string(), "retry:2");
     }
 
     #[test]

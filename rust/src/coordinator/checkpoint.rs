@@ -1,0 +1,250 @@
+//! Checkpoint/restart for the rank protocol (ISSUE-9 tentpole).
+//!
+//! Every rank cuts a [`RankSnapshot`] of its protocol state at a fixed
+//! iteration cadence ([`Checkpoint::Every`]); the per-job
+//! [`CheckpointStore`] collects them. When an injected crash kills a
+//! rank, the batch layer rolls the *whole job* back to the newest wave
+//! every rank completed ([`CheckpointStore::latest_complete_wave`]) and
+//! respawns fresh tasks restored from those snapshots
+//! (`RankTask::restore_from`).
+//!
+//! **Why a whole-wave rollback is consistent:** a rank enters iteration
+//! W's scan step only after fully absorbing every message of iterations
+//! `< W`, and every observable it carries at that point is a replicated
+//! deterministic function of merges `0..W` plus its own shard. So the
+//! set {every rank at the top of iteration W} is a consistent cut with
+//! *no* in-flight messages that matter: the respawned job runs on a
+//! fresh network, and anything a faster rank had already sent for
+//! iterations `≥ W` is re-sent bitwise-identically on replay (sends are
+//! deterministic, and fault verdicts are per-message hashes — see
+//! `comm::fault`). Snapshot waves are multiples of the cadence K, and a
+//! rank holds every multiple of K up to its own progress, so the
+//! min-over-ranks of per-rank newest waves is a wave *all* ranks hold.
+//!
+//! **Restore charges nothing.** The snapshot stores the virtual clock
+//! and traffic counters; restore assigns them back and rebuilds the
+//! shard index host-side without `compute` charges (the original build
+//! charge is inside the snapshotted clock). A restarted job's
+//! observables are therefore bitwise those of the uninterrupted run —
+//! the headline fault-equivalence invariant. The only trace is the
+//! host-side `checkpoint_bytes` / `restarts` counters.
+
+use std::str::FromStr;
+use std::sync::Mutex;
+
+use crate::comm::TrafficStats;
+use crate::dendrogram::Merge;
+use crate::metrics::PhaseBreakdown;
+
+/// Checkpoint cadence. Parsed from `--checkpoint` as `off` or `every:K`
+/// (snapshot at the top of every K-th iteration, K ≥ 1).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Checkpoint {
+    /// No snapshots: a crash recovery restarts the job from scratch.
+    #[default]
+    Off,
+    /// Snapshot every K iterations (waves K, 2K, ...).
+    Every(usize),
+}
+
+impl Checkpoint {
+    /// The cadence K, or `None` when checkpointing is off.
+    pub fn cadence(&self) -> Option<usize> {
+        match self {
+            Checkpoint::Off => None,
+            Checkpoint::Every(k) => Some(*k),
+        }
+    }
+}
+
+impl FromStr for Checkpoint {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        if s == "off" {
+            return Ok(Checkpoint::Off);
+        }
+        let k = s
+            .strip_prefix("every:")
+            .and_then(|k| k.parse::<usize>().ok())
+            .ok_or_else(|| anyhow::anyhow!("bad checkpoint spec {s:?} (off|every:K)"))?;
+        anyhow::ensure!(k >= 1, "checkpoint cadence must be >= 1");
+        Ok(Checkpoint::Every(k))
+    }
+}
+
+impl std::fmt::Display for Checkpoint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Checkpoint::Off => f.write_str("off"),
+            Checkpoint::Every(k) => write!(f, "every:{k}"),
+        }
+    }
+}
+
+/// One rank's protocol state at the top of iteration `wave` — everything
+/// `RankTask` needs to re-enter the scan step there. The per-iteration
+/// scratch (outbound batches, expected-sender flags, min-exchange
+/// accumulators) is deliberately absent: it is dead at an iteration
+/// boundary and is rebuilt empty on restore.
+#[derive(Clone, Debug)]
+pub struct RankSnapshot {
+    /// Iteration the snapshot resumes at (a multiple of the cadence).
+    pub wave: usize,
+    /// The shard's cell vector, retired `+inf` sentinels included.
+    pub cells: Vec<f32>,
+    /// Live-cell count — protocol state, not derivable from `cells`
+    /// (an input matrix may legitimately contain `+inf` live cells).
+    pub live: u64,
+    /// Replicated cluster sizes.
+    pub sizes: Vec<f32>,
+    /// Replicated liveness per cluster index.
+    pub alive: Vec<bool>,
+    /// Materialized merge list (rank 0 only; empty elsewhere).
+    pub merges: Vec<Merge>,
+    /// FNV-1a merge-digest state — resumed via `Fnv64::from_state`.
+    pub digest: u64,
+    /// Per-phase virtual-time breakdown so far.
+    pub phases: PhaseBreakdown,
+    /// Work counters so far (restored, not re-earned).
+    pub cells_scanned: u64,
+    /// LW cell updates applied so far.
+    pub cells_updated: u64,
+    /// Tree-maintenance writes so far.
+    pub index_ops: u64,
+    /// Batched repair waves so far.
+    pub idx_waves: u64,
+    /// Step-6a candidate visits so far.
+    pub alive_visited: u64,
+    /// Virtual-clock reading at the cut.
+    pub clock: f64,
+    /// Traffic counters at the cut.
+    pub traffic: TrafficStats,
+}
+
+impl RankSnapshot {
+    /// Serialized size a real system would write (closed form, counted
+    /// into the host-side `checkpoint_bytes` tally): f32 cells and
+    /// sizes, one liveness byte per cluster, 12 bytes per merge, plus a
+    /// fixed header for the scalars.
+    pub fn nbytes(&self) -> u64 {
+        64 + 4 * self.cells.len() as u64
+            + 4 * self.sizes.len() as u64
+            + self.alive.len() as u64
+            + 12 * self.merges.len() as u64
+    }
+}
+
+/// Per-job snapshot collector, shared by the job's `p` rank tasks.
+///
+/// Interior-mutexed so tasks on different pool threads can deposit
+/// concurrently; the lock is touched only at checkpoint waves and at
+/// restart, never on the protocol hot path.
+pub struct CheckpointStore {
+    /// `slots[rank]` = that rank's deposited `(wave, snapshot)` pairs.
+    slots: Mutex<Vec<Vec<(usize, RankSnapshot)>>>,
+}
+
+impl CheckpointStore {
+    /// An empty store for a `p`-rank job.
+    pub fn new(p: usize) -> Self {
+        Self { slots: Mutex::new(vec![Vec::new(); p]) }
+    }
+
+    /// Deposit `rank`'s snapshot, replacing any earlier deposit for the
+    /// same wave (a restarted job re-cuts the waves it replays through —
+    /// bitwise identically, but the replacement keeps the store tidy).
+    pub fn put(&self, rank: usize, snap: RankSnapshot) {
+        let mut slots = self.slots.lock().unwrap_or_else(|e| e.into_inner());
+        let slot = &mut slots[rank];
+        match slot.iter_mut().find(|(w, _)| *w == snap.wave) {
+            Some(entry) => entry.1 = snap,
+            None => slot.push((snap.wave, snap)),
+        }
+    }
+
+    /// Newest wave that *every* rank has deposited — the consistent cut
+    /// a restart rolls back to. `None` while any rank has no snapshot
+    /// yet (restart then means: from scratch).
+    pub fn latest_complete_wave(&self) -> Option<usize> {
+        let slots = self.slots.lock().unwrap_or_else(|e| e.into_inner());
+        slots
+            .iter()
+            .map(|slot| slot.iter().map(|(w, _)| *w).max())
+            .collect::<Option<Vec<_>>>()
+            .and_then(|maxes| maxes.into_iter().min())
+    }
+
+    /// Clone out `rank`'s snapshot for `wave`, if deposited.
+    pub fn get(&self, rank: usize, wave: usize) -> Option<RankSnapshot> {
+        let slots = self.slots.lock().unwrap_or_else(|e| e.into_inner());
+        slots[rank].iter().find(|(w, _)| *w == wave).map(|(_, s)| s.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(wave: usize, tag: f32) -> RankSnapshot {
+        RankSnapshot {
+            wave,
+            cells: vec![tag; 3],
+            live: 3,
+            sizes: vec![1.0; 4],
+            alive: vec![true; 4],
+            merges: Vec::new(),
+            digest: 0,
+            phases: PhaseBreakdown::default(),
+            cells_scanned: 0,
+            cells_updated: 0,
+            index_ops: 0,
+            idx_waves: 0,
+            alive_visited: 0,
+            clock: 0.0,
+            traffic: TrafficStats::default(),
+        }
+    }
+
+    #[test]
+    fn cadence_parses_and_displays() {
+        assert_eq!("off".parse::<Checkpoint>().unwrap(), Checkpoint::Off);
+        assert_eq!("every:5".parse::<Checkpoint>().unwrap(), Checkpoint::Every(5));
+        assert_eq!(Checkpoint::Every(5).to_string(), "every:5");
+        assert_eq!(Checkpoint::Off.to_string(), "off");
+        assert_eq!(Checkpoint::Every(3).cadence(), Some(3));
+        assert_eq!(Checkpoint::Off.cadence(), None);
+        assert!("every:0".parse::<Checkpoint>().is_err());
+        assert!("sometimes".parse::<Checkpoint>().is_err());
+    }
+
+    #[test]
+    fn complete_wave_is_min_over_rank_maxima() {
+        let store = CheckpointStore::new(2);
+        assert_eq!(store.latest_complete_wave(), None);
+        store.put(0, snap(4, 0.0));
+        assert_eq!(store.latest_complete_wave(), None, "rank 1 has nothing yet");
+        store.put(1, snap(4, 1.0));
+        assert_eq!(store.latest_complete_wave(), Some(4));
+        store.put(0, snap(8, 0.5));
+        // Rank 0 is a wave ahead; the consistent cut is still wave 4.
+        assert_eq!(store.latest_complete_wave(), Some(4));
+        store.put(1, snap(8, 1.5));
+        assert_eq!(store.latest_complete_wave(), Some(8));
+    }
+
+    #[test]
+    fn put_replaces_same_wave() {
+        let store = CheckpointStore::new(1);
+        store.put(0, snap(4, 1.0));
+        store.put(0, snap(4, 2.0));
+        assert_eq!(store.get(0, 4).unwrap().cells, vec![2.0; 3]);
+        assert!(store.get(0, 8).is_none());
+    }
+
+    #[test]
+    fn nbytes_closed_form() {
+        let s = snap(4, 0.0);
+        // 64 header + 3 cells * 4 + 4 sizes * 4 + 4 alive bytes.
+        assert_eq!(s.nbytes(), 64 + 12 + 16 + 4);
+    }
+}

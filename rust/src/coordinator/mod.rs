@@ -13,6 +13,7 @@
 //! bitwise identical either way (DESIGN.md §Runtime).
 
 pub mod batch;
+pub mod checkpoint;
 pub mod costmodel_host;
 pub mod protocol;
 pub mod sched;
@@ -20,14 +21,15 @@ pub mod source;
 pub mod task;
 pub mod worker;
 
-pub use batch::{BatchRun, BatchShape, DatasetId, RunBatch};
+pub use batch::{BatchRun, BatchShape, DatasetId, OnFailure, RunBatch};
+pub use checkpoint::{Checkpoint, CheckpointStore, RankSnapshot};
 pub use costmodel_host::HostCostModel;
 pub use sched::Runtime;
 pub use source::DistSource;
 
 use std::sync::Arc;
 
-use crate::comm::{Collectives, CostModel, Network};
+use crate::comm::{Collectives, CostModel, FaultPlan, Network, RetryPolicy};
 use crate::dendrogram::Dendrogram;
 use crate::linkage::Scheme;
 use crate::matrix::{CondensedMatrix, MaintenancePolicy, Partition, PartitionKind};
@@ -222,6 +224,16 @@ pub struct ClusterConfig {
     /// realized maintenance waves (`--cost-model host`; default
     /// canonical — the cross-substrate equivalence anchor).
     pub host_costs: HostCostModel,
+    /// Seeded fault adversary (`--faults` + `--fault-seed`; ISSUE-9).
+    /// `None` — the default — leaves the transport byte-for-byte
+    /// untouched. Requires an event-driven runtime: retry timers fire
+    /// at scheduler idle, which thread-per-rank cannot observe.
+    pub faults: Option<FaultPlan>,
+    /// Ack/retry knobs for the hardened transport (`--retry`; consulted
+    /// only when `faults` is armed).
+    pub retry: RetryPolicy,
+    /// Snapshot cadence for crash recovery (`--checkpoint`; default off).
+    pub checkpoint: Checkpoint,
 }
 
 impl ClusterConfig {
@@ -240,7 +252,31 @@ impl ClusterConfig {
             collectives: Collectives::Naive,
             runtime: Runtime::default(),
             host_costs: HostCostModel::default(),
+            faults: None,
+            retry: RetryPolicy::default(),
+            checkpoint: Checkpoint::default(),
         }
+    }
+
+    /// Arm the seeded fault adversary (`--faults` + `--fault-seed`).
+    /// The headline ISSUE-9 invariant: for any plan whose drops fit the
+    /// retry budget, every observable stays bitwise identical to the
+    /// fault-free run — recovery charges nothing canonical.
+    pub fn with_faults(mut self, plan: FaultPlan) -> Self {
+        self.faults = Some(plan);
+        self
+    }
+
+    /// Tune the hardened transport's ack/retry policy (`--retry`).
+    pub fn with_retry(mut self, r: RetryPolicy) -> Self {
+        self.retry = r;
+        self
+    }
+
+    /// Set the checkpoint cadence for crash recovery (`--checkpoint`).
+    pub fn with_checkpoint(mut self, c: Checkpoint) -> Self {
+        self.checkpoint = c;
+        self
     }
 
     /// Select the collective algorithm (naive fan-out or binomial tree).
@@ -336,6 +372,11 @@ impl ClusterConfig {
         let n = source.n();
         anyhow::ensure!(n >= 2, "need at least 2 items");
         anyhow::ensure!(self.p >= 1, "need at least 1 rank");
+        anyhow::ensure!(
+            !(self.faults.is_some() && self.runtime == Runtime::Threads),
+            "fault injection requires an event-driven runtime (event|event:N|steal:N): \
+             retry timers fire when the scheduler is idle, which thread-per-rank cannot observe"
+        );
         let p = self.effective_p(n);
 
         let timer = Timer::start();
@@ -369,6 +410,10 @@ impl ClusterConfig {
             walk: self.walk,
             collectives: self.collectives,
             host: self.host_costs,
+            faults: self.faults,
+            retry: self.retry,
+            checkpoint: self.checkpoint,
+            job: 0,
         }
     }
 }
@@ -417,6 +462,10 @@ pub(crate) fn assemble_run(
         steals: outputs.iter().map(|o| o.steals).sum(),
         injected_wakes: outputs.iter().map(|o| o.injected_wakes).sum(),
         parks: outputs.iter().map(|o| o.parks).sum(),
+        faults_injected: outputs.iter().map(|o| o.faults_injected).sum(),
+        retries_sent: outputs.iter().map(|o| o.retries_sent).sum(),
+        restarts: outputs.iter().map(|o| o.restarts).sum(),
+        checkpoint_bytes: outputs.iter().map(|o| o.checkpoint_bytes).sum(),
         peak_shard_cells: outputs.iter().map(|o| o.shard_cells).max().unwrap_or(0),
         jobs: 1,
         matrix_builds,

@@ -29,6 +29,13 @@ pub fn tag(iteration: usize, phase: Phase) -> u64 {
 /// Tag for the initial shard distribution (outside any iteration).
 pub const DIST_TAG: u64 = u64::MAX;
 
+/// Pseudo-tag a finished rank parks on while its hardened transport
+/// still holds unacked messages (ISSUE-9): the rank's protocol is done,
+/// but completing would drop the held envelopes, so it stays `Pending`
+/// on this tag until the recovery layer quiesces. Never sent on the
+/// wire — it only names the wait for scheduler diagnostics.
+pub const ACK_WAIT_TAG: u64 = u64::MAX - 1;
+
 /// All coordinator messages.
 #[derive(Clone, Debug, PartialEq)]
 pub enum ProtoMsg {
@@ -120,6 +127,7 @@ mod tests {
             for ph in [Phase::MinExchange, Phase::MergeAnnounce, Phase::Triples] {
                 assert!(seen.insert(tag(it, ph)));
                 assert_ne!(tag(it, ph), DIST_TAG);
+                assert_ne!(tag(it, ph), ACK_WAIT_TAG);
             }
         }
     }

@@ -237,9 +237,12 @@ fn run_threads(tasks: Vec<RankTask>) -> anyhow::Result<Vec<WorkerOutput>> {
 /// Run-to-next-block polling with precise wakeups: a task leaves the
 /// ready queue only when its poll returns `Pending`, and re-enters when a
 /// task in this loop sends it a message (the transport wake log). This
-/// loop owns every rank, so an empty ready queue with unfinished tasks is
-/// a protocol bug — reported immediately with every parked task's phase
-/// and awaited (source, tag); nothing can arrive later.
+/// loop owns every rank, so an empty ready queue with unfinished tasks
+/// means no *message* can arrive — under fault injection that is exactly
+/// when a virtual-time retry timer is due (ISSUE-9), so the earliest
+/// armed timer fires first; only with no timers armed is it a protocol
+/// bug, reported immediately with every parked task's phase and awaited
+/// (source, tag).
 ///
 /// Generic over [`PoolTask`] like the sharded pool, so the batch
 /// front-end can interleave many jobs' tasks through this exact loop
@@ -261,6 +264,36 @@ pub(crate) fn run_event<T: PoolTask>(tasks: Vec<T>) -> Vec<T::Out> {
         let slot = match ready.pop_front() {
             Some(s) => s,
             None => {
+                // Idle with unfinished tasks: fire the earliest armed
+                // virtual-time retry timer (lowest due, then lowest
+                // slot — fully deterministic) before declaring
+                // deadlock. A fire either retransmits a held message
+                // (waking its receiver), burns one planned in-flight
+                // loss, or raises a delivery failure (self-wake) — all
+                // bounded, so this cannot loop forever.
+                let earliest = (0..n).fold(None::<(f64, usize)>, |best, s| {
+                    match tasks[s].as_ref().and_then(|t| t.armed_timer()) {
+                        Some(due) => match best {
+                            Some((bd, _)) if bd <= due => best,
+                            _ => Some((due, s)),
+                        },
+                        None => best,
+                    }
+                });
+                if let Some((_, s)) = earliest {
+                    let task = tasks[s].as_mut().expect("armed timer implies a live task");
+                    task.fire_timer();
+                    task.drain_wakes_into(&mut wakes);
+                    for dst in wakes.drain(..) {
+                        if let Some(&w) = slot_of.get(&dst) {
+                            if !queued[w] && outputs[w].is_none() {
+                                queued[w] = true;
+                                ready.push_back(w);
+                            }
+                        }
+                    }
+                    continue;
+                }
                 let parked = (0..n)
                     .filter(|&s| outputs[s].is_none())
                     .map(|s| {
@@ -370,6 +403,20 @@ mod pool {
         fn finish(self, counters: SchedCounters) -> Self::Out;
         /// One-line description for the deadlock diagnostic.
         fn describe(&self) -> String;
+        /// Earliest virtual due-time of this task's armed retry timers
+        /// (ISSUE-9 fault recovery), `None` when no timer is armed. The
+        /// schedulers fire the globally earliest timer *only at
+        /// idleness* — the discrete-event reading of a timeout: a
+        /// retransmission is warranted exactly when nothing else can
+        /// make progress. Default: no timers (every pre-ISSUE-9 task).
+        fn armed_timer(&self) -> Option<f64> {
+            None
+        }
+        /// Fire this task's earliest armed timer (retransmit a held
+        /// message, or burn a planned loss). Wakes it produces are
+        /// drained through [`drain_wakes_into`](PoolTask::drain_wakes_into)
+        /// as usual. Default: no-op.
+        fn fire_timer(&mut self) {}
     }
 
     /// Host-schedule counters folded into a task's output on completion.
@@ -777,14 +824,83 @@ mod pool {
         }
     }
 
+    /// Fire the globally earliest armed retry timer (ISSUE-9), but only
+    /// at *system idleness*: every unfinished slot `PARKED`. That is the
+    /// discrete-event reading of a virtual-time timeout — a
+    /// retransmission is warranted exactly when no message can otherwise
+    /// arrive — and it paces retries so a held message cannot burn its
+    /// whole budget before its receiver gets a chance to ack. The
+    /// idleness check is racy by nature (a concurrent wake can break it
+    /// mid-scan); the failure mode is one redundant retransmission,
+    /// which receiver-side dedup absorbs. Returns whether a timer fired
+    /// — which is progress for the stall detector (a pool waiting out
+    /// retry backoff is not stalled).
+    fn try_fire_timers<T: PoolTask>(pool: &Pool<T>, me: usize) -> bool {
+        let mut best: Option<(f64, usize)> = None;
+        for (s, sl) in pool.slots.iter().enumerate() {
+            match sl.state.load(Ordering::SeqCst) {
+                DONE => continue,
+                PARKED => {}
+                // Someone is runnable or mid-poll: not idle, no fire.
+                _ => return false,
+            }
+            // try_lock: a busy cell means its shard is active — bail.
+            let Ok(cell) = sl.task.try_lock() else { return false };
+            if let Some(due) = cell.as_ref().and_then(|t| t.armed_timer()) {
+                if best.map_or(true, |(bd, _)| due < bd) {
+                    best = Some((due, s));
+                }
+            }
+        }
+        let Some((_, slot)) = best else { return false };
+        let sl = &pool.slots[slot];
+        // Claim the slot exactly like a waker: winning PARKED→QUEUED
+        // grants sole enqueue rights (and makes concurrent wakes no-op).
+        // SeqCst (protocol): same tier as the wake CAS it mirrors.
+        if sl.state.compare_exchange(PARKED, QUEUED, Ordering::SeqCst, Ordering::SeqCst).is_err() {
+            return false; // raced a real wake; let that drive progress
+        }
+        // A timer fire is progress (the stall-detector fix: ranks
+        // waiting out retry backoff are working, not deadlocked).
+        // Relaxed (heuristic), as at the poll site.
+        pool.progress.fetch_add(1, Ordering::Relaxed);
+        let mut wakes: Vec<usize> = Vec::new();
+        {
+            let mut cell = plock(&sl.task);
+            if let Some(task) = cell.as_mut() {
+                task.fire_timer();
+                task.drain_wakes_into(&mut wakes);
+            }
+        }
+        // The slot is QUEUED and in no queue — the steal-safe window.
+        // Adopt it here (owner moves with the claim, like a steal) and
+        // enqueue for one re-poll; SeqCst (protocol) as at the steal
+        // site.
+        sl.owner.store(me, Ordering::SeqCst);
+        plock(&pool.shards[me].deque).push_back(slot);
+        for dst in wakes.drain(..) {
+            if let Some(&s) = pool.slot_of.get(&dst) {
+                wake(pool, me, s);
+            }
+        }
+        true
+    }
+
     /// Park this shard until a cross-shard wake (or termination/abort)
     /// arrives. The injector is rechecked under its lock before waiting,
     /// so a notify between check and wait cannot be lost. Also hosts the
     /// stall detector: a shard about to sleep with zero global progress
-    /// (polls + unparks) for [`STALL_LIMIT`] reports a protocol deadlock
-    /// — checked lock-free *before* taking the injector lock so the
-    /// panic never poisons it.
+    /// (polls + unparks + timer fires) for [`STALL_LIMIT`] reports a
+    /// protocol deadlock — checked lock-free *before* taking the
+    /// injector lock so the panic never poisons it. Armed retry timers
+    /// are tried first: firing one IS progress, so a pool whose every
+    /// rank is waiting out retry backoff can never trip the abort
+    /// (`all_ranks_in_retry_backoff_does_not_trip_stall_abort`).
     fn park<T: PoolTask>(pool: &Pool<T>, me: usize, stall: &mut (u64, std::time::Instant)) {
+        if try_fire_timers(pool, me) {
+            *stall = (pool.progress.load(Ordering::Relaxed), std::time::Instant::now());
+            return;
+        }
         let seen = pool.progress.load(Ordering::Relaxed);
         if seen != stall.0 {
             *stall = (seen, std::time::Instant::now());
@@ -866,6 +982,14 @@ impl pool::PoolTask for RankTask {
 
     fn describe(&self) -> String {
         format!("rank {} in {}", RankTask::global_rank(self), self.step().name())
+    }
+
+    fn armed_timer(&self) -> Option<f64> {
+        RankTask::armed_timer(self)
+    }
+
+    fn fire_timer(&mut self) {
+        RankTask::fire_timer(self);
     }
 }
 
@@ -989,6 +1113,202 @@ mod script {
     /// shard owns rank 2 *at wake time* (the `owner` load ordering).
     pub(super) const STEAL_MOVE: &[(usize, &[Act])] =
         &[(0, &[Act::Send(2, 5)]), (1, &[]), (2, &[Act::Recv(0, 5)])];
+
+    /// A task modelling a rank in retry backoff (ISSUE-9): it parks
+    /// awaiting a message that will only ever arrive when its armed
+    /// virtual-time timer has fired `fires_needed` times (the last fire
+    /// "retransmits" into the peer's mailbox). With every task parked
+    /// this way, the pool makes progress exclusively through
+    /// `try_fire_timers` — the stall-detector regression scenario.
+    pub(super) struct TimerTask {
+        rank: usize,
+        peer: usize,
+        fires_left: u32,
+        got: bool,
+        mail: Mail,
+        wakes: Vec<usize>,
+    }
+
+    impl PoolTask for TimerTask {
+        type Out = (usize, SchedCounters);
+
+        fn rank(&self) -> usize {
+            self.rank
+        }
+
+        fn poll_task(&mut self) -> Poll {
+            if !self.got {
+                let mut mb = self.mail[self.rank].lock().unwrap();
+                if let Some(at) = mb.iter().position(|&m| m == (self.peer, 1)) {
+                    mb.remove(at);
+                    self.got = true;
+                }
+            }
+            // Like a real rank with held retransmissions outstanding
+            // (`Endpoint::recovery_busy`): may not complete — and drop
+            // its armed timer with it — until the backoff flushes.
+            if self.got && self.fires_left == 0 {
+                Poll::Complete
+            } else {
+                Poll::Pending { src: self.peer, tag: 1 }
+            }
+        }
+
+        fn charge_host(&mut self, _op: HostOp) {}
+
+        fn drain_wakes_into(&mut self, out: &mut Vec<usize>) {
+            out.append(&mut self.wakes);
+        }
+
+        fn finish(self, counters: SchedCounters) -> (usize, SchedCounters) {
+            (self.rank, counters)
+        }
+
+        fn describe(&self) -> String {
+            format!("timer rank {} ({} fire(s) left)", self.rank, self.fires_left)
+        }
+
+        fn armed_timer(&self) -> Option<f64> {
+            // Due-times order fires across tasks; value is otherwise
+            // arbitrary virtual seconds.
+            (self.fires_left > 0).then(|| self.rank as f64 + f64::from(self.fires_left))
+        }
+
+        fn fire_timer(&mut self) {
+            assert!(self.fires_left > 0, "unarmed timer fired");
+            self.fires_left -= 1;
+            if self.fires_left == 0 {
+                // The final retransmission lands: deliver, wake the
+                // receiver, and self-wake (the flushed sender may now
+                // complete — the transport's exhaustion/ack pattern).
+                self.mail[self.peer].lock().unwrap().push((self.rank, 1));
+                self.wakes.push(self.peer);
+                self.wakes.push(self.rank);
+            }
+        }
+    }
+
+    /// All ranks pairwise in retry backoff: rank 2k ↔ rank 2k+1, each
+    /// needing `fires` timer fires before its message lands. Asserts
+    /// completion (which, pre-fix, the 30 s stall abort would break if
+    /// timers were not counted as progress — and which deadlocks
+    /// outright on a scheduler that never fires timers at idle).
+    pub(super) fn run_backoff_scenario(pairs: usize, fires: u32, threads: usize, steal: bool) {
+        let p = pairs * 2;
+        let mail: Mail =
+            std::sync::Arc::new((0..p).map(|_| std::sync::Mutex::new(Vec::new())).collect());
+        let tasks: Vec<TimerTask> = (0..p)
+            .map(|r| TimerTask {
+                rank: r,
+                peer: r ^ 1,
+                fires_left: fires,
+                got: false,
+                mail: mail.clone(),
+                wakes: Vec::new(),
+            })
+            .collect();
+        let outs = pool::run_pool(tasks, threads, steal);
+        let mut ranks: Vec<usize> = outs.iter().map(|&(r, _)| r).collect();
+        ranks.sort_unstable();
+        assert_eq!(ranks, (0..p).collect::<Vec<_>>(), "every rank completed exactly once");
+    }
+
+    /// The same all-ranks-in-backoff scenario on the single-threaded
+    /// event loop: its idle arm (empty ready queue) must fire the
+    /// earliest armed timer instead of panicking "deadlock".
+    pub(super) fn run_backoff_scenario_event(pairs: usize, fires: u32) {
+        let p = pairs * 2;
+        let mail: Mail =
+            std::sync::Arc::new((0..p).map(|_| std::sync::Mutex::new(Vec::new())).collect());
+        let tasks: Vec<TimerTask> = (0..p)
+            .map(|r| TimerTask {
+                rank: r,
+                peer: r ^ 1,
+                fires_left: fires,
+                got: false,
+                mail: mail.clone(),
+                wakes: Vec::new(),
+            })
+            .collect();
+        let outs = super::run_event(tasks);
+        let mut ranks: Vec<usize> = outs.iter().map(|&(r, _)| r).collect();
+        ranks.sort_unstable();
+        assert_eq!(ranks, (0..p).collect::<Vec<_>>(), "every rank completed exactly once");
+    }
+
+    /// A batch-style crash-cancellation fanout (ISSUE-9): task 0 fails
+    /// its "job" (shared flag + wake fanout, the `BatchTask` Err arm);
+    /// siblings observe the flag and cancel. The settled-assert is the
+    /// teeth: a crashed/cancelled task re-queued or re-polled after
+    /// completing trips it on any interleaving.
+    pub(super) struct CrashTask {
+        rank: usize,
+        crasher: bool,
+        failed: std::sync::Arc<std::sync::atomic::AtomicBool>,
+        wakes: Vec<usize>,
+        peers: Vec<usize>,
+        settled: bool,
+    }
+
+    impl PoolTask for CrashTask {
+        type Out = (usize, SchedCounters);
+
+        fn rank(&self) -> usize {
+            self.rank
+        }
+
+        fn poll_task(&mut self) -> Poll {
+            assert!(!self.settled, "crashed/cancelled task polled after settling");
+            if self.crasher {
+                self.failed.store(true, std::sync::atomic::Ordering::SeqCst);
+                self.wakes.extend(self.peers.iter().copied());
+                self.settled = true;
+                return Poll::Complete;
+            }
+            if self.failed.load(std::sync::atomic::Ordering::SeqCst) {
+                self.settled = true; // cancelled: never runs again
+                return Poll::Complete;
+            }
+            Poll::Pending { src: 0, tag: 0 }
+        }
+
+        fn charge_host(&mut self, _op: HostOp) {}
+
+        fn drain_wakes_into(&mut self, out: &mut Vec<usize>) {
+            out.append(&mut self.wakes);
+        }
+
+        fn finish(self, counters: SchedCounters) -> (usize, SchedCounters) {
+            assert!(self.settled, "finish() on an unsettled crash task");
+            (self.rank, counters)
+        }
+
+        fn describe(&self) -> String {
+            format!("crash-scenario rank {}", self.rank)
+        }
+    }
+
+    /// Run the crash-cancellation fanout against `threads` shards: task 0
+    /// crashes while tasks 1..p park/steal/poll in every order the host
+    /// (or loom) produces. Each task must settle exactly once.
+    pub(super) fn run_crash_scenario(p: usize, threads: usize, steal: bool) {
+        let failed = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let tasks: Vec<CrashTask> = (0..p)
+            .map(|r| CrashTask {
+                rank: r,
+                crasher: r == 0,
+                failed: failed.clone(),
+                wakes: Vec::new(),
+                peers: (0..p).filter(|&x| x != r).collect(),
+                settled: false,
+            })
+            .collect();
+        let outs = pool::run_pool(tasks, threads, steal);
+        let mut ranks: Vec<usize> = outs.iter().map(|&(r, _)| r).collect();
+        ranks.sort_unstable();
+        assert_eq!(ranks, (0..p).collect::<Vec<_>>(), "every task settled exactly once");
+        assert!(failed.load(std::sync::atomic::Ordering::SeqCst));
+    }
 }
 
 /// The scripted scenarios on real unmodeled threads: the targets the
@@ -1011,6 +1331,33 @@ mod pool_tests {
     #[test]
     fn pool_steal_ownership_move() {
         run_scenario(STEAL_MOVE, 2, true);
+    }
+
+    /// ISSUE-9 stall-detector regression: a pool whose EVERY rank is
+    /// waiting out a retry timeout makes progress exclusively through
+    /// timer fires. Pre-fix, nothing bumped `progress` in that state —
+    /// armed timers must count as progress (and fire), or this would
+    /// deadlock-panic.
+    #[test]
+    fn all_ranks_in_retry_backoff_does_not_trip_stall_abort() {
+        for steal in [false, true] {
+            super::script::run_backoff_scenario(2, 3, 2, steal);
+        }
+    }
+
+    /// Same scenario through `run_event`'s idle-arm timer firing.
+    #[test]
+    fn event_loop_fires_timers_at_idle() {
+        super::script::run_backoff_scenario_event(2, 3);
+    }
+
+    /// Crash-cancellation fanout native smoke (the loom suite explores
+    /// the same scenario exhaustively at bound 3).
+    #[test]
+    fn pool_crash_cancel_fanout() {
+        for steal in [false, true] {
+            super::script::run_crash_scenario(3, 2, steal);
+        }
     }
 
     #[test]
@@ -1067,6 +1414,22 @@ mod loom_tests {
         let mut b = loom::model::Builder::new();
         b.preemption_bound = Some(3);
         b.check(|| run_scenario(PARK_WAKE, 2, true));
+    }
+
+    /// ISSUE-9: crash-cancellation fanout racing an in-flight steal, at
+    /// the same bound-3 budget as the refill-order scenario. Task 0
+    /// fails its job and fans wakes to its siblings while a dry shard
+    /// is mid-steal on one of them; in every interleaving each sibling
+    /// must settle (cancel) exactly once — a crashed or cancelled
+    /// task that gets re-queued or re-polled after settling trips the
+    /// scenario's settled-assert, and one that is lost deadlocks the
+    /// model.
+    #[cfg(not(loom_mutation))]
+    #[test]
+    fn loom_crash_cancel_fanout_races_steal_bound3() {
+        let mut b = loom::model::Builder::new();
+        b.preemption_bound = Some(3);
+        b.check(|| super::script::run_crash_scenario(3, 2, true));
     }
 
     /// Mutation run (`make loom-mutation`): with the task-cell refill

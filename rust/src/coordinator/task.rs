@@ -48,9 +48,10 @@
 
 use std::sync::{Arc, Mutex};
 
-use crate::comm::{global_min, Collectives, Endpoint};
+use crate::comm::{global_min, Collectives, Endpoint, VirtualClock};
+use crate::coordinator::checkpoint::{CheckpointStore, RankSnapshot};
 use crate::coordinator::costmodel_host::{HostCostModel, HostOp, HOST_COSTS};
-use crate::coordinator::protocol::{tag, Phase, ProtoMsg, DIST_TAG};
+use crate::coordinator::protocol::{tag, Phase, ProtoMsg, ACK_WAIT_TAG, DIST_TAG};
 use crate::coordinator::source::{DistSource, SharedBuild, SourceKind};
 use crate::coordinator::worker::{
     build_shard, build_shard_cached, route_full, route_incremental, WorkerCtx, WorkerOutput,
@@ -122,6 +123,11 @@ pub enum Step {
         /// Next source rank to check for an expected `Triples` list.
         next_src: usize,
     },
+    /// All n−1 merges done, but the hardened transport still holds
+    /// unacked messages (ISSUE-9): completing now would drop them, so
+    /// the rank parks on [`ACK_WAIT_TAG`] until recovery quiesces.
+    /// Unarmed endpoints pass through instantly.
+    AckWait,
     /// All n−1 merges done; the output has been assembled.
     Done,
 }
@@ -138,6 +144,7 @@ impl Step {
             Step::MergeBroadcast => "merge-broadcast",
             Step::Walk => "walk",
             Step::RetireUpdate { .. } => "retire-update",
+            Step::AckWait => "ack-wait",
             Step::Done => "done",
         }
     }
@@ -211,13 +218,59 @@ pub struct RankTask {
     /// checked out here at Distribute and checked back in at finish.
     /// None on solo runs.
     pool: Option<Arc<Mutex<StatePool>>>,
+    /// Crash-recovery snapshot collector shared by the job's ranks
+    /// (ISSUE-9; None unless the batch layer armed `--on-failure retry`
+    /// with a checkpoint cadence).
+    ckpts: Option<Arc<CheckpointStore>>,
+    /// Snapshot to resume from instead of distributing — consumed by
+    /// the first poll of a respawned task ([`restore_from`]).
+    ///
+    /// [`restore_from`]: RankTask::restore_from
+    restore: Option<Box<RankSnapshot>>,
+    /// Closed-form bytes this rank's checkpoint waves would have
+    /// written (host-side tally, reported in the output).
+    ckpt_bytes: u64,
 }
 
 impl RankTask {
     /// Wrap one endpoint + worker configuration into a pollable task.
     /// `source` must be `Some` exactly on rank 0 (the distributor).
-    pub fn new(ep: Endpoint<ProtoMsg>, ctx: WorkerCtx, source: Option<Arc<DistSource>>) -> Self {
-        Self { ep, ctx, source, step: Step::Distribute, st: None, output: None, shared: None, pool: None }
+    /// An armed fault plan hardens the transport (ack/retry/dedup) at
+    /// construction, before any protocol message can fly.
+    pub fn new(
+        mut ep: Endpoint<ProtoMsg>,
+        ctx: WorkerCtx,
+        source: Option<Arc<DistSource>>,
+    ) -> Self {
+        if let Some(plan) = ctx.faults {
+            ep.arm_recovery(plan, ctx.retry);
+        }
+        Self {
+            ep,
+            ctx,
+            source,
+            step: Step::Distribute,
+            st: None,
+            output: None,
+            shared: None,
+            pool: None,
+            ckpts: None,
+            restore: None,
+            ckpt_bytes: 0,
+        }
+    }
+
+    /// Attach the job's shared snapshot collector (batch crash recovery).
+    pub(crate) fn attach_checkpoints(&mut self, ckpts: Arc<CheckpointStore>) {
+        self.ckpts = Some(ckpts);
+    }
+
+    /// Resume from `snap` instead of the initial distribution: the first
+    /// poll restores the protocol state at the snapshot's wave and
+    /// re-enters the scan step there, charging nothing (the snapshot's
+    /// clock/traffic already contain everything the rank ever paid).
+    pub(crate) fn restore_from(&mut self, snap: RankSnapshot) {
+        self.restore = Some(Box::new(snap));
     }
 
     /// Attach the batch-sharing hooks (`coordinator::batch`): the
@@ -282,6 +335,19 @@ impl RankTask {
         self.output.take()
     }
 
+    /// Earliest virtual due-time among this rank's held (unacked)
+    /// retransmissions — the scheduler's armed-timer probe (ISSUE-9).
+    /// `None` without an armed fault plan or held messages.
+    pub(crate) fn armed_timer(&self) -> Option<f64> {
+        self.ep.armed_due()
+    }
+
+    /// Fire this rank's earliest-due retry timer (scheduler-idle only;
+    /// see `sched::try_fire_timers`).
+    pub(crate) fn fire_timer(&mut self) {
+        self.ep.fire_earliest();
+    }
+
     /// Drive the machine on the current thread, parking on the mailbox
     /// whenever it blocks — the thread-per-rank runtime.
     pub fn run_blocking(mut self) -> WorkerOutput {
@@ -307,6 +373,13 @@ impl RankTask {
     /// [`Poll::Pending`] with the exact (source, tag) the machine needs
     /// next, or [`Poll::Complete`] once all n−1 merges are done.
     pub fn poll(&mut self) -> Poll {
+        // A held message that exhausted its retry budget means the peer
+        // is unreachable: fail the job from the task's own poll, inside
+        // the batch layer's catch boundary (recoverable via
+        // `--on-failure retry:K`).
+        if let Some((dst, t)) = self.ep.take_delivery_failure() {
+            panic!("retry budget exhausted: no ack from rank {dst} for tag {t:#x}");
+        }
         loop {
             let pending = match self.step {
                 Step::Distribute => self.do_distribute(),
@@ -323,6 +396,7 @@ impl RankTask {
                     None
                 }
                 Step::RetireUpdate { next_src } => self.do_retire_update(next_src),
+                Step::AckWait => self.do_ack_wait(),
                 Step::Done => return Poll::Complete,
             };
             if let Some(p) = pending {
@@ -334,6 +408,12 @@ impl RankTask {
     // ---- Preamble: initial distribution / distributed build ------------
 
     fn do_distribute(&mut self) -> Option<Poll> {
+        // Respawned task: skip the distribution entirely and re-enter
+        // the protocol at the snapshot's wave.
+        if let Some(snap) = self.restore.take() {
+            self.restore_state(*snap);
+            return None;
+        }
         let me = self.ep.rank();
         let p = self.ep.p();
         let part = &self.ctx.partition;
@@ -456,6 +536,18 @@ impl RankTask {
         let me = self.ep.rank();
         let p = self.ep.p();
         let st = self.st.as_mut().expect("state exists after Distribute");
+        // Injected crash site (ISSUE-9): this rank dies at the top of
+        // this iteration's scan. The batch layer catches the panic and —
+        // under `--on-failure retry` — respawns the job from the last
+        // complete checkpoint wave with the crash disarmed.
+        if let Some(plan) = &self.ctx.faults {
+            if plan.should_crash(self.ctx.job, me, st.iter) {
+                panic!(
+                    "injected crash: job {} rank {me} iter {}",
+                    self.ctx.job, st.iter
+                );
+            }
+        }
         let t0 = self.ep.clock.now();
         let (lmin, lidx) = match &self.ctx.scan {
             ScanStrategy::Full(engine) => {
@@ -864,12 +956,127 @@ impl RankTask {
             st.iter == n - 1
         };
         if finished {
-            self.finish();
-            self.step = Step::Done;
+            // Completion must wait for the recovery layer: held unacked
+            // messages die with the endpoint (no-op without faults).
+            self.step = Step::AckWait;
         } else {
+            self.maybe_checkpoint();
             self.step = Step::SendMin;
         }
         None
+    }
+
+    // ---- ISSUE-9: completion hold, checkpoint cut, snapshot restore ----
+
+    /// Hold a protocol-complete rank `Pending` until every held message
+    /// has been acked (or has failed over to the delivery-failure path).
+    /// Without an armed fault plan `recovery_busy` is always false and
+    /// this is a straight pass-through to completion.
+    fn do_ack_wait(&mut self) -> Option<Poll> {
+        self.ep.pump_recovery();
+        if self.ep.recovery_busy() {
+            return Some(Poll::Pending { src: self.ep.rank(), tag: ACK_WAIT_TAG });
+        }
+        self.finish();
+        self.step = Step::Done;
+        None
+    }
+
+    /// Cut a snapshot at the top of iteration `iter` when the cadence
+    /// says so. The byte tally is charged to the host-side counter
+    /// either way; the snapshot itself is deposited only when the batch
+    /// layer attached a store (solo runs cut-and-count without keeping).
+    fn maybe_checkpoint(&mut self) {
+        let Some(k) = self.ctx.checkpoint.cadence() else { return };
+        if self.st.as_ref().expect("state exists").iter % k != 0 {
+            return;
+        }
+        let snap = self.snapshot();
+        self.ckpt_bytes += snap.nbytes();
+        if let Some(store) = &self.ckpts {
+            store.put(self.ep.rank(), snap);
+        }
+    }
+
+    /// The rank's protocol state at the current iteration boundary.
+    fn snapshot(&self) -> RankSnapshot {
+        let st = self.st.as_ref().expect("state exists");
+        let n = self.ctx.partition.n();
+        RankSnapshot {
+            wave: st.iter,
+            cells: st.shard.cells().to_vec(),
+            live: st.shard.live(),
+            sizes: st.sizes.clone(),
+            alive: (0..n).map(|k| st.alive.contains(k)).collect(),
+            merges: st.merges.clone(),
+            digest: st.merge_digest.finish(),
+            phases: st.phases,
+            cells_scanned: st.cells_scanned,
+            cells_updated: st.cells_updated,
+            index_ops: st.index_ops,
+            idx_waves: st.idx_waves,
+            alive_visited: st.alive_visited,
+            clock: self.ep.clock.now(),
+            traffic: self.ep.traffic,
+        }
+    }
+
+    /// Rebuild the full [`RankState`] from a snapshot and re-enter the
+    /// protocol at its wave. Charges *nothing*: clock and traffic are
+    /// assigned from the snapshot (every cost the rank ever paid —
+    /// including the original index build — is already inside them),
+    /// and the index rebuild here is host work. The per-iteration
+    /// scratch is rebuilt empty, exactly as the scan step expects at an
+    /// iteration boundary.
+    fn restore_state(&mut self, snap: RankSnapshot) {
+        let me = self.ep.rank();
+        let p = self.ep.p();
+        let part = &self.ctx.partition;
+        let n = part.n();
+        let shard_cells = snap.cells.len();
+        let live = snap.live;
+        let mut shard = ShardStore::new(snap.cells, self.ctx.scan.wants_index(), self.ctx.maintenance);
+        // Rebuilding from snapshot cells (retired +inf sentinels
+        // included) yields the same tree as the incremental repairs the
+        // original run applied; only the live count is protocol state
+        // the cells can't encode.
+        shard.restore_live(live);
+        let mut alive = AliveSet::new(n);
+        for (k, &is_alive) in snap.alive.iter().enumerate() {
+            if !is_alive {
+                alive.remove(k);
+            }
+        }
+        self.ep.clock = VirtualClock::at(snap.clock);
+        self.ep.traffic = snap.traffic;
+        self.st = Some(RankState {
+            shard,
+            shard_cells,
+            my_cell0: part.cells_of(me).collect(),
+            sizes: snap.sizes,
+            alive,
+            merges: snap.merges,
+            merge_digest: Fnv64::from_state(snap.digest),
+            phases: snap.phases,
+            cells_scanned: snap.cells_scanned,
+            cells_updated: snap.cells_updated,
+            index_ops: snap.index_ops,
+            idx_waves: snap.idx_waves,
+            alive_visited: snap.alive_visited,
+            iter: snap.wave,
+            t_mark: 0.0,
+            pairs: Vec::with_capacity(p),
+            acc: Vec::new(),
+            win_rank: 0,
+            d_ij: 0.0,
+            mi: 0,
+            mj: 0,
+            outbound: vec![Vec::new(); p],
+            expect_from: vec![false; p],
+            local_dkj: Vec::new(),
+            ops: Vec::new(),
+        });
+        self.step = Step::SendMin;
     }
 
     /// Assemble the [`WorkerOutput`] and release the per-rank state —
@@ -896,6 +1103,11 @@ impl RankTask {
             steals: 0,
             injected_wakes: 0,
             parks: 0,
+            faults_injected: self.ep.faults_injected(),
+            retries_sent: self.ep.retries_sent(),
+            // Restarts are a job-level fact the batch layer fills in.
+            restarts: 0,
+            checkpoint_bytes: self.ckpt_bytes,
         });
         if let Some(pool) = &self.pool {
             pool.lock().unwrap_or_else(|e| e.into_inner()).check_in(RankScratch {
@@ -984,6 +1196,7 @@ mod tests {
             Step::MergeBroadcast,
             Step::Walk,
             Step::RetireUpdate { next_src: 0 },
+            Step::AckWait,
             Step::Done,
         ] {
             assert!(!s.name().is_empty());

@@ -23,7 +23,8 @@
 //! any rank can reconstruct the dendrogram; rank 0's copy is returned and
 //! the other ranks contribute only an FNV digest for the agreement check.
 
-use crate::comm::{Collectives, Endpoint};
+use crate::comm::{Collectives, Endpoint, FaultPlan, RetryPolicy};
+use crate::coordinator::checkpoint::Checkpoint;
 use crate::coordinator::costmodel_host::HostCostModel;
 use crate::coordinator::protocol::ProtoMsg;
 use crate::coordinator::source::DistSource;
@@ -77,6 +78,20 @@ pub struct WorkerOutput {
     /// Blocking points: polls that returned `Pending` (deterministic
     /// under `event`; schedule-dependent elsewhere).
     pub parks: u64,
+    /// Cross-rank sends the fault plan tampered with (ISSUE-9; 0 with
+    /// `--faults off`). Host-side like the three counters above: fault
+    /// recovery never touches the canonical observables.
+    pub faults_injected: u64,
+    /// Retry-timer retransmissions this rank's transport fired.
+    pub retries_sent: u64,
+    /// Checkpoint restarts of this rank's job (filled by the batch
+    /// layer on rank 0 of the job; 0 everywhere else).
+    pub restarts: u64,
+    /// Bytes this rank's checkpoints would have written (closed-form
+    /// [`RankSnapshot::nbytes`] tally; 0 with `--checkpoint off`).
+    ///
+    /// [`RankSnapshot::nbytes`]: super::checkpoint::RankSnapshot::nbytes
+    pub checkpoint_bytes: u64,
 }
 
 /// Worker configuration (shared, cheap to clone).
@@ -98,6 +113,17 @@ pub struct WorkerCtx {
     /// Whether the virtual clock also charges scheduler overhead and the
     /// realized maintenance waves (`--cost-model host`; PR 6).
     pub host: HostCostModel,
+    /// Seeded fault adversary (`--faults` + `--fault-seed`; ISSUE-9).
+    /// `None` is the untouched zero-fault transport.
+    pub faults: Option<FaultPlan>,
+    /// Ack/retry knobs for the hardened transport (consulted only when
+    /// `faults` is armed).
+    pub retry: RetryPolicy,
+    /// Snapshot cadence for crash recovery (`--checkpoint`).
+    pub checkpoint: Checkpoint,
+    /// Batch job index this worker belongs to (0 solo) — the crash
+    /// site's job coordinate.
+    pub job: usize,
 }
 
 /// One owned `(k,j)` cell on the step-6a send side: read it, route the

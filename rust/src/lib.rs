@@ -59,10 +59,10 @@ pub mod validate;
 /// Most-used types in one import.
 pub mod prelude {
     pub use crate::baselines::serial_lw::serial_lw_cluster;
-    pub use crate::comm::CostModel;
+    pub use crate::comm::{CostModel, FaultPlan, FaultSpec, RetryPolicy};
     pub use crate::coordinator::{
-        AliveWalk, BatchRun, BatchShape, ClusterConfig, ClusterRun, DatasetId, DistSource, Engine,
-        HostCostModel, RunBatch, Runtime, ScanStrategy,
+        AliveWalk, BatchRun, BatchShape, Checkpoint, ClusterConfig, ClusterRun, DatasetId,
+        DistSource, Engine, HostCostModel, OnFailure, RunBatch, Runtime, ScanStrategy,
     };
     pub use crate::data::{euclidean_matrix, rmsd_matrix, EnsembleSpec, GaussianSpec};
     pub use crate::dendrogram::{Dendrogram, Merge};

@@ -13,10 +13,10 @@
 use std::path::PathBuf;
 
 use lancew::baselines::serial_lw::{serial_lw_cluster, verify_against_definition};
-use lancew::comm::{Collectives, CostModel};
+use lancew::comm::{Collectives, CostModel, FaultPlan, FaultSpec, RetryPolicy};
 use lancew::coordinator::{
-    AliveWalk, BatchShape, ClusterConfig, DistSource, Engine, HostCostModel, RunBatch, Runtime,
-    ScanStrategy,
+    AliveWalk, BatchShape, Checkpoint, ClusterConfig, DistSource, Engine, HostCostModel,
+    OnFailure, RunBatch, Runtime, ScanStrategy,
 };
 use lancew::data::{euclidean_matrix, io, rmsd_matrix, EnsembleSpec, GaussianSpec};
 use lancew::linkage::Scheme;
@@ -73,6 +73,17 @@ fn print_help() {
          \x20          matrix build per dataset, and recycle state through a pool;\n\
          \x20          every job is bitwise identical to running it alone)\n\
          \x20        --batch-window W (max concurrently admitted jobs; default 4)\n\
+         \x20        --faults off|drop|dup|delay|mix|crash:R@I (seeded fault adversary,\n\
+         \x20          +-combinable; default off. Recovery is exact: for any seed the\n\
+         \x20          dendrogram and canonical stats are bitwise the fault-free run's)\n\
+         \x20        --fault-seed S (adversary seed; default 1 — same seed, same faults)\n\
+         \x20        --retry max:K,timeout:T (hardened-transport ack/retry knobs;\n\
+         \x20          default max:4,timeout:1e-4 virtual seconds, exponential backoff)\n\
+         \x20        --checkpoint off|every:K (per-rank snapshot cadence in merge\n\
+         \x20          iterations; default off)\n\
+         \x20        --on-failure fail|retry:K (batch policy when a rank dies: fail the\n\
+         \x20          job, or respawn it from the last complete checkpoint wave —\n\
+         \x20          from scratch with --checkpoint off; default fail)\n\
          \x20        --newick out.nwk --ascii --linkage z.csv (scipy linkage matrix)\n\
          validate --n 60 --trials 5 --seed 1\n\
          fig2     --n 512 --ps 1,2,4,8,16,24 --scheme complete --runtime event\n\
@@ -208,6 +219,23 @@ fn make_collectives(args: &Args) -> anyhow::Result<Collectives> {
     args.get("collectives").unwrap_or("naive").parse()
 }
 
+/// `--faults off` (default) or a `+`-combination of
+/// `drop|dup|delay|mix|crash:R@I`, reproducible from `--fault-seed`.
+/// The adversary lives in the transport; with recovery armed the
+/// clustering and canonical stats are bitwise the fault-free run's
+/// (the ISSUE-9 headline invariant). A `--fault-seed` without
+/// `--faults` is a no-op and fails loudly, like every other no-op flag.
+fn make_faults(args: &Args) -> anyhow::Result<Option<FaultPlan>> {
+    let spec: FaultSpec = args.get("faults").unwrap_or("off").parse()?;
+    let seed_given = args.get("fault-seed").is_some();
+    let seed: u64 = args.parse_or("fault-seed", 1u64)?;
+    if spec.is_off() {
+        anyhow::ensure!(!seed_given, "--fault-seed without --faults (nothing to seed)");
+        return Ok(None);
+    }
+    Ok(Some(FaultPlan::new(seed, spec)))
+}
+
 fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     let (source, truth) = load_source(args)?;
     let scheme: Scheme = args.get("scheme").unwrap_or("complete").parse()?;
@@ -221,13 +249,30 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     let collectives = make_collectives(args)?;
     let batch: Option<BatchShape> = args.parse_opt("batch")?;
     let batch_window: usize = args.parse_or("batch-window", 4usize)?;
+    let faults = make_faults(args)?;
+    let retry: RetryPolicy = match args.get("retry") {
+        None => RetryPolicy::default(),
+        Some(s) => {
+            anyhow::ensure!(
+                faults.is_some(),
+                "--retry only applies with --faults (the unfaulted transport never retransmits)"
+            );
+            s.parse()?
+        }
+    };
+    let checkpoint: Checkpoint = args.get("checkpoint").unwrap_or("off").parse()?;
+    let on_failure: OnFailure = args.get("on-failure").unwrap_or("fail").parse()?;
+    anyhow::ensure!(
+        on_failure == OnFailure::Fail || batch.is_some(),
+        "--on-failure retry:K is a batch policy (add --batch; solo runs surface the failure)"
+    );
     let cut: usize = args.parse_or("cut", 0usize)?;
     let newick = args.get("newick").map(PathBuf::from);
     let linkage_out = args.get("linkage").map(PathBuf::from);
     let ascii = args.has("ascii");
     args.reject_unknown()?;
 
-    let cfg = ClusterConfig::new(scheme, p)
+    let mut cfg = ClusterConfig::new(scheme, p)
         .with_partition(partition)
         .with_cost_model(cost_model)
         .with_host_costs(host_costs)
@@ -235,14 +280,21 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         .with_maintenance(maintenance)
         .with_alive_walk(walk)
         .with_runtime(runtime)
-        .with_collectives(collectives);
+        .with_collectives(collectives)
+        .with_retry(retry)
+        .with_checkpoint(checkpoint);
+    if let Some(plan) = faults {
+        cfg = cfg.with_faults(plan);
+    }
 
     if let Some(shape) = batch {
         anyhow::ensure!(
             cut == 0 && newick.is_none() && linkage_out.is_none() && !ascii,
             "--batch reports per-job summaries; drop --cut/--newick/--linkage/--ascii"
         );
-        let mut b = RunBatch::new(runtime).with_max_inflight(batch_window);
+        let mut b = RunBatch::new(runtime)
+            .with_max_inflight(batch_window)
+            .with_on_failure(on_failure);
         b.push_shape(shape, &cfg, &source);
         let out = b.run()?;
         for (j, job) in out.jobs.iter().enumerate() {

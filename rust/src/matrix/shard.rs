@@ -245,6 +245,23 @@ impl ShardStore {
         self.live
     }
 
+    /// Overwrite the live-cell count after a [`rebuild`](Self::rebuild)
+    /// from checkpointed cells (ISSUE-9 restart). `rebuild` assumes an
+    /// all-live input, but a restored snapshot's cell vector includes the
+    /// `+inf` sentinels of already-retired clusters — and live-ness is
+    /// protocol state (how many retires have happened), not a property of
+    /// the stored values: an input matrix may legitimately contain `+inf`
+    /// distances that still count as live. So the snapshot records the
+    /// count explicitly and restore re-applies it here.
+    pub fn restore_live(&mut self, live: u64) {
+        debug_assert!(
+            live as usize <= self.cells.len(),
+            "live count {live} exceeds shard size {}",
+            self.cells.len()
+        );
+        self.live = live;
+    }
+
     /// Whether a tournament tree is maintained.
     #[inline]
     pub fn is_indexed(&self) -> bool {

@@ -93,6 +93,18 @@ pub struct RunStats {
     /// under the single-threaded `event` runtime, schedule-dependent
     /// elsewhere).
     pub parks: u64,
+    /// Cross-rank sends the fault adversary tampered with (ISSUE-9;
+    /// 0 with `--faults off`). Host-side like the counters above —
+    /// fault recovery never reaches the canonical observables.
+    pub faults_injected: u64,
+    /// Retry-timer retransmissions the hardened transport fired.
+    pub retries_sent: u64,
+    /// Checkpoint restarts performed by the batch layer's
+    /// `--on-failure retry` path (one per respawned job attempt).
+    pub restarts: u64,
+    /// Bytes the checkpoint waves would have written (closed-form
+    /// per-snapshot tally; 0 with `--checkpoint off`).
+    pub checkpoint_bytes: u64,
     /// Max cells resident on any single rank (§5.4 storage claim).
     pub peak_shard_cells: usize,
     /// Clustering jobs this stats object covers: 1 for a solo run, the
@@ -135,7 +147,7 @@ impl RunStats {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "n={} p={} runtime={} wall={:.3}s virt={:.6}s msgs={} ({:.1}/iter) bytes={} peak_shard={} cells scanned={} idx_ops={} idx_waves={} alive_visited={} steals={} inj_wakes={} parks={} jobs={} builds={} pool={}h/{}m",
+            "n={} p={} runtime={} wall={:.3}s virt={:.6}s msgs={} ({:.1}/iter) bytes={} peak_shard={} cells scanned={} idx_ops={} idx_waves={} alive_visited={} steals={} inj_wakes={} parks={} jobs={} builds={} pool={}h/{}m faults={} retries={} restarts={} ckpt_bytes={}",
             self.n,
             self.p,
             if self.runtime.is_empty() { "?" } else { self.runtime.as_str() },
@@ -156,6 +168,10 @@ impl RunStats {
             self.matrix_builds,
             self.pool_hits,
             self.pool_misses,
+            self.faults_injected,
+            self.retries_sent,
+            self.restarts,
+            self.checkpoint_bytes,
         )
     }
 }

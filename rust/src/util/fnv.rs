@@ -18,6 +18,15 @@ impl Fnv64 {
         Fnv64(Self::OFFSET_BASIS)
     }
 
+    /// Rehydrate a digest from a [`finish`](Self::finish) reading.
+    /// FNV-1a's running state IS its current hash value, so a checkpoint
+    /// can persist the u64 and resume folding mid-sequence (ISSUE-9
+    /// restart: the merge digest must continue from the snapshot wave,
+    /// not restart at the offset basis).
+    pub const fn from_state(state: u64) -> Self {
+        Fnv64(state)
+    }
+
     /// Fold 8 bytes (little-endian) into the digest.
     #[inline]
     pub fn write_u64(&mut self, v: u64) {
@@ -67,6 +76,18 @@ mod tests {
         b.write_u64(2);
         b.write_u64(1);
         assert_ne!(a.finish(), b.finish());
+    }
+
+    #[test]
+    fn from_state_resumes_mid_sequence() {
+        let mut whole = Fnv64::new();
+        whole.write_u64(7);
+        whole.write_u64(9);
+        let mut prefix = Fnv64::new();
+        prefix.write_u64(7);
+        let mut resumed = Fnv64::from_state(prefix.finish());
+        resumed.write_u64(9);
+        assert_eq!(resumed.finish(), whole.finish());
     }
 
     #[test]

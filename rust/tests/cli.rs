@@ -51,6 +51,69 @@ fn help_documents_runtime_walk_and_maintenance_flags() {
 }
 
 #[test]
+fn help_documents_fault_flags() {
+    // ISSUE-9: the five fault/recovery flags must be in the help text.
+    let (ok, text) = lancew(&[]);
+    assert!(ok);
+    assert!(text.contains("--faults off|drop|dup|delay|mix|crash:R@I"), "{text}");
+    assert!(text.contains("--fault-seed S"), "{text}");
+    assert!(text.contains("--retry max:K,timeout:T"), "{text}");
+    assert!(text.contains("--checkpoint off|every:K"), "{text}");
+    assert!(text.contains("--on-failure fail|retry:K"), "{text}");
+}
+
+#[test]
+fn cluster_fault_injection_recovers_bitwise() {
+    // The headline ISSUE-9 invariant at the shell: a faulted run reports
+    // the same clustering, virtual clock, and traffic as the clean run —
+    // only the fault-side counters move.
+    let grab = |t: &str, key: &str| {
+        t.split(key).nth(1).and_then(|s| s.split_whitespace().next()).map(String::from)
+    };
+    let (ok_c, clean) =
+        lancew(&["cluster", "--n", "40", "--p", "4", "--cut", "3", "--seed", "5"]);
+    assert!(ok_c, "{clean}");
+    let (ok_f, faulted) = lancew(&[
+        "cluster", "--n", "40", "--p", "4", "--cut", "3", "--seed", "5",
+        "--faults", "mix", "--fault-seed", "3", "--retry", "max:6,timeout:2e-4",
+    ]);
+    assert!(ok_f, "{faulted}");
+    assert_eq!(grab(&clean, "virt="), grab(&faulted, "virt="));
+    assert_eq!(grab(&clean, "msgs="), grab(&faulted, "msgs="));
+    assert_eq!(grab(&clean, "bytes="), grab(&faulted, "bytes="));
+    let sizes = |t: &str| t.lines().find(|l| l.contains("cluster sizes")).map(String::from);
+    assert_eq!(sizes(&clean), sizes(&faulted));
+    assert_eq!(grab(&clean, "faults=").as_deref(), Some("0"), "{clean}");
+    let injected: u64 =
+        grab(&faulted, "faults=").and_then(|s| s.parse().ok()).unwrap_or(0);
+    assert!(injected > 0, "mix armed but nothing injected:\n{faulted}");
+}
+
+#[test]
+fn fault_flags_reject_noop_and_threads() {
+    // No-op flags fail loudly, same contract as --index-maintenance.
+    let (ok, text) = lancew(&["cluster", "--n", "10", "--fault-seed", "9"]);
+    assert!(!ok);
+    assert!(text.contains("--faults"), "{text}");
+    let (ok, text) = lancew(&["cluster", "--n", "10", "--retry", "max:2"]);
+    assert!(!ok);
+    assert!(text.contains("--faults"), "{text}");
+    let (ok, text) = lancew(&["cluster", "--n", "10", "--on-failure", "retry:2"]);
+    assert!(!ok);
+    assert!(text.contains("--batch"), "{text}");
+    // Retry timers fire at scheduler idleness; thread-per-rank has no
+    // scheduler to observe it.
+    let (ok, text) = lancew(&[
+        "cluster", "--n", "10", "--runtime", "threads", "--faults", "drop",
+    ]);
+    assert!(!ok);
+    assert!(text.contains("event"), "{text}");
+    let (ok, text) = lancew(&["cluster", "--n", "10", "--faults", "gamma-ray"]);
+    assert!(!ok);
+    assert!(text.contains("fault class"), "{text}");
+}
+
+#[test]
 fn cluster_runtime_toggle() {
     // threads and event runtimes must agree on everything but the label.
     let run = |rt: &str| {
