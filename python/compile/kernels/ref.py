@@ -52,6 +52,13 @@ def ref_lw_update(
     (group-average, centroid, Ward) fit the same artifact; `gamma`/`d_ij`
     are scalars broadcast over k. Entries where either input is +inf
     (retired slots) propagate +inf.
+
+    NOTE: the rust scalar path (`linkage::lw_update`) special-cases
+    single/complete (α=½,½, β=0, γ=∓½) to an exact `min`/`max` — the
+    ISSUE-10 lazy store relies on that exactness to defer folds. This
+    generic-coefficient kernel computes the same values up to f32
+    rounding of the algebraic form; the golden tests are
+    tolerance-based, so both paths pass them.
     """
     out = alpha_i * d_ki + alpha_j * d_kj + beta * d_ij + gamma * jnp.abs(d_ki - d_kj)
     dead = jnp.isinf(d_ki) | jnp.isinf(d_kj)

@@ -126,7 +126,7 @@ def nbytes(msg):
     if kind == "localmin":
         return 12
     if kind == "announce":
-        return 8
+        return 16  # (i, j, n_i, n_j) — sizes piggy-back on the broadcast
     if kind == "triples":
         return 8 + 8 * len(payload)
     if kind == "minlist":
@@ -323,7 +323,7 @@ def worker_gen(ep, part, scheme, collectives, matrix):
         win, d_ij, widx = global_min(pairs)
         i, j = condensed_pair(n, widx)
         at = tag(it, ANN)
-        payload = ("announce", (i, j)) if me == win else None
+        payload = ("announce", (i, j, sizes[i], sizes[j])) if me == win else None
         if collectives == "naive":
             if me == win:
                 for dst in range(p):
@@ -334,7 +334,8 @@ def worker_gen(ep, part, scheme, collectives, matrix):
                 ann = yield (win, at)
         else:
             ann = yield from bcast_tree_gen(ep, at, win, payload)
-        assert ann[1] == (i, j)
+        assert ann[1][:2] == (i, j)
+        n_i, n_j = ann[1][2], ann[1][3]
         phases[2] += ep.clock - t1
         t2 = ep.clock
 
@@ -349,7 +350,6 @@ def worker_gen(ep, part, scheme, collectives, matrix):
         for dst in range(p):
             if outbound[dst]:
                 ep.send(dst, tt, ("triples", outbound[dst]))
-        n_i, n_j = sizes[i], sizes[j]
         for (k, d_kj) in local:
             cki = condensed_index(n, min(k, i), max(k, i))
             off = part.local_offset(cki)
@@ -569,7 +569,8 @@ class RankTask:
         if me != win:
             self.step = ("merge_broadcast",)
             return
-        ann = ("announce", (i, j))
+        self.mni, self.mnj = self.sizes[i], self.sizes[j]
+        ann = ("announce", (i, j, self.mni, self.mnj))
         if self.collectives == "naive":
             for dst in range(p):
                 if dst != me:
@@ -586,7 +587,8 @@ class RankTask:
         msg = ep.try_recv(src, at)
         if msg is None:
             return (src, at)
-        assert msg[1] == (i, j)
+        assert msg[1][:2] == (i, j)
+        self.mni, self.mnj = msg[1][2], msg[1][3]
         if self.collectives == "tree":
             self.tree_forward(at, win, ("announce", msg[1]))
         self.step = ("walk",)
@@ -609,7 +611,7 @@ class RankTask:
         for dst in range(p):
             if outbound[dst]:
                 ep.send(dst, tt, ("triples", outbound[dst]))
-        n_i, n_j = self.sizes[i], self.sizes[j]
+        n_i, n_j = self.mni, self.mnj
         for (k, d_kj) in local:
             cki = condensed_index(n, min(k, i), max(k, i))
             off = part.local_offset(cki)
@@ -631,7 +633,7 @@ class RankTask:
                 self.step = ("retire_update", src)
                 return (src, tt)
             ep.compute(len(msg[1]))
-            n_i, n_j = self.sizes[i], self.sizes[j]
+            n_i, n_j = self.mni, self.mnj
             for (k, d_kj) in msg[1]:
                 cki = condensed_index(n, min(k, i), max(k, i))
                 off = part.local_offset(cki)

@@ -1,0 +1,608 @@
+"""Differential test for the ISSUE-10 lazy DistanceSource.
+
+Transliterates the lazy distance layer of `rust/src` into Python on top
+of the PR-3 protocol replica in ``test_event_runtime.py``:
+
+* ``LazyGeom`` (``matrix/source.rs``) — coordinates + farthest-point
+  pivot tables, per-cluster pivot hulls, admissible lower bounds, and
+  exact block min/max cell evaluation over cluster members;
+* ``LazyStore`` (``matrix/shard.rs``) — the three-state cell store
+  (unevaluated / evaluated overlay / retired) with the bound-guided
+  exact min (ties → lowest offset, like the eager tournament root);
+* the protocol hooks (``coordinator/{worker,task}.rs``) — the NaN wire
+  sentinel for bound-combinable schemes, deferred ``Touch`` folds, the
+  sizes-carrying 16-byte merge announce, and the folds-before-metadata
+  iteration order.
+
+Asserted, for 3 partition kinds × 3 schemes × p ∈ {1, 2, 7}: the lazy
+driver's per-rank merge sequences, virtual clocks, message/byte
+counters, and phase breakdowns are EXACTLY the eager driver's (which in
+turn equals a serial oracle) — only the distance-evaluation tally may
+differ, and for the combinable schemes it stays under one kernel per
+condensed cell. Also fuzzes bound admissibility (bound ≤ true distance)
+over random singleton and merged-cluster pairs, and pins the
+all-unevaluated / all-retired / heavy-ties edges.
+
+This is the container-side stand-in for the lazy arm of
+`rust/tests/runtime_equivalence.rs` (no Rust toolchain here); the Rust
+suite pins the same invariants in CI. Run as a script to print the
+eval-ratio table backing the C1f bench thresholds.
+"""
+
+import math
+
+import numpy as np
+
+from test_event_runtime import (
+    DIST,
+    MIN,
+    TRI,
+    F32,
+    INF,
+    Endpoint,
+    Model,
+    Partition,
+    coeffs,
+    condensed_index,
+    condensed_len,
+    condensed_pair,
+    global_min,
+    lw_update,
+    tag,
+)
+
+ANN = 1  # re-exported for clarity; tag layout shared with the replica
+
+NPIV = 8
+SLACK = 1e-6  # relative slack covering f32 rounding (source.rs)
+
+
+# ---------------------------------------------------------------------------
+# data::distance replica + synthetic points
+# ---------------------------------------------------------------------------
+
+
+def kernel(pts, a, b):
+    """Euclidean kernel: f64 accumulate, f32 result (data/distance.rs)."""
+    d = pts[a] - pts[b]
+    return F32(math.sqrt(float(np.dot(d, d))))
+
+
+def gaussian_points(n, d, k, seed):
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(0.0, 4.0, size=(k, d))
+    pts = centers[rng.integers(0, k, size=n)] + rng.normal(0.0, 1.0, size=(n, d))
+    return [np.asarray(p, dtype=np.float64) for p in pts]
+
+
+def build_matrix(pts):
+    n = len(pts)
+    return [kernel(pts, i, j) for i in range(n) for j in range(i + 1, n)]
+
+
+# ---------------------------------------------------------------------------
+# linkage::lw_update replica, incl. the exact min/max special case
+# ---------------------------------------------------------------------------
+
+
+def lw(scheme, n_i, n_j, n_k, d_ki, d_kj, d_ij):
+    if np.isinf(d_ki) or np.isinf(d_kj):
+        return INF
+    if scheme == "single":
+        return min(d_ki, d_kj)
+    if scheme == "complete":
+        return max(d_ki, d_kj)
+    return lw_update(coeffs(scheme, n_i, n_j, n_k), d_ki, d_kj, d_ij)
+
+
+def combinable(scheme):
+    return scheme in ("single", "complete")
+
+
+# ---------------------------------------------------------------------------
+# matrix/source.rs: LazyGeom
+# ---------------------------------------------------------------------------
+
+
+class LazyGeom:
+    """Pivot tables + cluster hulls + exact block evaluation."""
+
+    def __init__(self, pts, scheme):
+        self.pts = pts
+        self.is_max = scheme == "complete"
+        self.combinable = combinable(scheme)
+        n = len(pts)
+        self.members = [[x] for x in range(n)]
+        npiv = min(NPIV, n)
+        arr = np.stack(pts)
+        dp = np.zeros((n, npiv))
+        piv = 0  # farthest-point maximin, seeded at point 0
+        for t in range(npiv):
+            dp[:, t] = np.sqrt(((arr - arr[piv]) ** 2).sum(axis=1))
+            piv = int(np.argmax(dp[:, : t + 1].min(axis=1)))
+        self.dp = dp  # immutable point-level pivot norms (pair bounds)
+        self.lo = dp.copy()
+        self.hi = dp.copy()
+        self.ver = [0] * n  # hull versions: memo key for cached bounds
+        self.build_kernels = npiv * (n - 1)
+
+    def bound(self, a, b):
+        """Admissible lower bound on the cluster-pair cell value
+        (source.rs cell_key): per-pivot interval gap (min) or spread
+        (max), minus the relative slack that covers f32 rounding."""
+        la, ha, lb, hb = self.lo[a], self.hi[a], self.lo[b], self.hi[b]
+        if self.is_max:
+            raw = np.maximum(ha - lb, hb - la)
+        else:
+            raw = np.maximum(lb - ha, la - hb)
+        g = float((raw - SLACK * (ha + hb)).max())
+        return F32(g) if g > 0.0 else F32(0.0)
+
+    def pair_lb(self, x, y):
+        """Admissible lower bound on kernel(x, y) (source.rs pair_lb)."""
+        nx, ny = self.dp[x], self.dp[y]
+        return F32(float((np.abs(nx - ny) - SLACK * (nx + ny)).max()))
+
+    def pair_ub(self, x, y):
+        """Admissible upper bound on kernel(x, y) (source.rs pair_ub)."""
+        nx, ny = self.dp[x], self.dp[y]
+        return F32(float(((nx + ny) * (1.0 + SLACK)).min()))
+
+    def eval_cell(self, a, b):
+        """Exact cell value + kernels spent (block min/max over members).
+        Member pairs whose pivot bound proves they cannot move the
+        reduce are skipped — the result is still the exact f32 block
+        reduce (source.rs eval_cell). Non-combinable schemes only ever
+        evaluate singleton pairs — any fold would have materialized the
+        cell (the Touch-only-when-combinable invariant)."""
+        if not self.combinable:
+            assert len(self.members[a]) == 1 and len(self.members[b]) == 1
+        best = None
+        count = 0
+        for x in self.members[a]:
+            for y in self.members[b]:
+                if best is not None:
+                    if self.is_max:
+                        if self.pair_ub(x, y) <= best:
+                            continue
+                    elif self.pair_lb(x, y) >= best:
+                        continue
+                v = kernel(self.pts, x, y)
+                count += 1
+                if best is None or (v > best if self.is_max else v < best):
+                    best = v
+        return best, count
+
+    def apply_merge(self, i, j):
+        self.members[i] += self.members[j]
+        self.members[j] = []
+        self.lo[i] = np.minimum(self.lo[i], self.lo[j])
+        self.hi[i] = np.maximum(self.hi[i], self.hi[j])
+        self.ver[i] += 1
+
+
+# ---------------------------------------------------------------------------
+# matrix/shard.rs: the two cell stores behind one protocol driver
+# ---------------------------------------------------------------------------
+
+
+class EagerStore:
+    """ShardStore stand-in: materialized cells, exact root min."""
+
+    def __init__(self, cells):
+        self.cells = list(cells)
+        self.ops = 0
+        self.evals = 0
+        self.peak = 0
+
+    def min_cell(self):
+        best, idx = INF, None
+        for off, v in enumerate(self.cells):
+            if v < best:
+                best, idx = v, off
+        return best, idx
+
+    def send_value(self, off):
+        return self.cells[off]
+
+    def retire(self, off):
+        self.cells[off] = INF
+        self.ops += 1
+
+    def fold(self, scheme, off, k, i, j, n_i, n_j, n_k, d_kj, d_ij):
+        assert not math.isnan(d_kj)
+        self.cells[off] = lw(scheme, n_i, n_j, n_k, self.cells[off], d_kj, d_ij)
+        self.ops += 1
+
+    def take_ops(self):
+        o, self.ops = self.ops, 0
+        return o
+
+
+class LazyStore:
+    """Three-state store: overlay + retired set + bound-guided min."""
+
+    def __init__(self, part, me, geom):
+        self.part, self.geom = part, geom
+        self.my = part.cells_of(me)
+        self.overlay = {}
+        self.retired = set()
+        self.bcache = {}  # off -> (hull versions, bound): pure memo
+        self.ops = 0
+        self.evals = geom.build_kernels  # pivot tables, charged once
+        self.peak = 0
+
+    def pair(self, off):
+        return condensed_pair(self.part.n, self.my[off])
+
+    def evaluate(self, off):
+        a, b = self.pair(off)
+        v, c = self.geom.eval_cell(a, b)
+        self.evals += c
+        self.overlay[off] = v
+        self.peak = max(self.peak, len(self.overlay))
+        return v
+
+    def min_cell(self):
+        """lazy_min: best-first over derived keys (value if evaluated,
+        admissible bound otherwise, inf if retired). The arg-min key is
+        evaluated and the scan repeated until the arg-min is realized —
+        only cells whose bound undercuts the true minimum ever pay a
+        kernel. Exact (min, lowest offset), the same tie-break as the
+        eager tournament root."""
+        while True:
+            best, idx = INF, None
+            for off in range(len(self.my)):
+                if off in self.retired:
+                    continue
+                v = self.overlay.get(off)
+                if v is None:
+                    # Memoized on hull versions — recomputing would give
+                    # the identical value (replica-speed device only).
+                    a, b = self.pair(off)
+                    key = (self.geom.ver[a], self.geom.ver[b])
+                    hit = self.bcache.get(off)
+                    if hit is not None and hit[0] == key:
+                        v = hit[1]
+                    else:
+                        v = self.geom.bound(a, b)
+                        self.bcache[off] = (key, v)
+                if v < best:
+                    best, idx = v, off
+            if idx is None or idx in self.overlay:
+                return best, idx
+            self.evaluate(idx)
+
+    def send_value(self, off):
+        if off in self.overlay:
+            return self.overlay[off]
+        if self.geom.combinable:
+            return float("nan")  # wire sentinel: same 4 bytes a value costs
+        a, b = self.pair(off)
+        v, c = self.geom.eval_cell(a, b)
+        self.evals += c  # no overlay insert: the cell retires right after
+        return v
+
+    def retire(self, off):
+        self.retired.add(off)
+        self.overlay.pop(off, None)
+        self.ops += 1
+
+    def fold(self, scheme, off, k, i, j, n_i, n_j, n_k, d_kj, d_ij):
+        local = self.overlay.get(off)
+        if local is None and math.isnan(d_kj):
+            # Both operands deferred: stay unevaluated (ShardOp::Touch).
+            assert self.geom.combinable
+            self.ops += 1
+            return
+        d_ki = local if local is not None else self.evaluate(off)
+        if math.isnan(d_kj):
+            v, c = self.geom.eval_cell(min(k, j), max(k, j))
+            self.evals += c
+            d_kj = v
+        self.overlay[off] = lw(scheme, n_i, n_j, n_k, d_ki, d_kj, d_ij)
+        self.peak = max(self.peak, len(self.overlay))
+        self.ops += 1
+
+    def take_ops(self):
+        o, self.ops = self.ops, 0
+        return o
+
+
+def path_len(m):
+    """Canonical per-op maintenance charge (root-ward path length)."""
+    if m <= 1:
+        return 1
+    return (1 << (m - 1).bit_length()).bit_length()
+
+
+# ---------------------------------------------------------------------------
+# the protocol driver (task.rs under --scan indexed), mode-parameterized
+# ---------------------------------------------------------------------------
+
+
+def worker(ep, part, scheme, mode, pts, dmatrix):
+    me, p, n = ep.rank, ep.p, part.n
+    if me == 0:
+        flat = [c for pt in pts for c in pt]  # Dataset wire: n·d f32 coords
+        for dst in range(1, p):
+            ep.send(dst, DIST, ("shard", flat))
+    else:
+        yield (0, DIST)
+    my_cell0 = part.cells_of(me)
+    m = len(my_cell0)
+    ep.compute(m)  # §5.1 cell builds — or the lazy mode's parity charge
+    ep.compute(m)  # index build (tournament tree / segment keys)
+    if mode == "eager":
+        store = EagerStore([dmatrix[c] for c in my_cell0])
+    else:
+        store = LazyStore(part, me, LazyGeom(pts, scheme))
+    phases = [ep.clock, 0.0, 0.0, 0.0]
+    sizes = [1.0] * n
+    alive = list(range(n))
+    merges = []
+    pl = path_len(m)
+
+    for it in range(n - 1):
+        t0 = ep.clock
+        ep.compute(1)  # indexed scan: one root read
+        lmin, lidx = store.min_cell()
+        gidx = my_cell0[lidx] if lidx is not None else None
+        phases[1] += ep.clock - t0
+        t1 = ep.clock
+
+        t = tag(it, MIN)
+        for dst in range(p):
+            if dst != me:
+                ep.send(dst, t, ("localmin", (float(lmin), gidx)))
+        pairs = [None] * p
+        pairs[me] = (float(lmin), gidx)
+        for src in range(p):
+            if src != me:
+                msg = yield (src, t)
+                pairs[src] = msg[1]
+
+        win, d_ij, widx = global_min(pairs)
+        i, j = condensed_pair(n, widx)
+        at = tag(it, ANN)
+        if me == win:
+            ann = ("announce", (i, j, sizes[i], sizes[j]))
+            for dst in range(p):
+                if dst != me:
+                    ep.send(dst, at, ann)
+        else:
+            ann = yield (win, at)
+        assert ann[1][:2] == (i, j)
+        n_i, n_j = ann[1][2], ann[1][3]
+        phases[2] += ep.clock - t1
+        t2 = ep.clock
+
+        outbound = [[] for _ in range(p)]
+        expect = [False] * p
+        local = []
+        for k in alive:
+            if k == i or k == j:
+                continue
+            ckj = condensed_index(n, min(k, j), max(k, j))
+            cki = condensed_index(n, min(k, i), max(k, i))
+            if part.owner(ckj) == me:
+                off = part.local_offset(ckj)
+                o = part.owner(cki)
+                v = store.send_value(off)
+                if o == me:
+                    local.append((k, v))
+                else:
+                    outbound[o].append((k, v))
+                store.retire(off)
+            elif part.owner(cki) == me:
+                expect[part.owner(ckj)] = True
+        cij = condensed_index(n, i, j)
+        if part.owner(cij) == me:
+            store.retire(part.local_offset(cij))
+        tt = tag(it, TRI)
+        for dst in range(p):
+            if outbound[dst]:
+                ep.send(dst, tt, ("triples", outbound[dst]))
+        for (k, d_kj) in local:
+            off = part.local_offset(condensed_index(n, min(k, i), max(k, i)))
+            store.fold(scheme, off, k, i, j, n_i, n_j, sizes[k], d_kj, F32(d_ij))
+        for src in range(p):
+            if expect[src]:
+                msg = yield (src, tt)
+                ep.compute(len(msg[1]))
+                for (k, d_kj) in msg[1]:
+                    off = part.local_offset(condensed_index(n, min(k, i), max(k, i)))
+                    store.fold(scheme, off, k, i, j, n_i, n_j, sizes[k], d_kj, F32(d_ij))
+        # Metadata BEFORE the maintenance flush (do_retire_update order):
+        # segment keys derive from post-merge liveness.
+        sizes[i] = n_i + n_j
+        sizes[j] = 0.0
+        alive.remove(j)
+        merges.append((i, j, float(d_ij)))
+        if mode == "lazy":
+            store.geom.apply_merge(i, j)
+        if m > 0:
+            ep.compute(store.take_ops() * pl)
+        phases[3] += ep.clock - t2
+
+    return {
+        "rank": me,
+        "merges": merges,
+        "clock": ep.clock,
+        "msgs": ep.msgs,
+        "bytes": ep.bytes,
+        "phases": phases,
+        "evals": store.evals,
+        "peak": store.peak,
+    }
+
+
+def run_mode(kind, scheme, mode, pts, dmatrix, n, p, model=None):
+    model = model or Model()
+    boxes = [[] for _ in range(p)]
+    part = Partition(kind, n, p)
+    eps = [Endpoint(r, p, model, boxes) for r in range(p)]
+    gens = [worker(eps[r], part, scheme, mode, pts, dmatrix) for r in range(p)]
+    waiting = [None] * p
+    results = [None] * p
+    for r in range(p):
+        try:
+            waiting[r] = gens[r].send(None)
+        except StopIteration as s:
+            results[r] = s.value
+    while any(res is None for res in results):
+        progress = False
+        for r in range(p):
+            if results[r] is not None:
+                continue
+            src, t = waiting[r]
+            msg = eps[r].try_recv(src, t)
+            if msg is None:
+                continue
+            progress = True
+            try:
+                waiting[r] = gens[r].send(msg)
+            except StopIteration as s:
+                results[r] = s.value
+        assert progress, "sim deadlocked"
+    return results
+
+
+# ---------------------------------------------------------------------------
+# serial oracle with the exact-min/max lw
+# ---------------------------------------------------------------------------
+
+
+def serial_oracle(scheme, matrix, n):
+    cells = list(matrix)
+    sizes = [1.0] * n
+    merges = []
+    for _ in range(n - 1):
+        best, bidx = INF, None
+        for idx, v in enumerate(cells):
+            if v < best:
+                best, bidx = v, idx
+        i, j = condensed_pair(n, bidx)
+        d_ij = cells[bidx]
+        n_i, n_j = sizes[i], sizes[j]
+        for k in range(n):
+            if k == i or k == j or sizes[k] == 0.0:
+                continue
+            cki = condensed_index(n, min(k, i), max(k, i))
+            ckj = condensed_index(n, min(k, j), max(k, j))
+            cells[cki] = lw(scheme, n_i, n_j, sizes[k], cells[cki], cells[ckj], d_ij)
+            cells[ckj] = INF
+        cells[bidx] = INF
+        sizes[i] += sizes[j]
+        sizes[j] = 0.0
+        merges.append((i, j, float(d_ij)))
+    return merges
+
+
+# ---------------------------------------------------------------------------
+# the differential
+# ---------------------------------------------------------------------------
+
+KINDS = ["balanced", "rows", "cyclic"]
+SCHEMES = ["single", "complete", "average"]
+
+
+def check(kind, scheme, n, p, seed, pts=None):
+    pts = pts if pts is not None else gaussian_points(n, 4, 4, seed)
+    dm = build_matrix(pts)
+    oracle = serial_oracle(scheme, dm, n)
+    eager = run_mode(kind, scheme, "eager", pts, dm, n, p)
+    lazy = run_mode(kind, scheme, "lazy", pts, dm, n, p)
+    ctx = f"{kind}/{scheme} n={n} p={p} seed={seed}"
+    for r in range(p):
+        assert eager[r]["merges"] == lazy[r]["merges"], f"{ctx}: rank {r} merges"
+        assert eager[r]["clock"] == lazy[r]["clock"], \
+            f"{ctx}: rank {r} clock {eager[r]['clock']} != {lazy[r]['clock']}"
+        assert eager[r]["msgs"] == lazy[r]["msgs"], f"{ctx}: rank {r} msgs"
+        assert eager[r]["bytes"] == lazy[r]["bytes"], f"{ctx}: rank {r} bytes"
+        assert eager[r]["phases"] == lazy[r]["phases"], f"{ctx}: rank {r} phases"
+        assert eager[r]["evals"] == 0, ctx
+    assert eager[0]["merges"] == oracle, f"{ctx}: diverges from serial oracle"
+    total = sum(r["evals"] for r in lazy)
+    assert total > 0, ctx
+    m = condensed_len(n)
+    build = p * min(NPIV, n) * (n - 1)  # per-rank pivot tables, fixed cost
+    if combinable(scheme):
+        # Deferred folds + bound-guided eval: at most one kernel per
+        # condensed cell even at degenerate shapes (p ≈ m), and strictly
+        # fewer on anything non-trivial. The O(n·p) pivot build is
+        # reported separately — it vanishes against m at bench scale,
+        # where C1f pins total < 0.5·m.
+        assert total - build <= m, f"{ctx}: {total - build} cell kernels !<= {m}"
+    return total, m, build
+
+
+def test_lazy_equals_eager_all_combos():
+    for kind in KINDS:
+        for scheme in SCHEMES:
+            for p in [1, 2, 7]:
+                check(kind, scheme, 24, p, 300 + p)
+
+
+def test_heavy_ties_and_duplicates():
+    # Duplicate points → zero-distance ties: the lowest-offset tie-break
+    # must agree between the bound-guided min and the eager root.
+    pts = gaussian_points(18, 3, 2, 9)
+    for src, dst in [(1, 5), (2, 11), (1, 14)]:
+        pts[dst] = pts[src].copy()
+    for kind in KINDS:
+        for scheme in ["single", "average"]:
+            check(kind, scheme, 18, 3, 0, pts=pts)
+
+
+def test_all_unevaluated_and_all_retired_edges():
+    # p ≫ cells/rank: tiny shards hit the all-retired (min over nothing →
+    # inf) and never-scanned (all-unevaluated at first flush) edges.
+    check("balanced", "single", 8, 7, 77)
+    check("cyclic", "complete", 8, 7, 78)
+
+
+def test_bound_admissible_fuzz():
+    pts = gaussian_points(80, 4, 5, 11)
+    geom = LazyGeom(pts, "single")
+    rng = np.random.default_rng(12)
+    for _ in range(10_000):
+        a, b = rng.integers(0, 80, size=2)
+        if a == b:
+            continue
+        d = float(kernel(pts, int(a), int(b)))
+        assert float(geom.bound(a, b)) <= d, (a, b)
+        assert float(geom.pair_lb(int(a), int(b))) <= d, (a, b)
+        assert float(geom.pair_ub(int(a), int(b))) >= d, (a, b)
+    # Merged clusters: hull bounds stay admissible against block evals.
+    alive = list(range(80))
+    for step in range(40):
+        i, j = sorted(rng.choice(len(alive), size=2, replace=False))
+        a, b = alive[i], alive[j]
+        geom.apply_merge(a, b)
+        alive.pop(j)
+        for _ in range(50):
+            x, y = rng.choice(len(alive), size=2, replace=False)
+            va, _ = geom.eval_cell(alive[x], alive[y])
+            assert float(geom.bound(alive[x], alive[y])) <= float(va), step
+
+
+def test_single_linkage_eval_ratio_stays_sub_half():
+    # The C1f acceptance shape at python scale: single linkage on a
+    # clustered workload realizes well under half the condensed cells.
+    # The O(n·p·NPIV) pivot build still weighs ~40% of m at n=160 (it is
+    # 1.6% at the bench's n=10⁴), so the sub-half claim is pinned on the
+    # cell kernels and the build is bounded separately.
+    total, m, build = check("balanced", "single", 160, 4, 5)
+    assert total - build < m // 2, (total, build, m)
+    assert total < m, (total, m)
+
+
+if __name__ == "__main__":
+    for n in [100, 200, 400]:
+        for scheme in ["single", "complete"]:
+            total, m, build = check("balanced", scheme, n, 4, 5)
+            print(
+                f"n={n:4} {scheme:8} evals={total:8} (build {build:6}) "
+                f"m={m:8} ratio={total / m:.3f}"
+            )

@@ -303,6 +303,9 @@ impl RunBatch {
             let n = self.datasets[job.dataset.0].n();
             anyhow::ensure!(n >= 2, "job {j}: need at least 2 items");
             anyhow::ensure!(job.cfg.p >= 1, "job {j}: need at least 1 rank");
+            job.cfg
+                .validate_distances(&self.datasets[job.dataset.0])
+                .map_err(|e| e.context(format!("job {j}")))?;
         }
         let timer = Timer::start();
         let shared: Vec<Arc<SharedBuild>> =
@@ -460,6 +463,8 @@ impl RunBatch {
             restarts: ok.iter().map(|r| r.stats.restarts).sum(),
             checkpoint_bytes: ok.iter().map(|r| r.stats.checkpoint_bytes).sum(),
             peak_shard_cells: ok.iter().map(|r| r.stats.peak_shard_cells).max().unwrap_or(0),
+            distance_evals: ok.iter().map(|r| r.stats.distance_evals).sum(),
+            peak_resident_cells: ok.iter().map(|r| r.stats.peak_resident_cells).sum(),
             jobs: self.jobs.len() as u64,
             matrix_builds: shared.iter().map(|s| s.builds()).sum(),
             pool_hits: plock(&pool).hits(),

@@ -34,6 +34,7 @@ use std::sync::Mutex;
 
 use crate::comm::TrafficStats;
 use crate::dendrogram::Merge;
+use crate::matrix::LazyGeom;
 use crate::metrics::PhaseBreakdown;
 
 /// Checkpoint cadence. Parsed from `--checkpoint` as `off` or `every:K`
@@ -90,15 +91,23 @@ impl std::fmt::Display for Checkpoint {
 pub struct RankSnapshot {
     /// Iteration the snapshot resumes at (a multiple of the cadence).
     pub wave: usize,
-    /// The shard's cell vector, retired `+inf` sentinels included.
+    /// The shard's cell vector, retired `+inf` sentinels included
+    /// (empty under `--distances lazy` — the cells live in
+    /// [`LazySnapshot::overlay`] instead).
     pub cells: Vec<f32>,
     /// Live-cell count — protocol state, not derivable from `cells`
     /// (an input matrix may legitimately contain `+inf` live cells).
     pub live: u64,
-    /// Replicated cluster sizes.
+    /// Cluster sizes for the tracked slots `size_base..n`.
     pub sizes: Vec<f32>,
-    /// Replicated liveness per cluster index.
+    /// First tracked metadata slot (0 under eager — full replica;
+    /// the rank's first owned row under lazy sharded metadata).
+    pub size_base: usize,
+    /// Liveness per tracked slot (`size_base..n`, same range as `sizes`).
     pub alive: Vec<bool>,
+    /// Lazy-distance state (ISSUE-10): `Some` exactly under
+    /// `--distances lazy`.
+    pub lazy: Option<LazySnapshot>,
     /// Materialized merge list (rank 0 only; empty elsewhere).
     pub merges: Vec<Merge>,
     /// FNV-1a merge-digest state — resumed via `Fnv64::from_state`.
@@ -121,16 +130,38 @@ pub struct RankSnapshot {
     pub traffic: TrafficStats,
 }
 
+/// The lazy distance-source half of a [`RankSnapshot`] (ISSUE-10): the
+/// evaluated overlay stands in for the cell vector, and the evaluation
+/// tally rides along so a restart never re-charges kernels the crashed
+/// run already paid for before the cut. The geometry clone carries the
+/// merged member chains / pivot hulls at the wave — a real system would
+/// re-read the input dataset and replay the merge prefix instead of
+/// writing the coordinates out, so `nbytes` does not count it.
+#[derive(Clone, Debug)]
+pub struct LazySnapshot {
+    /// Replicated coordinate geometry at the wave (chains + hulls).
+    pub geom: Box<LazyGeom>,
+    /// Evaluated cells, ascending local offset: `(offset, value)`.
+    pub overlay: Vec<(u32, f32)>,
+    /// Distance-kernel calls charged up to the cut.
+    pub evals: u64,
+    /// Peak resident evaluated cells up to the cut.
+    pub peak_resident: u64,
+}
+
 impl RankSnapshot {
     /// Serialized size a real system would write (closed form, counted
     /// into the host-side `checkpoint_bytes` tally): f32 cells and
     /// sizes, one liveness byte per cluster, 12 bytes per merge, plus a
-    /// fixed header for the scalars.
+    /// fixed header for the scalars. A lazy snapshot writes its overlay
+    /// (8 bytes per evaluated cell) and tallies (16) instead of cells;
+    /// the dataset is not written (re-read at restore, like the input).
     pub fn nbytes(&self) -> u64 {
         64 + 4 * self.cells.len() as u64
             + 4 * self.sizes.len() as u64
             + self.alive.len() as u64
             + 12 * self.merges.len() as u64
+            + self.lazy.as_ref().map_or(0, |lz| 16 + 8 * lz.overlay.len() as u64)
     }
 }
 
@@ -191,7 +222,9 @@ mod tests {
             cells: vec![tag; 3],
             live: 3,
             sizes: vec![1.0; 4],
+            size_base: 0,
             alive: vec![true; 4],
+            lazy: None,
             merges: Vec::new(),
             digest: 0,
             phases: PhaseBreakdown::default(),
@@ -246,5 +279,25 @@ mod tests {
         let s = snap(4, 0.0);
         // 64 header + 3 cells * 4 + 4 sizes * 4 + 4 alive bytes.
         assert_eq!(s.nbytes(), 64 + 12 + 16 + 4);
+    }
+
+    #[test]
+    fn nbytes_counts_lazy_overlay_not_cells() {
+        use crate::coordinator::source::DistSource;
+        let mut s = snap(4, 0.0);
+        s.cells = Vec::new();
+        s.lazy = Some(LazySnapshot {
+            geom: Box::new(LazyGeom::new(
+                DistSource::Points(vec![vec![0.0, 0.0], vec![1.0, 0.0], vec![0.0, 2.0]]),
+                false,
+                true,
+            )),
+            overlay: vec![(0, 1.0), (2, 3.0)],
+            evals: 5,
+            peak_resident: 2,
+        });
+        // 64 header + 0 cells + 4 sizes * 4 + 4 alive + lazy (16 + 2*8);
+        // the geometry/dataset is deliberately uncounted.
+        assert_eq!(s.nbytes(), 64 + 16 + 4 + 16 + 16);
     }
 }

@@ -22,10 +22,11 @@ pub mod task;
 pub mod worker;
 
 pub use batch::{BatchRun, BatchShape, DatasetId, OnFailure, RunBatch};
-pub use checkpoint::{Checkpoint, CheckpointStore, RankSnapshot};
+pub use checkpoint::{Checkpoint, CheckpointStore, LazySnapshot, RankSnapshot};
 pub use costmodel_host::HostCostModel;
 pub use sched::Runtime;
 pub use source::DistSource;
+pub use crate::matrix::DistanceMode;
 
 use std::sync::Arc;
 
@@ -234,6 +235,14 @@ pub struct ClusterConfig {
     pub retry: RetryPolicy,
     /// Snapshot cadence for crash recovery (`--checkpoint`; default off).
     pub checkpoint: Checkpoint,
+    /// Distance-cell sourcing (`--distances` on the CLI; ISSUE-10).
+    /// `Eager` — the default — materializes every owned cell up front
+    /// (§5.1); `Lazy` keeps the dataset and evaluates a cell only when
+    /// it becomes a min-candidate or is touched by a §6b LW fold.
+    /// Dendrograms, merge order, virtual clocks, and traffic stay
+    /// bitwise identical; only `distance_evals`/`peak_resident_cells`
+    /// (and host memory) differ.
+    pub distances: DistanceMode,
 }
 
 impl ClusterConfig {
@@ -255,6 +264,7 @@ impl ClusterConfig {
             faults: None,
             retry: RetryPolicy::default(),
             checkpoint: Checkpoint::default(),
+            distances: DistanceMode::default(),
         }
     }
 
@@ -358,6 +368,16 @@ impl ClusterConfig {
         self
     }
 
+    /// Select the distance-cell sourcing mode (`--distances` on the
+    /// CLI). [`DistanceMode::Lazy`] needs a raw dataset (points or
+    /// ensemble — a prebuilt matrix has no coordinates to evaluate
+    /// from), the indexed scan, the incremental walk, and batched
+    /// maintenance; [`ClusterConfig::run_source`] rejects other combos.
+    pub fn with_distances(mut self, d: DistanceMode) -> Self {
+        self.distances = d;
+        self
+    }
+
     /// Run the distributed protocol on a prebuilt matrix (rank 0 ships
     /// shards — the paper's §5.3 preamble).
     pub fn run(&self, matrix: &CondensedMatrix) -> anyhow::Result<ClusterRun> {
@@ -377,6 +397,7 @@ impl ClusterConfig {
             "fault injection requires an event-driven runtime (event|event:N|steal:N): \
              retry timers fire when the scheduler is idle, which thread-per-rank cannot observe"
         );
+        self.validate_distances(&source)?;
         let p = self.effective_p(n);
 
         let timer = Timer::start();
@@ -389,6 +410,36 @@ impl ClusterConfig {
         let outputs = sched::run_ranks(self.runtime, endpoints, &ctx, &source)?;
         let wall_s = timer.elapsed_s();
         assemble_run(n, matrix_builds, self.runtime.label(), wall_s, outputs)
+    }
+
+    /// Reject configurations the lazy distance source cannot honor
+    /// (shared by the solo path and the batch front-end). Inert under
+    /// the default eager mode.
+    pub(crate) fn validate_distances(&self, source: &DistSource) -> anyhow::Result<()> {
+        if self.distances == DistanceMode::Eager {
+            return Ok(());
+        }
+        anyhow::ensure!(
+            !matches!(source, DistSource::Matrix(_)),
+            "--distances lazy needs a raw dataset (points|ensemble): \
+             a prebuilt matrix has no coordinates to evaluate cells from"
+        );
+        anyhow::ensure!(
+            matches!(self.scan, ScanStrategy::Indexed),
+            "--distances lazy requires --scan indexed: \
+             a full rescan reads every cell, defeating on-demand evaluation"
+        );
+        anyhow::ensure!(
+            self.walk == AliveWalk::Incremental,
+            "--distances lazy requires --alive-walk incremental: \
+             the full sweep visits below the rank's sharded-metadata base"
+        );
+        anyhow::ensure!(
+            self.maintenance == MaintenancePolicy::Batched,
+            "--distances lazy requires --index-maintenance batched: \
+             the lazy store repairs derived keys in one wave per iteration"
+        );
+        Ok(())
     }
 
     /// Ranks actually used for an n-item input. More ranks than condensed
@@ -413,6 +464,7 @@ impl ClusterConfig {
             faults: self.faults,
             retry: self.retry,
             checkpoint: self.checkpoint,
+            distances: self.distances,
             job: 0,
         }
     }
@@ -467,6 +519,8 @@ pub(crate) fn assemble_run(
         restarts: outputs.iter().map(|o| o.restarts).sum(),
         checkpoint_bytes: outputs.iter().map(|o| o.checkpoint_bytes).sum(),
         peak_shard_cells: outputs.iter().map(|o| o.shard_cells).max().unwrap_or(0),
+        distance_evals: outputs.iter().map(|o| o.distance_evals).sum(),
+        peak_resident_cells: outputs.iter().map(|o| o.peak_resident_cells).sum(),
         jobs: 1,
         matrix_builds,
         pool_hits: 0,
@@ -659,6 +713,98 @@ mod tests {
             assert_eq!(eager.stats.idx_waves, 0, "{kind:?}");
             assert!(batched.stats.idx_waves > 0, "{kind:?}");
         }
+    }
+
+    #[test]
+    fn lazy_identical_observables() {
+        // ISSUE-10: lazy distance sourcing must change NOTHING observable
+        // but the evaluation counters — same dendrogram, same virtual
+        // clocks, same traffic (the NaN wire sentinel costs the same 4
+        // bytes a value does), same scan/update/walk work.
+        let lp =
+            crate::data::GaussianSpec { n: 48, d: 4, k: 4, ..Default::default() }.generate(21);
+        let src = DistSource::Points(lp.points.clone());
+        let m = crate::matrix::condensed_len(48) as u64;
+        for kind in [PartitionKind::BalancedCells, PartitionKind::WholeRows, PartitionKind::Cyclic]
+        {
+            for scheme in [Scheme::Single, Scheme::Complete, Scheme::Average] {
+                let run = |d: DistanceMode| {
+                    ClusterConfig::new(scheme, 5)
+                        .with_partition(kind)
+                        .with_scan(ScanStrategy::Indexed)
+                        .with_distances(d)
+                        .run_source(src.clone())
+                        .unwrap()
+                };
+                let eager = run(DistanceMode::Eager);
+                let lazy = run(DistanceMode::Lazy);
+                crate::validate::dendrograms_equal(&eager.dendrogram, &lazy.dendrogram, 0.0)
+                    .unwrap_or_else(|e| panic!("{kind:?}/{scheme}: {e}"));
+                assert_eq!(eager.stats.virtual_s, lazy.stats.virtual_s, "{kind:?}/{scheme}");
+                assert_eq!(
+                    eager.stats.rank_virtual_s, lazy.stats.rank_virtual_s,
+                    "{kind:?}/{scheme}"
+                );
+                assert_eq!(eager.stats.msgs_sent, lazy.stats.msgs_sent, "{kind:?}/{scheme}");
+                assert_eq!(eager.stats.bytes_sent, lazy.stats.bytes_sent, "{kind:?}/{scheme}");
+                assert_eq!(
+                    eager.stats.cells_scanned, lazy.stats.cells_scanned,
+                    "{kind:?}/{scheme}"
+                );
+                assert_eq!(
+                    eager.stats.cells_updated, lazy.stats.cells_updated,
+                    "{kind:?}/{scheme}"
+                );
+                assert_eq!(
+                    eager.stats.alive_visited, lazy.stats.alive_visited,
+                    "{kind:?}/{scheme}"
+                );
+                // The evaluation counters are where the modes differ:
+                // eager reports 0 (its §5.1 build is priced by the clock,
+                // not this counter); lazy reports pivots + realized cells.
+                assert_eq!(eager.stats.distance_evals, 0, "{kind:?}/{scheme}");
+                assert_eq!(eager.stats.peak_resident_cells, 0, "{kind:?}/{scheme}");
+                assert!(lazy.stats.distance_evals > 0, "{kind:?}/{scheme}");
+                assert!(lazy.stats.peak_resident_cells > 0, "{kind:?}/{scheme}");
+                if matches!(scheme, Scheme::Single | Scheme::Complete) {
+                    // Bound-combinable schemes defer folded cells and
+                    // prune min-candidates: at most one kernel per
+                    // condensed cell beyond the fixed O(n·p·NPIV) pivot
+                    // build (which dwarfs m at this tiny n but is 1.6%
+                    // of it at the C1f bench's n = 10⁴; the python
+                    // replica measures ~0.3–0.6 kernels/cell here).
+                    let build = 5 * crate::matrix::NPIV as u64 * 47;
+                    assert!(
+                        lazy.stats.distance_evals <= build + m,
+                        "{kind:?}/{scheme}: {} evals !<= build {build} + {m} cells",
+                        lazy.stats.distance_evals
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lazy_rejects_incompatible_configs() {
+        let lp =
+            crate::data::GaussianSpec { n: 10, d: 3, k: 2, ..Default::default() }.generate(4);
+        let src = DistSource::Points(lp.points.clone());
+        let base = || {
+            ClusterConfig::new(Scheme::Single, 3)
+                .with_scan(ScanStrategy::Indexed)
+                .with_distances(DistanceMode::Lazy)
+        };
+        // A prebuilt matrix has no coordinates to evaluate from.
+        assert!(base().run(&src.build_matrix()).is_err());
+        // Full rescan / full walk / eager maintenance defeat or break laziness.
+        assert!(base().with_scan(ScanStrategy::default()).run_source(src.clone()).is_err());
+        assert!(base().with_alive_walk(AliveWalk::Full).run_source(src.clone()).is_err());
+        assert!(base()
+            .with_maintenance(crate::matrix::MaintenancePolicy::Eager)
+            .run_source(src.clone())
+            .is_err());
+        // The compatible combination runs.
+        assert!(base().run_source(src).is_ok());
     }
 
     #[test]

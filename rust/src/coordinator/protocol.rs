@@ -46,8 +46,14 @@ pub enum ProtoMsg {
     /// Step 2 payload: (local minimum value, global condensed index).
     /// Index `u64::MAX` means "no active cell on this rank".
     LocalMin(f32, u64),
-    /// Step 5 payload: the merging slot pair (i, j), i < j.
-    MergeAnnounce(u32, u32),
+    /// Step 5 payload: the merging slot pair (i, j), i < j, plus the
+    /// merging clusters' sizes (n_i, n_j). Sizes are sharded (ISSUE-10:
+    /// each rank keeps only the slots ≥ its first owned row), so the
+    /// winner — which owns cell (i,j) and therefore the size view
+    /// covering both slots — piggy-backs them on the broadcast every
+    /// rank already receives; receivers use them for the §6b LW
+    /// coefficients without a replicated size vector.
+    MergeAnnounce(u32, u32, f32, f32),
     /// Step 6a payload: `(k, D_kj)` pairs this sender owns, destined for
     /// the owner of the corresponding (k,i) cell.
     Triples(Vec<(u32, f32)>),
@@ -66,7 +72,7 @@ impl Wire for ProtoMsg {
             // 4 bytes/cell + small header, as C+MPI would send.
             ProtoMsg::Shard(cells) => 8 + 4 * cells.len(),
             ProtoMsg::LocalMin(_, _) => 12,
-            ProtoMsg::MergeAnnounce(_, _) => 8,
+            ProtoMsg::MergeAnnounce(_, _, _, _) => 16,
             ProtoMsg::Triples(ts) => 8 + 8 * ts.len(),
             ProtoMsg::MinList(ms) => 8 + 16 * ms.len(),
             ProtoMsg::Dataset(_, _, _, flat) => 16 + 4 * flat.len(),
@@ -91,10 +97,10 @@ impl ProtoMsg {
         }
     }
 
-    /// Unwrap a [`ProtoMsg::MergeAnnounce`] into the (i, j) slot pair.
-    pub fn expect_merge(self) -> (usize, usize) {
+    /// Unwrap a [`ProtoMsg::MergeAnnounce`] into ((i, j), (n_i, n_j)).
+    pub fn expect_merge(self) -> ((usize, usize), (f32, f32)) {
         match self {
-            ProtoMsg::MergeAnnounce(i, j) => (i as usize, j as usize),
+            ProtoMsg::MergeAnnounce(i, j, ni, nj) => ((i as usize, j as usize), (ni, nj)),
             other => panic!("protocol error: expected MergeAnnounce, got {other:?}"),
         }
     }
@@ -135,7 +141,7 @@ mod tests {
     #[test]
     fn wire_sizes_scale() {
         assert_eq!(ProtoMsg::LocalMin(1.0, 2).nbytes(), 12);
-        assert_eq!(ProtoMsg::MergeAnnounce(1, 2).nbytes(), 8);
+        assert_eq!(ProtoMsg::MergeAnnounce(1, 2, 1.0, 1.0).nbytes(), 16);
         assert_eq!(ProtoMsg::Shard(vec![0.0; 100]).nbytes(), 408);
         assert_eq!(ProtoMsg::Triples(vec![(1, 2.0); 10]).nbytes(), 88);
     }

@@ -49,7 +49,7 @@
 use std::sync::{Arc, Mutex};
 
 use crate::comm::{global_min, Collectives, Endpoint, VirtualClock};
-use crate::coordinator::checkpoint::{CheckpointStore, RankSnapshot};
+use crate::coordinator::checkpoint::{CheckpointStore, LazySnapshot, RankSnapshot};
 use crate::coordinator::costmodel_host::{HostCostModel, HostOp, HOST_COSTS};
 use crate::coordinator::protocol::{tag, Phase, ProtoMsg, ACK_WAIT_TAG, DIST_TAG};
 use crate::coordinator::source::{DistSource, SharedBuild, SourceKind};
@@ -58,9 +58,10 @@ use crate::coordinator::worker::{
 };
 use crate::coordinator::{AliveWalk, ScanStrategy};
 use crate::dendrogram::Merge;
-use crate::linkage::lw_update;
+use crate::linkage::{lw_update, Scheme};
 use crate::matrix::{
-    condensed_index, condensed_pair, AliveSet, RankScratch, ShardOp, ShardStore, StatePool,
+    condensed_index, condensed_pair, AliveSet, DistanceMode, LazyCtx, LazyGeom, LazyStore,
+    PartitionKind, RankScratch, RankStore, ShardOp, ShardStore, StatePool,
 };
 use crate::metrics::PhaseBreakdown;
 use crate::util::fnv::Fnv64;
@@ -155,14 +156,30 @@ impl Step {
 /// so any poll can resume mid-protocol. Dropped (freeing the shard) the
 /// moment the output is assembled.
 struct RankState {
-    shard: ShardStore,
+    shard: RankStore,
     shard_cells: usize,
     /// Global condensed index of each local cell (pure function of the
     /// partition, precomputed once).
     my_cell0: Vec<usize>,
-    /// Replicated O(n) metadata: cluster sizes and the alive set.
+    /// Cluster sizes for slots `size_base..n`. Eager keeps the paper's
+    /// replicated O(n) vector (`size_base == 0`); under `--distances
+    /// lazy` (ISSUE-10) the metadata is sharded — a contiguous-kind
+    /// rank owns no cell with an endpoint below its first owned row, so
+    /// it stores nothing there and reads the merge sizes it can't see
+    /// from the winner's piggy-backed announce.
     sizes: Vec<f32>,
+    size_base: usize,
+    /// Interval-local liveness view (same base as `sizes`; a global
+    /// replica when `size_base == 0`).
     alive: AliveSet,
+    /// Replicated coordinate geometry for on-demand evaluation — `Some`
+    /// exactly when `shard` is [`RankStore::Lazy`].
+    geom: Option<Box<LazyGeom>>,
+    /// The announced merge sizes (n_i, n_j) of the current iteration —
+    /// set by the winner from its own view, by everyone else from the
+    /// `MergeAnnounce` payload.
+    mni: f32,
+    mnj: f32,
     merges: Vec<Merge>,
     merge_digest: Fnv64,
     phases: PhaseBreakdown,
@@ -192,6 +209,79 @@ struct RankState {
     /// applied through [`ShardStore::apply_batch`] so the indexed store
     /// can repair its tree in one wave per iteration (ISSUE-5).
     ops: Vec<ShardOp>,
+}
+
+/// One §6b Lance-Williams fold on the `(k,i)` cell at local offset
+/// `off` — the single body behind the local half (walk) and remote half
+/// (retire-update) of step 6b, for both distance modes.
+///
+/// Eager is the paper as written: read the stored `D_ki`, fold, log the
+/// `Set`. Lazy (ISSUE-10) dispatches on (local cell state, incoming
+/// sentinel):
+///
+/// * **(unevaluated, NaN)** — both sides deferred. Only bound-combinable
+///   schemes ship NaN, and for those the folded value *is* the block
+///   min/max over the merged member chains (exact `lw_update` special
+///   case), so the result cell can itself stay unevaluated: log a
+///   `Touch` (same write count as the eager `Set` — canonical clock
+///   parity) and let the geometry's merged hull bound it.
+/// * otherwise — materialize both operands exactly (the local side via
+///   [`LazyStore::evaluate`], a NaN incoming by re-deriving the sender's
+///   `(k,j)` cell from the replicated pre-merge geometry), fold, `Set`.
+///   Unevaluated cells imply either singleton endpoints (non-combinable
+///   schemes `Set` every fold) or a min/max-reducible block, so both
+///   evaluations are bitwise equal to the values an eager run holds.
+#[allow(clippy::too_many_arguments)]
+fn fold_into(
+    scheme: &Scheme,
+    store: &mut RankStore,
+    geom: Option<&LazyGeom>,
+    alive: &AliveSet,
+    n: usize,
+    cell0: &[usize],
+    off: usize,
+    k: usize,
+    i: usize,
+    j: usize,
+    sizes: (f32, f32, f32),
+    d_kj: f32,
+    d_ij: f32,
+    ops: &mut Vec<ShardOp>,
+) {
+    let (n_i, n_j, n_k) = sizes;
+    match store {
+        RankStore::Eager(shard) => {
+            let c = scheme.coeffs(n_i, n_j, n_k);
+            let v = lw_update(c, shard.get(off), d_kj, d_ij);
+            ops.push(ShardOp::Set(off as u32, v));
+        }
+        RankStore::Lazy(ls) => {
+            let geom = geom.expect("lazy store without geometry");
+            match (ls.value(off), d_kj.is_nan()) {
+                (None, true) => {
+                    debug_assert!(geom.combinable(), "NaN triple under a non-combinable scheme");
+                    ops.push(ShardOp::Touch(off as u32));
+                }
+                (local, incoming_nan) => {
+                    let ctx = LazyCtx { geom, alive, n, cell0 };
+                    let d_ki = match local {
+                        Some(v) => v,
+                        None => ls.evaluate(off, &ctx),
+                    };
+                    let d_kj = if incoming_nan {
+                        let (v, kernels) = geom.eval_cell(k.min(j), k.max(j));
+                        ls.add_evals(kernels);
+                        v
+                    } else {
+                        d_kj
+                    };
+                    let c = scheme.coeffs(n_i, n_j, n_k);
+                    let v = lw_update(c, d_ki, d_kj, d_ij);
+                    ops.push(ShardOp::Set(off as u32, v));
+                }
+            }
+        }
+    }
 }
 
 /// One rank of the distributed protocol as a pollable task.
@@ -418,6 +508,103 @@ impl RankTask {
         let p = self.ep.p();
         let part = &self.ctx.partition;
         let t_build = self.ep.clock.now();
+        // ISSUE-10 `--distances lazy`: replicate the raw dataset (the
+        // same `Dataset` wire messages as the eager distributed build)
+        // but materialize *no* cells — the rank keeps the quantized
+        // coordinates and evaluates cells on demand. The canonical clock
+        // charges mirror the eager build exactly (§5.1 cells, then the
+        // index build), so a lazy run replays bitwise-identical virtual
+        // time; only the realized kernel/memory tallies differ.
+        if self.ctx.distances == DistanceMode::Lazy {
+            let src: DistSource = if me == 0 {
+                let src = self.source.take().expect("rank 0 needs the data source");
+                let (flat, rows, cols) = src
+                    .to_wire()
+                    .expect("validated: lazy distances need a raw dataset");
+                let kind = match src.kind() {
+                    SourceKind::Points => 0u8,
+                    SourceKind::Ensemble => 1u8,
+                };
+                for dst in 1..p {
+                    self.ep
+                        .send(dst, DIST_TAG, ProtoMsg::Dataset(kind, rows, cols, flat.clone()));
+                }
+                src.quantized()
+            } else {
+                match self.ep.try_recv(0, DIST_TAG) {
+                    None => return Some(Poll::Pending { src: 0, tag: DIST_TAG }),
+                    Some(msg) => {
+                        let (kind, rows, cols, flat) = msg.expect_dataset();
+                        let kind =
+                            if kind == 0 { SourceKind::Points } else { SourceKind::Ensemble };
+                        DistSource::from_wire(kind, &flat, rows, cols)
+                    }
+                }
+            };
+            let n = part.n();
+            let my_cell0: Vec<usize> = part.cells_of(me).collect();
+            let m = my_cell0.len();
+            // The §5.1 build charge, exactly what `build_shard` pays.
+            self.ep.compute(m * src.cell_cost_units());
+            let scheme = &self.ctx.scheme;
+            let geom =
+                Box::new(LazyGeom::new(src, scheme.block_is_max(), scheme.bound_combinable()));
+            // Sharded metadata base: a contiguous-kind rank owns no cell
+            // with an endpoint below its first owned row, so slots below
+            // it need no size/liveness storage. Cyclic ranks own rows
+            // everywhere and keep the full range (base 0) — which also
+            // keeps the global-|alive| dense/sparse walk dispatch and
+            // the sparse scan's `first()` start exact.
+            let base = if part.kind() == PartitionKind::Cyclic {
+                0
+            } else {
+                my_cell0.first().map(|&c| condensed_pair(n, c).0).unwrap_or(0)
+            };
+            let alive = AliveSet::with_base(n, base);
+            let store = {
+                let ctx = LazyCtx { geom: &geom, alive: &alive, n, cell0: &my_cell0 };
+                let mut store = LazyStore::new(m, &ctx);
+                store.add_evals(geom.build_kernels());
+                store
+            };
+            // The index-build charge (lazy requires ScanStrategy::Indexed).
+            self.ep.compute(m);
+            let phases =
+                PhaseBreakdown { build: self.ep.clock.now() - t_build, ..Default::default() };
+            self.st = Some(RankState {
+                shard: RankStore::Lazy(store),
+                shard_cells: m,
+                my_cell0,
+                sizes: vec![1.0f32; n - base],
+                size_base: base,
+                alive,
+                geom: Some(geom),
+                mni: 0.0,
+                mnj: 0.0,
+                merges: if me == 0 { Vec::with_capacity(n - 1) } else { Vec::new() },
+                merge_digest: Fnv64::new(),
+                phases,
+                cells_scanned: 0,
+                cells_updated: 0,
+                index_ops: 0,
+                idx_waves: 0,
+                alive_visited: 0,
+                iter: 0,
+                t_mark: 0.0,
+                pairs: Vec::with_capacity(p),
+                acc: Vec::new(),
+                win_rank: 0,
+                d_ij: 0.0,
+                mi: 0,
+                mj: 0,
+                outbound: vec![Vec::new(); p],
+                expect_from: vec![false; p],
+                local_dkj: Vec::new(),
+                ops: Vec::new(),
+            });
+            self.step = Step::SendMin;
+            return None;
+        }
         let cells: Vec<f32> = if me == 0 {
             let src = self.source.take().expect("rank 0 needs the data source");
             match src.to_wire() {
@@ -500,11 +687,15 @@ impl RankTask {
         }
         let phases = PhaseBreakdown { build: self.ep.clock.now() - t_build, ..Default::default() };
         self.st = Some(RankState {
-            shard,
+            shard: RankStore::Eager(shard),
             shard_cells,
             my_cell0: part.cells_of(me).collect(),
             sizes: vec![1.0f32; n],
+            size_base: 0,
             alive,
+            geom: None,
+            mni: 0.0,
+            mnj: 0.0,
             merges: if me == 0 { Vec::with_capacity(n - 1) } else { Vec::new() },
             merge_digest: Fnv64::new(),
             phases,
@@ -549,13 +740,15 @@ impl RankTask {
             }
         }
         let t0 = self.ep.clock.now();
+        let n = self.ctx.partition.n();
         let (lmin, lidx) = match &self.ctx.scan {
             ScanStrategy::Full(engine) => {
                 // Cost: the scan touches the live cells (retired ones are
                 // inf and shrink the effective matrix, §5.4's decreasing m).
-                self.ep.compute(st.shard.live() as usize);
-                st.cells_scanned += st.shard.live();
-                engine.shard_min(st.shard.cells())
+                let shard = st.shard.expect_eager();
+                self.ep.compute(shard.live() as usize);
+                st.cells_scanned += shard.live();
+                engine.shard_min(shard.cells())
             }
             ScanStrategy::Indexed => {
                 // O(1): the tree root already holds (min, lowest offset).
@@ -565,10 +758,29 @@ impl RankTask {
                 // fails loudly; the flush here is release-build defense
                 // only (it never touches the clock either way).
                 debug_assert!(st.shard.is_flushed(), "iteration write set not flushed");
-                st.shard.flush();
                 self.ep.compute(1);
                 st.cells_scanned += 1;
-                st.shard.indexed_min()
+                match &mut st.shard {
+                    RankStore::Eager(shard) => {
+                        shard.flush();
+                        shard.indexed_min()
+                    }
+                    RankStore::Lazy(ls) => {
+                        // Same O(1)-root contract, but asking the root
+                        // may *evaluate* cells (min-candidacy) until the
+                        // smallest derived key is an exact value —
+                        // realized kernel work outside the canonical
+                        // clock, tallied in `distance_evals`.
+                        let ctx = LazyCtx {
+                            geom: st.geom.as_deref().expect("lazy store without geometry"),
+                            alive: &st.alive,
+                            n,
+                            cell0: &st.my_cell0,
+                        };
+                        ls.flush(&ctx);
+                        ls.lazy_min(&ctx)
+                    }
+                }
             }
         };
         let global_idx = if lidx == usize::MAX { u64::MAX } else { st.my_cell0[lidx] as u64 };
@@ -724,21 +936,31 @@ impl RankTask {
         };
         let n = self.ctx.partition.n();
         let (i, j) = condensed_pair(n, win_idx as usize);
-        let (at, announce) = {
+        let at = {
             let st = self.st.as_mut().expect("state exists");
             st.win_rank = win_rank;
             st.d_ij = d_ij;
             st.mi = i;
             st.mj = j;
-            (tag(st.iter, Phase::MergeAnnounce), ProtoMsg::MergeAnnounce(i as u32, j as u32))
+            tag(st.iter, Phase::MergeAnnounce)
         };
-        // Step 5: winner announces the merge. Redundant information-wise
-        // (every rank just computed it), but the paper's protocol includes
-        // the broadcast, so the cost model does too.
+        // Step 5: winner announces the merge. The (i, j) slots are
+        // redundant information-wise (every rank just computed them),
+        // but the paper's protocol includes the broadcast, so the cost
+        // model does too — and under sharded sizes (ISSUE-10) the
+        // piggy-backed (n_i, n_j) are load-bearing: the winner owns cell
+        // (i, j), so its size view covers both slots; a receiver's view
+        // may cover neither.
         if me != win_rank {
             self.step = Step::MergeBroadcast;
             return;
         }
+        let announce = {
+            let st = self.st.as_mut().expect("state exists");
+            st.mni = st.sizes[i - st.size_base];
+            st.mnj = st.sizes[j - st.size_base];
+            ProtoMsg::MergeAnnounce(i as u32, j as u32, st.mni, st.mnj)
+        };
         match self.ctx.collectives {
             Collectives::Naive => {
                 for dst in 0..p {
@@ -767,10 +989,19 @@ impl RankTask {
         match self.ep.try_recv(src, at) {
             None => Some(Poll::Pending { src, tag: at }),
             Some(msg) => {
-                let (ai, aj) = msg.expect_merge();
+                let ((ai, aj), (ni, nj)) = msg.expect_merge();
                 debug_assert_eq!((ai, aj), (mi, mj));
+                {
+                    let st = self.st.as_mut().expect("state exists");
+                    st.mni = ni;
+                    st.mnj = nj;
+                }
                 if self.ctx.collectives == Collectives::Tree {
-                    self.tree_forward(at, win_rank, ProtoMsg::MergeAnnounce(ai as u32, aj as u32));
+                    self.tree_forward(
+                        at,
+                        win_rank,
+                        ProtoMsg::MergeAnnounce(ai as u32, aj as u32, ni, nj),
+                    );
                 }
                 self.step = Step::Walk;
                 None
@@ -806,7 +1037,8 @@ impl RankTask {
                 st.alive_visited += route_full(
                     part,
                     &st.alive,
-                    &st.shard,
+                    &mut st.shard,
+                    st.geom.as_deref(),
                     &mut st.ops,
                     me,
                     i,
@@ -820,7 +1052,8 @@ impl RankTask {
                 st.alive_visited += route_incremental(
                     part,
                     &mut st.alive,
-                    &st.shard,
+                    &mut st.shard,
+                    st.geom.as_deref(),
                     &mut st.ops,
                     me,
                     i,
@@ -852,16 +1085,31 @@ impl RankTask {
         // searches. The (k,i) read set is disjoint from the batch's
         // (k,j)/(i,j) retires and each (k,i) cell is written once per
         // iteration, so deferring the writes changes no value read here.
-        let (n_i, n_j) = (st.sizes[i], st.sizes[j]);
+        let (n_i, n_j) = (st.mni, st.mnj);
         let mut cur = part.owner_cursor();
         for &(k, d_kj) in &st.local_dkj {
             let k = k as usize;
             let cell_ki = condensed_index(n, k.min(i), k.max(i));
             let (owner, off) = cur.locate(cell_ki);
             debug_assert_eq!(owner, me);
-            let c = self.ctx.scheme.coeffs(n_i, n_j, st.sizes[k]);
-            let v = lw_update(c, st.shard.get(off), d_kj, d_ij);
-            st.ops.push(ShardOp::Set(off as u32, v));
+            // k is an endpoint of an owned cell, so k ≥ size_base.
+            let n_k = st.sizes[k - st.size_base];
+            fold_into(
+                &self.ctx.scheme,
+                &mut st.shard,
+                st.geom.as_deref(),
+                &st.alive,
+                n,
+                &st.my_cell0,
+                off,
+                k,
+                i,
+                j,
+                (n_i, n_j, n_k),
+                d_kj,
+                d_ij,
+                &mut st.ops,
+            );
             st.cells_updated += 1;
         }
         st.shard.apply_batch(st.ops.drain(..));
@@ -895,7 +1143,7 @@ impl RankTask {
                     self.ep.compute(triples.len());
                     let st = self.st.as_mut().expect("state exists");
                     let (i, j, d_ij) = (st.mi, st.mj, st.d_ij);
-                    let (n_i, n_j) = (st.sizes[i], st.sizes[j]);
+                    let (n_i, n_j) = (st.mni, st.mnj);
                     // st.ops is empty here: every apply_batch drains it.
                     let mut cur = self.ctx.partition.owner_cursor();
                     for (k, d_kj) in triples {
@@ -903,25 +1151,82 @@ impl RankTask {
                         let cell_ki = condensed_index(n, k.min(i), k.max(i));
                         let (owner, off) = cur.locate(cell_ki);
                         debug_assert_eq!(owner, me);
-                        let c = self.ctx.scheme.coeffs(n_i, n_j, st.sizes[k]);
-                        let v = lw_update(c, st.shard.get(off), d_kj, d_ij);
-                        st.ops.push(ShardOp::Set(off as u32, v));
+                        // k is an endpoint of an owned cell: k ≥ size_base.
+                        let n_k = st.sizes[k - st.size_base];
+                        fold_into(
+                            &self.ctx.scheme,
+                            &mut st.shard,
+                            st.geom.as_deref(),
+                            &st.alive,
+                            n,
+                            &st.my_cell0,
+                            off,
+                            k,
+                            i,
+                            j,
+                            (n_i, n_j, n_k),
+                            d_kj,
+                            d_ij,
+                            &mut st.ops,
+                        );
                         st.cells_updated += 1;
                     }
                     st.shard.apply_batch(st.ops.drain(..));
                 }
             }
         }
+        // Iteration metadata update *before* the flush (ISSUE-10
+        // ordering): the lazy store's derived keys read retired-ness and
+        // merged hulls, so alive/sizes/geometry must be current when the
+        // repair wave recomputes segment keys. The eager flush reads
+        // none of this, so the reorder leaves eager runs bitwise
+        // unchanged (metadata touches no clock and no message).
+        {
+            let st = self.st.as_mut().expect("state exists");
+            let (i, j, d_ij) = (st.mi, st.mj, st.d_ij);
+            // Interval-local under lazy (slots below size_base belong to
+            // other ranks' views); a full replica under eager. The
+            // merged size comes from the announced (n_i, n_j) — bitwise
+            // equal to the old `sizes[i] += sizes[j]` accumulation, as
+            // cluster sizes are integers exactly representable in f32.
+            let merged = st.mni + st.mnj;
+            if i >= st.size_base {
+                st.sizes[i - st.size_base] = merged;
+            }
+            if j >= st.size_base {
+                st.sizes[j - st.size_base] = 0.0;
+            }
+            st.alive.remove(j);
+            if let Some(geom) = st.geom.as_deref_mut() {
+                geom.apply_merge(i, j);
+            }
+            st.merge_digest.write_u64(((i as u64) << 32) | j as u64);
+            st.merge_digest.write_u64(d_ij.to_bits() as u64);
+            if me == 0 {
+                st.merges.push(Merge { i, j, height: d_ij });
+            }
+        }
         // The iteration's write set is complete: close it with one repair
         // wave, then charge the maintenance cost to the clock. Canonical:
-        // leaf writes × root-path length — identical across policies, so
-        // eager and batched replay the same virtual time (the Indexed
-        // strategy is not free: it trades the O(m/p) rescan for this).
-        // Host: the *realized* wave-shaped op count, so batched
-        // maintenance's savings finally reach the clock.
+        // leaf writes × root-path length — identical across policies and
+        // distance modes, so eager, batched, and lazy replay the same
+        // virtual time (the Indexed strategy is not free: it trades the
+        // O(m/p) rescan for this). Host: the *realized* wave-shaped op
+        // count, so batched maintenance's savings finally reach the clock.
         let maint = {
             let st = self.st.as_mut().expect("state exists");
-            st.shard.flush();
+            match &mut st.shard {
+                RankStore::Eager(shard) => shard.flush(),
+                RankStore::Lazy(ls) => {
+                    let ctx = LazyCtx {
+                        geom: st.geom.as_deref().expect("lazy store without geometry"),
+                        alive: &st.alive,
+                        n,
+                        cell0: &st.my_cell0,
+                    };
+                    ls.flush(&ctx);
+                }
+            }
             st.shard.take_maintenance()
         };
         match self.ctx.host {
@@ -941,16 +1246,6 @@ impl RankTask {
             let st = self.st.as_mut().expect("state exists");
             st.index_ops += maint.ops;
             st.idx_waves += maint.waves;
-            let (i, j, d_ij) = (st.mi, st.mj, st.d_ij);
-            // Replicated metadata update (identical on every rank).
-            st.sizes[i] += st.sizes[j];
-            st.sizes[j] = 0.0;
-            st.alive.remove(j);
-            st.merge_digest.write_u64(((i as u64) << 32) | j as u64);
-            st.merge_digest.write_u64(d_ij.to_bits() as u64);
-            if me == 0 {
-                st.merges.push(Merge { i, j, height: d_ij });
-            }
             st.phases.update += now - st.t_mark;
             st.iter += 1;
             st.iter == n - 1
@@ -1002,12 +1297,34 @@ impl RankTask {
     fn snapshot(&self) -> RankSnapshot {
         let st = self.st.as_ref().expect("state exists");
         let n = self.ctx.partition.n();
+        // Eager snapshots the materialized cells; lazy snapshots the
+        // evaluated overlay plus the geometry (merged member chains and
+        // hulls at this wave) and the evaluation tally — restart must
+        // not re-charge kernels the crashed run already paid for
+        // (ISSUE-10 × ISSUE-9). The `sizes`/`alive` vectors cover the
+        // tracked range `size_base..n` in both modes (the whole range
+        // under eager).
+        let (cells, live, lazy) = match &st.shard {
+            RankStore::Eager(shard) => (shard.cells().to_vec(), shard.live(), None),
+            RankStore::Lazy(ls) => (
+                Vec::new(),
+                ls.live(),
+                Some(LazySnapshot {
+                    geom: st.geom.clone().expect("lazy store without geometry"),
+                    overlay: ls.overlay(),
+                    evals: ls.evals(),
+                    peak_resident: ls.peak_resident(),
+                }),
+            ),
+        };
         RankSnapshot {
             wave: st.iter,
-            cells: st.shard.cells().to_vec(),
-            live: st.shard.live(),
+            cells,
+            live,
             sizes: st.sizes.clone(),
-            alive: (0..n).map(|k| st.alive.contains(k)).collect(),
+            size_base: st.size_base,
+            alive: (st.size_base..n).map(|k| st.alive.contains(k)).collect(),
+            lazy,
             merges: st.merges.clone(),
             digest: st.merge_digest.finish(),
             phases: st.phases,
@@ -1033,28 +1350,56 @@ impl RankTask {
         let p = self.ep.p();
         let part = &self.ctx.partition;
         let n = part.n();
-        let shard_cells = snap.cells.len();
-        let live = snap.live;
-        let mut shard = ShardStore::new(snap.cells, self.ctx.scan.wants_index(), self.ctx.maintenance);
-        // Rebuilding from snapshot cells (retired +inf sentinels
-        // included) yields the same tree as the incremental repairs the
-        // original run applied; only the live count is protocol state
-        // the cells can't encode.
-        shard.restore_live(live);
-        let mut alive = AliveSet::new(n);
-        for (k, &is_alive) in snap.alive.iter().enumerate() {
+        let base = snap.size_base;
+        let mut alive = AliveSet::with_base(n, base);
+        for (off, &is_alive) in snap.alive.iter().enumerate() {
             if !is_alive {
-                alive.remove(k);
+                alive.remove(base + off);
             }
         }
+        // Dead slots below the base aren't in the tracked bitmap; the
+        // global count is nevertheless exact — wave merges killed
+        // exactly wave slots (a no-op when base == 0).
+        alive.restore_global_len(n - snap.wave);
+        let my_cell0: Vec<usize> = part.cells_of(me).collect();
+        let live = snap.live;
+        let (shard, shard_cells, geom) = match snap.lazy {
+            None => {
+                let shard_cells = snap.cells.len();
+                let mut shard =
+                    ShardStore::new(snap.cells, self.ctx.scan.wants_index(), self.ctx.maintenance);
+                // Rebuilding from snapshot cells (retired +inf sentinels
+                // included) yields the same tree as the incremental
+                // repairs the original run applied; only the live count
+                // is protocol state the cells can't encode.
+                shard.restore_live(live);
+                (RankStore::Eager(shard), shard_cells, None)
+            }
+            Some(lz) => {
+                // The snapshotted geometry already carries the merges up
+                // to this wave, and the alive set above is current, so
+                // the rebuilt segment keys are exactly the crashed
+                // run's post-flush keys.
+                let m = my_cell0.len();
+                let geom = lz.geom;
+                let ctx = LazyCtx { geom: &geom, alive: &alive, n, cell0: &my_cell0 };
+                let ls =
+                    LazyStore::restore(m, lz.overlay, live, lz.evals, lz.peak_resident, &ctx);
+                (RankStore::Lazy(ls), m, Some(geom))
+            }
+        };
         self.ep.clock = VirtualClock::at(snap.clock);
         self.ep.traffic = snap.traffic;
         self.st = Some(RankState {
             shard,
             shard_cells,
-            my_cell0: part.cells_of(me).collect(),
+            my_cell0,
             sizes: snap.sizes,
+            size_base: base,
             alive,
+            geom,
+            mni: 0.0,
+            mnj: 0.0,
             merges: snap.merges,
             merge_digest: Fnv64::from_state(snap.digest),
             phases: snap.phases,
@@ -1084,6 +1429,10 @@ impl RankTask {
     /// next job (the check-in-at-job-boundary contract).
     fn finish(&mut self) {
         let st = self.st.take().expect("state exists");
+        let (distance_evals, peak_resident_cells) = match st.shard.lazy() {
+            Some(ls) => (ls.evals(), ls.peak_resident()),
+            None => (0, 0),
+        };
         self.output = Some(WorkerOutput {
             rank: self.ep.rank(),
             merges: st.merges,
@@ -1098,6 +1447,8 @@ impl RankTask {
             idx_waves: st.idx_waves,
             alive_visited: st.alive_visited,
             shard_cells: st.shard_cells,
+            distance_evals,
+            peak_resident_cells,
             // Host-schedule counters: the task doesn't know how it was
             // driven; whichever scheduler ran it fills these in.
             steals: 0,
@@ -1109,12 +1460,17 @@ impl RankTask {
             restarts: 0,
             checkpoint_bytes: self.ckpt_bytes,
         });
+        // Only the materialized store recycles through the batch pool
+        // (the lazy overlay's whole point is to be dropped, and lazy
+        // runs bypass the pool at Distribute anyway).
         if let Some(pool) = &self.pool {
-            pool.lock().unwrap_or_else(|e| e.into_inner()).check_in(RankScratch {
-                store: st.shard,
-                alive: st.alive,
-                ops: st.ops,
-            });
+            if let RankStore::Eager(store) = st.shard {
+                pool.lock().unwrap_or_else(|e| e.into_inner()).check_in(RankScratch {
+                    store,
+                    alive: st.alive,
+                    ops: st.ops,
+                });
+            }
         }
     }
 

@@ -12,13 +12,17 @@
 //! [`RankTask::run_blocking`]: super::task::RankTask::run_blocking
 //!
 //! Every rank holds only its shard of the condensed matrix (`(n²−n)/2 / p`
-//! cells) plus O(n) replicated metadata (cluster sizes, liveness) — the
-//! storage claim of §5.4. The shard lives in a [`ShardStore`]: under
-//! [`ScanStrategy::Full`] it is the paper's raw cell vector with `+inf`
+//! cells) plus O(n) metadata (cluster sizes, liveness) — the storage
+//! claim of §5.4. The shard lives in a [`RankStore`]: the materialized
+//! [`ShardStore`](crate::matrix::ShardStore) under `--distances eager` —
+//! under [`ScanStrategy::Full`] the paper's raw cell vector with `+inf`
 //! retire sentinels, rescanned whole each iteration; under
-//! [`ScanStrategy::Indexed`] the store also maintains a tournament tree so
-//! step 1 reads the root instead of rescanning (EXPERIMENTS.md
-//! §Scan-strategy A/B). Merge decisions are replicated deterministically
+//! [`ScanStrategy::Indexed`] plus a tournament tree so step 1 reads the
+//! root instead of rescanning (EXPERIMENTS.md §Scan-strategy A/B) — or
+//! the three-state [`LazyStore`](crate::matrix::LazyStore) under
+//! `--distances lazy` (ISSUE-10), which evaluates cells on demand from
+//! replicated coordinates and keeps only the evaluated overlay resident.
+//! Merge decisions are replicated deterministically
 //! on every rank (step 4 "communication is unnecessary at this step"), so
 //! any rank can reconstruct the dendrogram; rank 0's copy is returned and
 //! the other ranks contribute only an FNV digest for the agreement check.
@@ -32,8 +36,8 @@ use crate::coordinator::{AliveWalk, ScanStrategy};
 use crate::dendrogram::Merge;
 use crate::linkage::Scheme;
 use crate::matrix::{
-    condensed_index, condensed_pair, AliveSet, MaintenancePolicy, OwnerCursor, Partition,
-    PartitionKind, ShardOp, ShardStore,
+    condensed_index, condensed_pair, AliveSet, DistanceMode, LazyGeom, MaintenancePolicy,
+    OwnerCursor, Partition, PartitionKind, RankStore, ShardOp,
 };
 use crate::metrics::PhaseBreakdown;
 
@@ -68,6 +72,15 @@ pub struct WorkerOutput {
     pub alive_visited: u64,
     /// Cells resident in this rank's shard.
     pub shard_cells: usize,
+    /// Distance-kernel evaluations this rank performed (ISSUE-10):
+    /// pivot-norm build plus on-demand cell evaluations. 0 under
+    /// `--distances eager` — the §5.1 build charge already covers the
+    /// full m kernels there, and the lazy tally exists precisely to show
+    /// how far *below* m the on-demand count stays.
+    pub distance_evals: u64,
+    /// High-water mark of evaluated cells resident in this rank's lazy
+    /// overlay (0 under eager) — the sub-n² memory claim.
+    pub peak_resident_cells: u64,
     /// Times this task was stolen by an idle shard (`steal:N` only).
     /// Host-schedule dependent — varies across substrates and runs, so
     /// excluded from the equivalence suites (as are the next two).
@@ -124,23 +137,38 @@ pub struct WorkerCtx {
     /// Batch job index this worker belongs to (0 solo) — the crash
     /// site's job coordinate.
     pub job: usize,
+    /// Distance-source mode: materialize the shard up front (`eager`,
+    /// the paper's §5.1) or evaluate cells on demand from replicated
+    /// coordinates (`lazy`, ISSUE-10).
+    pub distances: DistanceMode,
 }
 
 /// One owned `(k,j)` cell on the step-6a send side: read it, route the
 /// `(k, D_kj)` triple to the owner of `(k,i)` (local list when that is
 /// me), and log its retire into the iteration's batch ("the sending
 /// processors mark the sent matrix elements as erased not to be used
-/// again" — applied through [`ShardStore::apply_batch`] so the tree
-/// repair can run as one wave, ISSUE-5). The single body behind every
-/// walk variant — full sweep, interval pieces, Cyclic strides — so
-/// future changes (e.g. charging routing to the virtual clock) land once.
+/// again" — applied through `apply_batch` so the tree repair can run as
+/// one wave, ISSUE-5). The single body behind every walk variant — full
+/// sweep, interval pieces, Cyclic strides — so future changes (e.g.
+/// charging routing to the virtual clock) land once.
+///
+/// Under `--distances lazy` (ISSUE-10) the cell may be **unevaluated**.
+/// For a bound-combinable scheme (single/complete linkage) the triple
+/// ships the `NaN` sentinel instead — the receiver either folds without
+/// the value (its own `(k,i)` also unevaluated: min/max of two deferred
+/// cells is itself deferred) or re-derives `D_kj` from the replicated
+/// geometry. Triples are value-independent on the wire (8 bytes each),
+/// so traffic stays bitwise identical to eager. Non-combinable schemes
+/// must materialize at ship time: one kernel, charged to the eval tally,
+/// with no overlay insert — the cell retires in this same batch.
 ///
 /// `cur_ki` must be fed ascending k like every cursor; callers hand each
 /// k to exactly one of `send_cell` / their own expect check.
 #[allow(clippy::too_many_arguments)]
 #[inline]
 fn send_cell(
-    shard: &ShardStore,
+    store: &mut RankStore,
+    geom: Option<&LazyGeom>,
     ops: &mut Vec<ShardOp>,
     cur_ki: &mut OwnerCursor<'_>,
     outbound: &mut [Vec<(u32, f32)>],
@@ -148,12 +176,28 @@ fn send_cell(
     me: usize,
     n: usize,
     i: usize,
+    j: usize,
     k: usize,
     off_kj: usize,
 ) {
     let cell_ki = condensed_index(n, k.min(i), k.max(i));
     let owner_ki = cur_ki.owner(cell_ki);
-    let v = shard.get(off_kj);
+    let v = match store {
+        RankStore::Eager(shard) => shard.get(off_kj),
+        RankStore::Lazy(ls) => match ls.value(off_kj) {
+            Some(v) => v,
+            None => {
+                let geom = geom.expect("lazy store without geometry");
+                if geom.combinable() {
+                    f32::NAN
+                } else {
+                    let (v, kernels) = geom.eval_cell(k.min(j), k.max(j));
+                    ls.add_evals(kernels);
+                    v
+                }
+            }
+        },
+    };
     if owner_ki == me {
         local_dkj.push((k as u32, v));
     } else {
@@ -169,7 +213,8 @@ fn send_cell(
 pub(crate) fn route_full(
     part: &Partition,
     alive: &AliveSet,
-    shard: &ShardStore,
+    store: &mut RankStore,
+    geom: Option<&LazyGeom>,
     ops: &mut Vec<ShardOp>,
     me: usize,
     i: usize,
@@ -192,7 +237,7 @@ pub(crate) fn route_full(
             let cell_kj = condensed_index(n, k.min(j), k.max(j));
             let (owner_kj, off_kj) = cur_kj.locate(cell_kj);
             if owner_kj == me {
-                send_cell(shard, ops, &mut cur_ki, outbound, local_dkj, me, n, i, k, off_kj);
+                send_cell(store, geom, ops, &mut cur_ki, outbound, local_dkj, me, n, i, j, k, off_kj);
             } else {
                 let cell_ki = condensed_index(n, k.min(i), k.max(i));
                 if cur_ki.owner(cell_ki) == me {
@@ -245,7 +290,8 @@ pub(crate) fn route_full(
 pub(crate) fn route_incremental(
     part: &Partition,
     alive: &mut AliveSet,
-    shard: &ShardStore,
+    store: &mut RankStore,
+    geom: Option<&LazyGeom>,
     ops: &mut Vec<ShardOp>,
     me: usize,
     i: usize,
@@ -287,7 +333,7 @@ pub(crate) fn route_incremental(
                 let cell_kj = condensed_index(n, k, j);
                 let (owner_kj, off_kj) = cur_kj.locate(cell_kj);
                 if owner_kj == me {
-                    send_cell(shard, ops, &mut cur_ki, outbound, local_dkj, me, n, i, k, off_kj);
+                    send_cell(store, geom, ops, &mut cur_ki, outbound, local_dkj, me, n, i, j, k, off_kj);
                 } else {
                     let cell_ki = condensed_index(n, k.min(i), k.max(i));
                     if cur_ki.owner(cell_ki) == me {
@@ -307,7 +353,7 @@ pub(crate) fn route_incremental(
                 let cell_kj = condensed_index(n, k, j);
                 let (owner_kj, off_kj) = cur_kj.locate(cell_kj);
                 debug_assert_eq!(owner_kj, me);
-                send_cell(shard, ops, &mut cur_ki, outbound, local_dkj, me, n, i, k, off_kj);
+                send_cell(store, geom, ops, &mut cur_ki, outbound, local_dkj, me, n, i, j, k, off_kj);
             }
         }
     } else if let Some((lo, hi)) = mine_j.below {
@@ -318,7 +364,7 @@ pub(crate) fn route_incremental(
                 let cell_kj = condensed_index(n, k, j);
                 let (owner_kj, off_kj) = cur_kj.locate(cell_kj);
                 debug_assert_eq!(owner_kj, me);
-                send_cell(shard, ops, &mut cur_ki, outbound, local_dkj, me, n, i, k, off_kj);
+                send_cell(store, geom, ops, &mut cur_ki, outbound, local_dkj, me, n, i, j, k, off_kj);
             }
             k = alive.succ(k);
         }
@@ -331,7 +377,7 @@ pub(crate) fn route_incremental(
                 let cell_kj = condensed_index(n, j, k);
                 let (owner_kj, off_kj) = cur_kj.locate(cell_kj);
                 debug_assert_eq!(owner_kj, me);
-                send_cell(shard, ops, &mut cur_ki, outbound, local_dkj, me, n, i, k, off_kj);
+                send_cell(store, geom, ops, &mut cur_ki, outbound, local_dkj, me, n, i, j, k, off_kj);
                 k = alive.succ(k);
             }
         } else {
@@ -343,7 +389,7 @@ pub(crate) fn route_incremental(
                     let cell_kj = condensed_index(n, j, k);
                     let (owner_kj, off_kj) = cur_kj.locate(cell_kj);
                     debug_assert_eq!(owner_kj, me);
-                    send_cell(shard, ops, &mut cur_ki, outbound, local_dkj, me, n, i, k, off_kj);
+                    send_cell(store, geom, ops, &mut cur_ki, outbound, local_dkj, me, n, i, j, k, off_kj);
                 }
                 k += mine_j.above_step;
             }

@@ -62,7 +62,8 @@ pub mod prelude {
     pub use crate::comm::{CostModel, FaultPlan, FaultSpec, RetryPolicy};
     pub use crate::coordinator::{
         AliveWalk, BatchRun, BatchShape, Checkpoint, ClusterConfig, ClusterRun, DatasetId,
-        DistSource, Engine, HostCostModel, OnFailure, RunBatch, Runtime, ScanStrategy,
+        DistSource, DistanceMode, Engine, HostCostModel, OnFailure, RunBatch, Runtime,
+        ScanStrategy,
     };
     pub use crate::data::{euclidean_matrix, rmsd_matrix, EnsembleSpec, GaussianSpec};
     pub use crate::dendrogram::{Dendrogram, Merge};

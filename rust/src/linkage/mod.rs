@@ -14,11 +14,32 @@ pub use scheme::{Coeffs, Scheme};
 /// scalar path, the distributed workers, and the serial baselines produce
 /// bit-identical f32 results (and match the L1 Pallas kernel, which uses
 /// the same order).
+///
+/// For the two coefficient patterns that are algebraically a min/max —
+/// Single (α=½, β=0, γ=−½) and Complete (α=½, β=0, γ=+½) — the fold is
+/// evaluated as the *exact* `min`/`max` instead of the floating
+/// three-term expression. The fold rounds twice (e.g. `a=1+2⁻²³`,
+/// `b=1+4·2⁻²³` folds to `1.0 < min(a,b)` under ties-to-even), so
+/// without this the folded result can drop below every pairwise
+/// distance in the block — which would make no admissible lower bound
+/// usable for lazy evaluation (matrix::source). With it, a cluster-pair
+/// cell under Single/Complete is exactly the min/max over the point
+/// block, so bound-pruned on-demand evaluation reproduces it bitwise.
+/// The Pallas kernel and the Python references special-case the same
+/// two patterns.
 #[inline]
 pub fn lw_update(c: Coeffs, d_ki: f32, d_kj: f32, d_ij: f32) -> f32 {
     if d_ki.is_infinite() || d_kj.is_infinite() {
         // Retired slot: stays retired.
         return f32::INFINITY;
+    }
+    if c.alpha_i == 0.5 && c.alpha_j == 0.5 && c.beta == 0.0 {
+        if c.gamma == -0.5 {
+            return d_ki.min(d_kj);
+        }
+        if c.gamma == 0.5 {
+            return d_ki.max(d_kj);
+        }
     }
     c.alpha_i * d_ki + c.alpha_j * d_kj + c.beta * d_ij + c.gamma * (d_ki - d_kj).abs()
 }

@@ -117,6 +117,26 @@ impl Scheme {
         matches!(self, Scheme::Average | Scheme::Centroid | Scheme::Ward)
     }
 
+    /// Whether a cluster-pair cell is algebraically an exact `min`/`max`
+    /// over the member-pair block (Single/Complete, whose folds the
+    /// exact special case in [`lw_update`](super::lw_update) evaluates
+    /// as `min`/`max`). For these schemes an unevaluated cell can flow
+    /// through an LW combine without materializing either operand, and
+    /// an on-demand evaluation may prune member pairs against an
+    /// admissible bound (`matrix::source`). Schemes without this
+    /// property evaluate cells on first touch under `--distances lazy`.
+    pub fn bound_combinable(self) -> bool {
+        matches!(self, Scheme::Single | Scheme::Complete)
+    }
+
+    /// Block-reduce direction for [`bound_combinable`](Self::bound_combinable)
+    /// schemes: `true` when a cluster-pair cell is the *max* over the
+    /// member block (Complete), `false` for the min (Single).
+    /// Meaningless for the other schemes.
+    pub fn block_is_max(self) -> bool {
+        matches!(self, Scheme::Complete)
+    }
+
     /// Whether the scheme guarantees monotone dendrogram heights
     /// (centroid/median famously invert; Ward/single/complete/average do not).
     pub fn monotone(self) -> bool {
@@ -212,5 +232,18 @@ mod tests {
         assert!(!Scheme::Complete.size_dependent());
         assert!(Scheme::Ward.size_dependent());
         assert!(Scheme::Average.size_dependent());
+    }
+
+    #[test]
+    fn bound_combinable_flags() {
+        for s in Scheme::all() {
+            assert_eq!(
+                s.bound_combinable(),
+                matches!(s, Scheme::Single | Scheme::Complete),
+                "{s}"
+            );
+        }
+        assert!(Scheme::Complete.block_is_max());
+        assert!(!Scheme::Single.block_is_max());
     }
 }

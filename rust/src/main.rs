@@ -15,8 +15,8 @@ use std::path::PathBuf;
 use lancew::baselines::serial_lw::{serial_lw_cluster, verify_against_definition};
 use lancew::comm::{Collectives, CostModel, FaultPlan, FaultSpec, RetryPolicy};
 use lancew::coordinator::{
-    AliveWalk, BatchShape, Checkpoint, ClusterConfig, DistSource, Engine, HostCostModel,
-    OnFailure, RunBatch, Runtime, ScanStrategy,
+    AliveWalk, BatchShape, Checkpoint, ClusterConfig, DistSource, DistanceMode, Engine,
+    HostCostModel, OnFailure, RunBatch, Runtime, ScanStrategy,
 };
 use lancew::data::{euclidean_matrix, io, rmsd_matrix, EnsembleSpec, GaussianSpec};
 use lancew::linkage::Scheme;
@@ -68,6 +68,12 @@ fn print_help() {
          \x20        --collectives naive|tree (min exchange/broadcast; tree for big p)\n\
          \x20        --alive-walk full|incremental (step-6a routing; default incremental,\n\
          \x20          closed-form k-intervals for every partition kind incl. cyclic)\n\
+         \x20        --distances eager|lazy (cell sourcing; default eager — build every\n\
+         \x20          shard cell up front. lazy keeps coordinates only and evaluates a\n\
+         \x20          cell when it becomes a min-candidate or an LW fold touches it:\n\
+         \x20          same dendrogram/clock/traffic bitwise, O(evaluated) memory — the\n\
+         \x20          n=100000 regime where n(n-1)/2 cells would need ~20 GB. Needs a\n\
+         \x20          raw dataset (--n, not --matrix) and --scan indexed)\n\
          \x20        --batch sweep|bootstrap:K|repeat:K (multi-run batch service: the\n\
          \x20          jobs interleave on ONE event/steal scheduler, share the §5.1\n\
          \x20          matrix build per dataset, and recycle state through a pool;\n\
@@ -245,6 +251,7 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     let scan = make_scan(args)?;
     let maintenance = make_maintenance(args, &scan)?;
     let walk = make_walk(args)?;
+    let distances: DistanceMode = args.get("distances").unwrap_or("eager").parse()?;
     let runtime = make_runtime(args)?;
     let collectives = make_collectives(args)?;
     let batch: Option<BatchShape> = args.parse_opt("batch")?;
@@ -279,6 +286,7 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         .with_scan(scan)
         .with_maintenance(maintenance)
         .with_alive_walk(walk)
+        .with_distances(distances)
         .with_runtime(runtime)
         .with_collectives(collectives)
         .with_retry(retry)
@@ -310,10 +318,16 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     let run = cfg.run_source(source.clone())?;
 
     println!("{}", run.stats.summary());
-    println!(
-        "cophenetic correlation: {:.4}",
-        cophenetic_correlation(&source.build_matrix(), &run.dendrogram)
-    );
+    if distances == DistanceMode::Eager {
+        println!(
+            "cophenetic correlation: {:.4}",
+            cophenetic_correlation(&source.build_matrix(), &run.dendrogram)
+        );
+    } else {
+        // Materializing all n(n−1)/2 cells for a diagnostic would undo
+        // the O(evaluated) memory the lazy mode exists to provide.
+        println!("cophenetic correlation: skipped under --distances lazy");
+    }
     if cut > 0 {
         let labels = run.dendrogram.cut(cut);
         let sizes = {

@@ -24,18 +24,36 @@
 ///
 /// Indices are stored as `u32` (with `n` itself as the end sentinel), the
 /// same bound [`ShardStore`](super::ShardStore) imposes on shard offsets.
+///
+/// ## Interval-local views (ISSUE-10)
+///
+/// Under `--distances lazy` the full-replica set is replaced by a
+/// *base-restricted* view ([`AliveSet::with_base`]): only slots
+/// `base..n` are tracked, where `base` is the row of the rank's first
+/// owned cell. Every cell a rank owns has both endpoints ≥ that row
+/// (the condensed layout is row-major, so rows ascend with the global
+/// cell index, and a cell's column exceeds its row), so all liveness
+/// probes the routing walks issue stay inside the tracked range. The
+/// public API keeps **global** slot numbers; `remove` of an untracked
+/// slot only maintains the global count. [`len`](Self::len) stays the
+/// *global* alive count — the Cyclic dense/sparse walk dispatch is a
+/// replicated pure function of it, so it must not depend on the view.
 #[derive(Clone, Debug)]
 pub struct AliveSet {
     n: usize,
+    /// First tracked slot (0 = full replica). Internal vectors cover
+    /// `base..n`, indexed by `k - base`, with `n - base` as the sentinel.
+    base: usize,
+    /// Global alive count (tracked and untracked slots).
     len: usize,
-    /// First alive index, or `n` when the set is empty.
+    /// First tracked alive index (internal), or the sentinel when empty.
     head: usize,
-    /// Alive `x`: next alive index after `x` (or `n`).
+    /// Alive `x`: next alive index after `x` (or the sentinel).
     /// Dead `x`: forward hint — some index `> x` that was alive when last
     /// observed; never points backward, so hint chains terminate.
     next: Vec<u32>,
-    /// Alive `x`: previous alive index (or `n` for "none"). Stale for
-    /// dead nodes (never read).
+    /// Alive `x`: previous alive index (or the sentinel for "none").
+    /// Stale for dead nodes (never read).
     prev: Vec<u32>,
     alive: Vec<bool>,
 }
@@ -43,15 +61,22 @@ pub struct AliveSet {
 impl AliveSet {
     /// The full set `{0, 1, …, n−1}`.
     pub fn new(n: usize) -> Self {
+        Self::with_base(n, 0)
+    }
+
+    /// A base-restricted view of the full set: slots `base..n` tracked,
+    /// slots `< base` counted but not stored (ISSUE-10 lazy mode).
+    pub fn with_base(n: usize, base: usize) -> Self {
         let mut s = Self {
             n: 0,
+            base: 0,
             len: 0,
             head: 0,
             next: Vec::new(),
             prev: Vec::new(),
             alive: Vec::new(),
         };
-        s.reset(n);
+        s.reset_based(n, base);
         s
     }
 
@@ -62,20 +87,29 @@ impl AliveSet {
     /// (`matrix::StatePool`) can never leak one job's retirements into
     /// the next.
     pub fn reset(&mut self, n: usize) {
+        self.reset_based(n, 0);
+    }
+
+    /// [`reset`](Self::reset) to a base-restricted view (see
+    /// [`with_base`](Self::with_base)).
+    pub fn reset_based(&mut self, n: usize, base: usize) {
         assert!(n >= 1, "empty universe");
+        assert!(base < n, "base {base} outside universe {n}");
         assert!(
             n < u32::MAX as usize,
             "universe of {n} exceeds the u32 index range"
         );
+        let nb = n - base;
         self.n = n;
+        self.base = base;
         self.len = n;
         self.head = 0;
         self.next.clear();
-        self.next.extend(1..=n as u32);
+        self.next.extend(1..=nb as u32);
         self.prev.clear();
-        self.prev.extend(std::iter::once(n as u32).chain(0..n as u32 - 1));
+        self.prev.extend(std::iter::once(nb as u32).chain(0..nb as u32 - 1));
         self.alive.clear();
-        self.alive.resize(n, true);
+        self.alive.resize(nb, true);
     }
 
     /// Universe size (alive + removed).
@@ -84,7 +118,20 @@ impl AliveSet {
         self.n
     }
 
-    /// Alive members remaining.
+    /// First tracked slot (0 for a full replica).
+    #[inline]
+    pub fn base(&self) -> usize {
+        self.base
+    }
+
+    /// Internal end sentinel (tracked-range length).
+    #[inline]
+    fn sentinel(&self) -> usize {
+        self.n - self.base
+    }
+
+    /// Alive members remaining — the **global** count, including
+    /// untracked slots of a based view (replicated across ranks).
     #[inline]
     pub fn len(&self) -> usize {
         self.len
@@ -96,69 +143,90 @@ impl AliveSet {
         self.len == 0
     }
 
-    /// Whether `k` is still alive.
+    /// Whether `k` is still alive. `k` must be a tracked slot
+    /// (`k ≥ base`) — a based view cannot answer for the rest.
     #[inline]
     pub fn contains(&self, k: usize) -> bool {
-        self.alive[k]
+        self.alive[k - self.base]
     }
 
-    /// Lowest alive index, or `n` when empty.
+    /// Lowest tracked alive index, or `n` when none remain.
     #[inline]
     pub fn first(&self) -> usize {
-        self.head
+        self.head + self.base
     }
 
     /// Next alive index after alive `k`, or `n` at the end. `k` must be
-    /// alive (checked in debug builds) — use [`seek`](Self::seek) to step
-    /// from arbitrary positions.
+    /// tracked and alive (checked in debug builds) — use
+    /// [`seek`](Self::seek) to step from arbitrary positions.
     #[inline]
     pub fn succ(&self, k: usize) -> usize {
-        debug_assert!(self.alive[k], "succ({k}) on a removed index");
-        self.next[k] as usize
+        let ik = k - self.base;
+        debug_assert!(self.alive[ik], "succ({k}) on a removed index");
+        self.next[ik] as usize + self.base
     }
 
-    /// Remove alive `k` in O(1). Panics if `k` was already removed — the
-    /// protocol invariant "merge slot j was alive" is load-bearing.
+    /// Remove alive `k` in O(1). For a tracked slot, panics if `k` was
+    /// already removed — the protocol invariant "merge slot j was alive"
+    /// is load-bearing. An untracked slot (`k < base`) only decrements
+    /// the global count: the merge sequence is replicated, so each slot
+    /// dies exactly once protocol-wide.
     pub fn remove(&mut self, k: usize) {
-        assert!(self.alive[k], "slot {k} removed twice");
-        let nx = self.next[k] as usize;
-        let pv = self.prev[k] as usize;
-        if pv == self.n {
+        self.len -= 1;
+        if k < self.base {
+            return;
+        }
+        let ik = k - self.base;
+        let sent = self.sentinel();
+        assert!(self.alive[ik], "slot {k} removed twice");
+        let nx = self.next[ik] as usize;
+        let pv = self.prev[ik] as usize;
+        if pv == sent {
             self.head = nx;
         } else {
             self.next[pv] = nx as u32;
         }
-        if nx < self.n {
+        if nx < sent {
             self.prev[nx] = pv as u32;
         }
-        self.alive[k] = false;
-        self.len -= 1;
-        // next[k] keeps pointing at nx — the forward hint seek() follows
+        self.alive[ik] = false;
+        // next[ik] keeps pointing at nx — the forward hint seek() follows
         // (and tightens) once nx itself retires.
     }
 
-    /// First alive index ≥ `from`, or `n` if none. Amortized ~O(1): the
-    /// dead prefix crossed is re-pointed directly at the answer, so the
-    /// next seek through the same region is a single hop.
+    /// Overwrite the global alive count after a based restore spliced
+    /// only the tracked slots (ISSUE-10 checkpoint restart): the
+    /// protocol kills exactly one slot per iteration, so the caller
+    /// knows the true count in closed form.
+    pub fn restore_global_len(&mut self, len: usize) {
+        debug_assert!(len <= self.n);
+        self.len = len;
+    }
+
+    /// First tracked alive index ≥ `from`, or `n` if none. Amortized
+    /// ~O(1): the dead prefix crossed is re-pointed directly at the
+    /// answer, so the next seek through the same region is a single hop.
     pub fn seek(&mut self, from: usize) -> usize {
-        if from >= self.n {
+        let sent = self.sentinel();
+        let from = from.saturating_sub(self.base);
+        if from >= sent {
             return self.n;
         }
         let mut x = from;
-        while x < self.n && !self.alive[x] {
+        while x < sent && !self.alive[x] {
             x = self.next[x] as usize;
         }
         // Path-compress the dead chain we just crossed.
         let mut y = from;
-        while y < self.n && !self.alive[y] {
+        while y < sent && !self.alive[y] {
             let hop = self.next[y] as usize;
             self.next[y] = x as u32;
             y = hop;
         }
-        x
+        x + self.base
     }
 
-    /// Ascending iterator over the alive members.
+    /// Ascending iterator over the tracked alive members.
     pub fn iter(&self) -> AliveIter<'_> {
         AliveIter { set: self, at: self.head }
     }
@@ -295,6 +363,78 @@ mod tests {
         s.remove(0);
         assert_eq!(s.first(), 1);
         assert_eq!(s.seek(0), 1);
+    }
+
+    /// ISSUE-10: a base-restricted view agrees with the full replica on
+    /// every tracked slot and keeps the *global* alive count (which the
+    /// Cyclic dense/sparse walk dispatch replicates across ranks), under
+    /// random removal orders that mix tracked and untracked victims.
+    #[test]
+    fn property_based_view_matches_full_replica() {
+        run(Config::cases(20), |rng| {
+            let n = rng.range(2, 60);
+            let base = rng.below(n);
+            let mut full = AliveSet::new(n);
+            let mut based = AliveSet::with_base(n, base);
+            assert_eq!(based.base(), base);
+            assert_eq!(based.universe(), n);
+            let mut order: Vec<usize> = (0..n).collect();
+            rng.shuffle(&mut order);
+            for &victim in &order[..n - 1] {
+                full.remove(victim);
+                based.remove(victim);
+                assert_eq!(based.len(), full.len(), "global count replicated");
+                let tracked: Vec<usize> = full.iter().filter(|&k| k >= base).collect();
+                assert_eq!(based.iter().collect::<Vec<_>>(), tracked);
+                assert_eq!(based.first(), tracked.first().copied().unwrap_or(n));
+                for k in base..n {
+                    assert_eq!(based.contains(k), full.contains(k), "contains({k})");
+                }
+                for w in tracked.windows(2) {
+                    assert_eq!(based.succ(w[0]), w[1]);
+                }
+                if let Some(&last) = tracked.last() {
+                    assert_eq!(based.succ(last), n);
+                }
+                for _ in 0..4 {
+                    let from = rng.below(n + 2);
+                    let want = tracked.iter().copied().find(|&k| k >= from).unwrap_or(n);
+                    assert_eq!(based.seek(from), want, "seek({from}) base={base}");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn based_untracked_remove_only_counts() {
+        let mut s = AliveSet::with_base(10, 4);
+        assert_eq!(s.len(), 10);
+        s.remove(1); // untracked: count moves, storage untouched
+        assert_eq!(s.len(), 9);
+        assert_eq!(s.first(), 4);
+        s.remove(4); // tracked head
+        assert_eq!(s.len(), 8);
+        assert_eq!(s.first(), 5);
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![5, 6, 7, 8, 9]);
+        s.restore_global_len(3);
+        assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn reset_based_equals_fresh_with_base() {
+        let mut s = AliveSet::with_base(12, 5);
+        for k in [6, 2, 11] {
+            s.remove(k);
+        }
+        s.seek(0);
+        s.reset_based(12, 5);
+        let fresh = AliveSet::with_base(12, 5);
+        assert_eq!(s.len(), fresh.len());
+        assert_eq!(s.iter().collect::<Vec<_>>(), fresh.iter().collect::<Vec<_>>());
+        // And a base-0 reset restores the plain-replica shape.
+        s.reset(12);
+        assert_eq!(s.base(), 0);
+        assert_eq!(s.iter().count(), 12);
     }
 
     /// The ISSUE-2 satellite: random removal orders against a sorted-Vec

@@ -5,8 +5,13 @@ pub mod alive;
 mod condensed;
 mod partition;
 mod shard;
+pub mod source;
 
 pub use alive::AliveSet;
 pub use condensed::{CondensedMatrix, condensed_index, condensed_len, condensed_pair};
 pub use partition::{BelowPattern, KIntervals, OwnerCursor, Partition, PartitionKind};
-pub use shard::{Maintenance, MaintenancePolicy, RankScratch, ShardOp, ShardStore, StatePool};
+pub use shard::{
+    LAZY_SEG, LazyCtx, LazyStore, Maintenance, MaintenancePolicy, RankScratch, RankStore, ShardOp,
+    ShardStore, StatePool,
+};
+pub use source::{DistanceMode, DistanceSource, LazyGeom, NPIV};

@@ -50,7 +50,10 @@
 //!
 //! [`PartitionKind`]: super::PartitionKind
 
+use std::collections::BTreeMap;
+
 use super::alive::AliveSet;
+use super::source::LazyGeom;
 
 /// How an indexed [`ShardStore`] repairs its tournament tree after
 /// writes (CLI `--index-maintenance eager|batched`; inert without the
@@ -95,6 +98,15 @@ pub enum ShardOp {
     Set(u32, f32),
     /// Mark a cell erased (§5.3 step 6a).
     Retire(u32),
+    /// ISSUE-10, lazy stores only: a §6b combine touched this cell but
+    /// both operands were unevaluated under a
+    /// [`bound_combinable`](crate::linkage::Scheme::bound_combinable)
+    /// scheme, so the cell *stays* unevaluated — its implied value is
+    /// the exact min/max over the merged member block, which the derived
+    /// key already bounds. Counts as one leaf write (the eager oracle
+    /// performs a `Set` here, and the canonical maintenance charge must
+    /// stay bitwise equal). Unreachable in an eager [`ShardStore`].
+    Touch(u32),
 }
 
 /// Maintenance accounting drained once per iteration by the worker —
@@ -349,6 +361,7 @@ impl ShardStore {
             match op {
                 ShardOp::Set(off, v) => self.set(off as usize, v),
                 ShardOp::Retire(off) => self.retire(off as usize),
+                ShardOp::Touch(_) => unreachable!("Touch is a lazy-store op"),
             }
         }
     }
@@ -442,6 +455,492 @@ impl ShardStore {
             self.tree[i] = better(self.tree[2 * i], self.tree[2 * i + 1]);
         }
         self.index_ops += self.path_len;
+    }
+}
+
+/// Local offsets per tournament-tree leaf of a [`LazyStore`]: the lazy
+/// tree is *segmented* — one leaf summarizes `LAZY_SEG` consecutive
+/// offsets — so its resident size is O(m / LAZY_SEG) instead of the
+/// eager tree's O(m), and a leaf repair rescans one segment's derived
+/// keys.
+pub const LAZY_SEG: usize = 256;
+
+/// Borrowed per-iteration context a [`LazyStore`] derives cell keys
+/// from: the rank's [`LazyGeom`] (bounds + member chains), its
+/// interval-local [`AliveSet`], and the local-offset → global condensed
+/// index map. The store holds none of this itself so the task can hand
+/// out disjoint borrows of its rank state.
+pub struct LazyCtx<'a> {
+    /// Geometry for bounds and on-demand evaluation.
+    pub geom: &'a LazyGeom,
+    /// Cluster liveness (base-restricted view is fine: every owned
+    /// cell's endpoints are ≥ the rank's first owned row).
+    pub alive: &'a AliveSet,
+    /// Number of items being clustered.
+    pub n: usize,
+    /// Global condensed index of each local offset (partition order).
+    pub cell0: &'a [usize],
+}
+
+impl LazyCtx<'_> {
+    /// Cluster-slot endpoints of local cell `off`.
+    #[inline]
+    fn pair(&self, off: u32) -> (usize, usize) {
+        crate::matrix::condensed_pair(self.n, self.cell0[off as usize])
+    }
+
+    /// Derived tree key of cell `off`: `+inf` when retired (either
+    /// endpoint dead — every such cell also received an explicit
+    /// `Retire` op in the iteration its endpoint died, so segment
+    /// dirtiness covers the key change), the exact value when evaluated,
+    /// else the admissible lower bound from the geometry. Admissibility
+    /// (`key ≤ implied value`) is all [`LazyStore::lazy_min`] needs for
+    /// bitwise-exact answers; tightness only controls how many cells it
+    /// evaluates.
+    #[inline]
+    fn key(&self, off: u32, overlay: &BTreeMap<u32, f32>) -> f32 {
+        let (a, b) = self.pair(off);
+        if !self.alive.contains(a) || !self.alive.contains(b) {
+            return f32::INFINITY;
+        }
+        if let Some(&v) = overlay.get(&off) {
+            return v;
+        }
+        self.geom.cell_key(a, b)
+    }
+}
+
+/// ISSUE-10 three-state shard: each owned cell is **unevaluated** (no
+/// storage — its key is derived from the [`LazyGeom`] bounds),
+/// **evaluated** (an overlay entry holds the exact value), or
+/// **retired** (no storage — its key is derived from the alive set).
+/// Resident size is O(evaluated cells + m/[`LAZY_SEG`]), against the
+/// eager store's O(m).
+///
+/// The virtual-clock interface mirrors [`ShardStore`] *canonically*:
+/// leaf writes are counted op for op against the eager write stream
+/// (`Touch`/`Set`/`Retire` each +1) and
+/// [`take_maintenance`](Self::take_maintenance) charges
+/// `writes × (log₂ m.next_power_of_two() + 1)` — the eager formula over
+/// the *cell* count, not the segment count — so lazy runs replay
+/// bitwise-identical virtual time. Realized work (`ops`, `waves`,
+/// evaluation kernels) is reported separately and may differ.
+pub struct LazyStore {
+    m: usize,
+    /// Cells not yet retired (the §5.4 "decreasing m").
+    live: u64,
+    /// Exact values of evaluated cells, keyed by local offset. BTreeMap
+    /// for deterministic iteration (snapshots serialize it in order).
+    evaluated: BTreeMap<u32, f32>,
+    /// High-water mark of `evaluated.len()` — the resident-memory claim.
+    peak_resident: u64,
+    /// Distance-kernel calls charged to this store (on-demand block
+    /// reduces; the rank adds its pivot-build kernels once).
+    evals: u64,
+    /// Segment tournament tree, 1-based heap layout over
+    /// `ceil(m / LAZY_SEG)` leaves of (min derived key in segment, seg).
+    tree: Vec<(f32, u32)>,
+    leaf_base: usize,
+    nseg: usize,
+    /// Canonical per-write charge: the *eager* tree's path length for an
+    /// m-cell shard (not this tree's), for bitwise clock parity.
+    charge_path_len: u64,
+    /// Segments whose derived keys may have changed since the last
+    /// [`flush`](Self::flush) (duplicates kept — the wave dedupes).
+    dirty: Vec<u32>,
+    /// Flush scratch (tree node indices), kept for its capacity.
+    wave: Vec<usize>,
+    /// Leaf writes since the last take_maintenance (canonical numerator).
+    writes: u64,
+    /// Tree-node writes actually performed since the last drain.
+    index_ops: u64,
+    /// Completed repair waves since the last drain.
+    waves: u64,
+}
+
+impl LazyStore {
+    /// A fresh all-unevaluated store over `m` owned cells; builds the
+    /// segment tree from the initial derived keys (all cells alive, no
+    /// overlay — pure bounds).
+    pub fn new(m: usize, ctx: &LazyCtx) -> Self {
+        Self::restore(m, Vec::new(), m as u64, 0, 0, ctx)
+    }
+
+    /// Reconstruct a store from checkpointed parts (ISSUE-9 restart ×
+    /// ISSUE-10): the evaluated overlay, live count, and the
+    /// already-charged evaluation tally — restart must *not* re-charge
+    /// kernels the crashed run already paid for before the snapshot cut.
+    pub fn restore(
+        m: usize,
+        overlay: Vec<(u32, f32)>,
+        live: u64,
+        evals: u64,
+        peak_resident: u64,
+        ctx: &LazyCtx,
+    ) -> Self {
+        assert!(
+            m < u32::MAX as usize,
+            "shard of {m} cells exceeds the u32 offset range of the min index"
+        );
+        let evaluated: BTreeMap<u32, f32> = overlay.into_iter().collect();
+        let mut s = Self {
+            m,
+            live,
+            peak_resident: peak_resident.max(evaluated.len() as u64),
+            evaluated,
+            evals,
+            tree: Vec::new(),
+            leaf_base: 0,
+            nseg: 0,
+            charge_path_len: 0,
+            dirty: Vec::new(),
+            wave: Vec::new(),
+            writes: 0,
+            index_ops: 0,
+            waves: 0,
+        };
+        if m > 0 {
+            s.charge_path_len = m.next_power_of_two().trailing_zeros() as u64 + 1;
+            s.nseg = m.div_ceil(LAZY_SEG);
+            let size = s.nseg.next_power_of_two();
+            s.tree.resize(2 * size, (f32::INFINITY, u32::MAX));
+            s.leaf_base = size;
+            for seg in 0..s.nseg {
+                s.tree[size + seg] = (s.seg_key(seg, ctx), seg as u32);
+            }
+            for i in (1..size).rev() {
+                s.tree[i] = better(s.tree[2 * i], s.tree[2 * i + 1]);
+            }
+        }
+        s
+    }
+
+    /// Number of owned cells (live + retired) — the *logical* shard
+    /// size; resident state is `resident_cells`.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.m
+    }
+
+    /// Cells not yet retired.
+    #[inline]
+    pub fn live(&self) -> u64 {
+        self.live
+    }
+
+    /// Whether no key changes are pending a [`flush`](Self::flush).
+    #[inline]
+    pub fn is_flushed(&self) -> bool {
+        self.dirty.is_empty()
+    }
+
+    /// Exact value of cell `off` if evaluated, else `None` (the cell is
+    /// unevaluated or retired — the caller knows which from the
+    /// protocol).
+    #[inline]
+    pub fn value(&self, off: usize) -> Option<f32> {
+        self.evaluated.get(&(off as u32)).copied()
+    }
+
+    /// Evaluated cells currently resident.
+    #[inline]
+    pub fn resident_cells(&self) -> usize {
+        self.evaluated.len()
+    }
+
+    /// High-water mark of resident evaluated cells.
+    #[inline]
+    pub fn peak_resident(&self) -> u64 {
+        self.peak_resident
+    }
+
+    /// Distance-kernel calls charged so far.
+    #[inline]
+    pub fn evals(&self) -> u64 {
+        self.evals
+    }
+
+    /// Charge kernel calls made outside the store (pivot-norm build,
+    /// send-time evaluation of a cell that is immediately retired).
+    #[inline]
+    pub fn add_evals(&mut self, kernels: u64) {
+        self.evals += kernels;
+    }
+
+    /// Deterministic snapshot of the evaluated overlay (ascending
+    /// offsets) — the checkpoint payload.
+    pub fn overlay(&self) -> Vec<(u32, f32)> {
+        self.evaluated.iter().map(|(&o, &v)| (o, v)).collect()
+    }
+
+    /// Evaluate cell `off` now (min-candidacy or a §6b combine needs its
+    /// exact value), inserting it into the overlay and marking its
+    /// segment dirty-free via an immediate leaf repair. No-op if already
+    /// evaluated. Does *not* count as a leaf write — the eager oracle
+    /// performs no write here, and the canonical charge must match.
+    pub fn evaluate(&mut self, off: usize, ctx: &LazyCtx) -> f32 {
+        if let Some(&v) = self.evaluated.get(&(off as u32)) {
+            return v;
+        }
+        let (a, b) = ctx.pair(off as u32);
+        let (v, kernels) = ctx.geom.eval_cell(a, b);
+        self.evals += kernels;
+        self.evaluated.insert(off as u32, v);
+        self.peak_resident = self.peak_resident.max(self.evaluated.len() as u64);
+        self.repair_seg(off / LAZY_SEG, ctx);
+        v
+    }
+
+    /// Apply one iteration's write set in order. Needs no context — a
+    /// `Set` lands in the overlay, a `Retire` evicts it, a `Touch` only
+    /// dirties; derived keys are recomputed at [`flush`](Self::flush),
+    /// *after* the iteration's metadata update, so retired-ness and
+    /// merged hulls are already in force when the keys are read.
+    pub fn apply_batch(&mut self, ops: impl IntoIterator<Item = ShardOp>) {
+        for op in ops {
+            let off = match op {
+                ShardOp::Set(off, v) => {
+                    debug_assert!(v.is_finite(), "LW update produced a non-finite distance");
+                    self.evaluated.insert(off, v);
+                    self.peak_resident = self.peak_resident.max(self.evaluated.len() as u64);
+                    off
+                }
+                ShardOp::Retire(off) => {
+                    self.evaluated.remove(&off);
+                    self.live -= 1;
+                    off
+                }
+                ShardOp::Touch(off) => off,
+            };
+            if self.m > 0 {
+                self.writes += 1;
+                self.dirty.push(off / LAZY_SEG as u32);
+            }
+        }
+    }
+
+    /// Recompute the derived keys of dirty segments in one bottom-up
+    /// wave (leaf rescans + shared root-ward paths). Must run *after*
+    /// the iteration's metadata update (alive/hulls/sizes) — with that
+    /// ordering every segment key is exact after each flush, which
+    /// [`lazy_min`](Self::lazy_min)'s tie-break proof relies on.
+    pub fn flush(&mut self, ctx: &LazyCtx) {
+        if self.dirty.is_empty() {
+            return;
+        }
+        self.waves += 1;
+        let mut segs = std::mem::take(&mut self.dirty);
+        segs.sort_unstable();
+        segs.dedup();
+        let mut level = std::mem::take(&mut self.wave);
+        level.clear();
+        level.extend(segs.iter().map(|&s| self.leaf_base + s as usize));
+        for &i in &level {
+            let seg = i - self.leaf_base;
+            self.tree[i] = (self.seg_key(seg, ctx), seg as u32);
+        }
+        self.index_ops += level.len() as u64;
+        while level[0] > 1 {
+            for i in level.iter_mut() {
+                *i /= 2;
+            }
+            level.dedup();
+            for &i in &level {
+                self.tree[i] = better(self.tree[2 * i], self.tree[2 * i + 1]);
+            }
+            self.index_ops += level.len() as u64;
+        }
+        segs.clear();
+        self.dirty = segs;
+        self.wave = level;
+    }
+
+    /// Drain maintenance accounting. `charge` uses the **eager**
+    /// formula (`leaf writes × eager path length over m cells`) so the
+    /// virtual clock replays bitwise against an eager run; `ops`/`waves`
+    /// report the realized segment-tree work.
+    #[inline]
+    pub fn take_maintenance(&mut self) -> Maintenance {
+        debug_assert!(self.dirty.is_empty(), "take_maintenance on an unflushed LazyStore");
+        Maintenance {
+            charge: std::mem::take(&mut self.writes) * self.charge_path_len,
+            ops: std::mem::take(&mut self.index_ops),
+            waves: std::mem::take(&mut self.waves),
+        }
+    }
+
+    /// (min value, local offset of the lowest-offset cell holding it),
+    /// ties to the lowest offset, all-retired/empty to
+    /// `(+inf, usize::MAX)` — the exact [`ShardStore::indexed_min`]
+    /// contract, *including bitwise value equality with the eager run*.
+    ///
+    /// Loop: the root names the segment holding the smallest derived
+    /// key; the lowest-offset min-key cell inside it is the candidate.
+    /// If it is evaluated its key *is* its value and we are done — any
+    /// other cell's value ≥ its own key ≥ this key, and on value ties
+    /// the left-biased root plus the strict `<` scan already picked the
+    /// lowest offset. If it is unevaluated, evaluate it (its key can
+    /// only move up), repair its segment, and re-ask the root.
+    pub fn lazy_min(&mut self, ctx: &LazyCtx) -> (f32, usize) {
+        debug_assert!(self.dirty.is_empty(), "lazy_min on an unflushed LazyStore");
+        if self.tree.is_empty() {
+            return (f32::INFINITY, usize::MAX);
+        }
+        loop {
+            let (kmin, seg) = self.tree[1];
+            if kmin.is_infinite() {
+                return (f32::INFINITY, usize::MAX);
+            }
+            let seg = seg as usize;
+            let (mut best, mut boff) = (f32::INFINITY, usize::MAX);
+            let lo = seg * LAZY_SEG;
+            let hi = (lo + LAZY_SEG).min(self.m);
+            for off in lo..hi {
+                let k = ctx.key(off as u32, &self.evaluated);
+                if k < best {
+                    best = k;
+                    boff = off;
+                }
+            }
+            debug_assert_eq!(best, kmin, "segment leaf key out of date");
+            if self.evaluated.contains_key(&(boff as u32)) {
+                return (best, boff);
+            }
+            self.evaluate(boff, ctx);
+        }
+    }
+
+    /// Minimum derived key over segment `seg` (leaf recompute).
+    fn seg_key(&self, seg: usize, ctx: &LazyCtx) -> f32 {
+        let lo = seg * LAZY_SEG;
+        let hi = (lo + LAZY_SEG).min(self.m);
+        let mut best = f32::INFINITY;
+        for off in lo..hi {
+            let k = ctx.key(off as u32, &self.evaluated);
+            if k < best {
+                best = k;
+            }
+        }
+        best
+    }
+
+    /// Rewrite segment `seg`'s leaf and its root-ward path now (used
+    /// after an in-scan evaluation; counted as realized work only).
+    fn repair_seg(&mut self, seg: usize, ctx: &LazyCtx) {
+        if self.tree.is_empty() {
+            return;
+        }
+        let mut i = self.leaf_base + seg;
+        self.tree[i] = (self.seg_key(seg, ctx), seg as u32);
+        self.index_ops += 1;
+        while i > 1 {
+            i /= 2;
+            self.tree[i] = better(self.tree[2 * i], self.tree[2 * i + 1]);
+            self.index_ops += 1;
+        }
+    }
+}
+
+/// A rank's cell storage under either distance mode (ISSUE-10): the
+/// materialized [`ShardStore`] or the three-state [`LazyStore`]. The
+/// protocol state machine matches on this where the modes genuinely
+/// diverge and uses the common accessors everywhere else.
+pub enum RankStore {
+    /// Cells materialized in the §5.1 build (`--distances eager`).
+    Eager(ShardStore),
+    /// Cells evaluated on demand (`--distances lazy`).
+    Lazy(LazyStore),
+}
+
+impl RankStore {
+    /// Number of owned cells (live + retired).
+    #[inline]
+    pub fn len(&self) -> usize {
+        match self {
+            RankStore::Eager(s) => s.len(),
+            RankStore::Lazy(s) => s.len(),
+        }
+    }
+
+    #[inline]
+    /// Whether the rank owns no cells at all.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Cells not yet retired.
+    #[inline]
+    pub fn live(&self) -> u64 {
+        match self {
+            RankStore::Eager(s) => s.live(),
+            RankStore::Lazy(s) => s.live(),
+        }
+    }
+
+    /// Whether no writes/key changes are pending a flush.
+    #[inline]
+    pub fn is_flushed(&self) -> bool {
+        match self {
+            RankStore::Eager(s) => s.is_flushed(),
+            RankStore::Lazy(s) => s.is_flushed(),
+        }
+    }
+
+    /// Apply one iteration's write set in order (mode-independent: the
+    /// op stream is identical cell for cell, with lazy `Touch` standing
+    /// where an eager `Set` would land on a deferred combine).
+    pub fn apply_batch(&mut self, ops: impl IntoIterator<Item = ShardOp>) {
+        match self {
+            RankStore::Eager(s) => s.apply_batch(ops),
+            RankStore::Lazy(s) => s.apply_batch(ops),
+        }
+    }
+
+    /// Drain maintenance accounting (canonical charge identical across
+    /// modes by construction).
+    #[inline]
+    pub fn take_maintenance(&mut self) -> Maintenance {
+        match self {
+            RankStore::Eager(s) => s.take_maintenance(),
+            RankStore::Lazy(s) => s.take_maintenance(),
+        }
+    }
+
+    /// The eager store, or a loud panic — callers on eager-only paths
+    /// (Full scans, pooled scratch, eager snapshots) use this.
+    #[inline]
+    pub fn expect_eager(&self) -> &ShardStore {
+        match self {
+            RankStore::Eager(s) => s,
+            RankStore::Lazy(_) => panic!("eager-only path reached a lazy RankStore"),
+        }
+    }
+
+    /// Mutable [`expect_eager`](Self::expect_eager).
+    #[inline]
+    pub fn expect_eager_mut(&mut self) -> &mut ShardStore {
+        match self {
+            RankStore::Eager(s) => s,
+            RankStore::Lazy(_) => panic!("eager-only path reached a lazy RankStore"),
+        }
+    }
+
+    /// The lazy store, if this rank runs `--distances lazy`.
+    #[inline]
+    pub fn lazy(&self) -> Option<&LazyStore> {
+        match self {
+            RankStore::Eager(_) => None,
+            RankStore::Lazy(s) => Some(s),
+        }
+    }
+
+    /// Mutable [`lazy`](Self::lazy).
+    #[inline]
+    pub fn lazy_mut(&mut self) -> Option<&mut LazyStore> {
+        match self {
+            RankStore::Eager(_) => None,
+            RankStore::Lazy(s) => Some(s),
+        }
     }
 }
 
@@ -849,6 +1348,211 @@ mod tests {
             assert_eq!(pool.hits() + pool.misses(), 8);
             assert!(pool.misses() >= 1, "first round always misses");
         });
+    }
+
+    /// ISSUE-10 satellite: the three-state lazy store tracks the eager
+    /// oracle (and the scalar rescan) bitwise after every flush, across
+    /// random merge trajectories with heavy ties, every `PartitionKind`,
+    /// Single (min), Complete (max), and the evaluate-on-touch mode the
+    /// non-combinable schemes use — through the all-unevaluated start
+    /// and down to the all-retired end.
+    #[test]
+    fn property_lazy_equals_eager_equals_scan_all_partition_kinds() {
+        use crate::coordinator::source::DistSource;
+        use crate::matrix::{condensed_index, condensed_pair};
+
+        run(Config::cases(8), |rng| {
+            let n = rng.range(4, 16);
+            let p = rng.range(1, 5);
+            // Integer-grid coordinates ⇒ heavily duplicated distances.
+            let pts: Vec<Vec<f64>> =
+                (0..n).map(|_| (0..2).map(|_| rng.below(3) as f64).collect()).collect();
+            let src = DistSource::Points(pts).quantized();
+            // (block reduce direction, deferred combines allowed)
+            for &(is_max, combinable) in &[(false, true), (true, true), (false, false)] {
+                for kind in [
+                    PartitionKind::BalancedCells,
+                    PartitionKind::WholeRows,
+                    PartitionKind::Cyclic,
+                ] {
+                    let part = Partition::new(kind, n, p);
+                    // One geometry shared by all ranks (it is replicated
+                    // in production; sharing exercises nothing less).
+                    let mut geom = LazyGeom::new(src.clone(), is_max, combinable);
+                    struct Rank {
+                        eager: ShardStore,
+                        lazy: LazyStore,
+                        alive: AliveSet,
+                        cell0: Vec<usize>,
+                    }
+                    let mut ranks: Vec<Rank> = (0..p)
+                        .map(|r| {
+                            let cell0: Vec<usize> = part.cells_of(r).collect();
+                            let cells: Vec<f32> = cell0
+                                .iter()
+                                .map(|&idx| {
+                                    let (a, b) = condensed_pair(n, idx);
+                                    src.distance(a, b)
+                                })
+                                .collect();
+                            let base = cell0
+                                .first()
+                                .map(|&idx| condensed_pair(n, idx).0)
+                                .unwrap_or(0);
+                            let alive = AliveSet::with_base(n, base);
+                            let lazy = {
+                                let ctx =
+                                    LazyCtx { geom: &geom, alive: &alive, n, cell0: &cell0 };
+                                LazyStore::new(cell0.len(), &ctx)
+                            };
+                            Rank {
+                                eager: ShardStore::new(cells, true, MaintenancePolicy::Batched),
+                                lazy,
+                                alive,
+                                cell0,
+                            }
+                        })
+                        .collect();
+                    let check = |rk: &mut Rank, geom: &LazyGeom, ctx_msg: &str| {
+                        let scan = scalar_shard_min(rk.eager.cells());
+                        assert_eq!(rk.eager.indexed_min(), scan, "{ctx_msg}: eager vs scan");
+                        let ctx =
+                            LazyCtx { geom, alive: &rk.alive, n, cell0: &rk.cell0 };
+                        assert_eq!(rk.lazy.lazy_min(&ctx), scan, "{ctx_msg}: lazy vs scan");
+                    };
+                    // All-unevaluated start: lazy answers from bounds +
+                    // on-demand evaluation alone.
+                    for (r, rk) in ranks.iter_mut().enumerate() {
+                        check(rk, &geom, &format!("{kind:?} start r={r}"));
+                    }
+                    // Random merge trajectory down to one cluster.
+                    let mut alive_slots: Vec<usize> = (0..n).collect();
+                    while alive_slots.len() > 1 {
+                        let xi = rng.below(alive_slots.len());
+                        let mut yi = rng.below(alive_slots.len() - 1);
+                        if yi >= xi {
+                            yi += 1;
+                        }
+                        let (i, j) =
+                            (alive_slots[xi].min(alive_slots[yi]), alive_slots[xi].max(alive_slots[yi]));
+                        alive_slots.retain(|&k| k != j);
+                        // Hulls/chains first: post-merge eval_cell(k, i)
+                        // is exactly the folded min/max the protocol's
+                        // exact lw_update produces.
+                        geom.apply_merge(i, j);
+                        for rk in ranks.iter_mut() {
+                            let mut eops: Vec<ShardOp> = Vec::new();
+                            let mut lops: Vec<ShardOp> = Vec::new();
+                            let owned = |cell: usize| -> Option<u32> {
+                                rk.cell0.binary_search(&cell).ok().map(|o| o as u32)
+                            };
+                            if let Some(off) = owned(condensed_index(n, i, j)) {
+                                eops.push(ShardOp::Retire(off));
+                                lops.push(ShardOp::Retire(off));
+                            }
+                            for &k in &alive_slots {
+                                if k == i {
+                                    continue;
+                                }
+                                let (a, b) = (k.min(i), k.max(i));
+                                let (aj, bj) = (k.min(j), k.max(j));
+                                if let Some(off) = owned(condensed_index(n, aj, bj)) {
+                                    eops.push(ShardOp::Retire(off));
+                                    lops.push(ShardOp::Retire(off));
+                                }
+                                if let Some(off) = owned(condensed_index(n, a, b)) {
+                                    let (v, _) = geom.eval_cell(a, b);
+                                    eops.push(ShardOp::Set(off, v));
+                                    // Deferred combine: stay unevaluated
+                                    // (only sound when the scheme folds
+                                    // as an exact block reduce).
+                                    let defer = combinable
+                                        && rk.lazy.value(off as usize).is_none()
+                                        && rng.below(2) == 0;
+                                    lops.push(if defer {
+                                        ShardOp::Touch(off)
+                                    } else {
+                                        ShardOp::Set(off, v)
+                                    });
+                                }
+                            }
+                            rk.eager.apply_batch(eops);
+                            rk.lazy.apply_batch(lops);
+                            // Metadata before flush — the reorder the
+                            // derived keys rely on.
+                            rk.alive.remove(j);
+                            rk.eager.flush();
+                            let ctx =
+                                LazyCtx { geom: &geom, alive: &rk.alive, n, cell0: &rk.cell0 };
+                            rk.lazy.flush(&ctx);
+                            // Canonical charge parity, op for op.
+                            let (me, ml) =
+                                (rk.eager.take_maintenance(), rk.lazy.take_maintenance());
+                            assert_eq!(me.charge, ml.charge, "canonical charge diverged");
+                            check(
+                                rk,
+                                &geom,
+                                &format!("{kind:?} is_max={is_max} comb={combinable} merge ({i},{j})"),
+                            );
+                        }
+                    }
+                    // All-retired end: every cell's dead endpoint was
+                    // retired along the way; both stores agree and the
+                    // lazy overlay has fully drained.
+                    for rk in ranks.iter_mut() {
+                        assert_eq!(rk.lazy.live(), rk.eager.live(), "live counts");
+                        assert_eq!(rk.lazy.live(), 0, "cells survive the last merge");
+                        assert_eq!(rk.lazy.resident_cells(), 0, "overlay not drained");
+                    }
+                }
+            }
+        });
+    }
+
+    /// Lazy edge cases the property test cannot hit deterministically:
+    /// the empty shard and a store that goes all-retired.
+    #[test]
+    fn lazy_empty_and_all_retired() {
+        use crate::coordinator::source::DistSource;
+        let pts: Vec<Vec<f64>> = vec![vec![0.0, 0.0], vec![1.0, 0.0], vec![0.0, 2.0]];
+        let src = DistSource::Points(pts).quantized();
+        let geom = LazyGeom::new(src, false, true);
+        let alive = AliveSet::new(3);
+        let empty_cell0: Vec<usize> = Vec::new();
+        let ctx = LazyCtx { geom: &geom, alive: &alive, n: 3, cell0: &empty_cell0 };
+        let mut empty = LazyStore::new(0, &ctx);
+        assert_eq!(empty.lazy_min(&ctx), (f32::INFINITY, usize::MAX));
+        assert_eq!(empty.take_maintenance(), Maintenance::default());
+
+        let cell0: Vec<usize> = vec![0, 1, 2]; // all cells of n=3
+        let mut alive = AliveSet::new(3);
+        let mut store = {
+            let ctx = LazyCtx { geom: &geom, alive: &alive, n: 3, cell0: &cell0 };
+            LazyStore::new(3, &ctx)
+        };
+        {
+            let ctx = LazyCtx { geom: &geom, alive: &alive, n: 3, cell0: &cell0 };
+            let (v, off) = store.lazy_min(&ctx);
+            assert_eq!((v, off), (1.0, 0), "(0,1) at unit distance is the min");
+            assert!(store.evals() >= 1, "candidacy forced an evaluation");
+        }
+        // Retire everything (merge everything into slot 0).
+        store.apply_batch([ShardOp::Retire(0), ShardOp::Retire(1), ShardOp::Retire(2)]);
+        alive.remove(1);
+        alive.remove(2);
+        let ctx = LazyCtx { geom: &geom, alive: &alive, n: 3, cell0: &cell0 };
+        store.flush(&ctx);
+        assert_eq!(store.live(), 0);
+        assert_eq!(store.resident_cells(), 0, "retired cells leave no overlay");
+        assert_eq!(store.lazy_min(&ctx), (f32::INFINITY, usize::MAX));
+        assert!(store.peak_resident() >= 1, "peak survives eviction");
+    }
+
+    #[test]
+    #[should_panic(expected = "Touch is a lazy-store op")]
+    fn eager_store_rejects_touch() {
+        let mut store = ShardStore::new(vec![1.0], true, MaintenancePolicy::Batched);
+        store.apply_batch([ShardOp::Touch(0)]);
     }
 
     #[test]

@@ -1,0 +1,556 @@
+//! On-demand distance evaluation for sub-n² clustering (ISSUE-10
+//! tentpole — the "memory frontier" of ROADMAP §Open items).
+//!
+//! Under `--distances eager` (the default and the oracle) every shard
+//! cell is materialized in the §5.1 build before iteration 1 — O(n²/p)
+//! resident floats per rank. Under `--distances lazy` each rank keeps
+//! only the *coordinates* (O(n·d)) plus a [`LazyGeom`]: per-point pivot
+//! norms, per-cluster norm intervals, and member chains. A cell is
+//! **evaluated** (its member-pair block reduced through the same
+//! [`DistSource::distance`] kernel the eager build uses) only when the
+//! min index's candidacy or a §6b Lance-Williams combine actually needs
+//! its value; until then the tournament tree keys it on an *admissible
+//! lower bound* derived from the pivot norms, and after retirement it
+//! needs no storage at all. The three cell states
+//! (unevaluated / evaluated / retired) live in
+//! [`LazyStore`](super::shard::LazyStore); this module owns the
+//! geometry: bounds, member chains, and the pruned block reduce.
+//!
+//! ## Bound admissibility
+//!
+//! For [`DistSource::Points`] the metric is Euclidean, so with
+//! `N_q(x) = d(x, pivot_q)` the triangle inequality gives
+//! `d(x,y) ≥ |N_q(x) − N_q(y)|` and `d(x,y) ≤ N_q(x) + N_q(y)` for
+//! every pivot `q`. Norms are stored as the exact f32 the kernel
+//! produced; bound arithmetic runs in f64 and subtracts a relative
+//! slack `SLACK·(N_q(x)+N_q(y))` before casting down, which dominates
+//! the ≤ ~3·2⁻²⁴ relative rounding of the three kernel casts involved —
+//! so `bound ≤ computed distance` holds *exactly*, which the
+//! correctness of [`LazyStore::lazy_min`](super::shard::LazyStore) and
+//! the pruned reduce both require (fuzzed in `shard.rs`).
+//!
+//! Cluster-level bounds extend this to unevaluated *combined* cells,
+//! which exist only under the
+//! [`bound_combinable`](crate::linkage::Scheme::bound_combinable)
+//! schemes, where a cluster-pair cell is exactly the min (Single) /
+//! max (Complete) over the member-pair block (see the exact-fold
+//! special case in [`lw_update`](crate::linkage::lw_update)). Per
+//! cluster the hull `[lo_q, hi_q]` of member norms merges in O(1) per
+//! pivot at each merge; the interval gap (for min) or spread (for max)
+//! lower-bounds the block reduce.
+//!
+//! [`DistSource::Ensemble`] (Kabsch RMSD) gets the ISSUE's conservative
+//! fallback: no pivots, bound 0 (admissible — the metric is
+//! nonnegative — and tighter than the nominal −∞). Every queried cell
+//! evaluates on first touch; lazy stays bitwise-correct, it just stops
+//! saving evaluations.
+
+use crate::coordinator::source::DistSource;
+
+/// Pivots cached per point for the triangle-inequality bounds
+/// (farthest-point heuristic; capped by n).
+pub const NPIV: usize = 8;
+
+/// Relative slack subtracted from every lower bound (added to every
+/// upper bound) to absorb f32 kernel rounding — ~5× the worst-case
+/// ≈ 3·2⁻²⁴ relative error of the three casts involved.
+const SLACK: f64 = 1e-6;
+
+/// How shard cells come into existence (CLI `--distances eager|lazy`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DistanceMode {
+    /// Materialize every owned cell in the §5.1 build (the oracle).
+    #[default]
+    Eager,
+    /// Keep coordinates only; evaluate cells on demand ([`LazyGeom`]).
+    Lazy,
+}
+
+impl std::str::FromStr for DistanceMode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "eager" | "materialized" => Ok(Self::Eager),
+            "lazy" => Ok(Self::Lazy),
+            other => anyhow::bail!("unknown distances mode {other:?} (eager|lazy)"),
+        }
+    }
+}
+
+impl std::fmt::Display for DistanceMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::Eager => "eager",
+            Self::Lazy => "lazy",
+        })
+    }
+}
+
+/// Where a rank's cell values come from: the ISSUE-10 `DistanceSource`.
+///
+/// `Materialized` is today's path — the cells were shipped or computed
+/// up front and live in the eager `ShardStore`. `Lazy` computes them on
+/// demand through the owned [`LazyGeom`].
+pub enum DistanceSource {
+    /// Cells materialized in the §5.1 build (eager mode).
+    Materialized,
+    /// Cells computed on demand from coordinates (lazy mode).
+    Lazy(Box<LazyGeom>),
+}
+
+impl DistanceSource {
+    /// The lazy geometry, if this source is lazy.
+    #[inline]
+    pub fn geom(&self) -> Option<&LazyGeom> {
+        match self {
+            DistanceSource::Materialized => None,
+            DistanceSource::Lazy(g) => Some(g),
+        }
+    }
+
+    /// Mutable lazy geometry, if this source is lazy.
+    #[inline]
+    pub fn geom_mut(&mut self) -> Option<&mut LazyGeom> {
+        match self {
+            DistanceSource::Materialized => None,
+            DistanceSource::Lazy(g) => Some(g),
+        }
+    }
+}
+
+/// Per-rank geometry for on-demand cell evaluation: the (quantized)
+/// dataset, pivot norms, per-cluster norm-interval hulls, and member
+/// chains. O(n) memory; updated in O(NPIV) per merge.
+///
+/// Every rank applies the same merge sequence in protocol order, so
+/// [`eval_cell`](Self::eval_cell) is a pure function of (dataset, merge
+/// history, cluster pair) — any rank evaluating the same cell at the
+/// same protocol point gets the bitwise-same value, which is what lets
+/// a receiver evaluate its own operand of a mixed §6b combine.
+#[derive(Clone)]
+pub struct LazyGeom {
+    /// The quantized dataset (wire round-tripped, so every rank's
+    /// kernel sees identical f32 coordinates).
+    src: DistSource,
+    n: usize,
+    /// Block-reduce direction: max (Complete) vs min (Single). Only
+    /// meaningful when `combinable`.
+    is_max: bool,
+    /// Whether combines may defer (Single/Complete exact min/max).
+    combinable: bool,
+    /// Pivot count actually built (0 = no bounds, the Ensemble fallback).
+    npiv: usize,
+    /// `norms[x·npiv + q]` = kernel distance from point x to pivot q.
+    norms: Vec<f32>,
+    /// Per-cluster norm-interval hulls, `[slot·npiv + q]`; exact
+    /// min/max over current member norms (no arithmetic, so exact).
+    lo: Vec<f32>,
+    hi: Vec<f32>,
+    /// Member chains per cluster slot: `head/tail` + `next` links with
+    /// `u32::MAX` as the end sentinel. Chain order is append-order of
+    /// the merge history — deterministic on every rank.
+    head: Vec<u32>,
+    tail: Vec<u32>,
+    next: Vec<u32>,
+}
+
+const NIL: u32 = u32::MAX;
+
+impl LazyGeom {
+    /// Build the geometry for `src` (which must already be quantized —
+    /// the caller passes the wire-round-tripped dataset so all ranks
+    /// agree bitwise). `is_max`/`combinable` come from the scheme.
+    ///
+    /// Pivot selection (Points only): pivot 0 is point 0, then
+    /// farthest-point (maximin over already-chosen pivots, ties to the
+    /// lowest index) — deterministic. Costs n·npiv kernel calls, host
+    /// work charged nowhere (like `SharedBuild`, the virtual clock
+    /// keeps the eager §5.1 charge for bitwise clock parity).
+    pub fn new(src: DistSource, is_max: bool, combinable: bool) -> Self {
+        let n = src.n();
+        let use_bounds = matches!(src, DistSource::Points(_));
+        let npiv = if use_bounds { NPIV.min(n) } else { 0 };
+        let mut g = Self {
+            src,
+            n,
+            is_max,
+            combinable,
+            npiv,
+            norms: vec![0.0; n * npiv],
+            lo: Vec::new(),
+            hi: Vec::new(),
+            head: (0..n as u32).collect(),
+            tail: (0..n as u32).collect(),
+            next: vec![NIL; n],
+        };
+        if npiv > 0 {
+            // mindist[x] = min over chosen pivots of norms[x][q], the
+            // farthest-point selection key.
+            let mut mindist = vec![f64::INFINITY; n];
+            let mut piv = 0usize;
+            for q in 0..npiv {
+                for x in 0..n {
+                    let d = if x == piv { 0.0 } else { g.src.distance(piv.min(x), piv.max(x)) };
+                    g.norms[x * npiv + q] = d;
+                    mindist[x] = mindist[x].min(d as f64);
+                }
+                // Next pivot: farthest from all chosen so far (lowest
+                // index on ties). Chosen pivots have mindist 0 and are
+                // never re-picked while any unpicked point remains.
+                let mut best = (f64::NEG_INFINITY, 0usize);
+                for (x, &md) in mindist.iter().enumerate() {
+                    if md > best.0 {
+                        best = (md, x);
+                    }
+                }
+                piv = best.1;
+            }
+            g.lo = g.norms.clone();
+            g.hi = g.norms.clone();
+        }
+        g
+    }
+
+    /// Number of items.
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Whether triangle-inequality bounds are available (Points) or the
+    /// conservative fallback is in force (Ensemble).
+    #[inline]
+    pub fn has_bounds(&self) -> bool {
+        self.npiv > 0
+    }
+
+    /// Whether §6b combines may defer (Single/Complete).
+    #[inline]
+    pub fn combinable(&self) -> bool {
+        self.combinable
+    }
+
+    /// Kernel calls the pivot-norm build made (n−1 per pivot: the
+    /// self-distance is free). Charged once into `distance_evals` so
+    /// the stat is the *total* kernel-call count of a lazy run.
+    #[inline]
+    pub fn build_kernels(&self) -> u64 {
+        (self.npiv * (self.n - 1)) as u64
+    }
+
+    /// Admissible lower bound on the value of cell (a, b), both alive
+    /// cluster slots: `bound ≤ the f32 value an evaluation would
+    /// produce`, exactly. 0 under the no-bounds fallback (the metrics
+    /// are nonnegative).
+    pub fn cell_key(&self, a: usize, b: usize) -> f32 {
+        if self.npiv == 0 {
+            return 0.0;
+        }
+        let (pa, pb) = (a * self.npiv, b * self.npiv);
+        let mut best = 0.0f64;
+        for q in 0..self.npiv {
+            let (la, ha) = (self.lo[pa + q] as f64, self.hi[pa + q] as f64);
+            let (lb, hb) = (self.lo[pb + q] as f64, self.hi[pb + q] as f64);
+            let raw = if self.is_max {
+                // Lower bound on the block max: some member pair spans
+                // the widest interval spread of this pivot.
+                (ha - lb).max(hb - la)
+            } else {
+                // Lower bound on the block min: every member pair is at
+                // least the interval gap apart.
+                (lb - ha).max(la - hb)
+            };
+            let b = raw - SLACK * (ha + hb);
+            if b > best {
+                best = b;
+            }
+        }
+        best as f32
+    }
+
+    /// Evaluate cell (a, b): reduce the member-pair block through the
+    /// distance kernel (min for Single, max for Complete; unevaluated
+    /// cells under non-combinable schemes are always singleton pairs,
+    /// so the direction is moot there). Pairs whose pivot bound proves
+    /// they cannot move the reduce are skipped — the result is still
+    /// the *exact* reduce over the whole block. Returns
+    /// `(value, kernel calls actually made)`; the caller charges the
+    /// calls to `distance_evals`.
+    pub fn eval_cell(&self, a: usize, b: usize) -> (f32, u64) {
+        let mut best = if self.is_max { f32::NEG_INFINITY } else { f32::INFINITY };
+        let mut kernels = 0u64;
+        let mut x = self.head[a];
+        while x != NIL {
+            let mut y = self.head[b];
+            while y != NIL {
+                let (xi, yi) = (x as usize, y as usize);
+                let skip = if self.npiv > 0 && kernels > 0 {
+                    if self.is_max {
+                        self.pair_ub(xi, yi) <= best
+                    } else {
+                        self.pair_lb(xi, yi) >= best
+                    }
+                } else {
+                    false
+                };
+                if !skip {
+                    let d = self.src.distance(xi.min(yi), xi.max(yi));
+                    kernels += 1;
+                    best = if self.is_max { best.max(d) } else { best.min(d) };
+                }
+                y = self.next[yi];
+            }
+            x = self.next[x as usize];
+        }
+        debug_assert!(best.is_finite(), "eval of an empty member block");
+        (best, kernels)
+    }
+
+    /// Admissible lower bound on the kernel distance of points (x, y).
+    fn pair_lb(&self, x: usize, y: usize) -> f32 {
+        let (px, py) = (x * self.npiv, y * self.npiv);
+        let mut best = 0.0f64;
+        for q in 0..self.npiv {
+            let (nx, ny) = (self.norms[px + q] as f64, self.norms[py + q] as f64);
+            let b = (nx - ny).abs() - SLACK * (nx + ny);
+            if b > best {
+                best = b;
+            }
+        }
+        best as f32
+    }
+
+    /// Admissible upper bound on the kernel distance of points (x, y).
+    fn pair_ub(&self, x: usize, y: usize) -> f32 {
+        let (px, py) = (x * self.npiv, y * self.npiv);
+        let mut best = f64::INFINITY;
+        for q in 0..self.npiv {
+            let (nx, ny) = (self.norms[px + q] as f64, self.norms[py + q] as f64);
+            let b = (nx + ny) * (1.0 + SLACK);
+            if b < best {
+                best = b;
+            }
+        }
+        best as f32
+    }
+
+    /// Fold cluster j into cluster i (the protocol's merge (i, j)):
+    /// append j's member chain to i's and hull the norm intervals.
+    /// O(NPIV). Every rank applies the same sequence in protocol order.
+    pub fn apply_merge(&mut self, i: usize, j: usize) {
+        let jt = self.tail[j] as usize;
+        self.next[self.tail[i] as usize] = self.head[j];
+        self.tail[i] = jt as u32;
+        for q in 0..self.npiv {
+            let (pi, pj) = (i * self.npiv + q, j * self.npiv + q);
+            self.lo[pi] = self.lo[pi].min(self.lo[pj]);
+            self.hi[pi] = self.hi[pi].max(self.hi[pj]);
+        }
+    }
+
+    /// Rebuild merge-dependent state (chains + hulls) by replaying a
+    /// snapshot's merge history — the checkpoint-restore path. O(n +
+    /// merges·NPIV); bitwise-identical to having applied the merges
+    /// live, since both paths run the same `apply_merge` sequence.
+    pub fn replay(&mut self, merges: &[(u32, u32, f32)]) {
+        for &(i, j, _) in merges {
+            self.apply_merge(i as usize, j as usize);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::GaussianSpec;
+
+    fn points_geom(n: usize, seed: u64, is_max: bool) -> LazyGeom {
+        let lp = GaussianSpec { n, d: 4, k: 3, ..Default::default() }.generate(seed);
+        let src = DistSource::Points(lp.points).quantized();
+        LazyGeom::new(src, is_max, true)
+    }
+
+    #[test]
+    fn mode_parses() {
+        assert_eq!("eager".parse::<DistanceMode>().unwrap(), DistanceMode::Eager);
+        assert_eq!("lazy".parse::<DistanceMode>().unwrap(), DistanceMode::Lazy);
+        assert!("sometimes".parse::<DistanceMode>().is_err());
+        assert_eq!(DistanceMode::default(), DistanceMode::Eager);
+        assert_eq!(format!("{}", DistanceMode::Lazy), "lazy");
+    }
+
+    #[test]
+    fn singleton_eval_matches_kernel() {
+        let g = points_geom(12, 7, false);
+        let lp = GaussianSpec { n: 12, d: 4, k: 3, ..Default::default() }.generate(7);
+        let q = DistSource::Points(lp.points).quantized();
+        for i in 0..12 {
+            for j in (i + 1)..12 {
+                let (v, k) = g.eval_cell(i, j);
+                assert_eq!(v, q.distance(i, j), "({i},{j})");
+                assert_eq!(k, 1, "singleton blocks need exactly one kernel");
+            }
+        }
+    }
+
+    #[test]
+    fn pair_bounds_bracket_kernel_distances() {
+        // The satellite bound-admissibility fuzz lives in shard.rs; this
+        // is the direct unit check on the pair primitives.
+        let g = points_geom(40, 3, false);
+        for i in 0..40 {
+            for j in (i + 1)..40 {
+                let d = g.src.distance(i, j);
+                assert!(g.pair_lb(i, j) <= d, "lb({i},{j}) = {} > {d}", g.pair_lb(i, j));
+                assert!(g.pair_ub(i, j) >= d, "ub({i},{j}) = {} < {d}", g.pair_ub(i, j));
+            }
+        }
+    }
+
+    #[test]
+    fn merged_blocks_reduce_exactly_and_keys_stay_admissible() {
+        for is_max in [false, true] {
+            let mut g = points_geom(20, 11, is_max);
+            // A deterministic little merge trajectory.
+            for &(i, j) in &[(0usize, 5usize), (0, 9), (2, 0), (7, 12), (7, 2)] {
+                g.apply_merge(i, j);
+                // Brute-force the block reduce for a few cluster pairs
+                // (1/3/14 stay singletons through this trajectory; i is
+                // alive at each step by construction).
+                for &other in &[1usize, 3, 14] {
+                    let (a, b) = (other.min(i), other.max(i));
+                    let (v, _) = g.eval_cell(a, b);
+                    let members = |c: usize| {
+                        let mut m = Vec::new();
+                        let mut x = g.head[c];
+                        while x != NIL {
+                            m.push(x as usize);
+                            x = g.next[x as usize];
+                        }
+                        m
+                    };
+                    let mut brute = if is_max { f32::NEG_INFINITY } else { f32::INFINITY };
+                    for &x in &members(a) {
+                        for &y in &members(b) {
+                            let d = g.src.distance(x.min(y), x.max(y));
+                            brute = if is_max { brute.max(d) } else { brute.min(d) };
+                        }
+                    }
+                    assert_eq!(v, brute, "merge ({i},{j}) pair ({a},{b}) is_max={is_max}");
+                    assert!(
+                        g.cell_key(a, b) <= v,
+                        "inadmissible cluster key for ({a},{b}): {} > {v}",
+                        g.cell_key(a, b)
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ensemble_falls_back_to_zero_bounds() {
+        let e = crate::data::EnsembleSpec { n: 5, residues: 8, ..Default::default() }.generate(2);
+        let src = DistSource::Ensemble(e.structures).quantized();
+        let g = LazyGeom::new(src, false, true);
+        assert!(!g.has_bounds());
+        assert_eq!(g.cell_key(0, 3), 0.0);
+        let (v, k) = g.eval_cell(1, 4);
+        assert!(v >= 0.0 && k == 1);
+    }
+
+    /// ISSUE-10 satellite: bound-admissibility fuzz — 10⁴ random pairs
+    /// per metric, asserting `pair_lb ≤ kernel distance ≤ pair_ub`
+    /// (Points) and the nonnegative fallback (Ensemble), plus
+    /// cluster-level `cell_key ≤ evaluated value` under a random merge
+    /// trajectory. Any violation here would let `lazy_min` return a
+    /// wrong winner, so this is the safety net under the bitwise
+    /// equivalence suite.
+    #[test]
+    fn property_bounds_admissible_ten_thousand_pairs() {
+        use crate::util::proptest::{run, Config};
+        run(Config::cases(1), |rng| {
+            // Points / Euclidean: mixed gaussian + integer-grid (ties).
+            let n = 150;
+            let lp = GaussianSpec { n, d: 6, k: 4, ..Default::default() }.generate(17);
+            let mut pts = lp.points;
+            for p in pts.iter_mut().take(n / 3) {
+                for c in p.iter_mut() {
+                    *c = c.round();
+                }
+            }
+            let src = DistSource::Points(pts).quantized();
+            for is_max in [false, true] {
+                let mut g = LazyGeom::new(src.clone(), is_max, true);
+                for _ in 0..10_000 {
+                    let x = rng.below(n);
+                    let mut y = rng.below(n - 1);
+                    if y >= x {
+                        y += 1;
+                    }
+                    let (x, y) = (x.min(y), x.max(y));
+                    let d = g.src.distance(x, y);
+                    assert!(g.pair_lb(x, y) <= d, "lb({x},{y}) > {d}");
+                    assert!(g.pair_ub(x, y) >= d, "ub({x},{y}) < {d}");
+                }
+                // Cluster-level keys along a random merge trajectory.
+                let mut alive: Vec<usize> = (0..n).collect();
+                while alive.len() > n / 4 {
+                    let xi = rng.below(alive.len());
+                    let mut yi = rng.below(alive.len() - 1);
+                    if yi >= xi {
+                        yi += 1;
+                    }
+                    let (i, j) = (alive[xi].min(alive[yi]), alive[xi].max(alive[yi]));
+                    alive.retain(|&k| k != j);
+                    g.apply_merge(i, j);
+                    for _ in 0..4 {
+                        let a = alive[rng.below(alive.len())];
+                        let b = alive[rng.below(alive.len())];
+                        if a == b {
+                            continue;
+                        }
+                        let (a, b) = (a.min(b), a.max(b));
+                        let (v, _) = g.eval_cell(a, b);
+                        assert!(
+                            g.cell_key(a, b) <= v,
+                            "cluster key ({a},{b}) {} > {v} is_max={is_max}",
+                            g.cell_key(a, b)
+                        );
+                    }
+                }
+            }
+            // Ensemble / RMSD: the conservative 0 fallback is admissible
+            // because the metric is nonnegative.
+            let e = crate::data::EnsembleSpec { n: 10, residues: 8, ..Default::default() }
+                .generate(9);
+            let esrc = DistSource::Ensemble(e.structures).quantized();
+            let g = LazyGeom::new(esrc, false, true);
+            assert!(!g.has_bounds());
+            for _ in 0..10_000 {
+                let x = rng.below(10);
+                let mut y = rng.below(9);
+                if y >= x {
+                    y += 1;
+                }
+                let (x, y) = (x.min(y), x.max(y));
+                assert!(g.cell_key(x, y) <= g.src.distance(x, y));
+            }
+        });
+    }
+
+    #[test]
+    fn replay_matches_live_merges() {
+        let mut live = points_geom(16, 5, false);
+        let merges: Vec<(u32, u32, f32)> = vec![(1, 6, 0.0), (3, 10, 0.0), (1, 3, 0.0)];
+        for &(i, j, _) in &merges {
+            live.apply_merge(i as usize, j as usize);
+        }
+        let mut replayed = points_geom(16, 5, false);
+        replayed.replay(&merges);
+        assert_eq!(live.head, replayed.head);
+        assert_eq!(live.tail, replayed.tail);
+        assert_eq!(live.next, replayed.next);
+        assert_eq!(live.lo, replayed.lo);
+        assert_eq!(live.hi, replayed.hi);
+    }
+}

@@ -107,6 +107,18 @@ pub struct RunStats {
     pub checkpoint_bytes: u64,
     /// Max cells resident on any single rank (§5.4 storage claim).
     pub peak_shard_cells: usize,
+    /// Distance kernels actually executed by the lazy source (all ranks;
+    /// ISSUE-10): the pivot-table build plus every cell realized on
+    /// min-candidacy or LW touch. 0 under `--distances eager`, whose
+    /// §5.1 build is priced by the virtual clock, not this counter —
+    /// the eager-equivalent budget is one kernel per condensed cell
+    /// (`n(n−1)/2` for points, more for multi-unit RMSD cells).
+    pub distance_evals: u64,
+    /// Peak overlay entries (evaluated, unretired cells) summed over
+    /// ranks — the lazy mode's resident footprint, the quantity that
+    /// stays ≪ n²/2 on sortable workloads (EXPERIMENTS.md
+    /// §Lazy-distance A/B). 0 under `--distances eager`.
+    pub peak_resident_cells: u64,
     /// Clustering jobs this stats object covers: 1 for a solo run, the
     /// queue length for a [`RunBatch`](crate::coordinator::batch::RunBatch)
     /// aggregate.
@@ -147,7 +159,7 @@ impl RunStats {
     /// One-line human summary.
     pub fn summary(&self) -> String {
         format!(
-            "n={} p={} runtime={} wall={:.3}s virt={:.6}s msgs={} ({:.1}/iter) bytes={} peak_shard={} cells scanned={} idx_ops={} idx_waves={} alive_visited={} steals={} inj_wakes={} parks={} jobs={} builds={} pool={}h/{}m faults={} retries={} restarts={} ckpt_bytes={}",
+            "n={} p={} runtime={} wall={:.3}s virt={:.6}s msgs={} ({:.1}/iter) bytes={} peak_shard={} cells scanned={} idx_ops={} idx_waves={} alive_visited={} steals={} inj_wakes={} parks={} jobs={} builds={} pool={}h/{}m faults={} retries={} restarts={} ckpt_bytes={} dist_evals={} resident={}",
             self.n,
             self.p,
             if self.runtime.is_empty() { "?" } else { self.runtime.as_str() },
@@ -172,6 +184,8 @@ impl RunStats {
             self.retries_sent,
             self.restarts,
             self.checkpoint_bytes,
+            self.distance_evals,
+            self.peak_resident_cells,
         )
     }
 }

@@ -223,6 +223,50 @@ fn retry_budget_exhaustion_fails_the_job_loudly() {
 }
 
 #[test]
+fn lazy_crash_recovery_preserves_eval_tally() {
+    // ISSUE-10 satellite: a rank crash + checkpoint restore under
+    // `--distances lazy` must land on the bitwise clean-lazy result
+    // INCLUDING `distance_evals` — the snapshot carries the evaluation
+    // overlay and tally, so a restart never re-charges cells evaluated
+    // before the restored wave (and deterministically replays, without
+    // double-counting, the ones evaluated after it).
+    let lp = GaussianSpec { n: 40, d: 4, k: 4, ..Default::default() }.generate(33);
+    let src = DistSource::Points(lp.points);
+    let mk = || {
+        ClusterConfig::new(Scheme::Single, 4)
+            .with_scan(ScanStrategy::Indexed)
+            .with_distances(DistanceMode::Lazy)
+    };
+    let clean = mk().run_source(src.clone()).unwrap();
+    assert!(clean.stats.distance_evals > 0, "lazy clean run counts evals");
+    let spec = FaultSpec {
+        drop: true,
+        dup: true,
+        delay: false,
+        crash: Some(CrashSite { job: 0, rank: 1, iter: 6 }),
+    };
+    let cfg = mk()
+        .with_faults(FaultPlan::new(11, spec))
+        .with_checkpoint("every:4".parse().unwrap());
+    let mut b = RunBatch::new(Runtime::Event).with_on_failure(OnFailure::Retry(2));
+    let d = b.add_dataset(src.clone());
+    b.push_job(cfg, d);
+    let out = b.run().unwrap();
+    let job = out.jobs[0].as_ref().unwrap();
+    assert_canonical_identical(&clean, job, "lazy crash recovery");
+    assert!(job.stats.restarts >= 1, "crash armed but no restart");
+    assert!(job.stats.checkpoint_bytes > 0, "no snapshots tallied");
+    assert_eq!(
+        job.stats.distance_evals, clean.stats.distance_evals,
+        "restart re-charged already-evaluated cells"
+    );
+    assert_eq!(
+        job.stats.peak_resident_cells, clean.stats.peak_resident_cells,
+        "restored overlay changed the residency profile"
+    );
+}
+
+#[test]
 fn faults_reject_thread_per_rank_runtime() {
     // Retry timers fire when the scheduler is idle — thread-per-rank has
     // no scheduler to observe that, so the combination fails loudly.

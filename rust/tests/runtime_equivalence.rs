@@ -283,6 +283,68 @@ fn maintenance_policies_identical_across_runtimes_and_schemes() {
 }
 
 #[test]
+fn lazy_distances_equal_eager_across_runtimes() {
+    // ISSUE-10 acceptance: `--distances lazy` may change only the
+    // evaluation counters (`distance_evals`, `peak_resident_cells`) and
+    // the index-maintenance realization (`index_ops`/`idx_waves` — the
+    // segment tree does different realized work than the eager
+    // tournament; both are priced identically by the virtual clock).
+    // Everything canonical — dendrogram, merge order, virtual clocks,
+    // traffic, scan/update/walk work — is bitwise the eager run's, for
+    // every scheme × partition kind × {event, steal:4}.
+    let lp = GaussianSpec { n: 40, d: 4, k: 4, ..Default::default() }.generate(42);
+    let src = DistSource::Points(lp.points);
+    let serial_m = src.build_matrix();
+    for scheme in Scheme::all() {
+        let serial = serial_lw_cluster(*scheme, &serial_m);
+        for kind in
+            [PartitionKind::BalancedCells, PartitionKind::WholeRows, PartitionKind::Cyclic]
+        {
+            let ctx = format!("{scheme} {kind:?}");
+            let run = |d: DistanceMode, rt: Runtime| {
+                ClusterConfig::new(*scheme, 6)
+                    .with_partition(kind)
+                    .with_scan(ScanStrategy::Indexed)
+                    .with_distances(d)
+                    .with_runtime(rt)
+                    .run_source(src.clone())
+                    .unwrap_or_else(|e| panic!("{ctx} ({rt}): {e}"))
+            };
+            let eager = run(DistanceMode::Eager, Runtime::Event);
+            let lazy = run(DistanceMode::Lazy, Runtime::Event);
+            dendrograms_equal(&eager.dendrogram, &lazy.dendrogram, 0.0)
+                .unwrap_or_else(|e| panic!("{ctx}: {e}"));
+            assert_eq!(eager.dendrogram.merges(), lazy.dendrogram.merges(), "{ctx}: merges");
+            assert_eq!(eager.stats.virtual_s, lazy.stats.virtual_s, "{ctx}: makespan");
+            assert_eq!(eager.stats.rank_virtual_s, lazy.stats.rank_virtual_s, "{ctx}: clocks");
+            assert_eq!(eager.stats.msgs_sent, lazy.stats.msgs_sent, "{ctx}: messages");
+            assert_eq!(eager.stats.bytes_sent, lazy.stats.bytes_sent, "{ctx}: bytes");
+            assert_eq!(eager.stats.cells_scanned, lazy.stats.cells_scanned, "{ctx}: scans");
+            assert_eq!(eager.stats.cells_updated, lazy.stats.cells_updated, "{ctx}: updates");
+            assert_eq!(eager.stats.alive_visited, lazy.stats.alive_visited, "{ctx}: walks");
+            assert_eq!(eager.stats.distance_evals, 0, "{ctx}: eager counts no evals");
+            assert!(lazy.stats.distance_evals > 0, "{ctx}: lazy evals");
+            assert!(lazy.stats.peak_resident_cells > 0, "{ctx}: lazy residency");
+            // The scheduler swap must not move a single lazy counter —
+            // including the evaluation tally (host interleaving cannot
+            // leak into which cells get realized).
+            let steal = run(DistanceMode::Lazy, Runtime::Steal(4));
+            assert_identical(&lazy, &steal, &format!("{ctx} lazy steal"));
+            assert_eq!(
+                lazy.stats.distance_evals, steal.stats.distance_evals,
+                "{ctx}: evals across runtimes"
+            );
+            assert_eq!(
+                lazy.stats.peak_resident_cells, steal.stats.peak_resident_cells,
+                "{ctx}: residency across runtimes"
+            );
+            dendrograms_equal(&serial, &lazy.dendrogram, 0.0)
+                .unwrap_or_else(|e| panic!("{ctx} vs serial: {e}"));
+        }
+    }
+}
+
+#[test]
 fn distributed_build_equivalent_across_runtimes() {
     // The §5.1 build path: rank 0 replicates raw points, every rank
     // computes its own cells — same state machine, same equivalence.
